@@ -1,0 +1,92 @@
+//! Ablation study: remove PHub's design choices one at a time and measure
+//! the cost (the DESIGN.md §Perf ablations; complements section 4.3.2's
+//! "importance of each optimization" goal).
+//!
+//! Run: `cargo bench --bench ablation`
+
+use phub::compute::Gpu;
+use phub::config::{ClusterConfig, NetConfig, PsConfig};
+use phub::dnn::Dnn;
+use phub::sim;
+
+struct Ablation {
+    name: &'static str,
+    apply: fn(ClusterConfig) -> ClusterConfig,
+}
+
+fn ablations() -> Vec<Ablation> {
+    vec![
+        Ablation {
+            name: "full PHub/PBox",
+            apply: |c| c,
+        },
+        Ablation {
+            name: "- fine chunking (4MB chunks)",
+            apply: |mut c| {
+                c.exchange.chunk_bytes = 4 * 1024 * 1024;
+                c
+            },
+        },
+        Ablation {
+            name: "- tall aggregation (wide gang)",
+            apply: |mut c| {
+                c.exchange.tall_aggregation = false;
+                c
+            },
+        },
+        Ablation {
+            name: "- cached agg/opt (non-temporal)",
+            apply: |mut c| {
+                c.exchange.cached_agg = false;
+                c
+            },
+        },
+        Ablation {
+            name: "- key-by-interface (worker-by-iface)",
+            apply: |mut c| {
+                c.exchange.key_by_interface = false;
+                c
+            },
+        },
+        Ablation {
+            name: "- multi-NIC balance (1 NIC host)",
+            apply: |mut c| {
+                c.ps_host.nics = 1;
+                c
+            },
+        },
+        Ablation {
+            name: "- non-colocation (PShard/CS)",
+            apply: |c| c.with_ps(PsConfig::ColocatedSharded),
+        },
+    ]
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("== Ablation: PHub design choices, 8 workers, 10 Gbps ==");
+    for (abbrev, gpu) in [("AN", Gpu::Gtx1080Ti), ("RN50", Gpu::Gtx1080Ti), ("RN18", Gpu::ZeroCompute)] {
+        let d = Dnn::by_abbrev(abbrev).unwrap();
+        let label = if matches!(gpu, Gpu::ZeroCompute) {
+            format!("{abbrev} (ZeroCompute)")
+        } else {
+            abbrev.to_string()
+        };
+        println!("\n  {label}:");
+        let mut base = 0.0;
+        for ab in ablations() {
+            let c = (ab.apply)(ClusterConfig::paper_testbed().with_net(NetConfig::cloud_10g()));
+            let r = sim::simulate(&c, &d, gpu);
+            if ab.name.starts_with("full") {
+                base = r.throughput;
+            }
+            println!(
+                "    {:<38} {:>9.1} samples/s  ({:>5.1}% of full)",
+                ab.name,
+                r.throughput,
+                100.0 * r.throughput / base
+            );
+        }
+    }
+    println!("\n[ablation done in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,192 @@
+//! Live hot-path microbenchmarks (run via `cargo bench --bench hotpath`).
+//!
+//! Measures the real Rust implementation (not the simulator):
+//! * tall vs wide aggregation throughput (section 4.5: tall ~20x);
+//! * the aggregation inner loop's memory bandwidth vs a DRAM roofline;
+//! * live server push_pull round latency vs core count;
+//! * end-to-end exchange throughput scaling with worker threads.
+//!
+//! Results feed EXPERIMENTS.md section Perf.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::baseline::wide;
+use phub::coordinator::aggregation::{add_assign, ChunkAggregator};
+use phub::coordinator::optimizer::{NesterovSgd, Optimizer};
+use phub::coordinator::server::{PHubServer, ServerConfig};
+use phub::coordinator::KeyTable;
+use phub::prop::Rng;
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {label:<46} {:>10.3} ms/op", dt * 1e3);
+    dt
+}
+
+/// Raw aggregation inner loop: GB/s of gradient input processed.
+fn agg_inner_loop() {
+    println!("== aggregation inner loop (single core) ==");
+    let mut rng = Rng::new(1);
+    let n = 1 << 22; // 16 MB of f32
+    let src = rng.vec_f32(n, 1.0);
+    let mut acc = rng.vec_f32(n, 1.0);
+    let dt = bench("add_assign 16MB", 20, || {
+        add_assign(&mut acc, &src);
+    });
+    let gbps = (n * 4) as f64 / dt / 1e9;
+    println!("  -> {gbps:.1} GB/s input ({:.1} GB/s load+store traffic)", gbps * 3.0);
+}
+
+/// Tall vs wide: aggregate 8 worker gradients of one 64MB key.
+fn tall_vs_wide() {
+    println!("\n== tall vs wide aggregation+optimization (8 workers, 64 MB key) ==");
+    let mut rng = Rng::new(2);
+    let len = 16 << 20; // 16M f32 = 64MB
+    let workers = 8;
+    let grads: Vec<Vec<f32>> = (0..workers).map(|_| rng.vec_f32(len, 1.0)).collect();
+    let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let opt = NesterovSgd {
+        lr: 0.01,
+        momentum: 0.9,
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // Tall: chunk-per-core, no synchronization. Emulate P parallel cores,
+    // each owning len/P contiguous chunks, via scoped threads.
+    let chunk = 8192usize;
+    let mut params_t = rng.vec_f32(len, 1.0);
+    let mut state_t = vec![0.0f32; len];
+    let dt_tall = bench(&format!("tall ({} cores, 32KB chunks)", threads), 3, || {
+        let per = len / threads;
+        std::thread::scope(|s| {
+            let mut p_rest: &mut [f32] = &mut params_t;
+            let mut s_rest: &mut [f32] = &mut state_t;
+            for t in 0..threads {
+                let (p_mine, p_next) = p_rest.split_at_mut(per.min(p_rest.len()));
+                let (s_mine, s_next) = s_rest.split_at_mut(per.min(s_rest.len()));
+                p_rest = p_next;
+                s_rest = s_next;
+                let grads = &grads;
+                s.spawn(move || {
+                    let base = t * per;
+                    let mut agg = ChunkAggregator::new(chunk, workers);
+                    let opt = NesterovSgd {
+                        lr: 0.01,
+                        momentum: 0.9,
+                    };
+                    for (ci, (pc, sc)) in p_mine
+                        .chunks_mut(chunk)
+                        .zip(s_mine.chunks_mut(chunk))
+                        .enumerate()
+                    {
+                        let off = base + ci * chunk;
+                        if pc.len() != chunk {
+                            break;
+                        }
+                        for w in 0..workers {
+                            agg.absorb(w, &grads[w][off..off + chunk]);
+                        }
+                        let mean = agg.take_mean();
+                        opt.step(pc, sc, mean);
+                    }
+                });
+            }
+        });
+    });
+
+    // Wide: gang threads over the whole key, two barrier passes.
+    let mut params_w = rng.vec_f32(len, 1.0);
+    let mut state_w = vec![0.0f32; len];
+    let dt_wide = bench(&format!("wide ({} threads, whole key)", threads), 3, || {
+        wide::wide_exchange(&opt, &grad_refs, &mut params_w, &mut state_w, threads);
+    });
+    println!("  -> tall/wide speedup: {:.1}x (paper: ~20x incl. overlap effects)", dt_wide / dt_tall);
+}
+
+/// Live server round latency vs core count.
+fn server_scaling() {
+    println!("\n== live PHubServer push_pull round (4 workers, 32 MB model) ==");
+    let elems = 8 << 20;
+    let workers = 4;
+    for cores in [1usize, 2, 4, 8] {
+        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let job = server.init_job(
+            KeyTable::flat(elems, 8192),
+            &vec![0.0f32; elems],
+            Arc::new(NesterovSgd {
+                lr: 0.01,
+                momentum: 0.9,
+            }),
+            workers,
+        );
+        let mut handles: Vec<_> = (0..workers).map(|w| server.worker(job, w)).collect();
+        let grad = vec![0.5f32; elems];
+        let label = format!("{cores} cores");
+        bench(&label, 5, || {
+            std::thread::scope(|s| {
+                for h in handles.iter_mut() {
+                    let g = &grad;
+                    s.spawn(move || {
+                        let _ = h.push_pull(g);
+                    });
+                }
+            });
+        });
+        PHubServer::shutdown(server);
+    }
+}
+
+/// Exchange throughput scaling with worker count (fixed 4 cores).
+fn worker_scaling() {
+    println!("\n== live exchange throughput vs workers (16 MB model, 4 cores) ==");
+    let elems = 4 << 20;
+    for workers in [1usize, 2, 4, 8] {
+        let server = PHubServer::start(ServerConfig { n_cores: 4 });
+        let job = server.init_job(
+            KeyTable::flat(elems, 8192),
+            &vec![0.0f32; elems],
+            Arc::new(NesterovSgd {
+                lr: 0.01,
+                momentum: 0.9,
+            }),
+            workers,
+        );
+        let mut handles: Vec<_> = (0..workers).map(|w| server.worker(job, w)).collect();
+        let grad = vec![0.5f32; elems];
+        let rounds = 8;
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            std::thread::scope(|s| {
+                for h in handles.iter_mut() {
+                    let g = &grad;
+                    s.spawn(move || {
+                        let _ = h.push_pull(g);
+                    });
+                }
+            });
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let gbps = (rounds * workers * elems * 4 * 2) as f64 / dt / 1e9;
+        println!(
+            "  {workers} workers: {:>7.2} rounds/s, {gbps:>6.2} GB/s through the server",
+            rounds as f64 / dt
+        );
+        PHubServer::shutdown(server);
+    }
+}
+
+fn main() {
+    let t0 = Instant::now();
+    agg_inner_loop();
+    tall_vs_wide();
+    server_scaling();
+    worker_scaling();
+    println!("\n[hotpath done in {:.1}s]", t0.elapsed().as_secs_f64());
+}

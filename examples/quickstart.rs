@@ -1,0 +1,91 @@
+//! Quickstart: the PHub public API in ~60 lines.
+//!
+//! Creates a PHub server, registers a job through the paper's service API
+//! (CreateService → InitService → ConnectService), runs a few synchronous
+//! push_pull rounds from four worker threads, and checks the update math
+//! against a sequential reference.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::{ConnectionManager, KeyTable, NesterovSgd, Optimizer, PHubServer};
+
+fn main() {
+    const WORKERS: usize = 4;
+    const MODEL: usize = 64 * 1024; // elements
+    const CHUNK: usize = 8 * 1024; // = PHub's 32 KB wire chunks
+    const ROUNDS: usize = 10;
+
+    // 1. Start a PHub instance with 4 aggregation cores.
+    let server = PHubServer::start(ServerConfig { n_cores: 4 });
+    let cm = ConnectionManager::new(server.clone());
+
+    // 2. Create + initialize the job namespace.
+    let svc = cm.create_service("quickstart", WORKERS).expect("namespace");
+    let opt = NesterovSgd {
+        lr: 0.1,
+        momentum: 0.9,
+    };
+    let init = vec![0.5f32; MODEL];
+    cm.init_service(
+        &svc,
+        KeyTable::flat(MODEL, CHUNK),
+        &init,
+        Arc::new(opt.clone()),
+    )
+    .expect("init");
+
+    // 3. Connect workers and run synchronous rounds.
+    let mut handles: Vec<_> = (0..WORKERS)
+        .map(|w| cm.connect_service(&svc, w).expect("connect"))
+        .collect();
+
+    let grad_for = |w: usize, r: usize| -> Vec<f32> {
+        (0..MODEL)
+            .map(|i| ((w + r) as f32).sin() * 0.01 + (i % 7) as f32 * 1e-4)
+            .collect()
+    };
+
+    let mut final_model = Vec::new();
+    for r in 0..ROUNDS {
+        let models: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .iter_mut()
+                .enumerate()
+                .map(|(w, h)| {
+                    let g = grad_for(w, r);
+                    s.spawn(move || h.push_pull(&g))
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert!(models.windows(2).all(|m| m[0] == m[1]), "workers agree");
+        final_model = models.into_iter().next().unwrap();
+        println!("round {r}: model[0] = {:.6}", final_model[0]);
+    }
+
+    // 4. Verify against the sequential reference.
+    let mut p = vec![0.5f32; MODEL];
+    let mut m = vec![0.0f32; MODEL];
+    for r in 0..ROUNDS {
+        let mut mean = vec![0.0f32; MODEL];
+        for w in 0..WORKERS {
+            for (a, g) in mean.iter_mut().zip(grad_for(w, r)) {
+                *a += g / WORKERS as f32;
+            }
+        }
+        opt.step(&mut p, &mut m, &mean);
+    }
+    let max_err = final_model
+        .iter()
+        .zip(&p)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |phub - reference| = {max_err:e}");
+    assert!(max_err < 1e-5);
+
+    PHubServer::shutdown(server);
+    println!("quickstart OK");
+}

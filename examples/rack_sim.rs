@@ -1,0 +1,115 @@
+//! Rack-scale what-if explorer: sweep PS configurations, stacks, networks,
+//! worker counts, and GPU generations over the simulated testbed — the
+//! tool a cluster operator would use to size a PHub deployment.
+//!
+//! Run: `cargo run --release --example rack_sim -- [--dnn RN50] [--racks 4]`
+
+use phub::cli::Args;
+use phub::compute::Gpu;
+use phub::config::{ClusterConfig, ExchangeConfig, NetConfig, PsConfig, Stack};
+use phub::coordinator::hierarchy;
+use phub::dnn::Dnn;
+use phub::sim;
+
+fn main() {
+    let a = Args::from_env();
+    let dnn = Dnn::by_abbrev(a.get_or("dnn", "RN50")).expect("unknown dnn");
+    let racks = a.get_usize("racks", 4);
+
+    println!("=== {} on the simulated rack (8 workers) ===\n", dnn.name);
+    println!(
+        "{:<26} {:>9} {:>12} {:>10}",
+        "configuration", "iter ms", "samples/s", "overhead%"
+    );
+    let configs: Vec<(&str, ClusterConfig)> = vec![
+        (
+            "MXNet TCP / CS / 10G",
+            ClusterConfig::paper_testbed()
+                .with_ps(PsConfig::ColocatedSharded)
+                .with_stack(Stack::MxnetTcp)
+                .with_net(NetConfig::cloud_10g())
+                .with_exchange(ExchangeConfig::mxnet()),
+        ),
+        (
+            "MXNet IB / CS / 10G",
+            ClusterConfig::paper_testbed()
+                .with_ps(PsConfig::ColocatedSharded)
+                .with_stack(Stack::MxnetIb)
+                .with_net(NetConfig::cloud_10g())
+                .with_exchange(ExchangeConfig::mxnet()),
+        ),
+        (
+            "PHub PShard (CS) / 10G",
+            ClusterConfig::paper_testbed()
+                .with_ps(PsConfig::ColocatedSharded)
+                .with_net(NetConfig::cloud_10g()),
+        ),
+        (
+            "PHub PBox / 10G",
+            ClusterConfig::paper_testbed().with_net(NetConfig::cloud_10g()),
+        ),
+        (
+            "MXNet IB / CS / 56G",
+            ClusterConfig::paper_testbed()
+                .with_ps(PsConfig::ColocatedSharded)
+                .with_stack(Stack::MxnetIb)
+                .with_exchange(ExchangeConfig::mxnet()),
+        ),
+        ("PHub PBox / 56G", ClusterConfig::paper_testbed()),
+    ];
+    for (name, c) in &configs {
+        let r = sim::simulate(c, &dnn, Gpu::Gtx1080Ti);
+        println!(
+            "{:<26} {:>9.2} {:>12.1} {:>9.0}%",
+            name,
+            r.iter_time * 1e3,
+            r.throughput,
+            100.0 * r.exposed_overhead / r.iter_time
+        );
+    }
+
+    // Scaling with worker count on PBox.
+    println!("\n=== PBox worker scaling (10G, {}) ===", dnn.abbrev);
+    for n in [1usize, 2, 4, 8] {
+        let c = ClusterConfig::paper_testbed()
+            .with_net(NetConfig::cloud_10g())
+            .with_workers(n);
+        let r = sim::simulate(&c, &dnn, Gpu::Gtx1080Ti);
+        println!("  {n} workers: {:>10.1} samples/s", r.throughput);
+    }
+
+    // Cross-rack: when is hierarchical reduction worth it?
+    println!("\n=== hierarchical reduction across {racks} racks ===");
+    let local = sim::simulate(
+        &ClusterConfig::paper_testbed().with_net(NetConfig::cloud_10g()),
+        &dnn,
+        Gpu::Gtx1080Ti,
+    );
+    for r in 1..=racks {
+        let tp = hierarchy::throughput_with_hierarchy(
+            &dnn,
+            r,
+            8,
+            local.iter_time,
+            32 * 1024,
+            10.0,
+            10e-6,
+        );
+        println!(
+            "  {r} racks ({} workers): {:>10.1} samples/s total, {:>8.1} per rack",
+            8 * r,
+            tp,
+            tp / r as f64
+        );
+    }
+
+    let bw = hierarchy::HierBandwidths {
+        b_pbox: 12.5e9,
+        b_core: 2.5e9,
+        b_wkr: 1.25e9,
+    };
+    println!(
+        "\nbenefit model: hierarchical beneficial at {racks} racks x 8 workers? {}",
+        hierarchy::hierarchical_beneficial(bw, 8, racks)
+    );
+}

@@ -1,0 +1,116 @@
+"""AOT compiler: lower the L2/L1 graphs to HLO text for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python never appears on the
+training hot path. Emits into `artifacts/`:
+
+  grad_step.hlo.txt   worker fwd+bwd: (params (K,), tokens (B,T+1) i32)
+                        -> (loss f32[], grads f32[K])
+  eval_loss.hlo.txt   (params, tokens) -> (loss,)
+  agg_opt.hlo.txt     PS hot path via the Pallas kernel:
+                        (grads (W,K), params (K,), mom (K,), lr (), mu ())
+                        -> (params', mom')
+  agg_only.hlo.txt    (grads (W,K)) -> (mean (K,))  [hierarchical reduction]
+  quant2bit.hlo.txt   (grad (K,), residual (K,), threshold ())
+                        -> (q, new_residual, dequant)
+  manifest.json       shapes, key table, chunking constants
+  params_init.bin     raw little-endian f32 initial flat parameters
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.agg_opt import agg_only, agg_opt
+from .kernels.quant import quant2bit
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text (ids reassigned by the text parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: M.ModelConfig, n_workers: int, out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    k = M.padded_size(cfg)
+    pspec = jax.ShapeDtypeStruct((k,), jnp.float32)
+    vspec = jax.ShapeDtypeStruct((k,), jnp.float32)
+    gspec = jax.ShapeDtypeStruct((n_workers, k), jnp.float32)
+    tokspec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    artifacts = {
+        "grad_step": jax.jit(M.make_grad_step(cfg)).lower(pspec, tokspec),
+        "eval_loss": jax.jit(M.make_eval_loss(cfg)).lower(pspec, tokspec),
+        "agg_opt": jax.jit(
+            lambda g, p, m, lr, mu: agg_opt(g, p, m, lr, mu)
+        ).lower(gspec, pspec, vspec, sspec, sspec),
+        "agg_only": jax.jit(agg_only).lower(gspec),
+        "quant2bit": jax.jit(
+            lambda g, r, t: quant2bit(g, r, t)
+        ).lower(pspec, vspec, sspec),
+    }
+    sizes = {}
+    for name, lowered in artifacts.items():
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        sizes[name] = len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Initial flat parameters, so Rust workers and the pytest oracle start
+    # from identical state.
+    flat = np.asarray(M.flatten_params(cfg, M.init_params(cfg)), np.float32)
+    (out_dir / "params_init.bin").write_bytes(flat.tobytes())
+    print(f"wrote {out_dir / 'params_init.bin'} ({flat.nbytes} bytes)")
+
+    man = M.manifest(cfg, n_workers)
+    man["artifact_chars"] = sizes
+    (out_dir / "manifest.json").write_text(json.dumps(man, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return man
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-workers", type=int, default=4)
+    args = ap.parse_args()
+    cfg = M.ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        d_ff=args.d_ff,
+        seq_len=args.seq_len,
+        batch=args.batch,
+    )
+    print(f"model: {M.param_count(cfg)} params, padded {M.padded_size(cfg)}")
+    lower_all(cfg, args.n_workers, pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

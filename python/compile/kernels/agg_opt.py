@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: fused gradient aggregation + Nesterov SGD.
+
+PHub's core compute hot path (paper section 3.2.2, "tall aggregation"): the
+model is split into fixed-size chunks; each chunk is aggregated across all
+workers and optimized *independently*, with no cross-chunk synchronization.
+
+Hardware adaptation (DESIGN.md section "Hardware adaptation"): the paper
+implements this with AVX loops pinned to cores, keeping the aggregation
+buffer resident in L2 cache. On a TPU-shaped machine the same structure is a
+1-D Pallas grid over chunks: each grid step stages a (W, CHUNK) gradient tile
+plus the (CHUNK,) param/momentum slices into VMEM (the cache analogue),
+reduces over the worker axis on the VPU, applies the optimizer in-register,
+and performs a single store. The no-coordination property of tall
+aggregation *is* the grid: steps share nothing.
+
+All pallas_call sites use interpret=True — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; interpret mode lowers to plain HLO so the same
+artifact runs under the Rust PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default chunk size in *elements*. PHub's default wire chunk is 32 KB
+# (section 3.2.3) = 8192 f32 elements; we keep the same constant so the
+# kernel's unit of parallelism equals the wire unit of transfer.
+CHUNK_ELEMS = 8192
+
+
+def _agg_opt_kernel(g_ref, p_ref, m_ref, lr_ref, mu_ref, po_ref, mo_ref, *, n_workers):
+    """One grid step = one PHub chunk: aggregate over workers, then NAG."""
+    # (W, C) tile -> (C,) mean. The worker axis is small (a rack), the chunk
+    # axis is the vector axis — this is the "tall" layout.
+    g = jnp.sum(g_ref[...], axis=0) * (1.0 / n_workers)
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    new_m = mu * m_ref[...] + g
+    po_ref[...] = p_ref[...] - lr * (g + mu * new_m)
+    mo_ref[...] = new_m
+
+
+def agg_opt(grads, params, mom, lr, mu, *, chunk=CHUNK_ELEMS):
+    """Fused aggregate + Nesterov-SGD over a flattened model.
+
+    Args:
+      grads: (W, K) per-worker gradients; K must be a multiple of `chunk`
+        (the AOT path pads the model to a chunk multiple).
+      params, mom: (K,) model and momentum.
+      lr, mu: scalar learning rate and momentum coefficient (traced).
+      chunk: elements per chunk (grid step).
+
+    Returns:
+      (new_params, new_mom).
+    """
+    n_workers, k = grads.shape
+    if k % chunk != 0:
+        raise ValueError(f"model size {k} not a multiple of chunk {chunk}")
+    grid = (k // chunk,)
+    lr = jnp.asarray(lr, jnp.float32).reshape(1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1)
+    kernel = functools.partial(_agg_opt_kernel, n_workers=n_workers)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_workers, chunk), lambda i: (0, i)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), params.dtype),
+            jax.ShapeDtypeStruct((k,), mom.dtype),
+        ],
+        interpret=True,
+    )(grads, params, mom, lr, mu)
+
+
+def _agg_kernel(g_ref, o_ref, *, n_workers):
+    o_ref[...] = jnp.sum(g_ref[...], axis=0) * (1.0 / n_workers)
+
+
+def agg_only(grads, *, chunk=CHUNK_ELEMS):
+    """Plain chunked mean-aggregation over the worker axis (no optimizer).
+
+    Used by the hierarchical-reduction path, where per-rack PBoxes aggregate
+    locally, cross-rack reduction combines rack sums, and only then does the
+    optimizer run (paper section 3.4).
+    """
+    n_workers, k = grads.shape
+    if k % chunk != 0:
+        raise ValueError(f"model size {k} not a multiple of chunk {chunk}")
+    kernel = functools.partial(_agg_kernel, n_workers=n_workers)
+    return pl.pallas_call(
+        kernel,
+        grid=(k // chunk,),
+        in_specs=[pl.BlockSpec((n_workers, chunk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((chunk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), grads.dtype),
+        interpret=True,
+    )(grads)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: 2-bit gradient quantization with error feedback.
+
+The paper (section 5) compares PHub against MXNet's 2-bit compression and
+notes PHub composes with gradient compression for further wins. This kernel
+implements the MXNet-style threshold quantizer as a chunked elementwise
+Pallas kernel so the Rust coordinator can exercise a compressed exchange
+path end-to-end.
+
+Elementwise over chunks, same grid discipline as agg_opt: no cross-chunk
+state, interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .agg_opt import CHUNK_ELEMS
+
+
+def _quant_kernel(g_ref, r_ref, t_ref, q_ref, nr_ref, dq_ref):
+    acc = g_ref[...] + r_ref[...]
+    t = t_ref[0]
+    q = jnp.where(acc > t, 1.0, jnp.where(acc < -t, -1.0, 0.0))
+    dq = q * t
+    q_ref[...] = q
+    nr_ref[...] = acc - dq
+    dq_ref[...] = dq
+
+
+def quant2bit(grad, residual, threshold, *, chunk=CHUNK_ELEMS):
+    """Quantize a flattened gradient to {-1,0,+1} with error feedback.
+
+    Args:
+      grad, residual: (K,) f32, K a multiple of `chunk`.
+      threshold: scalar quantization threshold.
+
+    Returns:
+      (q, new_residual, dequant): q in {-1,0,+1} f32 (2 bits of information
+      per element on the wire), the carried error, and q*threshold.
+    """
+    (k,) = grad.shape
+    if k % chunk != 0:
+        raise ValueError(f"size {k} not a multiple of chunk {chunk}")
+    t = jnp.asarray(threshold, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(k // chunk,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(grad, residual, t)

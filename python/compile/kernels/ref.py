@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its reference here bit-for-bit (up to float tolerance) under
+pytest. They are also used directly by the L2 model tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def agg_opt_ref(grads, params, mom, lr, mu):
+    """Reference fused gradient aggregation + Nesterov-momentum SGD.
+
+    This is PHub's "tall aggregation + streaming optimization" hot path
+    (paper section 3.2.2) expressed as a single dense update over the whole
+    flattened model:
+
+      g     = mean over workers of grads           (aggregation)
+      mom'  = mu * mom + g                         (MXNet NAG momentum)
+      p'    = p - lr * (g + mu * mom')             (Nesterov lookahead step)
+
+    Args:
+      grads: (W, K) per-worker flattened gradients.
+      params: (K,) flattened model.
+      mom: (K,) momentum buffer.
+      lr, mu: scalars (python float or 0-d array).
+
+    Returns:
+      (new_params, new_mom), both (K,).
+    """
+    g = jnp.mean(grads, axis=0)
+    new_mom = mu * mom + g
+    new_params = params - lr * (g + mu * new_mom)
+    return new_params, new_mom
+
+
+def agg_only_ref(grads):
+    """Reference plain aggregation (mean over the worker axis)."""
+    return jnp.mean(grads, axis=0)
+
+
+def quant2bit_ref(grad, residual, threshold):
+    """Reference 2-bit gradient quantization with error feedback.
+
+    MXNet-style threshold quantization (paper section 5): accumulate the
+    incoming gradient into the residual, emit {-1, 0, +1} per element
+    (dequantized value q * threshold), and keep the quantization error as
+    the new residual.
+
+    Returns:
+      (q, new_residual, dequant) with q in {-1, 0, 1} as float32.
+    """
+    acc = grad + residual
+    q = jnp.where(acc > threshold, 1.0, jnp.where(acc < -threshold, -1.0, 0.0))
+    dequant = q * threshold
+    new_residual = acc - dequant
+    return q, new_residual, dequant

@@ -1,0 +1,237 @@
+"""L2: JAX transformer LM forward/backward — the worker compute that feeds PHub.
+
+This is the "worker" half of the paper's training loop (Figure 3): each
+worker runs forward+backward on its minibatch and hands a flattened gradient
+vector to the parameter server. The PS half is the agg_opt Pallas kernel.
+
+The public compute graphs, all AOT-lowered by aot.py to HLO text and
+executed from Rust via PJRT:
+
+  grad_step(params_flat, tokens)  -> (loss, grads_flat)
+  eval_loss(params_flat, tokens)  -> (loss,)
+  agg_opt_step(grads, params, mom, lr, mu) -> (params', mom')   [L1 kernel]
+
+The model is deliberately parameterized only by a small config so artifact
+sizes stay CPU-tractable; the layer/key table (name, offset, length) is
+exported so the Rust coordinator can chunk and shard *per layer*, exactly as
+a PS shards "keys" (paper section 2: key = layer, value = its parameters).
+
+Everything operates on a single flat f32 vector padded to a multiple of the
+PHub chunk size, so the Rust side owns exactly one contiguous model buffer —
+mirroring PHub's one-shot NUMA-aware registration of a single contiguous
+block (section 3.2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.agg_opt import CHUNK_ELEMS
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyperparameters (byte-level vocabulary by default)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction and the flat <-> pytree bijection
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, Any]:
+    """Initialize the parameter pytree with scaled-normal weights."""
+    k = jax.random.PRNGKey(seed)
+    keys = jax.random.split(k, 2 + 6 * cfg.n_layers)
+    it = iter(keys)
+
+    def dense(key, fan_in, fan_out):
+        return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * (fan_in**-0.5)
+
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(next(it), (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(next(it), (cfg.seq_len, cfg.d_model)) * 0.02,
+    }
+    for i in range(cfg.n_layers):
+        params[f"blk{i}"] = {
+            "wqkv": dense(next(it), cfg.d_model, 3 * cfg.d_model),
+            "wo": dense(next(it), cfg.d_model, cfg.d_model),
+            "w1": dense(next(it), cfg.d_model, cfg.d_ff),
+            "w2": dense(next(it), cfg.d_ff, cfg.d_model),
+            "ln1": jnp.ones((cfg.d_model,)),
+            "ln2": jnp.ones((cfg.d_model,)),
+        }
+    params["lnf"] = jnp.ones((cfg.d_model,))
+    # Output head is tied to the embedding (standard weight tying).
+    return params
+
+
+def key_table(cfg: ModelConfig) -> list[dict[str, Any]]:
+    """Exported layer/key table: (name, offset, length) in flat order.
+
+    This is what the Rust coordinator treats as PS "keys". Offsets are into
+    the *unpadded* flat vector; the order matches ravel_pytree's canonical
+    (sorted-dict) traversal.
+    """
+    params = init_params(cfg)
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(params)
+    table = []
+    off = 0
+    for path, leaf in leaves_with_path:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        n = int(np.prod(leaf.shape))
+        table.append({"name": name, "offset": off, "len": n, "shape": list(leaf.shape)})
+        off += n
+    return table
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(e["len"] for e in key_table(cfg))
+
+
+def padded_size(cfg: ModelConfig, chunk: int = CHUNK_ELEMS) -> int:
+    p = param_count(cfg)
+    return ((p + chunk - 1) // chunk) * chunk
+
+
+def flatten_params(cfg: ModelConfig, params) -> jnp.ndarray:
+    """Pytree -> flat (K,) vector, zero-padded to a chunk multiple."""
+    flat, _ = jax.flatten_util.ravel_pytree(params)
+    k = padded_size(cfg)
+    return jnp.zeros((k,), jnp.float32).at[: flat.shape[0]].set(flat)
+
+
+def _unflattener(cfg: ModelConfig):
+    _, unravel = jax.flatten_util.ravel_pytree(init_params(cfg))
+    p = param_count(cfg)
+    return lambda flat: unravel(flat[:p])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def _attention(cfg: ModelConfig, blk, x):
+    b, t, d = x.shape
+    qkv = x @ blk["wqkv"]  # (B,T,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) * (cfg.d_head**-0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ blk["wo"]
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Causal LM logits for int32 tokens (B, T)."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        blk = params[f"blk{i}"]
+        x = x + _attention(cfg, blk, _layernorm(x, blk["ln1"]))
+        h = _layernorm(x, blk["ln2"])
+        x = x + jax.nn.gelu(h @ blk["w1"]) @ blk["w2"]
+    x = _layernorm(x, params["lnf"])
+    return x @ params["embed"].T  # tied head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Next-token cross-entropy over tokens (B, T+1)."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# AOT-exported entry points (flat-vector calling convention)
+# ---------------------------------------------------------------------------
+
+
+def make_grad_step(cfg: ModelConfig):
+    """grad_step(params_flat (K,), tokens (B, T+1) i32) -> (loss, grads_flat (K,))."""
+    unflatten = _unflattener(cfg)
+    k = padded_size(cfg)
+    p = param_count(cfg)
+
+    def grad_step(params_flat, tokens):
+        def flat_loss(pf):
+            return loss_fn(cfg, unflatten(pf), tokens)
+
+        loss, g = jax.value_and_grad(flat_loss)(params_flat)
+        # Zero the pad region so the PS never folds garbage into the model.
+        g = g.at[p:].set(0.0) if p < k else g
+        return loss, g
+
+    return grad_step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """eval_loss(params_flat, tokens) -> (loss,)."""
+    unflatten = _unflattener(cfg)
+
+    def eval_loss(params_flat, tokens):
+        return (loss_fn(cfg, unflatten(params_flat), tokens),)
+
+    return eval_loss
+
+
+def make_agg_opt(cfg: ModelConfig, n_workers: int):
+    """agg_opt_step over the padded model, using the L1 Pallas kernel."""
+    from .kernels.agg_opt import agg_opt
+
+    k = padded_size(cfg)
+
+    def step(grads, params, mom, lr, mu):
+        assert grads.shape == (n_workers, k)
+        return agg_opt(grads, params, mom, lr, mu)
+
+    return step
+
+
+def manifest(cfg: ModelConfig, n_workers: int) -> dict[str, Any]:
+    """JSON manifest consumed by the Rust coordinator."""
+    return {
+        "config": dataclasses.asdict(cfg),
+        "param_count": param_count(cfg),
+        "padded_size": padded_size(cfg),
+        "chunk_elems": CHUNK_ELEMS,
+        "n_workers": n_workers,
+        "keys": key_table(cfg),
+    }
+
+
+def manifest_json(cfg: ModelConfig, n_workers: int) -> str:
+    return json.dumps(manifest(cfg, n_workers), indent=1)

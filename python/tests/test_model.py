@@ -1,0 +1,156 @@
+"""L2 model tests: shapes, flat/pytree bijection, gradient sanity,
+single-process training convergence, key-table consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.agg_opt import CHUNK_ELEMS
+from compile.kernels.ref import agg_opt_ref
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16, batch=4)
+
+
+def tokens(key, cfg=CFG):
+    return jax.random.randint(jax.random.PRNGKey(key), (cfg.batch, cfg.seq_len + 1), 0, cfg.vocab)
+
+
+def test_param_count_matches_key_table():
+    table = M.key_table(CFG)
+    total = sum(e["len"] for e in table)
+    assert total == M.param_count(CFG)
+    # Offsets are contiguous.
+    off = 0
+    for e in table:
+        assert e["offset"] == off
+        off += e["len"]
+        assert int(np.prod(e["shape"])) == e["len"]
+
+
+def test_padded_size_is_chunk_multiple():
+    k = M.padded_size(CFG)
+    assert k % CHUNK_ELEMS == 0
+    assert k >= M.param_count(CFG)
+
+
+def test_flatten_roundtrip():
+    params = M.init_params(CFG, seed=3)
+    flat = M.flatten_params(CFG, params)
+    unflatten = M._unflattener(CFG)
+    rebuilt = unflatten(flat)
+    for path_leaf, orig_leaf in zip(
+        jax.tree_util.tree_leaves(rebuilt), jax.tree_util.tree_leaves(params)
+    ):
+        np.testing.assert_array_equal(path_leaf, orig_leaf)
+    # Pad region is zero.
+    p = M.param_count(CFG)
+    assert np.all(np.asarray(flat[p:]) == 0.0)
+
+
+def test_forward_shapes_and_loss_at_init():
+    params = M.init_params(CFG)
+    toks = tokens(0)
+    logits = M.forward(CFG, params, toks[:, :-1])
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    loss = M.loss_fn(CFG, params, toks)
+    # Near-uniform prediction at init: loss ~ ln(vocab).
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_grad_step_gradients_finite_and_pad_zero():
+    gs = jax.jit(M.make_grad_step(CFG))
+    pf = M.flatten_params(CFG, M.init_params(CFG))
+    loss, g = gs(pf, tokens(1))
+    assert np.isfinite(float(loss))
+    g = np.asarray(g)
+    assert np.all(np.isfinite(g))
+    assert np.linalg.norm(g) > 1e-5
+    assert np.all(g[M.param_count(CFG):] == 0.0)
+
+
+def test_eval_loss_matches_grad_step():
+    gs = jax.jit(M.make_grad_step(CFG))
+    ev = jax.jit(M.make_eval_loss(CFG))
+    pf = M.flatten_params(CFG, M.init_params(CFG))
+    toks = tokens(2)
+    l1, _ = gs(pf, toks)
+    (l2,) = ev(pf, toks)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_training_reduces_loss_via_kernel_optimizer():
+    """Mini data-parallel training: W=2 workers, the agg_opt kernel as the
+    PS. Loss on a fixed pattern decreases."""
+    cfg = CFG
+    gs = jax.jit(M.make_grad_step(cfg))
+    step = jax.jit(M.make_agg_opt(cfg, 2))
+    k = M.padded_size(cfg)
+    pf = M.flatten_params(cfg, M.init_params(cfg))
+    mom = jnp.zeros((k,))
+    # Learnable pattern: arithmetic token ramps.
+    def batch(seed):
+        start = jax.random.randint(jax.random.PRNGKey(seed), (cfg.batch, 1), 0, cfg.vocab)
+        ramp = jnp.arange(cfg.seq_len + 1)[None, :]
+        return (start + ramp) % cfg.vocab
+
+    losses = []
+    for i in range(12):
+        grads = []
+        loss_sum = 0.0
+        for w in range(2):
+            loss, g = gs(pf, batch(100 + 2 * i + w))
+            grads.append(g)
+            loss_sum += float(loss)
+        losses.append(loss_sum / 2)
+        pf, mom = step(jnp.stack(grads), pf, mom, 0.3, 0.9)
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_agg_opt_step_equals_manual_reference():
+    cfg = CFG
+    k = M.padded_size(cfg)
+    step = M.make_agg_opt(cfg, 3)
+    g = jax.random.normal(jax.random.PRNGKey(5), (3, k))
+    p = jax.random.normal(jax.random.PRNGKey(6), (k,))
+    m = jnp.zeros((k,))
+    got_p, got_m = step(g, p, m, 0.1, 0.9)
+    ref_p, ref_m = agg_opt_ref(g, p, m, 0.1, 0.9)
+    np.testing.assert_allclose(got_p, ref_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, ref_m, rtol=1e-5, atol=1e-6)
+
+
+def test_manifest_contents():
+    man = M.manifest(CFG, n_workers=4)
+    assert man["param_count"] == M.param_count(CFG)
+    assert man["padded_size"] == M.padded_size(CFG)
+    assert man["chunk_elems"] == CHUNK_ELEMS
+    assert man["n_workers"] == 4
+    assert len(man["keys"]) == len(M.key_table(CFG))
+    # JSON-serializable.
+    import json
+
+    parsed = json.loads(M.manifest_json(CFG, 4))
+    assert parsed["param_count"] == man["param_count"]
+
+
+def test_causality():
+    """Changing a future token must not affect earlier logits."""
+    params = M.init_params(CFG)
+    toks = np.asarray(tokens(9)[:, :-1])
+    logits1 = M.forward(CFG, params, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % CFG.vocab
+    logits2 = M.forward(CFG, params, jnp.asarray(toks2))
+    np.testing.assert_allclose(
+        logits1[:, :-1], logits2[:, :-1], rtol=1e-5, atol=1e-6
+    )
+    assert not np.allclose(logits1[:, -1], logits2[:, -1])
+
+
+@pytest.mark.parametrize("n_heads", [1, 2, 4])
+def test_head_count_variants(n_heads):
+    cfg = M.ModelConfig(vocab=32, d_model=32, n_layers=1, n_heads=n_heads, d_ff=32, seq_len=8, batch=2)
+    loss = M.loss_fn(cfg, M.init_params(cfg), tokens(11, cfg))
+    assert np.isfinite(float(loss))

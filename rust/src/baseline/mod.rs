@@ -1,0 +1,9 @@
+//! Baseline PS implementations the paper compares against.
+//!
+//! * [`wide`] — MXNet-style *wide* aggregation/optimization, executable,
+//!   for the section 4.5 tall-vs-wide comparison.
+//! * The timing behaviour of the full MXNet / MXNet-IB stacks (TCP copies,
+//!   dispatcher, 4 MB chunking) is modeled in [`crate::sim::params`] and
+//!   exercised through the simulator.
+
+pub mod wide;

@@ -1,0 +1,178 @@
+//! Wide aggregation (MXNet's scheme, paper section 3.2.2 & Figure 7).
+//!
+//! A gang of threads processes *one gradient array at a time*, each thread
+//! taking a partition of that array; aggregation cannot start until the
+//! key is fully received, optimization runs as a separate gang pass, and
+//! every key costs two full-gang synchronizations. PHub's tall scheme
+//! (chunk-per-core, no coordination) is implemented in
+//! [`crate::coordinator::aggregation`]; the `hotpath` bench races the two.
+
+use std::sync::Barrier;
+
+use crate::coordinator::optimizer::Optimizer;
+
+/// Aggregate `grads` (one slice per worker, equal lengths) into `out` as a
+/// mean, using a `threads`-wide gang with barrier synchronization per pass
+/// — the lock-step structure that hurts MXNet.
+pub fn wide_aggregate_mean(grads: &[&[f32]], out: &mut [f32], threads: usize) {
+    let n = grads.len();
+    assert!(n > 0);
+    let len = out.len();
+    assert!(grads.iter().all(|g| g.len() == len));
+    let threads = threads.max(1).min(len.max(1));
+    let barrier = Barrier::new(threads);
+    let inv = 1.0 / n as f32;
+
+    // Partition `out` among threads; each thread sums its slice across all
+    // workers (reads are strided across distinct gradient arrays — the
+    // locality-hostile access pattern of wide aggregation).
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, piece) in out.chunks_mut(chunk).enumerate() {
+            let barrier = &barrier;
+            let grads = &grads;
+            s.spawn(move || {
+                let a = t * chunk;
+                for (i, o) in piece.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for g in grads.iter() {
+                        acc += g[a + i];
+                    }
+                    *o = acc * inv;
+                }
+                // Lock-step completion: nobody proceeds until the gang is
+                // done (models MXNet's per-key join).
+                barrier.wait();
+            });
+        }
+    });
+}
+
+/// Wide optimization: a second gang pass applying `opt` over partitions,
+/// again barrier-synchronized (no overlap with aggregation).
+pub fn wide_optimize(
+    opt: &dyn Optimizer,
+    params: &mut [f32],
+    state: &mut [f32],
+    mean_grad: &[f32],
+    threads: usize,
+) {
+    let len = params.len();
+    assert_eq!(mean_grad.len(), len);
+    let threads = threads.max(1).min(len.max(1));
+    let words = opt.state_words();
+    let barrier = Barrier::new(threads);
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|s| {
+        let state_chunks: Vec<&mut [f32]> = if words > 0 {
+            state.chunks_mut(chunk * words).collect()
+        } else {
+            Vec::new()
+        };
+        let mut state_iter = state_chunks.into_iter();
+        for (t, piece) in params.chunks_mut(chunk).enumerate() {
+            let a = t * chunk;
+            let g = &mean_grad[a..a + piece.len()];
+            let st: &mut [f32] = if words > 0 {
+                state_iter.next().unwrap()
+            } else {
+                &mut []
+            };
+            let barrier = &barrier;
+            s.spawn(move || {
+                opt.step(piece, st, g);
+                barrier.wait();
+            });
+        }
+    });
+}
+
+/// Full wide exchange for one key: aggregate then optimize, two gang
+/// passes with a join between them.
+pub fn wide_exchange(
+    opt: &dyn Optimizer,
+    grads: &[&[f32]],
+    params: &mut [f32],
+    state: &mut [f32],
+    threads: usize,
+) {
+    let mut mean = vec![0.0f32; params.len()];
+    wide_aggregate_mean(grads, &mut mean, threads);
+    wide_optimize(opt, params, state, &mean, threads);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::{NesterovSgd, Sgd};
+
+    fn grads(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|w| (0..len).map(|i| (w * 13 + i) as f32 * 0.01).collect())
+            .collect()
+    }
+
+    #[test]
+    fn wide_mean_correct_any_thread_count() {
+        let gs = grads(4, 103);
+        let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+        let mut expect = vec![0.0f32; 103];
+        for g in &gs {
+            for (e, x) in expect.iter_mut().zip(g) {
+                *e += x / 4.0;
+            }
+        }
+        for threads in [1, 2, 3, 8, 103, 200] {
+            let mut out = vec![0.0f32; 103];
+            wide_aggregate_mean(&refs, &mut out, threads);
+            for (o, e) in out.iter().zip(&expect) {
+                assert!((o - e).abs() < 1e-6, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_exchange_matches_tall_result() {
+        // Wide and tall must compute the same math; only the schedule
+        // differs. Compare against the single-threaded reference.
+        let gs = grads(3, 64);
+        let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+        let opt = NesterovSgd {
+            lr: 0.1,
+            momentum: 0.9,
+        };
+        let mut p_wide: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let mut s_wide = vec![0.0f32; 64];
+        wide_exchange(&opt, &refs, &mut p_wide, &mut s_wide, 4);
+
+        let mut p_ref: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let mut s_ref = vec![0.0f32; 64];
+        let mut mean = vec![0.0f32; 64];
+        for g in &gs {
+            for (m, x) in mean.iter_mut().zip(g) {
+                *m += x / 3.0;
+            }
+        }
+        use crate::coordinator::optimizer::Optimizer as _;
+        opt.step(&mut p_ref, &mut s_ref, &mean);
+        for (a, b) in p_wide.iter().zip(&p_ref) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in s_wide.iter().zip(&s_ref) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn stateless_optimizer_wide_path() {
+        let gs = grads(2, 32);
+        let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+        let mut p = vec![1.0f32; 32];
+        let mut s = vec![];
+        wide_exchange(&Sgd { lr: 1.0 }, &refs, &mut p, &mut s, 3);
+        for (i, x) in p.iter().enumerate() {
+            let mean = ((i as f32) * 0.01 + (13 + i) as f32 * 0.01) / 2.0;
+            assert!((x - (1.0 - mean)).abs() < 1e-6);
+        }
+    }
+}

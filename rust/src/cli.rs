@@ -1,0 +1,108 @@
+//! Minimal CLI argument parsing (no clap in the offline environment).
+//!
+//! Supports `subcommand --flag value --flag=value --switch` forms and typed
+//! accessors with defaults.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("sim --dnn RN50 --workers=8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sim"));
+        assert_eq!(a.get("dnn"), Some("RN50"));
+        assert_eq!(a.get_usize("workers", 1), 8);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("net", "56g"), "56g");
+        assert_eq!(a.get_usize("iters", 3), 3);
+        assert_eq!(a.get_f64("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--dnn AN");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get("dnn"), Some("AN"));
+    }
+
+    #[test]
+    fn equals_and_space_forms_equivalent() {
+        let a = parse("x --k=v");
+        let b = parse("x --k v");
+        assert_eq!(a.get("k"), b.get("k"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Collective-communication baselines (paper section 5, Figure 20).
+//!
+//! The paper compares PHub against Gloo's collectives: ring all-reduce
+//! (Baidu/Horovod style) and recursive halving-doubling (used in the
+//! Facebook 1-hour ImageNet run). Both are implemented here *for real*
+//! (executable data-parallel reductions used by the hierarchical path and
+//! tests) and as *analytic time models* on the alpha-beta cost model for
+//! the Figure 20 comparison.
+//!
+//! Why collectives lose to PBox (paper's analysis): (1) every participant
+//! is effectively colocated — its NIC carries ~2x the data of a
+//! non-colocated PS's client; (2) multi-round schedules (log N or N-1
+//! rounds) multiply latency, while PBox needs exactly one round.
+
+/// In-place ring all-reduce over `n` equal-length vectors: after the call
+/// every vector holds the elementwise *sum*.
+///
+/// Reduce-scatter then all-gather, each `n-1` steps over contiguous
+/// segments — the standard bandwidth-optimal schedule.
+pub fn ring_allreduce_inplace(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    assert!(n > 0);
+    if n == 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    // Segment boundaries (segment s = [seg[s], seg[s+1])).
+    let seg: Vec<usize> = (0..=n).map(|s| s * len / n).collect();
+
+    // Reduce-scatter: at step t, rank r sends segment (r - t) to r+1 and
+    // accumulates the segment arriving from r-1.
+    for t in 0..n - 1 {
+        // Compute all transfers for this step before mutating (simulating
+        // the synchronous ring step).
+        let moves: Vec<(usize, usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let s = (r + n - t) % n;
+                let src = &bufs[r][seg[s]..seg[s + 1]];
+                ((r + 1) % n, s, src.to_vec())
+            })
+            .collect();
+        for (dst, s, data) in moves {
+            for (a, x) in bufs[dst][seg[s]..seg[s + 1]].iter_mut().zip(&data) {
+                *a += x;
+            }
+        }
+    }
+    // All-gather: segment (r + 1 - t) travels around the ring.
+    for t in 0..n - 1 {
+        let moves: Vec<(usize, usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let s = (r + 1 + n - t) % n;
+                let src = &bufs[r][seg[s]..seg[s + 1]];
+                ((r + 1) % n, s, src.to_vec())
+            })
+            .collect();
+        for (dst, s, data) in moves {
+            bufs[dst][seg[s]..seg[s + 1]].copy_from_slice(&data);
+        }
+    }
+}
+
+/// In-place recursive halving-doubling all-reduce (power-of-two ranks):
+/// reduce-scatter by recursive vector halving, then all-gather by
+/// recursive doubling.
+pub fn halving_doubling_allreduce_inplace(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    assert!(n.is_power_of_two(), "halving-doubling needs 2^k ranks");
+    if n == 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    // Track each rank's owned range through the halving.
+    let mut lo = vec![0usize; n];
+    let mut hi = vec![len; n];
+    let mut dist = n / 2;
+    while dist >= 1 {
+        let snapshot: Vec<Vec<f32>> = bufs.to_vec();
+        for r in 0..n {
+            let peer = r ^ dist;
+            let mid = (lo[r] + hi[r]) / 2;
+            // Lower-half owner keeps [lo, mid), upper keeps [mid, hi).
+            let keep_low = r & dist == 0;
+            let (a, b) = if keep_low { (lo[r], mid) } else { (mid, hi[r]) };
+            for i in a..b {
+                bufs[r][i] += snapshot[peer][i];
+            }
+            if keep_low {
+                hi[r] = mid;
+            } else {
+                lo[r] = mid;
+            }
+        }
+        dist /= 2;
+    }
+    // All-gather by doubling: exchange owned ranges back up.
+    dist = 1;
+    while dist < n {
+        let snapshot: Vec<Vec<f32>> = bufs.to_vec();
+        for r in 0..n {
+            let peer = r ^ dist;
+            for i in lo[peer]..hi[peer] {
+                bufs[r][i] = snapshot[peer][i];
+            }
+        }
+        for r in 0..n {
+            let peer = r ^ dist;
+            lo[r] = lo[r].min(lo[peer]);
+            hi[r] = hi[r].max(hi[peer]);
+        }
+        dist *= 2;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic alpha-beta time models (Figure 20)
+// ---------------------------------------------------------------------------
+
+/// Alpha-beta cost parameters: per-message latency `alpha` (s) and
+/// per-byte time `beta` (s/byte, = 1/bandwidth).
+#[derive(Debug, Clone, Copy)]
+pub struct AlphaBeta {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+/// Ring all-reduce time for `n` ranks and `m` bytes:
+/// `2(n-1) * alpha + 2 (n-1)/n * m * beta`.
+pub fn ring_time(ab: AlphaBeta, n: usize, m: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) * ab.alpha + 2.0 * (nf - 1.0) / nf * m * ab.beta
+}
+
+/// Recursive halving-doubling time:
+/// `2 log2(n) * alpha + 2 (n-1)/n * m * beta`.
+pub fn halving_doubling_time(ab: AlphaBeta, n: usize, m: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * nf.log2() * ab.alpha + 2.0 * (nf - 1.0) / nf * m * ab.beta
+}
+
+/// Centralized non-colocated PS exchange time (PBox-style, single round):
+/// workers push m bytes and pull m bytes; with chunk-pipelined full-duplex
+/// links the push and pull streams overlap, so the worker side costs one
+/// model pass of serialization. The PS side has `ps_bw_scale` times a
+/// single worker's bandwidth (PBox: 10 NICs) and also runs full duplex.
+pub fn central_ps_time(ab: AlphaBeta, n: usize, m: f64, ps_bw_scale: f64) -> f64 {
+    let worker = 2.0 * ab.alpha + m * ab.beta;
+    let ps = (n as f64) * m * ab.beta / ps_bw_scale;
+    worker.max(ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, len: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|r| (0..len).map(|i| ((r * 131 + i * 17) % 23) as f32 - 11.0).collect())
+            .collect();
+        let mut sum = vec![0.0f32; len];
+        for b in &bufs {
+            for (a, x) in sum.iter_mut().zip(b) {
+                *a += x;
+            }
+        }
+        (bufs, sum)
+    }
+
+    #[test]
+    fn ring_allreduce_sums() {
+        for (n, len) in [(2, 10), (3, 17), (5, 64), (8, 33)] {
+            let (mut bufs, sum) = mk(n, len);
+            ring_allreduce_inplace(&mut bufs);
+            for b in &bufs {
+                for (a, s) in b.iter().zip(&sum) {
+                    assert!((a - s).abs() < 1e-4, "n={n} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halving_doubling_sums() {
+        for (n, len) in [(2, 8), (4, 33), (8, 128), (16, 40)] {
+            let (mut bufs, sum) = mk(n, len);
+            halving_doubling_allreduce_inplace(&mut bufs);
+            for (r, b) in bufs.iter().enumerate() {
+                for (i, (a, s)) in b.iter().zip(&sum).enumerate() {
+                    assert!((a - s).abs() < 1e-4, "n={n} len={len} r={r} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collectives_agree_with_each_other() {
+        let (mut r, _) = mk(8, 100);
+        let mut h = r.clone();
+        ring_allreduce_inplace(&mut r);
+        halving_doubling_allreduce_inplace(&mut h);
+        for (a, b) in r[0].iter().zip(&h[0]) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut b = vec![vec![1.0f32, 2.0, 3.0]];
+        ring_allreduce_inplace(&mut b);
+        assert_eq!(b[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn time_models_basic_shape() {
+        let ab = AlphaBeta {
+            alpha: 5e-6,
+            beta: 1.0 / 1.25e9,
+        };
+        let m = 100e6;
+        // Same bandwidth term, ring pays more latency rounds.
+        assert!(ring_time(ab, 8, m) > halving_doubling_time(ab, 8, m));
+        // PBox-style central PS with 10x fan-in beats both at n=8 (one
+        // round, half the per-NIC data of a colocated collective).
+        let ps = central_ps_time(ab, 8, m, 10.0);
+        assert!(ps < halving_doubling_time(ab, 8, m), "{ps}");
+    }
+
+    #[test]
+    fn latency_matters_for_small_messages() {
+        let ab = AlphaBeta {
+            alpha: 50e-6,
+            beta: 1.0 / 1.25e9,
+        };
+        // Tiny message: halving-doubling's log rounds beat ring's linear.
+        let small = 1e3;
+        assert!(halving_doubling_time(ab, 16, small) < ring_time(ab, 16, small));
+    }
+}

@@ -1,0 +1,200 @@
+//! Worker compute model: GPU forward/backward timing.
+//!
+//! Substitute for the paper's GTX 1080 Ti workers (DESIGN.md section 2):
+//! the paper itself abstracts worker compute to a measured
+//! time-per-batch (Table 3), so the model is a scaled clock, not FLOPs.
+//!
+//! Also provides:
+//! * GPU *generations* (Figure 1/2: GRID 520 → K80 → M60 → 1080 Ti → V100)
+//!   as speed multipliers over the 1080 Ti baseline, used to show the
+//!   compute→communication bottleneck shift;
+//! * `ZeroCompute` (paper section 4.4 `ZeroComputeEngine`): infinitely fast
+//!   forward/backward, isolating the parameter-exchange pipeline.
+
+use crate::dnn::Dnn;
+
+/// Cloud GPU generations from Figure 1, as throughput multipliers relative
+/// to the GTX 1080 Ti that Table 3's timings were measured on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Gpu {
+    /// EC2 g2 (GRID 520, 2012-era).
+    Grid520,
+    /// EC2 p2 (K80).
+    K80,
+    /// EC2 g3 (M60).
+    M60,
+    /// Local GTX 1080 Ti — the paper's testbed baseline.
+    Gtx1080Ti,
+    /// EC2 p3 (V100).
+    V100,
+    /// Infinitely fast compute (ZeroComputeEngine, section 4.4).
+    ZeroCompute,
+}
+
+impl Gpu {
+    /// Approximate ResNet-class throughput relative to a GTX 1080 Ti.
+    /// Figure 1 reports a 35x spread between GRID 520 and V100-class parts;
+    /// the 1080 Ti sits at roughly 75% of a V100 on these workloads.
+    pub fn speedup(self) -> f64 {
+        match self {
+            Gpu::Grid520 => 0.038, // ~26x slower than 1080 Ti
+            Gpu::K80 => 0.17,
+            Gpu::M60 => 0.35,
+            Gpu::Gtx1080Ti => 1.0,
+            Gpu::V100 => 1.33,
+            Gpu::ZeroCompute => f64::INFINITY,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Gpu::Grid520 => "GRID 520 (g2)",
+            Gpu::K80 => "K80 (p2)",
+            Gpu::M60 => "M60 (g3)",
+            Gpu::Gtx1080Ti => "GTX 1080 Ti",
+            Gpu::V100 => "V100 (p3)",
+            Gpu::ZeroCompute => "ZeroCompute",
+        }
+    }
+
+    pub const GENERATIONS: [Gpu; 5] = [
+        Gpu::Grid520,
+        Gpu::K80,
+        Gpu::M60,
+        Gpu::Gtx1080Ti,
+        Gpu::V100,
+    ];
+}
+
+/// Per-worker compute engine: produces fwd/bwd timing for a model.
+#[derive(Debug, Clone)]
+pub struct ComputeEngine {
+    pub gpu: Gpu,
+    /// Multiplicative jitter bound for straggler modeling (0.0 = none):
+    /// each iteration's compute time is scaled by U(1, 1+jitter).
+    pub straggler_jitter: f64,
+}
+
+impl ComputeEngine {
+    pub fn new(gpu: Gpu) -> Self {
+        ComputeEngine {
+            gpu,
+            straggler_jitter: 0.0,
+        }
+    }
+
+    pub fn with_jitter(mut self, j: f64) -> Self {
+        self.straggler_jitter = j;
+        self
+    }
+
+    /// Total forward+backward time for one batch of `dnn`.
+    pub fn batch_time(&self, dnn: &Dnn) -> f64 {
+        if matches!(self.gpu, Gpu::ZeroCompute) {
+            return 0.0;
+        }
+        dnn.time_per_batch / self.gpu.speedup()
+    }
+
+    /// Forward-pass share of the batch time. Backward is roughly 2x forward
+    /// for these convolutional workloads, so forward ≈ 1/3 of the total.
+    pub fn forward_time(&self, dnn: &Dnn) -> f64 {
+        self.batch_time(dnn) / 3.0
+    }
+
+    /// Backward-pass duration.
+    pub fn backward_time(&self, dnn: &Dnn) -> f64 {
+        self.batch_time(dnn) - self.forward_time(dnn)
+    }
+
+    /// Time (relative to backward-pass start) at which layer `idx`'s
+    /// gradient becomes available. Backpropagation visits layers in
+    /// *reverse* forward order, so the last layer's gradient is ready
+    /// first; layer `idx` is ready once all layers after it have run.
+    pub fn grad_ready_offset(&self, dnn: &Dnn, idx: usize) -> f64 {
+        assert!(idx < dnn.layers.len());
+        let bwd = self.backward_time(dnn);
+        let frac_after: f64 = dnn.layers[idx..]
+            .iter()
+            .map(|l| l.compute_frac)
+            .sum();
+        bwd * frac_after
+    }
+
+    /// Deterministic per-(worker, iteration) straggler factor in
+    /// [1, 1+jitter], from a splitmix-style hash so simulations reproduce.
+    pub fn straggler_factor(&self, worker: usize, iter: usize) -> f64 {
+        if self.straggler_jitter == 0.0 {
+            return 1.0;
+        }
+        let mut z = (worker as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(iter as u64);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        1.0 + self.straggler_jitter * u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::Dnn;
+
+    #[test]
+    fn generations_are_monotonic() {
+        let mut prev = 0.0;
+        for g in Gpu::GENERATIONS {
+            assert!(g.speedup() > prev, "{}", g.label());
+            prev = g.speedup();
+        }
+        // Figure 1: ~35x spread between 2012 cloud GPUs and the latest.
+        let spread = Gpu::V100.speedup() / Gpu::Grid520.speedup();
+        assert!(spread > 30.0 && spread < 40.0, "{spread}");
+    }
+
+    #[test]
+    fn zero_compute_is_instant() {
+        let e = ComputeEngine::new(Gpu::ZeroCompute);
+        let d = Dnn::by_abbrev("RN18").unwrap();
+        assert_eq!(e.batch_time(&d), 0.0);
+        assert_eq!(e.grad_ready_offset(&d, 0), 0.0);
+    }
+
+    #[test]
+    fn grad_ready_is_reverse_ordered() {
+        let e = ComputeEngine::new(Gpu::Gtx1080Ti);
+        let d = Dnn::by_abbrev("RN50").unwrap();
+        // Last layer's gradient comes out first (smallest offset).
+        let first = e.grad_ready_offset(&d, d.layers.len() - 1);
+        let last = e.grad_ready_offset(&d, 0);
+        assert!(first < last);
+        // First layer's gradient only after the whole backward pass.
+        assert!((last - e.backward_time(&d)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_time_scales_with_gpu() {
+        let d = Dnn::by_abbrev("RN50").unwrap();
+        let slow = ComputeEngine::new(Gpu::K80).batch_time(&d);
+        let fast = ComputeEngine::new(Gpu::V100).batch_time(&d);
+        assert!(slow > fast);
+        assert!((ComputeEngine::new(Gpu::Gtx1080Ti).batch_time(&d) - 0.161).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_factor_deterministic_and_bounded() {
+        let e = ComputeEngine::new(Gpu::Gtx1080Ti).with_jitter(0.1);
+        for w in 0..8 {
+            for it in 0..10 {
+                let f = e.straggler_factor(w, it);
+                assert!((1.0..=1.1).contains(&f));
+                assert_eq!(f, e.straggler_factor(w, it));
+            }
+        }
+        let none = ComputeEngine::new(Gpu::Gtx1080Ti);
+        assert_eq!(none.straggler_factor(3, 5), 1.0);
+    }
+}

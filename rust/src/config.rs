@@ -1,0 +1,305 @@
+//! Cluster, network, and PS configuration types shared across the crate.
+//!
+//! These mirror the paper's experimental axes: PS placement (colocated vs
+//! non-colocated, centralized vs sharded — Figure 4), link speed (10 vs
+//! 56 Gbps), chunk size (section 3.2.3), queue-pair count (section 4.6),
+//! and the PBox hardware balance point (section 3.3).
+
+/// Parameter-server placement/sharding configuration (paper Figure 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PsConfig {
+    /// Colocated Centralized: one PS process on one worker machine.
+    ColocatedCentralized,
+    /// Colocated Sharded: a PS process on every worker machine (MXNet default).
+    ColocatedSharded,
+    /// Non-colocated Centralized: one dedicated PS machine.
+    NonColocatedCentralized,
+    /// Non-colocated Sharded: dedicated PS machines, one per worker.
+    NonColocatedSharded,
+    /// PBox: non-colocated centralized on balanced multi-NIC hardware (section 3.3).
+    PBox,
+}
+
+impl PsConfig {
+    pub const ALL: [PsConfig; 5] = [
+        PsConfig::ColocatedCentralized,
+        PsConfig::ColocatedSharded,
+        PsConfig::NonColocatedCentralized,
+        PsConfig::NonColocatedSharded,
+        PsConfig::PBox,
+    ];
+
+    pub fn colocated(self) -> bool {
+        matches!(
+            self,
+            PsConfig::ColocatedCentralized | PsConfig::ColocatedSharded
+        )
+    }
+
+    pub fn sharded(self) -> bool {
+        matches!(
+            self,
+            PsConfig::ColocatedSharded | PsConfig::NonColocatedSharded
+        )
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PsConfig::ColocatedCentralized => "CC",
+            PsConfig::ColocatedSharded => "CS",
+            PsConfig::NonColocatedCentralized => "NCC",
+            PsConfig::NonColocatedSharded => "NCS",
+            PsConfig::PBox => "PBox",
+        }
+    }
+}
+
+/// Which PS software stack runs the exchange (the paper's comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stack {
+    /// MXNet PS-Lite over TCP/ZMQ: 4 data copies, wide aggregation,
+    /// dispatcher-thread synchronization (section 2.3.2).
+    MxnetTcp,
+    /// "MXNet IB" enhanced baseline: zero-copy InfiniBand data plane but the
+    /// unchanged PS architecture (section 4.3.1).
+    MxnetIb,
+    /// PHub software: chunking, tall aggregation, chunk→core mapping.
+    PHub,
+}
+
+impl Stack {
+    pub fn label(self) -> &'static str {
+        match self {
+            Stack::MxnetTcp => "MXNet",
+            Stack::MxnetIb => "MXNet IB",
+            Stack::PHub => "PHub",
+        }
+    }
+}
+
+/// Network fabric parameters.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Per-port link bandwidth, Gbit/s (e.g. 10 or 56).
+    pub link_gbps: f64,
+    /// One-way propagation + switching latency per message, seconds.
+    pub base_latency: f64,
+    /// ToR-to-core oversubscription factor (1.0 = full bisection).
+    pub oversubscription: f64,
+    /// Queue pairs per (worker, interface) pair.
+    pub qps_per_connection: usize,
+    /// NIC QP-state cache capacity (entries) — misses add latency (section 4.6).
+    pub qp_cache_entries: usize,
+    /// Extra per-message latency on a QP cache miss, seconds.
+    pub qp_cache_miss_penalty: f64,
+}
+
+impl NetConfig {
+    pub fn infiniband_56g() -> Self {
+        NetConfig {
+            link_gbps: 56.0,
+            base_latency: 2e-6,
+            oversubscription: 1.0,
+            qps_per_connection: 1,
+            qp_cache_entries: 64,
+            qp_cache_miss_penalty: 1.2e-6,
+        }
+    }
+
+    /// Cloud-like 10 Gbps setting (the paper's down-clocked IB).
+    pub fn cloud_10g() -> Self {
+        NetConfig {
+            link_gbps: 10.0,
+            base_latency: 10e-6,
+            ..Self::infiniband_56g()
+        }
+    }
+
+    /// Link bandwidth in bytes/second.
+    pub fn link_bytes_per_sec(&self) -> f64 {
+        self.link_gbps * 1e9 / 8.0
+    }
+}
+
+/// PHub/PBox host hardware (paper section 3.3 / 4.1 prototype).
+#[derive(Debug, Clone)]
+pub struct HostConfig {
+    /// Physical cores available for gradient processing.
+    pub cores: usize,
+    /// NUMA domains.
+    pub numa_domains: usize,
+    /// Network interfaces attached (PBox = 10, worker = 1).
+    pub nics: usize,
+    /// Sustainable 1:1 read:write DRAM bandwidth, bytes/s.
+    pub dram_bw: f64,
+    /// PCIe-to-memory-bridge ceiling, bytes/s (section 4.7: the real limit).
+    pub pcie_bridge_bw: f64,
+    /// Per-core aggregation throughput with cache-resident buffers, bytes/s.
+    pub core_agg_bw: f64,
+}
+
+impl HostConfig {
+    /// The paper's PBox prototype: dual E5-2690 v4, 28 cores, 10x56 Gbps.
+    pub fn pbox() -> Self {
+        HostConfig {
+            cores: 28,
+            numa_domains: 2,
+            nics: 10,
+            dram_bw: 120e9,
+            pcie_bridge_bw: 90e9,
+            core_agg_bw: 7e9,
+        }
+    }
+
+    /// The paper's worker: dual E5-2680 v4, one ConnectX-3.
+    pub fn worker() -> Self {
+        HostConfig {
+            cores: 28,
+            numa_domains: 2,
+            nics: 1,
+            dram_bw: 120e9,
+            pcie_bridge_bw: 90e9,
+            core_agg_bw: 7e9,
+        }
+    }
+}
+
+/// Chunking and exchange policy (paper sections 3.2.3-3.2.4).
+#[derive(Debug, Clone)]
+pub struct ExchangeConfig {
+    /// Wire/aggregation chunk size in bytes (PHub default 32 KB).
+    pub chunk_bytes: usize,
+    /// Tall (chunked, per-core) vs wide (whole-key, thread-gang) aggregation.
+    pub tall_aggregation: bool,
+    /// Cached loads/stores vs non-temporal (cache-bypassing) agg/opt (section 4.5).
+    pub cached_agg: bool,
+    /// Key-affinity policy: keys by interface/core (true) vs worker by
+    /// interface (false) (section 4.5 "Key Affinity in PBox").
+    pub key_by_interface: bool,
+}
+
+impl Default for ExchangeConfig {
+    fn default() -> Self {
+        ExchangeConfig {
+            chunk_bytes: 32 * 1024,
+            tall_aggregation: true,
+            cached_agg: true,
+            key_by_interface: true,
+        }
+    }
+}
+
+impl ExchangeConfig {
+    /// MXNet-like policy: 4 MB chunks, wide aggregation.
+    pub fn mxnet() -> Self {
+        ExchangeConfig {
+            chunk_bytes: 4 * 1024 * 1024,
+            tall_aggregation: false,
+            cached_agg: true,
+            key_by_interface: false,
+        }
+    }
+}
+
+/// A full cluster description for one training job.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub n_workers: usize,
+    pub ps: PsConfig,
+    pub stack: Stack,
+    pub net: NetConfig,
+    pub worker_host: HostConfig,
+    pub ps_host: HostConfig,
+    pub exchange: ExchangeConfig,
+    /// Number of racks the job spans (1 = rack-local, >1 exercises
+    /// hierarchical reduction, section 3.4).
+    pub racks: usize,
+}
+
+impl ClusterConfig {
+    /// The paper's main testbed: 8 workers + PBox on 56 Gbps IB.
+    pub fn paper_testbed() -> Self {
+        ClusterConfig {
+            n_workers: 8,
+            ps: PsConfig::PBox,
+            stack: Stack::PHub,
+            net: NetConfig::infiniband_56g(),
+            worker_host: HostConfig::worker(),
+            ps_host: HostConfig::pbox(),
+            exchange: ExchangeConfig::default(),
+            racks: 1,
+        }
+    }
+
+    pub fn with_stack(mut self, stack: Stack) -> Self {
+        self.stack = stack;
+        self
+    }
+
+    pub fn with_ps(mut self, ps: PsConfig) -> Self {
+        self.ps = ps;
+        self
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.n_workers = n;
+        self
+    }
+
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn with_exchange(mut self, e: ExchangeConfig) -> Self {
+        self.exchange = e;
+        self
+    }
+
+    /// Number of PS processes implied by the PS configuration.
+    pub fn n_ps_processes(&self) -> usize {
+        if self.ps.sharded() {
+            self.n_workers
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ps_config_axes() {
+        assert!(PsConfig::ColocatedSharded.colocated());
+        assert!(PsConfig::ColocatedSharded.sharded());
+        assert!(!PsConfig::NonColocatedCentralized.colocated());
+        assert!(!PsConfig::NonColocatedCentralized.sharded());
+        assert!(!PsConfig::PBox.colocated());
+    }
+
+    #[test]
+    fn link_bandwidth_conversion() {
+        let n = NetConfig::infiniband_56g();
+        assert!((n.link_bytes_per_sec() - 7e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn sharded_process_count() {
+        let c = ClusterConfig::paper_testbed().with_ps(PsConfig::ColocatedSharded);
+        assert_eq!(c.n_ps_processes(), 8);
+        let c = c.with_ps(PsConfig::PBox);
+        assert_eq!(c.n_ps_processes(), 1);
+    }
+
+    #[test]
+    fn default_exchange_is_phub_defaults() {
+        let e = ExchangeConfig::default();
+        assert_eq!(e.chunk_bytes, 32 * 1024);
+        assert!(e.tall_aggregation);
+        let m = ExchangeConfig::mxnet();
+        assert_eq!(m.chunk_bytes, 4 * 1024 * 1024);
+        assert!(!m.tall_aggregation);
+    }
+}

@@ -1,0 +1,158 @@
+//! Tall (chunk-granular, streaming) gradient aggregation
+//! (paper section 3.2.2).
+//!
+//! Each chunk owns an aggregation buffer; worker gradients are summed into
+//! it as they arrive ("streaming" aggregation — processing starts with the
+//! first chunk, not the full key). When the last worker's copy lands, the
+//! buffer is scaled to a mean and handed to the optimizer *by the same
+//! thread on the same core* — no coordination with any other chunk.
+
+/// `acc += src`, the aggregation inner loop. Kept as a free function so
+//  benches can target it directly; the optimizer pass reuses it.
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += s;
+    }
+}
+
+/// `v *= k` (mean scaling).
+#[inline]
+pub fn scale(v: &mut [f32], k: f32) {
+    for x in v.iter_mut() {
+        *x *= k;
+    }
+}
+
+/// Streaming aggregation state for one chunk.
+#[derive(Debug, Clone)]
+pub struct ChunkAggregator {
+    acc: Vec<f32>,
+    /// Bitmask of workers whose gradient has been absorbed this round.
+    seen: u64,
+    n_workers: usize,
+}
+
+impl ChunkAggregator {
+    pub fn new(len: usize, n_workers: usize) -> Self {
+        assert!(n_workers >= 1 && n_workers <= 64, "worker bitmask is u64");
+        ChunkAggregator {
+            acc: vec![0.0; len],
+            seen: 0,
+            n_workers,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.acc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+
+    /// Workers absorbed so far this round.
+    pub fn arrived(&self) -> usize {
+        self.seen.count_ones() as usize
+    }
+
+    /// Absorb worker `w`'s gradient for this chunk. Returns `true` when all
+    /// workers have been absorbed (the chunk is ready to optimize).
+    ///
+    /// Panics on a duplicate push from the same worker in one round — that
+    /// is a protocol violation upstream (the PS must see exactly one
+    /// gradient per worker per round).
+    pub fn absorb(&mut self, w: usize, grad: &[f32]) -> bool {
+        assert!(w < self.n_workers, "worker {w} out of range");
+        assert_eq!(grad.len(), self.acc.len(), "chunk length mismatch");
+        let bit = 1u64 << w;
+        assert_eq!(self.seen & bit, 0, "duplicate push from worker {w}");
+        if self.seen == 0 {
+            // First arrival: copy instead of add (buffer may hold stale sums).
+            self.acc.copy_from_slice(grad);
+        } else {
+            add_assign(&mut self.acc, grad);
+        }
+        self.seen |= bit;
+        self.arrived() == self.n_workers
+    }
+
+    /// Finish the round: scale the sum to a mean, reset arrival state, and
+    /// expose the mean for the optimizer. The returned slice is valid until
+    /// the next `absorb`.
+    pub fn take_mean(&mut self) -> &[f32] {
+        assert_eq!(
+            self.arrived(),
+            self.n_workers,
+            "take_mean before all workers arrived"
+        );
+        scale(&mut self.acc, 1.0 / self.n_workers as f32);
+        self.seen = 0;
+        &self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_and_mean() {
+        let mut a = ChunkAggregator::new(4, 3);
+        assert!(!a.absorb(0, &[3.0, 0.0, 3.0, 3.0]));
+        assert!(!a.absorb(2, &[3.0, 3.0, 0.0, 3.0]));
+        assert!(a.absorb(1, &[3.0, 3.0, 3.0, 0.0]));
+        let m = a.take_mean();
+        assert_eq!(m, &[3.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn rounds_reuse_buffer() {
+        let mut a = ChunkAggregator::new(2, 2);
+        a.absorb(0, &[1.0, 1.0]);
+        a.absorb(1, &[3.0, 3.0]);
+        assert_eq!(a.take_mean(), &[2.0, 2.0]);
+        // Second round must not see residue from the first.
+        a.absorb(1, &[10.0, 10.0]);
+        a.absorb(0, &[20.0, 20.0]);
+        assert_eq!(a.take_mean(), &[15.0, 15.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate push")]
+    fn duplicate_worker_panics() {
+        let mut a = ChunkAggregator::new(2, 2);
+        a.absorb(0, &[0.0, 0.0]);
+        a.absorb(0, &[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "before all workers")]
+    fn early_take_mean_panics() {
+        let mut a = ChunkAggregator::new(2, 2);
+        a.absorb(0, &[0.0, 0.0]);
+        a.take_mean();
+    }
+
+    #[test]
+    fn single_worker_mean_is_identity() {
+        let mut a = ChunkAggregator::new(3, 1);
+        assert!(a.absorb(0, &[1.0, 2.0, 3.0]));
+        assert_eq!(a.take_mean(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn order_independence() {
+        let g0 = [1.0f32, 2.0];
+        let g1 = [5.0f32, -2.0];
+        let mut a = ChunkAggregator::new(2, 2);
+        a.absorb(0, &g0);
+        a.absorb(1, &g1);
+        let m1: Vec<f32> = a.take_mean().to_vec();
+        let mut b = ChunkAggregator::new(2, 2);
+        b.absorb(1, &g1);
+        b.absorb(0, &g0);
+        assert_eq!(m1, b.take_mean());
+    }
+}

@@ -1,0 +1,184 @@
+//! Key tables and fine-grained key chunking (paper section 3.2.3).
+//!
+//! A *key* is one layer's parameter tensor; PHub splits keys into
+//! fixed-size chunks ("virtual keys") that are the unit of transmission,
+//! aggregation, optimization, and core assignment. Chunking is on even for
+//! centralized servers — the goal is core/interface-level load balance and
+//! transmission/processing overlap, not shard balance.
+
+/// One key (layer) in the flattened model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Key {
+    pub name: String,
+    /// Offset in f32 elements into the flat model vector.
+    pub offset: usize,
+    /// Length in f32 elements.
+    pub len: usize,
+}
+
+/// A chunk ("virtual key"): a contiguous element range of the flat model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    /// Index of the owning key.
+    pub key: usize,
+    /// Offset in f32 elements into the flat model vector.
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Identifier of a chunk within a [`KeyTable`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkId(pub u32);
+
+/// The model's key table plus its chunking.
+#[derive(Debug, Clone)]
+pub struct KeyTable {
+    pub keys: Vec<Key>,
+    pub chunks: Vec<Chunk>,
+    /// Chunk size in f32 elements.
+    pub chunk_elems: usize,
+    /// Total flat model length in elements (sum of key lengths).
+    pub total_elems: usize,
+}
+
+impl KeyTable {
+    /// Build a key table from (name, len) pairs laid out contiguously,
+    /// chunked at `chunk_elems` granularity. Chunks never span keys (a
+    /// chunk is transmitted and aggregated as a unit of exactly one key).
+    pub fn new(keys: &[(String, usize)], chunk_elems: usize) -> KeyTable {
+        assert!(chunk_elems > 0);
+        let mut table = Vec::with_capacity(keys.len());
+        let mut chunks = Vec::new();
+        let mut offset = 0usize;
+        for (ki, (name, len)) in keys.iter().enumerate() {
+            assert!(*len > 0, "empty key {name}");
+            table.push(Key {
+                name: name.clone(),
+                offset,
+                len: *len,
+            });
+            let mut pos = 0usize;
+            while pos < *len {
+                let l = chunk_elems.min(*len - pos);
+                chunks.push(Chunk {
+                    key: ki,
+                    offset: offset + pos,
+                    len: l,
+                });
+                pos += l;
+            }
+            offset += *len;
+        }
+        KeyTable {
+            keys: table,
+            chunks,
+            chunk_elems,
+            total_elems: offset,
+        }
+    }
+
+    /// Uniform layout: a single flat buffer of `total` elements chunked
+    /// without key structure (used by benchmarks and the e2e example,
+    /// where the manifest's padded flat vector is the wire format).
+    pub fn flat(total: usize, chunk_elems: usize) -> KeyTable {
+        Self::new(&[("flat".to_string(), total)], chunk_elems)
+    }
+
+    /// Parse from the AOT manifest's key list (name, len) plus padding to
+    /// `padded` elements; the pad region becomes a synthetic final key so
+    /// every element has an owning chunk.
+    pub fn from_manifest_keys(keys: &[(String, usize)], padded: usize, chunk_elems: usize) -> KeyTable {
+        let total: usize = keys.iter().map(|(_, l)| l).sum();
+        assert!(padded >= total);
+        let mut all = keys.to_vec();
+        if padded > total {
+            all.push(("__pad".to_string(), padded - total));
+        }
+        Self::new(&all, chunk_elems)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Chunks belonging to key `k`, in order.
+    pub fn chunks_of(&self, k: usize) -> impl Iterator<Item = (ChunkId, &Chunk)> {
+        self.chunks
+            .iter()
+            .enumerate()
+            .filter(move |(_, c)| c.key == k)
+            .map(|(i, c)| (ChunkId(i as u32), c))
+    }
+
+    /// Verify structural invariants (used by property tests).
+    pub fn check_invariants(&self) {
+        // Chunks tile the model exactly, in order, without gaps/overlap.
+        let mut pos = 0usize;
+        for c in &self.chunks {
+            assert_eq!(c.offset, pos, "gap or overlap at chunk offset");
+            assert!(c.len > 0 && c.len <= self.chunk_elems);
+            pos += c.len;
+        }
+        assert_eq!(pos, self.total_elems);
+        // Every chunk lies inside its key.
+        for c in &self.chunks {
+            let k = &self.keys[c.key];
+            assert!(c.offset >= k.offset && c.offset + c.len <= k.offset + k.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(lens: &[usize]) -> Vec<(String, usize)> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| (format!("k{i}"), l))
+            .collect()
+    }
+
+    #[test]
+    fn chunks_tile_exactly() {
+        let t = KeyTable::new(&keys(&[100, 250, 64]), 64);
+        t.check_invariants();
+        assert_eq!(t.total_elems, 414);
+        // 100 -> 2 chunks, 250 -> 4, 64 -> 1.
+        assert_eq!(t.n_chunks(), 7);
+    }
+
+    #[test]
+    fn chunk_never_spans_keys() {
+        let t = KeyTable::new(&keys(&[65, 65]), 64);
+        // Each key gets a 64 + 1 split rather than sharing a chunk.
+        assert_eq!(t.n_chunks(), 4);
+        for c in &t.chunks {
+            let k = &t.keys[c.key];
+            assert!(c.offset + c.len <= k.offset + k.len);
+        }
+    }
+
+    #[test]
+    fn manifest_padding_becomes_key() {
+        let t = KeyTable::from_manifest_keys(&keys(&[100]), 128, 64);
+        assert_eq!(t.total_elems, 128);
+        assert_eq!(t.keys.last().unwrap().name, "__pad");
+        t.check_invariants();
+    }
+
+    #[test]
+    fn flat_layout() {
+        let t = KeyTable::flat(8192 * 3, 8192);
+        assert_eq!(t.n_chunks(), 3);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn chunks_of_key() {
+        let t = KeyTable::new(&keys(&[100, 250]), 64);
+        let c1: Vec<_> = t.chunks_of(1).collect();
+        assert_eq!(c1.len(), 4);
+        assert!(c1.iter().all(|(_, c)| c.key == 1));
+    }
+}

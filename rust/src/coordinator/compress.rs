@@ -1,0 +1,197 @@
+//! 2-bit gradient compression with error feedback (paper section 5).
+//!
+//! Rust mirror of the L1 `quant2bit` Pallas kernel: quantize to
+//! {-1, 0, +1} against a threshold, carry the quantization error in a
+//! residual, pack 4 levels/byte for the wire. The server dequantizes into
+//! its normal tall-aggregation path, so compression composes with PHub
+//! exactly as the paper argues ("PHub can also work with gradient
+//! compression to gain further benefits").
+
+/// Per-worker compressor state (the error-feedback residual).
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub threshold: f32,
+    residual: Vec<f32>,
+}
+
+/// A compressed gradient: packed 2-bit levels plus the threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantGrad {
+    pub threshold: f32,
+    pub len: usize,
+    /// 4 levels per byte; level encoding 0b00 = 0, 0b01 = +1, 0b10 = -1.
+    pub packed: Vec<u8>,
+}
+
+impl Quantizer {
+    pub fn new(len: usize, threshold: f32) -> Self {
+        assert!(threshold > 0.0);
+        Quantizer {
+            threshold,
+            residual: vec![0.0; len],
+        }
+    }
+
+    /// Quantize `grad` (accumulating the carried residual), updating the
+    /// residual in place. Matches `quant2bit_ref` elementwise.
+    pub fn quantize(&mut self, grad: &[f32]) -> QuantGrad {
+        assert_eq!(grad.len(), self.residual.len());
+        let t = self.threshold;
+        let mut packed = vec![0u8; grad.len().div_ceil(4)];
+        for (i, (g, r)) in grad.iter().zip(self.residual.iter_mut()).enumerate() {
+            let acc = g + *r;
+            let (code, dq) = if acc > t {
+                (0b01u8, t)
+            } else if acc < -t {
+                (0b10u8, -t)
+            } else {
+                (0b00u8, 0.0)
+            };
+            *r = acc - dq;
+            packed[i / 4] |= code << ((i % 4) * 2);
+        }
+        QuantGrad {
+            threshold: t,
+            len: grad.len(),
+            packed,
+        }
+    }
+
+    /// Max |residual| (diagnostic; bounded by `threshold` for bounded input).
+    pub fn residual_linf(&self) -> f32 {
+        self.residual.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+}
+
+impl QuantGrad {
+    /// Dequantize into a dense f32 vector (server side).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        for (i, o) in out.iter_mut().enumerate() {
+            let code = (self.packed[i / 4] >> ((i % 4) * 2)) & 0b11;
+            *o = match code {
+                0b01 => self.threshold,
+                0b10 => -self.threshold,
+                _ => 0.0,
+            };
+        }
+        out
+    }
+
+    /// Wire encoding: [len u64][threshold f32][packed bytes].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.packed.len());
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        out.extend_from_slice(&self.threshold.to_le_bytes());
+        out.extend_from_slice(&self.packed);
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> std::io::Result<QuantGrad> {
+        if b.len() < 12 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "quant payload too short",
+            ));
+        }
+        let len = u64::from_le_bytes(b[0..8].try_into().unwrap()) as usize;
+        let threshold = f32::from_le_bytes(b[8..12].try_into().unwrap());
+        let packed = b[12..].to_vec();
+        if packed.len() != len.div_ceil(4) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "quant payload length mismatch",
+            ));
+        }
+        Ok(QuantGrad {
+            threshold,
+            len,
+            packed,
+        })
+    }
+
+    /// Compression ratio vs dense f32 (≈16x for large models).
+    pub fn ratio(&self) -> f64 {
+        (self.len * 4) as f64 / self.to_bytes().len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_dequantize_levels() {
+        let mut q = Quantizer::new(6, 0.5);
+        let g = [1.0f32, -1.0, 0.2, -0.2, 0.51, -0.51];
+        let c = q.quantize(&g);
+        assert_eq!(c.dequantize(), vec![0.5, -0.5, 0.0, 0.0, 0.5, -0.5]);
+    }
+
+    #[test]
+    fn error_feedback_conserves_signal() {
+        let mut q = Quantizer::new(4, 0.5);
+        let g = [0.3f32, 0.3, 0.3, 0.3];
+        let mut dq_sum = vec![0.0f32; 4];
+        for _ in 0..10 {
+            let c = q.quantize(&g);
+            for (a, b) in dq_sum.iter_mut().zip(c.dequantize()) {
+                *a += b;
+            }
+        }
+        // 10 rounds of 0.3 = 3.0 total; dequantized sum within threshold.
+        for s in dq_sum {
+            assert!((s - 3.0).abs() <= 0.5 + 1e-6, "{s}");
+        }
+    }
+
+    #[test]
+    fn matches_kernel_reference_semantics() {
+        // Same recurrence as quant2bit_ref: acc = g + r; q in {-1,0,1};
+        // r' = acc - q*t.
+        let mut q = Quantizer::new(1, 0.5);
+        let rounds = [0.4f32, 0.4, -0.9, 0.1];
+        let mut r_ref = 0.0f32;
+        for g in rounds {
+            let c = q.quantize(&[g]);
+            let acc = g + r_ref;
+            let expect = if acc > 0.5 {
+                0.5
+            } else if acc < -0.5 {
+                -0.5
+            } else {
+                0.0
+            };
+            assert_eq!(c.dequantize()[0], expect);
+            r_ref = acc - expect;
+        }
+        assert!((q.residual_linf() - r_ref.abs()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut q = Quantizer::new(13, 0.25);
+        let g: Vec<f32> = (0..13).map(|i| (i as f32 - 6.0) * 0.1).collect();
+        let c = q.quantize(&g);
+        let d = QuantGrad::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(c.dequantize(), d.dequantize());
+    }
+
+    #[test]
+    fn compression_ratio_near_16x() {
+        let mut q = Quantizer::new(1 << 16, 0.5);
+        let g = vec![0.7f32; 1 << 16];
+        let c = q.quantize(&g);
+        assert!(c.ratio() > 15.0, "{}", c.ratio());
+    }
+
+    #[test]
+    fn bad_wire_payloads_rejected() {
+        assert!(QuantGrad::from_bytes(&[0; 4]).is_err());
+        let mut q = Quantizer::new(8, 0.5);
+        let mut bytes = q.quantize(&[0.9; 8]).to_bytes();
+        bytes.pop();
+        assert!(QuantGrad::from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Hierarchical cross-rack reduction (paper section 3.4, Figure 19).
+//!
+//! One PBox per rack aggregates its rack's gradients; PBoxes then reduce
+//! across racks (ring all-reduce over the oversubscribed core); each PBox
+//! runs the optimizer and broadcasts rack-locally. Cross-rack traffic
+//! drops to 1/N of flat sharding (N workers per rack) at the price of an
+//! extra reduction round.
+//!
+//! Includes the paper's benefit model: hierarchical reduction pays off when
+//!
+//! ```text
+//! max((N-1)/B_bn, 1/(N*B_wkr)) > max(1/B_PBox, N/B_wkr) + C
+//! ```
+//!
+//! with `B_bn = min((r-1)*B_PBox, B_core)` and `C` the inter-rack step.
+
+use crate::collectives::ring_allreduce_inplace;
+use crate::dnn::Dnn;
+
+/// Bandwidths for the benefit model, all in bytes/s *per model exchange
+/// unit* (the formula is unit-free as long as all terms share units).
+#[derive(Debug, Clone, Copy)]
+pub struct HierBandwidths {
+    /// Aggregate PBox bandwidth.
+    pub b_pbox: f64,
+    /// Network-core (cross-rack) bandwidth available to the job.
+    pub b_core: f64,
+    /// Per-worker bandwidth.
+    pub b_wkr: f64,
+}
+
+/// The bottleneck bandwidth `B_bn` for `r` racks.
+pub fn b_bn(bw: HierBandwidths, racks: usize) -> f64 {
+    if racks <= 1 {
+        return bw.b_core;
+    }
+    ((racks as f64 - 1.0) * bw.b_pbox).min(bw.b_core)
+}
+
+/// Inter-rack step cost `C` using a ring collective over `r` racks.
+pub fn ring_step_cost(bw: HierBandwidths, racks: usize) -> f64 {
+    if racks <= 1 {
+        return 0.0;
+    }
+    (racks as f64 - 1.0) / (racks as f64 * b_bn(bw, racks))
+}
+
+/// Paper's benefit condition: is two-level (hierarchical) reduction faster
+/// than flat cross-rack sharded exchange for `n` workers/rack, `r` racks?
+///
+/// The published inequality's worker terms are ambiguous as printed; we use
+/// the physically consistent reading (time per unit of model exchanged):
+/// flat exchange costs `max((N-1)/B_bn, 1/B_wkr)` — N racks' worth of
+/// gradients cross the bottleneck while each worker sends at its own line
+/// rate — and hierarchical costs a rack-local phase
+/// `max(N/B_PBox, 1/B_wkr)` plus the inter-rack step `C`.
+pub fn hierarchical_beneficial(bw: HierBandwidths, n: usize, racks: usize) -> bool {
+    if racks <= 1 {
+        return false;
+    }
+    let n = n as f64;
+    let bbn = b_bn(bw, racks);
+    let flat = ((n - 1.0) / bbn).max(1.0 / bw.b_wkr);
+    let hier = (n / bw.b_pbox).max(1.0 / bw.b_wkr) + ring_step_cost(bw, racks);
+    flat > hier
+}
+
+/// Raw time (seconds) of the cross-rack ring phase, following the paper's
+/// Figure 19 emulation: after local aggregation, chunks make ring hops —
+/// `2(r-1)/r` of the model volume over the inter-rack bottleneck, plus
+/// `2(r-1)` rounds of per-message latency.
+pub fn cross_rack_time(
+    dnn: &Dnn,
+    racks: usize,
+    core_gbps: f64,
+    per_msg_latency: f64,
+) -> f64 {
+    if racks <= 1 {
+        return 0.0;
+    }
+    let r = racks as f64;
+    let bw = core_gbps * 1e9 / 8.0;
+    let model = dnn.model_bytes as f64;
+    2.0 * (r - 1.0) / r * model / bw + 2.0 * (r - 1.0) * per_msg_latency
+}
+
+/// *Exposed* per-iteration overhead of hierarchical reduction: chunks
+/// stream into the ring as local aggregation finishes, so the cross-rack
+/// phase overlaps with the backward pass; only the portion exceeding the
+/// overlap budget (the compute time) is exposed.
+pub fn hierarchical_overhead(
+    dnn: &Dnn,
+    racks: usize,
+    chunk_bytes: usize,
+    core_gbps: f64,
+    per_msg_latency: f64,
+) -> f64 {
+    let _ = chunk_bytes;
+    let raw = cross_rack_time(dnn, racks, core_gbps, per_msg_latency);
+    (raw - dnn.time_per_batch).max(0.0)
+}
+
+/// Per-job throughput (samples/s) with hierarchical reduction, given the
+/// rack-local iteration time (from sim or measurement).
+pub fn throughput_with_hierarchy(
+    dnn: &Dnn,
+    racks: usize,
+    workers_per_rack: usize,
+    rack_iter_time: f64,
+    chunk_bytes: usize,
+    core_gbps: f64,
+    per_msg_latency: f64,
+) -> f64 {
+    let overhead = hierarchical_overhead(dnn, racks, chunk_bytes, core_gbps, per_msg_latency);
+    let iter = rack_iter_time + overhead;
+    (racks * workers_per_rack) as f64 * dnn.batch as f64 / iter
+}
+
+// ---------------------------------------------------------------------------
+// Real two-level reduction (executable, used by tests and rack_sim example)
+// ---------------------------------------------------------------------------
+
+/// Perform a *real* two-level reduction over per-worker gradients grouped
+/// by rack: rack-local mean, cross-rack ring all-reduce of rack sums, and
+/// a global mean. Returns the global mean gradient.
+///
+/// `grads[rack][worker]` are equal-length vectors.
+pub fn two_level_reduce(grads: &[Vec<Vec<f32>>]) -> Vec<f32> {
+    assert!(!grads.is_empty());
+    let len = grads[0][0].len();
+    let total_workers: usize = grads.iter().map(|r| r.len()).sum();
+    // Stage 1: per-rack local sums (each rack's PBox).
+    let mut rack_sums: Vec<Vec<f32>> = grads
+        .iter()
+        .map(|rack| {
+            let mut acc = vec![0.0f32; len];
+            for g in rack {
+                assert_eq!(g.len(), len);
+                for (a, x) in acc.iter_mut().zip(g) {
+                    *a += x;
+                }
+            }
+            acc
+        })
+        .collect();
+    // Stage 2: cross-rack ring all-reduce of the rack sums.
+    ring_allreduce_inplace(&mut rack_sums);
+    // Stage 3: every PBox now holds the global sum; divide once.
+    let mut out = rack_sums.swap_remove(0);
+    for x in out.iter_mut() {
+        *x /= total_workers as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bw() -> HierBandwidths {
+        // 10 Gbps workers, PBox aggregate 100 Gbps, constrained core.
+        HierBandwidths {
+            b_pbox: 12.5e9,
+            b_core: 2.5e9,
+            b_wkr: 1.25e9,
+        }
+    }
+
+    #[test]
+    fn single_rack_never_hierarchical() {
+        assert!(!hierarchical_beneficial(bw(), 8, 1));
+        assert_eq!(hierarchical_overhead(
+            &Dnn::by_abbrev("AN").unwrap(), 1, 32 << 10, 10.0, 1e-5), 0.0);
+    }
+
+    #[test]
+    fn oversubscribed_core_favors_hierarchy() {
+        // Many workers behind a thin core: flat sharded exchange is
+        // bottlenecked; hierarchy should win.
+        assert!(hierarchical_beneficial(bw(), 16, 4));
+    }
+
+    #[test]
+    fn fat_core_disfavors_hierarchy() {
+        let fat = HierBandwidths {
+            b_core: 1e12,
+            ..bw()
+        };
+        // With an effectively infinite core and few workers, the extra
+        // round is pure loss.
+        assert!(!hierarchical_beneficial(fat, 2, 2));
+    }
+
+    #[test]
+    fn overhead_grows_with_racks() {
+        let d = Dnn::by_abbrev("AN").unwrap();
+        let mut prev = 0.0;
+        for r in 1..=8 {
+            let o = hierarchical_overhead(&d, r, 32 << 10, 10.0, 1e-5);
+            assert!(o >= prev, "r={r}: {o} < {prev}");
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn alexnet_pays_resnet_does_not() {
+        // Figure 19's shape: AlexNet (huge model, fast compute) loses
+        // visible throughput; ResNet 50 (small model, slow compute) barely
+        // moves.
+        let an = Dnn::by_abbrev("AN").unwrap();
+        let rn = Dnn::by_abbrev("RN50").unwrap();
+        // Rack-local iteration times on a 10G cloud-like setup (roughly:
+        // AlexNet exchange-bound ~0.35s, ResNet compute-bound ~0.17s).
+        let an_tp1 = throughput_with_hierarchy(&an, 1, 8, 0.35, 32 << 10, 10.0, 1e-5);
+        let an_tp8 = throughput_with_hierarchy(&an, 8, 8, 0.35, 32 << 10, 10.0, 1e-5) / 8.0;
+        let rn_tp1 = throughput_with_hierarchy(&rn, 1, 8, 0.17, 32 << 10, 10.0, 1e-5);
+        let rn_tp8 = throughput_with_hierarchy(&rn, 8, 8, 0.17, 32 << 10, 10.0, 1e-5) / 8.0;
+        let an_loss = 1.0 - an_tp8 / an_tp1;
+        let rn_loss = 1.0 - rn_tp8 / rn_tp1;
+        assert!(an_loss > rn_loss, "AN loss {an_loss} vs RN {rn_loss}");
+        assert!(rn_loss < 0.25, "{rn_loss}");
+    }
+
+    #[test]
+    fn two_level_reduce_equals_flat_mean() {
+        // 3 racks x 2 workers, len 17.
+        let grads: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|r| {
+                (0..2)
+                    .map(|w| (0..17).map(|i| (r * 31 + w * 7 + i) as f32 * 0.1).collect())
+                    .collect()
+            })
+            .collect();
+        let hier = two_level_reduce(&grads);
+        // Flat reference mean.
+        let mut flat = vec![0.0f32; 17];
+        let mut count = 0;
+        for rack in &grads {
+            for g in rack {
+                for (a, x) in flat.iter_mut().zip(g) {
+                    *a += x;
+                }
+                count += 1;
+            }
+        }
+        for x in flat.iter_mut() {
+            *x /= count as f32;
+        }
+        for (h, f) in hier.iter().zip(&flat) {
+            assert!((h - f).abs() < 1e-5, "{h} vs {f}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Chunk/key → shard/interface/core assignment (paper section 3.2.4).
+//!
+//! PHub computes all placement at initialization time: keys are sharded
+//! across PS processes, and chunks are bound to a (queue pair, completion
+//! queue, core, NUMA domain) tuple that never changes during training. The
+//! balancer is LPT (longest-processing-time-first greedy), the classic
+//! 4/3-approximation for minimum-makespan partitioning the paper cites.
+
+/// Greedy LPT partition: assign each weighted item to the currently
+/// lightest bin, heaviest items first. Returns the bin index per item.
+///
+/// Guarantees makespan ≤ (4/3 − 1/(3m)) · OPT.
+pub fn lpt_partition(weights: &[usize], n_bins: usize) -> Vec<usize> {
+    assert!(n_bins > 0);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+    let mut load = vec![0usize; n_bins];
+    let mut assign = vec![0usize; weights.len()];
+    for i in order {
+        let bin = (0..n_bins).min_by_key(|&b| (load[b], b)).unwrap();
+        assign[i] = bin;
+        load[bin] += weights[i];
+    }
+    assign
+}
+
+/// Key → PS-shard assignment, balanced by key bytes.
+pub fn assign_keys_to_shards(key_bytes: &[usize], n_shards: usize) -> Vec<usize> {
+    lpt_partition(key_bytes, n_shards)
+}
+
+/// Maximum bin load under an assignment (for balance checks).
+pub fn makespan(weights: &[usize], assign: &[usize], n_bins: usize) -> usize {
+    let mut load = vec![0usize; n_bins];
+    for (i, &b) in assign.iter().enumerate() {
+        load[b] += weights[i];
+    }
+    load.into_iter().max().unwrap_or(0)
+}
+
+/// NUMA domain of a core (cores split contiguously across domains).
+pub fn core_numa(core: usize, cores: usize, numa: usize) -> usize {
+    core * numa / cores
+}
+
+/// NUMA domain of a NIC (NICs split contiguously across domains — the PBox
+/// attaches 5 of its 10 cards to each socket, section 4.1).
+pub fn nic_numa(nic: usize, nics: usize, numa: usize) -> usize {
+    nic * numa / nics
+}
+
+/// Uniform-chunk slot assignment: chunk `g` → (interface, core), with the
+/// core drawn from the same NUMA domain as the interface so a chunk's
+/// queue pair, completion queue, and aggregation buffer never cross
+/// sockets (section 3.3: "no inter-processor traffic on PBox").
+pub fn chunk_slot(g: usize, nics: usize, cores: usize, numa: usize) -> (usize, usize) {
+    assert!(nics > 0 && cores > 0 && numa > 0);
+    let iface = g % nics;
+    let dom = nic_numa(iface, nics, numa);
+    // Cores belonging to this NUMA domain. Boundaries use the same
+    // rounding as `core_numa` (core c is in domain c*numa/cores), i.e.
+    // domain d owns [ceil(d*cores/numa), ceil((d+1)*cores/numa)).
+    let first = (dom * cores).div_ceil(numa);
+    let end = ((dom + 1) * cores).div_ceil(numa).min(cores);
+    let count = end - first;
+    let core = first + (g / nics) % count.max(1);
+    (iface, core)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lpt_balances_uniform() {
+        let w = vec![1usize; 100];
+        let a = lpt_partition(&w, 10);
+        for b in 0..10 {
+            assert_eq!(a.iter().filter(|&&x| x == b).count(), 10);
+        }
+    }
+
+    #[test]
+    fn lpt_heavy_item_isolated() {
+        // One huge key (AlexNet fc6-like) + many small ones: the huge key
+        // gets its own shard.
+        let mut w = vec![10usize; 20];
+        w.push(1000);
+        let a = lpt_partition(&w, 4);
+        let huge_bin = a[20];
+        for (i, &b) in a.iter().enumerate() {
+            if i != 20 {
+                assert_ne!(b, huge_bin);
+            }
+        }
+    }
+
+    #[test]
+    fn lpt_within_four_thirds_of_mean_bound() {
+        // Makespan ≤ 4/3 * OPT and OPT ≥ max(mean, max_item).
+        let w: Vec<usize> = (1..=50).map(|i| (i * 37) % 97 + 3).collect();
+        for bins in [2, 4, 7] {
+            let a = lpt_partition(&w, bins);
+            let ms = makespan(&w, &a, bins);
+            let total: usize = w.iter().sum();
+            let opt_lb = (total as f64 / bins as f64)
+                .max(*w.iter().max().unwrap() as f64);
+            assert!(ms as f64 <= 4.0 / 3.0 * opt_lb + 1.0, "bins={bins} ms={ms}");
+        }
+    }
+
+    #[test]
+    fn chunk_slot_keeps_core_in_nic_numa() {
+        let (nics, cores, numa) = (10, 28, 2);
+        for g in 0..1000 {
+            let (iface, core) = chunk_slot(g, nics, cores, numa);
+            assert_eq!(
+                nic_numa(iface, nics, numa),
+                core_numa(core, cores, numa),
+                "g={g} iface={iface} core={core}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_slot_balances_interfaces_and_cores() {
+        let (nics, cores, numa) = (10, 28, 2);
+        let mut per_iface = vec![0usize; nics];
+        let mut per_core = vec![0usize; cores];
+        let n = 10 * 28 * 10;
+        for g in 0..n {
+            let (i, c) = chunk_slot(g, nics, cores, numa);
+            per_iface[i] += 1;
+            per_core[c] += 1;
+        }
+        assert!(per_iface.iter().all(|&x| x == n / nics));
+        let max = *per_core.iter().max().unwrap();
+        let min = *per_core.iter().min().unwrap();
+        assert!(max - min <= n / cores / 4, "{per_core:?}");
+    }
+
+    #[test]
+    fn single_bin_and_empty_inputs() {
+        assert_eq!(lpt_partition(&[5, 3], 1), vec![0, 0]);
+        assert!(lpt_partition(&[], 4).is_empty());
+        assert_eq!(makespan(&[], &[], 4), 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! The PHub coordinator: a real, executable rack-scale parameter server.
+//!
+//! Unlike [`crate::sim`] (which models the paper's testbed to regenerate
+//! its figures), this module *is* PHub: chunked keys, a fixed chunk→core
+//! mapping computed at init, per-core aggregation threads with no
+//! cross-core synchronization (tall aggregation), fused optimization, a
+//! multi-tenant namespace registry, and the paper's service API
+//! (`CreateService` / `ConnectService` / `InitService`,
+//! `Push` / `Pull` / `PushPull`).
+//!
+//! Workers are threads (or PJRT-executing processes in `examples/`)
+//! exchanging real `f32` gradients; the aggregation math matches the L1
+//! Pallas kernel bit-for-bit up to float associativity, and pytest checks
+//! the kernel against the same Nesterov reference.
+
+pub mod aggregation;
+pub mod chunk;
+pub mod compress;
+pub mod hierarchy;
+pub mod mapping;
+pub mod optimizer;
+pub mod server;
+pub mod service;
+pub mod tenancy;
+pub mod transport;
+pub mod wire;
+
+pub use chunk::{ChunkId, KeyTable};
+pub use optimizer::{NesterovSgd, Optimizer, Sgd};
+pub use server::{PHubServer, ServerConfig};
+pub use service::{ConnectionManager, ServiceHandle};

@@ -1,0 +1,149 @@
+//! Optimizers (paper section 3.2.2).
+//!
+//! PHub's aggregators and optimizers are "fully extensible: implementations
+//! that comply with PHub's API can be used during runtime". The API here is
+//! chunk-granular: the thread that aggregates a chunk immediately optimizes
+//! the same chunk on the same core, so implementations must be pure
+//! element-range updates with per-chunk state slices and no cross-chunk
+//! coupling.
+
+/// A chunk-granular optimizer.
+///
+/// `step` updates `params[..]` in place from the *mean* gradient `grad`,
+/// with `state` the optimizer's slice of per-element state for this chunk
+/// (e.g. the momentum buffer). All slices have equal length.
+pub trait Optimizer: Send + Sync {
+    /// Per-element f32 state words required (0 = stateless).
+    fn state_words(&self) -> usize;
+    fn step(&self, params: &mut [f32], state: &mut [f32], grad: &[f32]);
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD: `p -= lr * g`.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn state_words(&self) -> usize {
+        0
+    }
+
+    fn step(&self, params: &mut [f32], _state: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        for (p, g) in params.iter_mut().zip(grad) {
+            *p -= self.lr * g;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// SGD with Nesterov's accelerated gradient (the paper's evaluation
+/// optimizer, section 4.2), MXNet update rule:
+///
+/// ```text
+/// m' = mu * m + g
+/// p' = p - lr * (g + mu * m')
+/// ```
+///
+/// This matches `agg_opt_ref`/the Pallas kernel exactly, so the Rust PS and
+/// the AOT artifact produce identical training trajectories.
+#[derive(Debug, Clone)]
+pub struct NesterovSgd {
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl Optimizer for NesterovSgd {
+    fn state_words(&self) -> usize {
+        1
+    }
+
+    fn step(&self, params: &mut [f32], state: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(state.len(), grad.len());
+        let (lr, mu) = (self.lr, self.momentum);
+        for i in 0..params.len() {
+            let m = mu * state[i] + grad[i];
+            state[i] = m;
+            params[i] -= lr * (grad[i] + mu * m);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "nesterov-sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step() {
+        let o = Sgd { lr: 0.5 };
+        let mut p = vec![1.0f32, 2.0];
+        o.step(&mut p, &mut [], &[0.2, -0.4]);
+        assert_eq!(p, vec![0.9, 2.2]);
+    }
+
+    #[test]
+    fn nesterov_matches_reference_recurrence() {
+        let o = NesterovSgd {
+            lr: 0.1,
+            momentum: 0.9,
+        };
+        let mut p = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        // Two steps with g = 1.0.
+        o.step(&mut p, &mut m, &[1.0]);
+        // m = 1.0; p = 1 - 0.1*(1 + 0.9) = 0.81
+        assert!((p[0] - 0.81).abs() < 1e-6, "{}", p[0]);
+        o.step(&mut p, &mut m, &[1.0]);
+        // m = 0.9 + 1 = 1.9; p = 0.81 - 0.1*(1 + 1.71) = 0.539
+        assert!((m[0] - 1.9).abs() < 1e-6);
+        assert!((p[0] - 0.539).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn chunk_composition_equals_whole_vector() {
+        // Optimizing two half-chunks must equal optimizing the whole
+        // vector: the no-cross-chunk-coupling property tall aggregation
+        // relies on.
+        let o = NesterovSgd {
+            lr: 0.05,
+            momentum: 0.8,
+        };
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut p1: Vec<f32> = (0..64).map(|i| i as f32 * 0.01).collect();
+        let mut m1 = vec![0.0f32; 64];
+        let mut p2 = p1.clone();
+        let mut m2 = m1.clone();
+        for _ in 0..3 {
+            o.step(&mut p1, &mut m1, &g);
+            let (pa, pb) = p2.split_at_mut(32);
+            let (ma, mb) = m2.split_at_mut(32);
+            o.step(pa, ma, &g[..32]);
+            o.step(pb, mb, &g[32..]);
+        }
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn state_words() {
+        assert_eq!(Sgd { lr: 0.1 }.state_words(), 0);
+        assert_eq!(
+            NesterovSgd {
+                lr: 0.1,
+                momentum: 0.9
+            }
+            .state_words(),
+            1
+        );
+    }
+}

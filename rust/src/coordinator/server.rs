@@ -1,0 +1,546 @@
+//! The live PHub server: per-core aggregation threads, chunked exchange,
+//! fused tall aggregation + optimization, multi-tenant namespaces.
+//!
+//! This is the paper's architecture realized in-process: the "wire" is a
+//! channel carrying chunk-sized `f32` buffers, each chunk is pinned to one
+//! core-thread for its whole lifetime (reception, aggregation,
+//! optimization, transmission — section 3.2.4), cores share nothing, and
+//! chunk→core assignment is computed once at init with the LPT balancer.
+//!
+//! `examples/train_e2e.rs` drives this server with real gradients produced
+//! by the AOT-compiled JAX model running under PJRT.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::aggregation::ChunkAggregator;
+use super::chunk::KeyTable;
+use super::mapping;
+use super::optimizer::Optimizer;
+
+/// Server construction parameters.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Aggregation core-threads (the PBox prototype uses 28).
+    pub n_cores: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { n_cores: 4 }
+    }
+}
+
+/// Job identifier (one training job / tenant namespace).
+pub type JobId = u32;
+
+enum CoreMsg {
+    /// Register a job's chunks owned by this core: (chunk id, initial
+    /// params, optimizer, n_workers, reply channels per worker).
+    InitJob {
+        job: JobId,
+        chunks: Vec<(u32, Vec<f32>)>,
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        replies: Vec<Sender<Reply>>,
+    },
+    /// Worker gradient push for one chunk (optionally pulls the update).
+    /// `data` is the worker's whole flat gradient, shared zero-copy (the
+    /// in-process analogue of RDMA zero-copy, section 3.2.1); the core
+    /// reads only its chunk's range.
+    Push {
+        job: JobId,
+        chunk: u32,
+        worker: u32,
+        data: Arc<[f32]>,
+        range: (usize, usize),
+        pull: bool,
+    },
+    /// Read-only pull of current chunk params.
+    Pull { job: JobId, chunk: u32, worker: u32 },
+    /// Drop a job's state.
+    Evict { job: JobId },
+}
+
+/// Updated parameters for one chunk, broadcast to workers.
+pub struct Reply {
+    pub job: JobId,
+    pub chunk: u32,
+    pub data: Arc<[f32]>,
+}
+
+struct ChunkSlot {
+    params: Vec<f32>,
+    state: Vec<f32>,
+    agg: ChunkAggregator,
+}
+
+impl ChunkSlot {
+    fn new(params: Vec<f32>, state_words: usize, n_workers: usize) -> Self {
+        let len = params.len();
+        ChunkSlot {
+            state: vec![0.0; len * state_words],
+            agg: ChunkAggregator::new(len, n_workers),
+            params,
+        }
+    }
+}
+
+struct JobState {
+    chunks: HashMap<u32, ChunkSlot>,
+    opt: Arc<dyn Optimizer>,
+    replies: Vec<Sender<Reply>>,
+    /// Which workers asked to pull each chunk this round.
+    pull_mask: HashMap<u32, u64>,
+}
+
+fn core_loop(rx: Receiver<CoreMsg>) {
+    let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            CoreMsg::InitJob {
+                job,
+                chunks,
+                opt,
+                n_workers,
+                replies,
+            } => {
+                let mut map = HashMap::new();
+                for (id, params) in chunks {
+                    map.insert(id, ChunkSlot::new(params, opt.state_words(), n_workers));
+                }
+                jobs.insert(
+                    job,
+                    JobState {
+                        chunks: map,
+                        opt,
+                        replies,
+                        pull_mask: HashMap::new(),
+                    },
+                );
+            }
+            CoreMsg::Push {
+                job,
+                chunk,
+                worker,
+                data,
+                range,
+                pull,
+            } => {
+                let js = jobs.get_mut(&job).expect("push to unknown job");
+                let slot = js.chunks.get_mut(&chunk).expect("chunk not on this core");
+                if pull {
+                    *js.pull_mask.entry(chunk).or_insert(0) |= 1 << worker;
+                }
+                if slot.agg.absorb(worker as usize, &data[range.0..range.1]) {
+                    // Last worker arrived: mean + fused optimizer step, then
+                    // broadcast to every worker that pulled.
+                    let mean = slot.agg.take_mean();
+                    js.opt.step(&mut slot.params, &mut slot.state, mean);
+                    let mask = js.pull_mask.remove(&chunk).unwrap_or(0);
+                    if mask != 0 {
+                        let shared: Arc<[f32]> = slot.params.clone().into();
+                        for (w, tx) in js.replies.iter().enumerate() {
+                            if mask & (1 << w) != 0 {
+                                let _ = tx.send(Reply {
+                                    job,
+                                    chunk,
+                                    data: shared.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            CoreMsg::Pull { job, chunk, worker } => {
+                let js = jobs.get_mut(&job).expect("pull from unknown job");
+                let slot = &js.chunks[&chunk];
+                let shared: Arc<[f32]> = slot.params.clone().into();
+                let _ = js.replies[worker as usize].send(Reply {
+                    job,
+                    chunk,
+                    data: shared,
+                });
+            }
+            CoreMsg::Evict { job } => {
+                jobs.remove(&job);
+            }
+        }
+    }
+}
+
+/// Per-job bookkeeping on the server frontend.
+struct JobMeta {
+    table: Arc<KeyTable>,
+    /// Core index per chunk.
+    core_of: Vec<usize>,
+    n_workers: usize,
+    /// Reply receivers not yet claimed by worker handles.
+    pending_rx: Vec<Option<Receiver<Reply>>>,
+}
+
+/// The PHub server: owns the core threads.
+pub struct PHubServer {
+    cores: Vec<Sender<CoreMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    jobs: Mutex<HashMap<JobId, JobMeta>>,
+    next_job: AtomicU64,
+}
+
+impl PHubServer {
+    pub fn start(cfg: ServerConfig) -> Arc<PHubServer> {
+        assert!(cfg.n_cores >= 1);
+        let mut cores = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..cfg.n_cores {
+            let (tx, rx) = channel();
+            cores.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("phub-core-{i}"))
+                    .spawn(move || core_loop(rx))
+                    .expect("spawn core thread"),
+            );
+        }
+        Arc::new(PHubServer {
+            cores,
+            handles,
+            jobs: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+        })
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Register a job: allocate chunk→core mapping, install initial model
+    /// state on the core threads (the `PHub::InitService` step), and
+    /// prepare one reply channel per worker.
+    ///
+    /// Returns the job id. Worker handles are then created with
+    /// [`PHubServer::worker`].
+    pub fn init_job(
+        self: &Arc<Self>,
+        table: KeyTable,
+        init_params: &[f32],
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+    ) -> JobId {
+        assert_eq!(init_params.len(), table.total_elems);
+        assert!(n_workers >= 1 && n_workers <= 64);
+        let job = self.next_job.fetch_add(1, Ordering::SeqCst) as JobId;
+        let table = Arc::new(table);
+
+        // Chunk → core with the LPT balancer on chunk lengths (uniform
+        // chunks make this round-robin; ragged tails stay balanced).
+        let lens: Vec<usize> = table.chunks.iter().map(|c| c.len).collect();
+        let core_of = mapping::lpt_partition(&lens, self.cores.len());
+
+        let mut reply_txs = Vec::new();
+        let mut reply_rxs = Vec::new();
+        for _ in 0..n_workers {
+            let (tx, rx) = channel();
+            reply_txs.push(tx);
+            reply_rxs.push(Some(rx));
+        }
+
+        // Partition initial params per core.
+        for (ci, tx) in self.cores.iter().enumerate() {
+            let chunks: Vec<(u32, Vec<f32>)> = table
+                .chunks
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| core_of[*i] == ci)
+                .map(|(i, c)| (i as u32, init_params[c.offset..c.offset + c.len].to_vec()))
+                .collect();
+            tx.send(CoreMsg::InitJob {
+                job,
+                chunks,
+                opt: opt.clone(),
+                n_workers,
+                replies: reply_txs.clone(),
+            })
+            .expect("core thread gone");
+        }
+
+        self.jobs.lock().unwrap().insert(
+            job,
+            JobMeta {
+                table,
+                core_of,
+                n_workers,
+                pending_rx: reply_rxs,
+            },
+        );
+        job
+    }
+
+    /// Create the handle for worker `w` of `job` (the client side of
+    /// `PHub::ConnectService`).
+    pub fn worker(self: &Arc<Self>, job: JobId, w: usize) -> WorkerHandle {
+        let mut jobs = self.jobs.lock().unwrap();
+        let meta = jobs.get_mut(&job).expect("unknown job");
+        assert!(w < meta.n_workers, "worker index out of range");
+        let rx = meta.pending_rx[w]
+            .take()
+            .expect("worker handle already taken");
+        WorkerHandle {
+            server: self.clone(),
+            job,
+            worker: w as u32,
+            table: meta.table.clone(),
+            core_of: meta.core_of.clone(),
+            rx,
+            staging: Vec::new(),
+        }
+    }
+
+    /// Remove a job's state from all cores.
+    pub fn evict(&self, job: JobId) {
+        self.jobs.lock().unwrap().remove(&job);
+        for tx in &self.cores {
+            let _ = tx.send(CoreMsg::Evict { job });
+        }
+    }
+
+    /// Shut down core threads (consumes the last Arc).
+    pub fn shutdown(server: Arc<Self>) {
+        let mut server = match Arc::try_unwrap(server) {
+            Ok(s) => s,
+            Err(_) => return, // other handles alive; threads exit when they drop
+        };
+        server.cores.clear(); // closes channels
+        for h in server.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A worker's connection to the server.
+pub struct WorkerHandle {
+    server: Arc<PHubServer>,
+    job: JobId,
+    worker: u32,
+    table: Arc<KeyTable>,
+    core_of: Vec<usize>,
+    rx: Receiver<Reply>,
+    /// Reassembly buffer reused across rounds.
+    staging: Vec<f32>,
+}
+
+impl WorkerHandle {
+    pub fn model_len(&self) -> usize {
+        self.table.total_elems
+    }
+
+    pub fn key_table(&self) -> &KeyTable {
+        &self.table
+    }
+
+    /// Fused push+pull (the paper's `PHub::PushPull`): push this worker's
+    /// gradient, wait for all workers' pushes to aggregate, and return the
+    /// updated model. Saves a round trip over separate push-then-pull.
+    pub fn push_pull(&mut self, grad: &[f32]) -> Vec<f32> {
+        assert_eq!(grad.len(), self.table.total_elems, "gradient length");
+        // One registration-style copy into a shared buffer (the "NIC DMA"),
+        // then chunks are pushed zero-copy: cores read their ranges
+        // directly (section 3.2.1 "Minimal Copy" / 3.2.4 disassembly).
+        let shared: Arc<[f32]> = grad.into();
+        for (i, c) in self.table.chunks.iter().enumerate() {
+            self.server.cores[self.core_of[i]]
+                .send(CoreMsg::Push {
+                    job: self.job,
+                    chunk: i as u32,
+                    worker: self.worker,
+                    data: shared.clone(),
+                    range: (c.offset, c.offset + c.len),
+                    pull: true,
+                })
+                .expect("core thread gone");
+        }
+        self.collect_model()
+    }
+
+    /// Push without pulling (async update contribution).
+    pub fn push(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.table.total_elems);
+        let shared: Arc<[f32]> = grad.into();
+        for (i, c) in self.table.chunks.iter().enumerate() {
+            self.server.cores[self.core_of[i]]
+                .send(CoreMsg::Push {
+                    job: self.job,
+                    chunk: i as u32,
+                    worker: self.worker,
+                    data: shared.clone(),
+                    range: (c.offset, c.offset + c.len),
+                    pull: false,
+                })
+                .expect("core thread gone");
+        }
+    }
+
+    /// Pull the current model (no gradient contribution).
+    pub fn pull(&mut self) -> Vec<f32> {
+        for i in 0..self.table.chunks.len() {
+            self.server.cores[self.core_of[i]]
+                .send(CoreMsg::Pull {
+                    job: self.job,
+                    chunk: i as u32,
+                    worker: self.worker,
+                })
+                .expect("core thread gone");
+        }
+        self.collect_model()
+    }
+
+    /// Receive one reply per chunk and reassemble the flat model.
+    fn collect_model(&mut self) -> Vec<f32> {
+        self.staging.clear();
+        self.staging.resize(self.table.total_elems, 0.0);
+        for _ in 0..self.table.chunks.len() {
+            let r = self.rx.recv().expect("server dropped");
+            debug_assert_eq!(r.job, self.job);
+            let c = &self.table.chunks[r.chunk as usize];
+            self.staging[c.offset..c.offset + c.len].copy_from_slice(&r.data);
+        }
+        std::mem::take(&mut self.staging)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::{NesterovSgd, Sgd};
+
+    fn table(total: usize, chunk: usize) -> KeyTable {
+        KeyTable::flat(total, chunk)
+    }
+
+    /// N worker threads, one round of push_pull with known gradients:
+    /// result must equal p - lr * mean(g).
+    #[test]
+    fn one_round_sgd_exact() {
+        let server = PHubServer::start(ServerConfig { n_cores: 3 });
+        let n = 64usize;
+        let init = vec![1.0f32; n];
+        let job = server.init_job(
+            table(n, 16),
+            &init,
+            Arc::new(Sgd { lr: 0.5 }),
+            4,
+        );
+        let mut joins = Vec::new();
+        for w in 0..4usize {
+            let mut h = server.worker(job, w);
+            joins.push(std::thread::spawn(move || {
+                let g = vec![w as f32; n]; // mean = 1.5
+                h.push_pull(&g)
+            }));
+        }
+        for j in joins {
+            let model = j.join().unwrap();
+            for x in model {
+                assert!((x - (1.0 - 0.5 * 1.5)).abs() < 1e-6, "{x}");
+            }
+        }
+        PHubServer::shutdown(server);
+    }
+
+    /// Multi-round training equals the sequential Nesterov reference.
+    #[test]
+    fn multi_round_matches_sequential_reference() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let n = 48usize;
+        let init: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let opt = NesterovSgd {
+            lr: 0.1,
+            momentum: 0.9,
+        };
+        let job = server.init_job(table(n, 16), &init, Arc::new(opt.clone()), 2);
+
+        // Server path: 2 workers, 3 rounds, deterministic grads.
+        let grad = |w: usize, r: usize| -> Vec<f32> {
+            (0..n).map(|i| (w + 2 * r) as f32 + i as f32 * 0.01).collect()
+        };
+        let mut handles: Vec<_> = (0..2).map(|w| server.worker(job, w)).collect();
+        let mut final_model = Vec::new();
+        for r in 0..3 {
+            let (h0, h1) = handles.split_at_mut(1);
+            let g1 = grad(1, r);
+            let j = std::thread::scope(|s| {
+                let t = s.spawn(|| h1[0].push_pull(&g1));
+                let m0 = h0[0].push_pull(&grad(0, r));
+                let m1 = t.join().unwrap();
+                (m0, m1)
+            });
+            assert_eq!(j.0, j.1, "round {r}: workers disagree");
+            final_model = j.0;
+        }
+
+        // Sequential reference.
+        let mut p = init.clone();
+        let mut m = vec![0.0f32; n];
+        use crate::coordinator::optimizer::Optimizer as _;
+        for r in 0..3 {
+            let g0 = grad(0, r);
+            let g1 = grad(1, r);
+            let mean: Vec<f32> = g0.iter().zip(&g1).map(|(a, b)| (a + b) / 2.0).collect();
+            opt.step(&mut p, &mut m, &mean);
+        }
+        for (a, b) in final_model.iter().zip(&p) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        PHubServer::shutdown(server);
+    }
+
+    #[test]
+    fn pull_returns_init_before_any_push() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let init: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let job = server.init_job(table(32, 8), &init, Arc::new(Sgd { lr: 1.0 }), 1);
+        let mut h = server.worker(job, 0);
+        assert_eq!(h.pull(), init);
+        PHubServer::shutdown(server);
+    }
+
+    #[test]
+    fn two_jobs_are_isolated() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let init_a = vec![0.0f32; 16];
+        let init_b = vec![100.0f32; 16];
+        let ja = server.init_job(table(16, 8), &init_a, Arc::new(Sgd { lr: 1.0 }), 1);
+        let jb = server.init_job(table(16, 8), &init_b, Arc::new(Sgd { lr: 1.0 }), 1);
+        let mut ha = server.worker(ja, 0);
+        let mut hb = server.worker(jb, 0);
+        let ma = ha.push_pull(&vec![1.0; 16]); // 0 - 1 = -1
+        let mb = hb.push_pull(&vec![1.0; 16]); // 100 - 1 = 99
+        assert!(ma.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        assert!(mb.iter().all(|&x| (x - 99.0).abs() < 1e-6));
+        PHubServer::shutdown(server);
+    }
+
+    #[test]
+    fn push_then_pull_equivalent_to_push_pull() {
+        let server = PHubServer::start(ServerConfig { n_cores: 1 });
+        let init = vec![0.0f32; 8];
+        let job = server.init_job(table(8, 8), &init, Arc::new(Sgd { lr: 1.0 }), 1);
+        let mut h = server.worker(job, 0);
+        h.push(&vec![2.0; 8]);
+        let m = h.pull();
+        assert!(m.iter().all(|&x| (x + 2.0).abs() < 1e-6), "{m:?}");
+        PHubServer::shutdown(server);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker handle already taken")]
+    fn duplicate_worker_handle_rejected() {
+        let server = PHubServer::start(ServerConfig { n_cores: 1 });
+        let job = server.init_job(table(8, 8), &vec![0.0; 8], Arc::new(Sgd { lr: 1.0 }), 1);
+        let _a = server.worker(job, 0);
+        let _b = server.worker(job, 0);
+    }
+}

@@ -1,0 +1,240 @@
+//! The PHub service API surface (paper section 3.1): job rendezvous,
+//! namespace isolation, and nonce-based access control.
+//!
+//! `CreateService` establishes a namespace + nonce on the connection
+//! manager; `ConnectService` rendezvouses workers (replacing
+//! `Van::Connect` / `connectFullMesh` / `GrpcServer::Init` in MXNet /
+//! Caffe2 / TensorFlow); `InitService` allocates and registers the
+//! receive/merge buffers. Authentication is a one-time overhead: once a
+//! worker is admitted, its identity is assumed stable for the run.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::chunk::KeyTable;
+use super::optimizer::Optimizer;
+use super::server::{JobId, PHubServer, WorkerHandle};
+
+/// Errors from the service control plane.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ServiceError {
+    #[error("namespace {0:?} already exists")]
+    NamespaceTaken(String),
+    #[error("unknown namespace {0:?}")]
+    UnknownNamespace(String),
+    #[error("bad nonce for namespace {0:?}")]
+    BadNonce(String),
+    #[error("service not initialized")]
+    NotInitialized,
+    #[error("worker slot {0} already connected")]
+    SlotTaken(usize),
+}
+
+/// Handle returned by `CreateService`; the nonce is the job's credential.
+#[derive(Debug, Clone)]
+pub struct ServiceHandle {
+    pub namespace: String,
+    pub nonce: u64,
+}
+
+struct ServiceState {
+    nonce: u64,
+    n_workers: usize,
+    job: Option<JobId>,
+    connected: Vec<bool>,
+}
+
+/// The connection manager: the control-plane front of a PHub instance.
+pub struct ConnectionManager {
+    server: Arc<PHubServer>,
+    services: Mutex<HashMap<String, ServiceState>>,
+    nonce_seed: AtomicU64,
+}
+
+impl ConnectionManager {
+    pub fn new(server: Arc<PHubServer>) -> Arc<ConnectionManager> {
+        Arc::new(ConnectionManager {
+            server,
+            services: Mutex::new(HashMap::new()),
+            nonce_seed: AtomicU64::new(0x9E3779B97F4A7C15),
+        })
+    }
+
+    pub fn server(&self) -> &Arc<PHubServer> {
+        &self.server
+    }
+
+    /// `PHub::CreateService`: reserve a namespace for a training job and
+    /// mint its nonce.
+    pub fn create_service(
+        &self,
+        namespace: &str,
+        n_workers: usize,
+    ) -> Result<ServiceHandle, ServiceError> {
+        let mut svcs = self.services.lock().unwrap();
+        if svcs.contains_key(namespace) {
+            return Err(ServiceError::NamespaceTaken(namespace.to_string()));
+        }
+        // splitmix64 step: deterministic but well-mixed nonces.
+        let mut z = self
+            .nonce_seed
+            .fetch_add(0x9E3779B97F4A7C15, Ordering::SeqCst);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        let nonce = z ^ (z >> 31);
+        svcs.insert(
+            namespace.to_string(),
+            ServiceState {
+                nonce,
+                n_workers,
+                job: None,
+                connected: vec![false; n_workers],
+            },
+        );
+        Ok(ServiceHandle {
+            namespace: namespace.to_string(),
+            nonce,
+        })
+    }
+
+    /// `PHub::InitService`: allocate receive/merge buffers (the chunk
+    /// slots on the core threads) and install the initial model.
+    pub fn init_service(
+        &self,
+        handle: &ServiceHandle,
+        table: KeyTable,
+        init_params: &[f32],
+        opt: Arc<dyn Optimizer>,
+    ) -> Result<(), ServiceError> {
+        let mut svcs = self.services.lock().unwrap();
+        let st = svcs
+            .get_mut(&handle.namespace)
+            .ok_or_else(|| ServiceError::UnknownNamespace(handle.namespace.clone()))?;
+        if st.nonce != handle.nonce {
+            return Err(ServiceError::BadNonce(handle.namespace.clone()));
+        }
+        let job = self
+            .server
+            .init_job(table, init_params, opt, st.n_workers);
+        st.job = Some(job);
+        Ok(())
+    }
+
+    /// `PHub::ConnectService`: authenticate worker `w` by nonce and hand
+    /// it its data-plane handle.
+    pub fn connect_service(
+        &self,
+        handle: &ServiceHandle,
+        w: usize,
+    ) -> Result<WorkerHandle, ServiceError> {
+        let mut svcs = self.services.lock().unwrap();
+        let st = svcs
+            .get_mut(&handle.namespace)
+            .ok_or_else(|| ServiceError::UnknownNamespace(handle.namespace.clone()))?;
+        if st.nonce != handle.nonce {
+            return Err(ServiceError::BadNonce(handle.namespace.clone()));
+        }
+        let job = st.job.ok_or(ServiceError::NotInitialized)?;
+        if st.connected[w] {
+            return Err(ServiceError::SlotTaken(w));
+        }
+        st.connected[w] = true;
+        Ok(self.server.worker(job, w))
+    }
+
+    /// Tear down a namespace and evict its state from the cores.
+    pub fn destroy_service(&self, handle: &ServiceHandle) -> Result<(), ServiceError> {
+        let mut svcs = self.services.lock().unwrap();
+        let st = svcs
+            .remove(&handle.namespace)
+            .ok_or_else(|| ServiceError::UnknownNamespace(handle.namespace.clone()))?;
+        if st.nonce != handle.nonce {
+            svcs.insert(handle.namespace.clone(), st);
+            return Err(ServiceError::BadNonce(handle.namespace.clone()));
+        }
+        if let Some(job) = st.job {
+            self.server.evict(job);
+        }
+        Ok(())
+    }
+
+    pub fn n_services(&self) -> usize {
+        self.services.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::Sgd;
+    use crate::coordinator::server::ServerConfig;
+
+    fn setup() -> Arc<ConnectionManager> {
+        ConnectionManager::new(PHubServer::start(ServerConfig { n_cores: 2 }))
+    }
+
+    #[test]
+    fn create_init_connect_roundtrip() {
+        let cm = setup();
+        let h = cm.create_service("jobA", 2).unwrap();
+        cm.init_service(&h, KeyTable::flat(32, 8), &vec![0.0; 32], Arc::new(Sgd { lr: 0.1 }))
+            .unwrap();
+        let w0 = cm.connect_service(&h, 0).unwrap();
+        assert_eq!(w0.model_len(), 32);
+        // Slot reuse rejected.
+        assert_eq!(
+            cm.connect_service(&h, 0).err().unwrap(),
+            ServiceError::SlotTaken(0)
+        );
+    }
+
+    #[test]
+    fn namespace_collision_rejected() {
+        let cm = setup();
+        cm.create_service("dup", 1).unwrap();
+        assert_eq!(
+            cm.create_service("dup", 1).unwrap_err(),
+            ServiceError::NamespaceTaken("dup".into())
+        );
+    }
+
+    #[test]
+    fn bad_nonce_rejected() {
+        let cm = setup();
+        let mut h = cm.create_service("job", 1).unwrap();
+        h.nonce ^= 1;
+        assert!(matches!(
+            cm.init_service(&h, KeyTable::flat(8, 8), &vec![0.0; 8], Arc::new(Sgd { lr: 0.1 })),
+            Err(ServiceError::BadNonce(_))
+        ));
+    }
+
+    #[test]
+    fn connect_before_init_fails() {
+        let cm = setup();
+        let h = cm.create_service("early", 1).unwrap();
+        assert_eq!(
+            cm.connect_service(&h, 0).err().unwrap(),
+            ServiceError::NotInitialized
+        );
+    }
+
+    #[test]
+    fn nonces_differ_across_services() {
+        let cm = setup();
+        let a = cm.create_service("a", 1).unwrap();
+        let b = cm.create_service("b", 1).unwrap();
+        assert_ne!(a.nonce, b.nonce);
+    }
+
+    #[test]
+    fn destroy_frees_namespace() {
+        let cm = setup();
+        let h = cm.create_service("gone", 1).unwrap();
+        cm.destroy_service(&h).unwrap();
+        assert_eq!(cm.n_services(), 0);
+        // Namespace reusable after destroy.
+        cm.create_service("gone", 1).unwrap();
+    }
+}

@@ -1,0 +1,125 @@
+//! Multi-tenant operation: several independent training jobs sharing one
+//! PHub instance under different key namespaces (paper section 4.8,
+//! Figure 18).
+//!
+//! The isolation mechanism is the namespace + nonce of
+//! [`super::service::ConnectionManager`]; this module adds a measured
+//! concurrent-jobs driver used by `examples/multi_tenant.rs` and the
+//! Figure 18 bench: J jobs × W workers each, all exchanging through one
+//! server, reporting per-job exchange throughput.
+
+use std::sync::Arc;
+
+use super::chunk::KeyTable;
+use super::optimizer::NesterovSgd;
+use super::server::{PHubServer, ServerConfig};
+use super::service::ConnectionManager;
+
+/// Result of a concurrent-jobs run.
+#[derive(Debug, Clone)]
+pub struct TenancyResult {
+    pub jobs: usize,
+    pub rounds: usize,
+    /// Per-job exchange rounds per second (length = jobs).
+    pub per_job_rate: Vec<f64>,
+}
+
+impl TenancyResult {
+    /// Mean per-job rate.
+    pub fn mean_rate(&self) -> f64 {
+        self.per_job_rate.iter().sum::<f64>() / self.per_job_rate.len() as f64
+    }
+}
+
+/// Run `jobs` independent synchronous training jobs concurrently on one
+/// server; each job has `workers` worker threads exchanging a
+/// `model_elems`-element model for `rounds` rounds. Returns per-job rates.
+pub fn run_concurrent_jobs(
+    n_cores: usize,
+    jobs: usize,
+    workers: usize,
+    model_elems: usize,
+    chunk_elems: usize,
+    rounds: usize,
+) -> TenancyResult {
+    assert!(jobs >= 1 && workers >= 1 && rounds >= 1);
+    let server = PHubServer::start(ServerConfig { n_cores });
+    let cm = ConnectionManager::new(server.clone());
+
+    let mut handles_per_job = Vec::new();
+    for j in 0..jobs {
+        let h = cm
+            .create_service(&format!("tenant-{j}"), workers)
+            .expect("namespace");
+        cm.init_service(
+            &h,
+            KeyTable::flat(model_elems, chunk_elems),
+            &vec![0.0; model_elems],
+            Arc::new(NesterovSgd {
+                lr: 0.01,
+                momentum: 0.9,
+            }),
+        )
+        .expect("init");
+        let whs: Vec<_> = (0..workers)
+            .map(|w| cm.connect_service(&h, w).expect("connect"))
+            .collect();
+        handles_per_job.push(whs);
+    }
+
+    // Each worker thread runs `rounds` push_pulls; per-job wall time is
+    // measured from its own start to its last worker finishing.
+    let mut per_job_rate = vec![0.0; jobs];
+    std::thread::scope(|s| {
+        let mut job_threads = Vec::new();
+        for (j, whs) in handles_per_job.drain(..).enumerate() {
+            job_threads.push(s.spawn(move || {
+                let start = std::time::Instant::now();
+                std::thread::scope(|ws| {
+                    for mut h in whs {
+                        ws.spawn(move || {
+                            let grad = vec![0.5f32; h.model_len()];
+                            for _ in 0..rounds {
+                                let _ = h.push_pull(&grad);
+                            }
+                        });
+                    }
+                });
+                (j, rounds as f64 / start.elapsed().as_secs_f64())
+            }));
+        }
+        for t in job_threads {
+            let (j, rate) = t.join().unwrap();
+            per_job_rate[j] = rate;
+        }
+    });
+
+    PHubServer::shutdown(server);
+    TenancyResult {
+        jobs,
+        rounds,
+        per_job_rate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_jobs_complete() {
+        let r = run_concurrent_jobs(2, 3, 2, 4096, 1024, 5);
+        assert_eq!(r.per_job_rate.len(), 3);
+        assert!(r.per_job_rate.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn single_job_baseline_not_slower_than_many() {
+        // With shared cores, per-job rate with 4 jobs should not exceed
+        // the single-job rate (sanity direction; exact ratios are the
+        // bench's concern).
+        let one = run_concurrent_jobs(2, 1, 2, 32 * 1024, 8192, 8);
+        let four = run_concurrent_jobs(2, 4, 2, 32 * 1024, 8192, 8);
+        assert!(four.mean_rate() <= one.mean_rate() * 1.5, "{one:?} {four:?}");
+    }
+}

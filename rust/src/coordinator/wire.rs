@@ -1,0 +1,196 @@
+//! Wire protocol for the distributed PHub transport.
+//!
+//! Length-prefixed binary frames over TCP (the environment has no RDMA;
+//! `transport.rs` notes what the verbs path would change). Framing keeps
+//! PHub's "minimal metadata" spirit (section 3.2.1): a fixed 16-byte
+//! header — opcode, job, chunk, worker — plus the raw little-endian f32
+//! payload; no per-message serialization framework.
+
+use std::io::{Read, Write};
+
+/// Message opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Worker -> server: create+join a job (payload: model elems u64,
+    /// chunk elems u64, n_workers u32, lr f32, momentum f32).
+    Hello = 1,
+    /// Server -> worker: admission (payload: worker slot u32).
+    Welcome = 2,
+    /// Worker -> server: gradient push for the whole flat model
+    /// (payload: f32s); implies pull.
+    PushPull = 3,
+    /// Server -> worker: updated model (payload: f32s).
+    Model = 4,
+    /// Worker -> server: 2-bit compressed push (payload: packed levels +
+    /// f32 threshold; see `compress.rs`).
+    PushPullQuant = 5,
+    /// Either direction: orderly shutdown.
+    Bye = 6,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Option<Op> {
+        Some(match v {
+            1 => Op::Hello,
+            2 => Op::Welcome,
+            3 => Op::PushPull,
+            4 => Op::Model,
+            5 => Op::PushPullQuant,
+            6 => Op::Bye,
+            _ => return None,
+        })
+    }
+}
+
+/// A decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub op: Op,
+    pub job: u32,
+    pub worker: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Header layout: [len u32][op u8][pad u8;3][job u32][worker u32].
+pub const HEADER_BYTES: usize = 16;
+
+/// Encode a frame into a byte vector (length prefix covers the rest).
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let body_len = HEADER_BYTES - 4 + f.payload.len();
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(f.op as u8);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&f.job.to_le_bytes());
+    out.extend_from_slice(&f.worker.to_le_bytes());
+    out.extend_from_slice(&f.payload);
+    out
+}
+
+/// Write a frame to a stream.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode(f))?;
+    w.flush()
+}
+
+/// Read one frame from a stream.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let body_len = u32::from_le_bytes(len4) as usize;
+    if body_len < HEADER_BYTES - 4 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame too short",
+        ));
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body)?;
+    let op = Op::from_u8(body[0]).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "bad opcode")
+    })?;
+    let job = u32::from_le_bytes(body[4..8].try_into().unwrap());
+    let worker = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    Ok(Frame {
+        op,
+        job,
+        worker,
+        payload: body[12..].to_vec(),
+    })
+}
+
+/// f32 slice -> raw little-endian bytes.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Raw little-endian bytes -> f32 vector.
+pub fn bytes_to_f32s(b: &[u8]) -> std::io::Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "payload not f32-aligned",
+        ));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = Frame {
+            op: Op::PushPull,
+            job: 7,
+            worker: 3,
+            payload: f32s_to_bytes(&[1.0, -2.5, 3.25]),
+        };
+        let bytes = encode(&f);
+        let mut cursor = std::io::Cursor::new(bytes);
+        let g = read_frame(&mut cursor).unwrap();
+        assert_eq!(f, g);
+        assert_eq!(bytes_to_f32s(&g.payload).unwrap(), vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let f = Frame {
+            op: Op::Bye,
+            job: 0,
+            worker: 0,
+            payload: vec![],
+        };
+        let mut cursor = std::io::Cursor::new(encode(&f));
+        assert_eq!(read_frame(&mut cursor).unwrap(), f);
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        let mut bytes = encode(&Frame {
+            op: Op::Hello,
+            job: 1,
+            worker: 0,
+            payload: vec![],
+        });
+        bytes[4] = 99; // clobber opcode
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let bytes = encode(&Frame {
+            op: Op::Model,
+            job: 1,
+            worker: 0,
+            payload: vec![1, 2, 3, 4],
+        });
+        let mut cursor = std::io::Cursor::new(&bytes[..bytes.len() - 2]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn misaligned_f32_payload_rejected() {
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn header_size_is_fixed() {
+        let f = Frame {
+            op: Op::Welcome,
+            job: 9,
+            worker: 2,
+            payload: vec![0; 10],
+        };
+        assert_eq!(encode(&f).len(), 4 + (HEADER_BYTES - 4) + 10);
+    }
+}

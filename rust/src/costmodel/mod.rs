@@ -1,0 +1,9 @@
+//! Analytical models from the paper: bandwidth requirements (Figure 4 /
+//! Table 2) and the rack-scale deployment cost model (section 4.9 /
+//! Table 5).
+
+pub mod bandwidth;
+pub mod cost;
+
+pub use bandwidth::{required_gbps, table2_row};
+pub use cost::{CostModel, Deployment};

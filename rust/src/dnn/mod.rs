@@ -1,0 +1,256 @@
+//! DNN model zoo: the nine networks of the paper's evaluation (Table 3).
+//!
+//! Each model carries its size, single-GPU forward+backward time per batch
+//! (measured by the authors on a GTX 1080 Ti), and a synthetic per-layer
+//! key table. The key table matters: a PS shards and schedules *keys*
+//! (= layers), and the shape of the distribution — AlexNet/VGG dominated by
+//! a few enormous fully-connected keys, ResNet/GoogleNet made of hundreds
+//! of small convolutional keys — drives every overlap and load-balance
+//! result in the paper.
+//!
+//! Layer tables are generated procedurally to match each family's
+//! published architecture shape, then scaled so the total equals Table 3's
+//! model size exactly.
+
+/// One PS key (= one layer's parameter tensor).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerKey {
+    pub name: String,
+    /// Parameter bytes (f32).
+    pub bytes: usize,
+    /// Fraction of the *backward* pass compute attributed to this layer.
+    /// Gradients become available in reverse layer order; this controls
+    /// when each key's gradient is ready for exchange.
+    pub compute_frac: f64,
+}
+
+/// A network from Table 3.
+#[derive(Debug, Clone)]
+pub struct Dnn {
+    pub name: &'static str,
+    pub abbrev: &'static str,
+    /// Total model size in bytes (Table 3 "Model Size").
+    pub model_bytes: usize,
+    /// Forward+backward time per batch on a GTX 1080 Ti, seconds (Table 3).
+    pub time_per_batch: f64,
+    /// Per-GPU batch size used in the paper.
+    pub batch: usize,
+    /// Per-layer key table, in *forward* order.
+    pub layers: Vec<LayerKey>,
+}
+
+const MB: usize = 1024 * 1024;
+
+/// Layer-family descriptor used by the procedural generator.
+enum Family {
+    /// Conv front + FC tail: (n_conv, fc_fracs of total size).
+    FcHeavy { n_conv: usize, fc_fracs: &'static [f64] },
+    /// Many conv keys with a mild geometric size ramp (deeper = wider).
+    ConvHeavy { n_keys: usize },
+}
+
+fn gen_layers(total_bytes: usize, family: Family) -> Vec<LayerKey> {
+    let mut layers = Vec::new();
+    match family {
+        Family::FcHeavy { n_conv, fc_fracs } => {
+            let fc_total: f64 = fc_fracs.iter().sum();
+            assert!(fc_total < 1.0);
+            let conv_total = 1.0 - fc_total;
+            // Conv sizes ramp geometrically (early convs are small).
+            let ratio = 1.6f64;
+            let weight_sum: f64 = (0..n_conv).map(|i| ratio.powi(i as i32)).sum();
+            for i in 0..n_conv {
+                let frac = conv_total * ratio.powi(i as i32) / weight_sum;
+                layers.push(LayerKey {
+                    name: format!("conv{i}"),
+                    bytes: (total_bytes as f64 * frac) as usize,
+                    // Convs dominate compute: weight them heavily.
+                    compute_frac: 0.0, // filled below
+                });
+            }
+            for (i, f) in fc_fracs.iter().enumerate() {
+                layers.push(LayerKey {
+                    name: format!("fc{i}"),
+                    bytes: (total_bytes as f64 * f) as usize,
+                    compute_frac: 0.0,
+                });
+            }
+        }
+        Family::ConvHeavy { n_keys } => {
+            let ratio = 1.02f64;
+            let weight_sum: f64 = (0..n_keys).map(|i| ratio.powi(i as i32)).sum();
+            for i in 0..n_keys {
+                let frac = ratio.powi(i as i32) / weight_sum;
+                layers.push(LayerKey {
+                    name: format!("conv{i}"),
+                    bytes: (total_bytes as f64 * frac) as usize,
+                    compute_frac: 0.0,
+                });
+            }
+        }
+    }
+    // Fix rounding so sizes sum exactly to total_bytes.
+    let sum: usize = layers.iter().map(|l| l.bytes).sum();
+    let last = layers.len() - 1;
+    layers[last].bytes += total_bytes - sum;
+
+    // Compute weights: convolution backward is FLOP-heavy relative to its
+    // parameter count; FC backward is a single GEMM over its (large)
+    // parameters. Weight conv layers 16x per byte vs FC layers.
+    let weights: Vec<f64> = layers
+        .iter()
+        .map(|l| {
+            let w = if l.name.starts_with("conv") { 16.0 } else { 1.0 };
+            w * l.bytes as f64
+        })
+        .collect();
+    let wsum: f64 = weights.iter().sum();
+    for (l, w) in layers.iter_mut().zip(weights) {
+        l.compute_frac = w / wsum;
+    }
+    layers
+}
+
+impl Dnn {
+    fn new(
+        name: &'static str,
+        abbrev: &'static str,
+        model_mb: usize,
+        time_ms: f64,
+        batch: usize,
+        family: Family,
+    ) -> Self {
+        let model_bytes = model_mb * MB;
+        Dnn {
+            name,
+            abbrev,
+            model_bytes,
+            time_per_batch: time_ms / 1e3,
+            batch,
+            layers: gen_layers(model_bytes, family),
+        }
+    }
+
+    /// All nine evaluation networks (paper Table 3).
+    pub fn zoo() -> Vec<Dnn> {
+        vec![
+            // AlexNet: 5 convs, 3 FCs; fc6/fc7/fc8 hold ~95% of weights.
+            Dnn::new("AlexNet", "AN", 194, 16.0, 32,
+                Family::FcHeavy { n_conv: 5, fc_fracs: &[0.645, 0.245, 0.061] }),
+            // VGG 11: 8 convs + 3 FCs; fc6 alone is ~74% of the model.
+            Dnn::new("VGG 11", "V11", 505, 121.0, 32,
+                Family::FcHeavy { n_conv: 8, fc_fracs: &[0.74, 0.12, 0.029] }),
+            // VGG 19: 16 convs + 3 FCs.
+            Dnn::new("VGG 19", "V19", 548, 268.0, 32,
+                Family::FcHeavy { n_conv: 16, fc_fracs: &[0.68, 0.112, 0.027] }),
+            Dnn::new("GoogleNet", "GN", 38, 100.0, 32, Family::ConvHeavy { n_keys: 59 }),
+            Dnn::new("Inception V3", "I3", 91, 225.0, 32, Family::ConvHeavy { n_keys: 94 }),
+            Dnn::new("ResNet 18", "RN18", 45, 54.0, 32, Family::ConvHeavy { n_keys: 21 }),
+            Dnn::new("ResNet 50", "RN50", 97, 161.0, 32, Family::ConvHeavy { n_keys: 54 }),
+            Dnn::new("ResNet 269", "RN269", 390, 350.0, 16, Family::ConvHeavy { n_keys: 269 }),
+            Dnn::new("ResNext 269", "RX269", 390, 386.0, 8, Family::ConvHeavy { n_keys: 269 }),
+        ]
+    }
+
+    /// Look up a network by abbreviation (e.g. "RN50").
+    pub fn by_abbrev(abbrev: &str) -> Option<Dnn> {
+        Self::zoo().into_iter().find(|d| d.abbrev == abbrev)
+    }
+
+    /// Local (single-node) training throughput in samples/s.
+    pub fn local_throughput(&self) -> f64 {
+        self.batch as f64 / self.time_per_batch
+    }
+
+    /// Communication-to-computation ratio: bytes exchanged per second of
+    /// compute (one full model each way per iteration).
+    pub fn comm_compute_ratio(&self) -> f64 {
+        2.0 * self.model_bytes as f64 / self.time_per_batch
+    }
+
+    /// Number of PHub chunks for a given chunk size.
+    pub fn n_chunks(&self, chunk_bytes: usize) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.bytes.div_ceil(chunk_bytes))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table3_sizes() {
+        let zoo = Dnn::zoo();
+        assert_eq!(zoo.len(), 9);
+        let expect: &[(&str, usize, f64)] = &[
+            ("AN", 194, 16.0),
+            ("V11", 505, 121.0),
+            ("V19", 548, 268.0),
+            ("GN", 38, 100.0),
+            ("I3", 91, 225.0),
+            ("RN18", 45, 54.0),
+            ("RN50", 97, 161.0),
+            ("RN269", 390, 350.0),
+            ("RX269", 390, 386.0),
+        ];
+        for (abbrev, mb, ms) in expect {
+            let d = Dnn::by_abbrev(abbrev).unwrap();
+            assert_eq!(d.model_bytes, mb * MB, "{abbrev}");
+            assert!((d.time_per_batch - ms / 1e3).abs() < 1e-9, "{abbrev}");
+        }
+    }
+
+    #[test]
+    fn layer_bytes_sum_exactly() {
+        for d in Dnn::zoo() {
+            let sum: usize = d.layers.iter().map(|l| l.bytes).sum();
+            assert_eq!(sum, d.model_bytes, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn compute_fracs_sum_to_one() {
+        for d in Dnn::zoo() {
+            let sum: f64 = d.layers.iter().map(|l| l.compute_frac).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: {sum}", d.name);
+        }
+    }
+
+    #[test]
+    fn alexnet_is_fc_dominated() {
+        let an = Dnn::by_abbrev("AN").unwrap();
+        let fc_bytes: usize = an
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("fc"))
+            .map(|l| l.bytes)
+            .sum();
+        assert!(fc_bytes as f64 > 0.9 * an.model_bytes as f64);
+    }
+
+    #[test]
+    fn resnet_has_many_small_keys() {
+        let rn = Dnn::by_abbrev("RN269").unwrap();
+        assert_eq!(rn.layers.len(), 269);
+        let max = rn.layers.iter().map(|l| l.bytes).max().unwrap();
+        // No single key dominates a conv-heavy model.
+        assert!((max as f64) < 0.05 * rn.model_bytes as f64);
+    }
+
+    #[test]
+    fn chunk_count() {
+        let an = Dnn::by_abbrev("AN").unwrap();
+        let n = an.n_chunks(32 * 1024);
+        // 194 MB / 32 KB = 6208, plus per-layer ceil rounding.
+        assert!(n >= 6208 && n < 6300, "{n}");
+    }
+
+    #[test]
+    fn local_throughput_alexnet() {
+        let an = Dnn::by_abbrev("AN").unwrap();
+        assert!((an.local_throughput() - 2000.0).abs() < 1.0); // 32 / 16ms
+    }
+}

@@ -1,0 +1,182 @@
+//! End-to-end live training: AOT-compiled JAX transformer (L2/L1) executed
+//! via PJRT, gradients exchanged through the real PHub server (L3).
+//!
+//! This is the crate's existence proof that all three layers compose: the
+//! worker compute is the `grad_step.hlo.txt` artifact, the PS is the
+//! threaded PHub coordinator running the same Nesterov update as the
+//! Pallas kernel, and the loss curve on a synthetic corpus goes down.
+//! `examples/train_e2e.rs` and `phub train` both drive this module; the
+//! recorded run lives in EXPERIMENTS.md.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::coordinator::{ConnectionManager, KeyTable, NesterovSgd, PHubServer};
+use crate::coordinator::server::ServerConfig;
+use crate::prop::Rng;
+use crate::runtime::{self, Runtime};
+
+/// Synthetic corpus: a noisy arithmetic token progression. Learnable by a
+/// small causal LM (next ≈ prev + stride mod vocab), with 10% uniform
+/// noise so loss does not collapse to zero.
+pub fn synth_tokens(rng: &mut Rng, batch: usize, seq_plus1: usize, vocab: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(batch * seq_plus1);
+    for _ in 0..batch {
+        let mut t = rng.usize_in(0, vocab);
+        let stride = 1 + rng.usize_in(0, 3);
+        for _ in 0..seq_plus1 {
+            out.push(t as i32);
+            t = if rng.f64() < 0.1 {
+                rng.usize_in(0, vocab)
+            } else {
+                (t + stride) % vocab
+            };
+        }
+    }
+    out
+}
+
+/// Result of a live training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub workers: usize,
+    pub param_count: usize,
+    /// Mean worker loss per step.
+    pub losses: Vec<f32>,
+    pub samples_per_sec: f64,
+    pub exchanges_per_sec: f64,
+}
+
+impl TrainReport {
+    /// Smoothed loss over the first/last `k` steps (for convergence checks).
+    pub fn mean_loss_head_tail(&self, k: usize) -> (f32, f32) {
+        let k = k.min(self.losses.len());
+        let head = self.losses[..k].iter().sum::<f32>() / k as f32;
+        let tail = self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32;
+        (head, tail)
+    }
+}
+
+/// Run live data-parallel training for `steps` iterations with `workers`
+/// workers against a PHub server with `cores` aggregation threads.
+///
+/// Worker gradient computation executes the AOT artifact via PJRT on this
+/// thread (one PJRT client; data-parallel semantics are preserved because
+/// each worker gets its own minibatch and its own push). The exchange runs
+/// on real server threads.
+pub fn train(
+    artifacts: &Path,
+    workers: usize,
+    steps: usize,
+    cores: usize,
+    lr: f32,
+    momentum: f32,
+    verbose: bool,
+) -> Result<TrainReport> {
+    let rt = Runtime::cpu(artifacts)?;
+    let man = rt.manifest()?;
+    let grad_step = rt.load("grad_step")?;
+    let init = rt.initial_params()?;
+    anyhow::ensure!(init.len() == man.padded_size, "params_init length");
+
+    // PS setup via the paper's service API.
+    let server = PHubServer::start(ServerConfig { n_cores: cores });
+    let cm = ConnectionManager::new(server.clone());
+    let svc = cm.create_service("e2e", workers).expect("namespace");
+    let keys: Vec<(String, usize)> = man.keys.iter().map(|(n, _, l)| (n.clone(), *l)).collect();
+    let table = KeyTable::from_manifest_keys(&keys, man.padded_size, man.chunk_elems);
+    cm.init_service(
+        &svc,
+        table,
+        &init,
+        Arc::new(NesterovSgd { lr, momentum }),
+    )
+    .expect("init service");
+    let mut handles: Vec<_> = (0..workers)
+        .map(|w| cm.connect_service(&svc, w).expect("connect"))
+        .collect();
+
+    let mut params = init;
+    let mut rng = Rng::new(0x5EED);
+    let mut losses = Vec::with_capacity(steps);
+    let start = Instant::now();
+
+    for step in 0..steps {
+        // Compute each worker's gradient with the PJRT artifact.
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(workers);
+        let mut step_loss = 0.0f32;
+        for _w in 0..workers {
+            let toks = synth_tokens(&mut rng, man.batch, man.seq_len + 1, man.vocab);
+            let p = runtime::literal_f32(&params, &[man.padded_size as i64])?;
+            let t = runtime::literal_i32(&toks, &[man.batch as i64, (man.seq_len + 1) as i64])?;
+            let out = grad_step.call(&[p, t])?;
+            anyhow::ensure!(out.len() == 2, "grad_step returns (loss, grads)");
+            step_loss += runtime::to_scalar_f32(&out[0])?;
+            grads.push(runtime::to_vec_f32(&out[1])?);
+        }
+        step_loss /= workers as f32;
+        losses.push(step_loss);
+
+        // Exchange through the live server: workers push concurrently.
+        let updated: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .iter_mut()
+                .zip(grads.iter())
+                .map(|(h, g)| s.spawn(move || h.push_pull(g)))
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // Synchronous training invariant: all workers agree bit-for-bit.
+        for u in &updated[1..] {
+            anyhow::ensure!(u == &updated[0], "workers diverged at step {step}");
+        }
+        params = updated.into_iter().next().unwrap();
+
+        if verbose && (step % 10 == 0 || step + 1 == steps) {
+            println!("step {step:>4}  loss {step_loss:.4}");
+        }
+    }
+
+    let elapsed = start.elapsed().as_secs_f64();
+    PHubServer::shutdown(server);
+    Ok(TrainReport {
+        steps,
+        workers,
+        param_count: man.param_count,
+        samples_per_sec: (steps * workers * man.batch) as f64 / elapsed,
+        exchanges_per_sec: steps as f64 / elapsed,
+        losses,
+    })
+}
+
+/// `phub train` CLI front end.
+pub fn train_cli(a: &Args) -> Result<()> {
+    let artifacts = runtime::default_artifacts_dir();
+    let workers = a.get_usize("workers", 4);
+    let steps = a.get_usize("steps", 50);
+    let cores = a.get_usize("cores", 4);
+    let lr = a.get_f64("lr", 0.05) as f32;
+    let mu = a.get_f64("momentum", 0.9) as f32;
+    let r = train(
+        artifacts.as_path(),
+        workers,
+        steps,
+        cores,
+        lr,
+        mu,
+        !a.has("quiet"),
+    )
+    .context("live training")?;
+    let (head, tail) = r.mean_loss_head_tail(5);
+    println!(
+        "\ntrained {} params, {} steps x {} workers: loss {head:.3} -> {tail:.3}, \
+         {:.1} samples/s, {:.2} exchanges/s",
+        r.param_count, r.steps, r.workers, r.samples_per_sec, r.exchanges_per_sec
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Directed link: the unit of bandwidth in the fabric model.
+
+/// Identifier for a link within a [`super::Fabric`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+/// A directed link with fixed capacity.
+///
+/// Links model every bandwidth-constrained stage the paper reasons about:
+/// worker NIC tx/rx, each of PBox's 10 NIC ports, the ToR uplink under
+/// oversubscription, and the PBox PCIe-to-memory bridge (section 4.7 shows
+/// the bridge, not the NICs or DRAM, is the real ceiling — we model it as
+/// one more link every PBox flow must traverse).
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// Capacity in bytes/s.
+    pub capacity: f64,
+}
+
+impl Link {
+    pub fn new(name: impl Into<String>, capacity: f64) -> Self {
+        Link {
+            name: name.into(),
+            capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_construction() {
+        let l = Link::new("tor-up", 7e9);
+        assert_eq!(l.name, "tor-up");
+        assert!((l.capacity - 7e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! InfiniBand queue-pair state-cache model (paper section 4.6).
+//!
+//! Queue pairs have on-NIC cached state; when the working set of active QPs
+//! exceeds the cache, per-message handling slows down. The paper's Figure
+//! 16 (right) shows that *fewer* QPs per connection win: extra QPs reduce
+//! head-of-line blocking slightly but thrash the cache. We model the cache
+//! as ideal-LRU over a uniformly-accessed QP population, which yields a
+//! simple closed-form miss rate.
+
+/// Per-NIC queue-pair cache.
+#[derive(Debug, Clone)]
+pub struct QpCache {
+    /// Cache capacity in QP entries.
+    pub entries: usize,
+    /// Extra latency per message on a miss, seconds.
+    pub miss_penalty: f64,
+}
+
+impl QpCache {
+    pub fn new(entries: usize, miss_penalty: f64) -> Self {
+        QpCache {
+            entries,
+            miss_penalty,
+        }
+    }
+
+    /// Miss rate when `active_qps` are accessed uniformly.
+    ///
+    /// Ideal LRU over a uniform reference stream: if the population fits,
+    /// no misses; otherwise each access hits with probability
+    /// `entries / active_qps`.
+    pub fn miss_rate(&self, active_qps: usize) -> f64 {
+        if active_qps <= self.entries || active_qps == 0 {
+            0.0
+        } else {
+            1.0 - self.entries as f64 / active_qps as f64
+        }
+    }
+
+    /// Expected extra per-message latency given the active QP population.
+    pub fn message_overhead(&self, active_qps: usize) -> f64 {
+        self.miss_rate(active_qps) * self.miss_penalty
+    }
+}
+
+/// Number of QPs a PS-side NIC must keep active: one per (worker,
+/// connection) times the configured QPs per connection.
+pub fn active_qps(n_workers: usize, qps_per_connection: usize) -> usize {
+    n_workers * qps_per_connection
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_cache_no_misses() {
+        let c = QpCache::new(64, 1e-6);
+        assert_eq!(c.miss_rate(64), 0.0);
+        assert_eq!(c.miss_rate(8), 0.0);
+        assert_eq!(c.message_overhead(64), 0.0);
+    }
+
+    #[test]
+    fn overflow_misses_scale() {
+        let c = QpCache::new(64, 1e-6);
+        let m128 = c.miss_rate(128);
+        assert!((m128 - 0.5).abs() < 1e-9);
+        let m256 = c.miss_rate(256);
+        assert!((m256 - 0.75).abs() < 1e-9);
+        assert!(c.message_overhead(256) > c.message_overhead(128));
+    }
+
+    #[test]
+    fn more_qps_per_connection_more_pressure() {
+        // 8 workers, sweep QPs/connection: the Fig 16 (right) tradeoff
+        // direction — beyond the cache size, overhead grows monotonically.
+        let c = QpCache::new(64, 1e-6);
+        let mut prev = -1.0;
+        for q in [1usize, 2, 4, 8, 16, 32, 64] {
+            let o = c.message_overhead(active_qps(8, q));
+            assert!(o >= prev);
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn zero_active_qps() {
+        let c = QpCache::new(64, 1e-6);
+        assert_eq!(c.miss_rate(0), 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! PHub: a rack-scale parameter server for distributed DNN training.
+//!
+//! Reproduction of Luo et al., *Parameter Hub* (SoCC'18). Three-layer
+//! architecture:
+//!
+//! * **L3 (this crate)** — the PHub coordinator: connection management, key
+//!   chunking, chunk→core mapping, tall aggregation, optimizers,
+//!   multi-tenancy, hierarchical cross-rack reduction; plus the simulated
+//!   substrates (network fabric, memory system, GPU compute) used to
+//!   regenerate every table and figure in the paper's evaluation.
+//! * **L2** — a JAX transformer LM (fwd/bwd) AOT-lowered to HLO text at
+//!   build time (`make artifacts`), executed from Rust via PJRT
+//!   ([`runtime`]).
+//! * **L1** — Pallas kernels for the fused aggregate+optimize hot path.
+//!
+//! See `DESIGN.md` for the experiment index and substitution table.
+
+pub mod baseline;
+pub mod cli;
+pub mod collectives;
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod dnn;
+pub mod e2e;
+pub mod fabric;
+pub mod jsonlite;
+pub mod memmodel;
+pub mod metrics;
+pub mod prop;
+pub mod runtime;
+pub mod sim;

@@ -1,0 +1,210 @@
+//! `phub` — the leader binary: run simulations, print the paper's
+//! analytical tables, or drive a live in-process training job.
+//!
+//! ```text
+//! phub sim --dnn RN50 --ps pbox --stack phub --net 56g --workers 8 [--gpu 1080ti]
+//! phub breakdown --dnn RN50 --stack mxnet-tcp
+//! phub bandwidth                 # Table 2
+//! phub cost                      # Table 5
+//! phub zoo                       # Table 3 model zoo
+//! phub train --steps 50 --workers 4   # live PJRT + PHub training
+//! ```
+
+use anyhow::{bail, Result};
+use phub::cli::Args;
+use phub::compute::Gpu;
+use phub::config::{ClusterConfig, ExchangeConfig, NetConfig, PsConfig, Stack};
+use phub::costmodel::{self, CostModel, Deployment};
+use phub::dnn::Dnn;
+use phub::sim;
+
+fn parse_gpu(s: &str) -> Result<Gpu> {
+    Ok(match s {
+        "grid520" => Gpu::Grid520,
+        "k80" => Gpu::K80,
+        "m60" => Gpu::M60,
+        "1080ti" => Gpu::Gtx1080Ti,
+        "v100" => Gpu::V100,
+        "zero" => Gpu::ZeroCompute,
+        _ => bail!("unknown gpu {s:?} (grid520|k80|m60|1080ti|v100|zero)"),
+    })
+}
+
+fn parse_ps(s: &str) -> Result<PsConfig> {
+    Ok(match s {
+        "cc" => PsConfig::ColocatedCentralized,
+        "cs" => PsConfig::ColocatedSharded,
+        "ncc" => PsConfig::NonColocatedCentralized,
+        "ncs" => PsConfig::NonColocatedSharded,
+        "pbox" => PsConfig::PBox,
+        _ => bail!("unknown ps config {s:?} (cc|cs|ncc|ncs|pbox)"),
+    })
+}
+
+fn parse_stack(s: &str) -> Result<Stack> {
+    Ok(match s {
+        "mxnet-tcp" | "mxnet" => Stack::MxnetTcp,
+        "mxnet-ib" => Stack::MxnetIb,
+        "phub" => Stack::PHub,
+        _ => bail!("unknown stack {s:?} (mxnet-tcp|mxnet-ib|phub)"),
+    })
+}
+
+fn parse_net(s: &str) -> Result<NetConfig> {
+    Ok(match s {
+        "10g" => NetConfig::cloud_10g(),
+        "56g" => NetConfig::infiniband_56g(),
+        _ => bail!("unknown net {s:?} (10g|56g)"),
+    })
+}
+
+fn cluster_from_args(a: &Args) -> Result<ClusterConfig> {
+    let stack = parse_stack(a.get_or("stack", "phub"))?;
+    let mut c = ClusterConfig::paper_testbed()
+        .with_ps(parse_ps(a.get_or("ps", "pbox"))?)
+        .with_stack(stack)
+        .with_net(parse_net(a.get_or("net", "56g"))?)
+        .with_workers(a.get_usize("workers", 8));
+    if stack != Stack::PHub {
+        c = c.with_exchange(ExchangeConfig::mxnet());
+    }
+    if let Some(chunk) = a.get("chunk-kb") {
+        c.exchange.chunk_bytes = chunk.parse::<usize>()? * 1024;
+    }
+    Ok(c)
+}
+
+fn cmd_sim(a: &Args) -> Result<()> {
+    let dnn = Dnn::by_abbrev(a.get_or("dnn", "RN50"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dnn (see `phub zoo`)"))?;
+    let gpu = parse_gpu(a.get_or("gpu", "1080ti"))?;
+    let c = cluster_from_args(a)?;
+    let r = sim::simulate(&c, &dnn, gpu);
+    println!(
+        "{} on {} [{} {} {}Gbps x{}]",
+        dnn.name,
+        gpu.label(),
+        c.stack.label(),
+        c.ps.label(),
+        c.net.link_gbps,
+        c.n_workers
+    );
+    println!("  iter time      : {:.3} ms", r.iter_time * 1e3);
+    println!("  throughput     : {:.1} samples/s", r.throughput);
+    println!("  compute        : {:.3} ms", r.compute_time * 1e3);
+    println!("  exposed overhead: {:.3} ms ({:.0}%)",
+        r.exposed_overhead * 1e3, 100.0 * r.exposed_overhead / r.iter_time);
+    println!("  exchange rate  : {:.2} /s", r.exchange_rate);
+    Ok(())
+}
+
+fn cmd_breakdown(a: &Args) -> Result<()> {
+    let dnn = Dnn::by_abbrev(a.get_or("dnn", "RN50"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dnn"))?;
+    let gpu = parse_gpu(a.get_or("gpu", "1080ti"))?;
+    let c = cluster_from_args(a)?;
+    let b = sim::breakdown::progressive(&c, &dnn, gpu);
+    println!("progressive overhead breakdown — {} ({})", dnn.name, c.stack.label());
+    println!("  compute        : {:7.2} ms", b.compute * 1e3);
+    println!("  data copy+comm : {:7.2} ms", b.data_copy_comm * 1e3);
+    println!("  aggregation    : {:7.2} ms", b.aggregation * 1e3);
+    println!("  optimization   : {:7.2} ms", b.optimization * 1e3);
+    println!("  sync + other   : {:7.2} ms", b.sync_other * 1e3);
+    println!("  total          : {:7.2} ms ({:.0}% overhead)",
+        b.total() * 1e3, b.overhead_share() * 100.0);
+    Ok(())
+}
+
+fn cmd_bandwidth() {
+    println!("Table 2: minimum bisection bandwidth (Gbps) to hide communication, 8 workers");
+    println!("{:<14} {:>8} {:>8} {:>8} {:>8}", "network", "CC", "CS", "NCC", "NCS");
+    for d in Dnn::zoo() {
+        let row = costmodel::table2_row(&d, 8);
+        println!(
+            "{:<14} {:>8.0} {:>8.0} {:>8.0} {:>8.0}",
+            d.abbrev, row[0], row[1], row[2], row[3]
+        );
+    }
+}
+
+fn cmd_cost(a: &Args) {
+    // Per-worker throughput inputs: derived from simulation of ResNet-50
+    // with a V100-class GPU (the "future GPU" of section 4.9).
+    let dnn = Dnn::by_abbrev("RN50").unwrap();
+    let gpu = parse_gpu(a.get_or("gpu", "v100")).unwrap();
+    // Baseline: 100GbE sharded (sim: 40G IB downclock stands in, CS/IB).
+    let base = ClusterConfig::paper_testbed()
+        .with_ps(PsConfig::ColocatedSharded)
+        .with_stack(Stack::MxnetIb)
+        .with_net(NetConfig {
+            link_gbps: 40.0,
+            ..NetConfig::infiniband_56g()
+        })
+        .with_exchange(ExchangeConfig::mxnet());
+    // PHub: 25GbE via 10G IB results per the paper; +2% cross-rack.
+    let phub = ClusterConfig::paper_testbed().with_net(NetConfig::cloud_10g());
+    let tp_base = sim::simulate(&base, &dnn, gpu).throughput / 8.0;
+    let tp_phub = sim::simulate(&phub, &dnn, gpu).throughput / 8.0 * 0.98;
+
+    let m = CostModel::paper();
+    println!("Table 5: throughput per $1000 (ResNet-50, {} workers-class GPUs)", gpu.label());
+    let rows = [
+        (Deployment::baseline_100g(), tp_base),
+        (Deployment::phub_25g(1.0), tp_phub),
+        (Deployment::phub_25g(2.0), tp_phub),
+        (Deployment::phub_25g(3.0), tp_phub),
+    ];
+    let baseline_val = m.throughput_per_kilodollar(&rows[0].0, rows[0].1);
+    for (d, tp) in rows {
+        let v = m.throughput_per_kilodollar(&d, tp);
+        println!(
+            "  {:<22} {:>7.2}  ({:+.0}%)",
+            d.name,
+            v,
+            (v / baseline_val - 1.0) * 100.0
+        );
+    }
+}
+
+fn cmd_zoo() {
+    println!("{:<14} {:>6} {:>10} {:>10} {:>6} {:>7}",
+        "network", "abbr", "size (MB)", "t/batch ms", "batch", "keys");
+    for d in Dnn::zoo() {
+        println!(
+            "{:<14} {:>6} {:>10} {:>10.0} {:>6} {:>7}",
+            d.name,
+            d.abbrev,
+            d.model_bytes / (1024 * 1024),
+            d.time_per_batch * 1e3,
+            d.batch,
+            d.layers.len()
+        );
+    }
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    phub::e2e::train_cli(a)
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env();
+    match a.subcommand.as_deref() {
+        Some("sim") => cmd_sim(&a)?,
+        Some("breakdown") => cmd_breakdown(&a)?,
+        Some("bandwidth") => cmd_bandwidth(),
+        Some("cost") => cmd_cost(&a),
+        Some("zoo") => cmd_zoo(),
+        Some("train") => cmd_train(&a)?,
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!(
+                "usage: phub <sim|breakdown|bandwidth|cost|zoo|train> [flags]\n\
+                 see rust/src/main.rs header for examples"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! PS-host memory-system model: DRAM bandwidth and the PCIe-to-memory
+//! bridge ceiling.
+//!
+//! Substitute for the paper's measured PBox memory behaviour (DESIGN.md
+//! section 2). Two results depend on it:
+//!
+//! * **Table 4** — bidirectional memory bandwidth while training VGG with
+//!   8 workers: communication alone moves ~2 model-passes of DRAM traffic
+//!   per exchange (NIC DMA in + out); *cached* aggregation/optimization
+//!   adds only ~8% (buffers stay in LLC), while *cache-bypassing*
+//!   (non-temporal) aggregation adds ~3.9 model-passes, saturating DRAM
+//!   and halving throughput.
+//! * **Figure 17** — the PCIe-to-memory bridge, not NIC or DRAM bandwidth,
+//!   caps PBox at ~90 GB/s; PHub reaches ~97% of that microbenchmark.
+
+/// DRAM traffic profile of one full model exchange (gradients in, model
+/// out), in units of model-size passes over memory.
+#[derive(Debug, Clone, Copy)]
+pub struct ExchangeMemProfile {
+    /// NIC DMA traffic: receive-write + send-read = 2 passes.
+    pub comm_passes: f64,
+    /// Additional aggregation+optimization DRAM passes.
+    pub agg_opt_passes: f64,
+}
+
+impl ExchangeMemProfile {
+    /// Communication only — aggregation/optimization disabled.
+    pub fn off() -> Self {
+        ExchangeMemProfile {
+            comm_passes: 2.0,
+            agg_opt_passes: 0.0,
+        }
+    }
+
+    /// Cached (temporal) aggregator/optimizer: buffers live in LLC; only
+    /// compulsory misses touch DRAM (~8% of comm traffic, section 4.5).
+    pub fn cached() -> Self {
+        ExchangeMemProfile {
+            comm_passes: 2.0,
+            agg_opt_passes: 0.16,
+        }
+    }
+
+    /// Cache-bypassing (non-temporal) aggregator/optimizer: every
+    /// aggregation read/write and the optimizer model pass hit DRAM.
+    pub fn bypass() -> Self {
+        ExchangeMemProfile {
+            comm_passes: 2.0,
+            agg_opt_passes: 3.9,
+        }
+    }
+
+    pub fn total_passes(&self) -> f64 {
+        self.comm_passes + self.agg_opt_passes
+    }
+}
+
+/// Memory-side exchange throughput bound (exchanges/s) for a model of
+/// `model_bytes`, given sustainable DRAM bandwidth.
+pub fn dram_exchange_bound(profile: ExchangeMemProfile, model_bytes: f64, dram_bw: f64) -> f64 {
+    dram_bw / (profile.total_passes() * model_bytes)
+}
+
+/// Achieved exchange rate = min(network-side bound, DRAM-side bound).
+pub fn exchange_rate(
+    profile: ExchangeMemProfile,
+    model_bytes: f64,
+    net_bound: f64,
+    dram_bw: f64,
+) -> f64 {
+    net_bound.min(dram_exchange_bound(profile, model_bytes, dram_bw))
+}
+
+/// DRAM bandwidth consumed at a given exchange rate.
+pub fn mem_bw_used(profile: ExchangeMemProfile, model_bytes: f64, rate: f64) -> f64 {
+    rate * model_bytes * profile.total_passes()
+}
+
+/// The PCIe-to-memory-system bridge (Figure 17).
+#[derive(Debug, Clone, Copy)]
+pub struct PcieBridge {
+    /// Aggregate NIC-side line rate if nothing else limited (bytes/s,
+    /// bidirectional). The PBox: 10 x 56 Gbps = 140 GB/s.
+    pub nic_line_rate: f64,
+    /// Measured bridge ceiling (bytes/s, bidirectional): ~90 GB/s.
+    pub bridge_cap: f64,
+    /// Fraction of the bridge microbenchmark PHub sustains (0.97).
+    pub software_efficiency: f64,
+}
+
+impl PcieBridge {
+    pub fn pbox() -> Self {
+        PcieBridge {
+            nic_line_rate: 140e9,
+            bridge_cap: 90e9,
+            software_efficiency: 0.97,
+        }
+    }
+
+    /// "InfiniBand/PCIe limit" line: ideal aggregate bandwidth for `w`
+    /// emulated workers, each contributing `per_worker` bytes/s
+    /// bidirectional, with no bridge limit.
+    pub fn ideal_rate(&self, workers: usize, per_worker: f64) -> f64 {
+        (workers as f64 * per_worker).min(self.nic_line_rate)
+    }
+
+    /// Loopback-microbenchmark rate: ideal, clipped by the bridge.
+    pub fn microbench_rate(&self, workers: usize, per_worker: f64) -> f64 {
+        self.ideal_rate(workers, per_worker).min(self.bridge_cap)
+    }
+
+    /// PHub end-to-end rate: the microbenchmark ceiling times software
+    /// efficiency (scheduling overhead + stragglers, section 4.7).
+    pub fn phub_rate(&self, workers: usize, per_worker: f64) -> f64 {
+        self.microbench_rate(workers, per_worker) * self.software_efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VGG_BYTES: f64 = 505.0 * 1024.0 * 1024.0;
+    const DRAM: f64 = 120e9;
+
+    /// Reproduce Table 4's three rows from the model and the paper's
+    /// measured network-side bound (72.08 exchanges/s for VGG, 8 workers).
+    #[test]
+    fn table4_rows() {
+        let net = 72.08;
+        // Off: network-bound, ~76 GB/s of memory traffic (paper: 77.5).
+        let off = exchange_rate(ExchangeMemProfile::off(), VGG_BYTES, net, DRAM);
+        assert!((off - 72.08).abs() < 0.01);
+        let bw_off = mem_bw_used(ExchangeMemProfile::off(), VGG_BYTES, off) / 1e9;
+        assert!((bw_off - 77.5).abs() < 4.0, "{bw_off}");
+
+        // Cached: still network-bound, ~8% more traffic (paper: 83.5).
+        let cached = exchange_rate(ExchangeMemProfile::cached(), VGG_BYTES, net, DRAM);
+        assert!(cached > 0.99 * net);
+        let bw_cached = mem_bw_used(ExchangeMemProfile::cached(), VGG_BYTES, cached) / 1e9;
+        assert!((bw_cached - 83.5) / 83.5 < 0.05, "{bw_cached}");
+
+        // Bypass: DRAM-bound, throughput collapses to ~40 (paper: 40.48)
+        // while memory bandwidth pegs at the machine limit (paper: 119.7).
+        let bypass = exchange_rate(ExchangeMemProfile::bypass(), VGG_BYTES, net, DRAM);
+        assert!((bypass - 40.48).abs() / 40.48 < 0.06, "{bypass}");
+        let bw_bypass = mem_bw_used(ExchangeMemProfile::bypass(), VGG_BYTES, bypass) / 1e9;
+        assert!((bw_bypass - 120.0).abs() < 1.0, "{bw_bypass}");
+    }
+
+    #[test]
+    fn cached_beats_bypass() {
+        for model_mb in [38.0, 97.0, 194.0, 505.0] {
+            let m = model_mb * 1024.0 * 1024.0;
+            let c = exchange_rate(ExchangeMemProfile::cached(), m, 1e12, DRAM);
+            let b = exchange_rate(ExchangeMemProfile::bypass(), m, 1e12, DRAM);
+            assert!(c > b);
+        }
+    }
+
+    #[test]
+    fn fig17_bridge_is_the_ceiling() {
+        let p = PcieBridge::pbox();
+        let per_worker = 14e9; // 56 Gbps bidirectional
+        // Small populations: NIC-limited, bridge irrelevant.
+        assert!(p.microbench_rate(2, per_worker) < p.bridge_cap);
+        // Large populations: bridge-limited at 90, not NIC 140 or DRAM 120.
+        assert_eq!(p.microbench_rate(16, per_worker), 90e9);
+        assert_eq!(p.ideal_rate(16, per_worker), 140e9);
+        // PHub reaches 97% of the microbenchmark.
+        let phub = p.phub_rate(16, per_worker);
+        assert!((phub / p.microbench_rate(16, per_worker) - 0.97).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig17_monotone_in_workers() {
+        let p = PcieBridge::pbox();
+        let mut prev = 0.0;
+        for w in 1..=16 {
+            let r = p.phub_rate(w, 14e9);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! In-crate property-based testing support.
+//!
+//! The offline environment lacks `proptest`, so this module provides the
+//! minimal machinery the test suite needs: a deterministic splitmix64 RNG,
+//! generator helpers, and a case-runner that reports the failing seed so
+//! counterexamples reproduce exactly.
+
+/// Deterministic splitmix64 RNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi)` (hi > lo).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// f32 in [-scale, scale).
+    pub fn f32_sym(&mut self, scale: f32) -> f32 {
+        (self.f64() as f32 * 2.0 - 1.0) * scale
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Vec of f32 in [-scale, scale).
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_sym(scale)).collect()
+    }
+
+    /// Random weights for partition tests (1..=max each).
+    pub fn weights(&mut self, len: usize, max: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(1, max + 1)).collect()
+    }
+}
+
+/// Run `cases` property cases; on failure, panic with the seed that
+/// reproduces it. The property returns `Err(msg)` to fail.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.usize_in(3, 10);
+            assert!((3..10).contains(&x));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+            let s = r.f32_sym(2.0);
+            assert!((-2.0..2.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 17, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |rng| {
+            if rng.f64() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

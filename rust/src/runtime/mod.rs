@@ -1,0 +1,223 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The build-time Python path (`make artifacts`) lowers the L2 JAX model
+//! and L1 Pallas kernels to HLO *text*; this module loads that text,
+//! compiles it on the PJRT CPU client, and exposes typed call wrappers.
+//! Python never runs at training time — the Rust binary is self-contained
+//! once `artifacts/` exists.
+//!
+//! Interchange is HLO text rather than serialized `HloModuleProto` because
+//! jax >= 0.5 emits 64-bit instruction ids that the bundled XLA
+//! (xla_extension 0.5.1) rejects; the text parser reassigns ids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonlite;
+
+/// A PJRT client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+/// A compiled executable with tuple-return convention.
+pub struct LoadedFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The AOT manifest (`artifacts/manifest.json`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub param_count: usize,
+    pub padded_size: usize,
+    pub chunk_elems: usize,
+    pub n_workers: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// (name, offset, len) per key, flat order.
+    pub keys: Vec<(String, usize, usize)>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<name>.hlo.txt` and compile it.
+    pub fn load(&self, name: &str) -> Result<LoadedFn> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        Ok(LoadedFn {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Parse the manifest.
+    pub fn manifest(&self) -> Result<Manifest> {
+        let path = self.dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = jsonlite::parse(&text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("manifest missing {k}"))
+        };
+        let cfg = j.get("config").context("manifest missing config")?;
+        let cfg_get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("config missing {k}"))
+        };
+        let mut keys = Vec::new();
+        for e in j
+            .get("keys")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing keys")?
+        {
+            keys.push((
+                e.get("name")
+                    .and_then(|v| v.as_str())
+                    .context("key name")?
+                    .to_string(),
+                e.get("offset").and_then(|v| v.as_usize()).context("key offset")?,
+                e.get("len").and_then(|v| v.as_usize()).context("key len")?,
+            ));
+        }
+        Ok(Manifest {
+            param_count: get("param_count")?,
+            padded_size: get("padded_size")?,
+            chunk_elems: get("chunk_elems")?,
+            n_workers: get("n_workers")?,
+            batch: cfg_get("batch")?,
+            seq_len: cfg_get("seq_len")?,
+            vocab: cfg_get("vocab")?,
+            keys,
+        })
+    }
+
+    /// Load the initial flat parameters (`params_init.bin`, LE f32).
+    pub fn initial_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("params_init.bin");
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("params_init.bin length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+impl LoadedFn {
+    /// Execute with the given inputs; returns the flattened tuple outputs
+    /// (AOT lowers with `return_tuple=True`).
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("sync {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Locate the artifacts directory: `$PHUB_ARTIFACTS`, else `./artifacts`,
+/// else walk up from the executable.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PHUB_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    // Fall back to the crate root (benches/examples run from target/).
+    let mut p = std::env::current_exe().unwrap_or_default();
+    for _ in 0..5 {
+        p.pop();
+        let cand = p.join("artifacts");
+        if cand.exists() {
+            return cand;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs (they
+    // need the artifacts built); here we test the pure helpers.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0; 3], &[2, 2]).is_err());
+        assert!(literal_i32(&[1; 5], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = literal_scalar(2.5);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,144 @@
+//! Progressive overhead breakdown (paper Figures 5 and 14).
+//!
+//! The paper's methodology: gradually enable components of the training
+//! pipeline; each segment is the *additional* iteration time the earlier
+//! stages could not hide. We replicate that literally by re-running the
+//! simulation with staged [`StageFlags`].
+
+use super::{simulate_opts, SimOpts, StageFlags};
+use crate::compute::Gpu;
+use crate::config::ClusterConfig;
+use crate::dnn::Dnn;
+
+/// One network's progressive overhead decomposition, all in seconds per
+/// iteration. Segments are non-negative by construction.
+#[derive(Debug, Clone)]
+pub struct Breakdown {
+    pub dnn: &'static str,
+    /// GPU-active time (the "compute" segment).
+    pub compute: f64,
+    /// Additional time from distributed data movement (copies + wire).
+    pub data_copy_comm: f64,
+    /// Additional time once aggregation is enabled.
+    pub aggregation: f64,
+    /// Additional time once the optimizer is enabled.
+    pub optimization: f64,
+    /// Synchronization + everything else.
+    pub sync_other: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.data_copy_comm + self.aggregation + self.optimization + self.sync_other
+    }
+
+    /// Fraction of iteration time that is exchange overhead.
+    pub fn overhead_share(&self) -> f64 {
+        1.0 - self.compute / self.total()
+    }
+}
+
+/// Compute the progressive breakdown for one (cluster, dnn, gpu) config.
+pub fn progressive(cluster: &ClusterConfig, dnn: &Dnn, gpu: Gpu) -> Breakdown {
+    let run = |stages: StageFlags| {
+        simulate_opts(
+            cluster,
+            dnn,
+            gpu,
+            SimOpts {
+                stages,
+                ..SimOpts::default()
+            },
+        )
+        .iter_time
+    };
+    let compute = crate::compute::ComputeEngine::new(gpu).batch_time(dnn);
+    let t_comm = run(StageFlags {
+        data_copy: true,
+        aggregation: false,
+        optimization: false,
+        sync_other: false,
+    });
+    let t_agg = run(StageFlags {
+        data_copy: true,
+        aggregation: true,
+        optimization: false,
+        sync_other: false,
+    });
+    let t_opt = run(StageFlags {
+        data_copy: true,
+        aggregation: true,
+        optimization: true,
+        sync_other: false,
+    });
+    let t_all = run(StageFlags::all());
+    Breakdown {
+        dnn: dnn.abbrev,
+        compute,
+        data_copy_comm: (t_comm - compute).max(0.0),
+        aggregation: (t_agg - t_comm).max(0.0),
+        optimization: (t_opt - t_agg).max(0.0),
+        sync_other: (t_all - t_opt).max(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExchangeConfig, NetConfig, PsConfig, Stack};
+
+    fn mxnet_cluster() -> ClusterConfig {
+        ClusterConfig::paper_testbed()
+            .with_ps(PsConfig::ColocatedSharded)
+            .with_stack(Stack::MxnetTcp)
+            .with_exchange(ExchangeConfig::mxnet())
+    }
+
+    #[test]
+    fn segments_nonnegative_and_total_consistent() {
+        let d = Dnn::by_abbrev("RN50").unwrap();
+        let b = progressive(&mxnet_cluster(), &d, Gpu::Gtx1080Ti);
+        assert!(b.compute > 0.0);
+        assert!(b.data_copy_comm >= 0.0);
+        assert!(b.aggregation >= 0.0);
+        assert!(b.optimization >= 0.0);
+        assert!(b.sync_other >= 0.0);
+        let full = simulate_opts(
+            &mxnet_cluster(),
+            &d,
+            Gpu::Gtx1080Ti,
+            SimOpts::default(),
+        );
+        assert!((b.total() - full.iter_time).abs() / full.iter_time < 0.05);
+    }
+
+    /// Figure 5 vs Figure 14: PHub's breakdown is compute-dominated while
+    /// MXNet's is overhead-dominated on the same workload.
+    #[test]
+    fn phub_breakdown_compute_dominated() {
+        let d = Dnn::by_abbrev("RN50").unwrap();
+        let mx = progressive(&mxnet_cluster(), &d, Gpu::Gtx1080Ti);
+        let ph = progressive(&ClusterConfig::paper_testbed(), &d, Gpu::Gtx1080Ti);
+        assert!(ph.overhead_share() < mx.overhead_share(), "{ph:?} vs {mx:?}");
+        assert!(ph.overhead_share() < 0.35, "{ph:?}");
+    }
+
+    /// On a 56G network the copy overhead of the TCP stack is a large
+    /// share for big models (the Figure 5 claim: "link capacity accounts
+    /// for a small fraction of the copy and communication overhead").
+    #[test]
+    fn tcp_copy_overhead_visible_on_fast_network() {
+        let d = Dnn::by_abbrev("AN").unwrap();
+        let tcp = progressive(&mxnet_cluster(), &d, Gpu::Gtx1080Ti);
+        let ib = progressive(
+            &mxnet_cluster().with_stack(Stack::MxnetIb),
+            &d,
+            Gpu::Gtx1080Ti,
+        );
+        assert!(
+            tcp.data_copy_comm > ib.data_copy_comm,
+            "tcp {tcp:?} vs ib {ib:?}"
+        );
+        let _ = NetConfig::infiniband_56g();
+    }
+}

@@ -1,0 +1,783 @@
+//! The parameter-exchange event loop: simulates synchronous data-parallel
+//! training iterations over the fabric, with per-stack software costs.
+//!
+//! One simulation = one (cluster, DNN, GPU, stage-flags) configuration run
+//! for a few iterations; reported numbers come from post-warmup iterations.
+//!
+//! Pipeline per iteration (paper Figure 3):
+//!   forward → backward (per-layer gradients stream out in reverse order)
+//!     → per-message upload (windowed by queue pairs)
+//!     → PS receive path (dispatcher for MXNet stacks)
+//!     → aggregation when all workers' copies arrive
+//!         tall: per-chunk, on the chunk's pinned core, fused with opt
+//!         wide: per-key, thread gang, separate opt pass (MXNet)
+//!     → download back to every worker
+//!   iteration ends when every worker holds the full updated model.
+
+use super::engine::{EventQueue, FifoServer};
+use super::params::{StackParams, CROSS_NUMA_DERATE, GPU_STAGING_BW, WBI_SYNC_PER_CHUNK};
+use super::plan::{Msg, Plan, Topology};
+use crate::compute::ComputeEngine;
+use crate::config::ClusterConfig;
+use crate::dnn::Dnn;
+use crate::fabric::qp::{active_qps, QpCache};
+
+/// Which pipeline components are enabled — the progressive-overhead axis
+/// of Figures 5 and 14.
+#[derive(Debug, Clone, Copy)]
+pub struct StageFlags {
+    /// Worker/PS data-copy costs (TCP OS-buffer copies, GPU staging).
+    pub data_copy: bool,
+    /// Gradient aggregation work.
+    pub aggregation: bool,
+    /// Optimizer work.
+    pub optimization: bool,
+    /// Synchronization & dispatcher overheads.
+    pub sync_other: bool,
+}
+
+impl StageFlags {
+    pub fn all() -> Self {
+        StageFlags {
+            data_copy: true,
+            aggregation: true,
+            optimization: true,
+            sync_other: true,
+        }
+    }
+
+    /// Communication only (the Figure 5 "data copy" stage baseline).
+    pub fn comm_only() -> Self {
+        StageFlags {
+            data_copy: true,
+            aggregation: false,
+            optimization: false,
+            sync_other: false,
+        }
+    }
+}
+
+/// Simulation knobs beyond the cluster config.
+#[derive(Debug, Clone)]
+pub struct SimOpts {
+    pub iterations: usize,
+    pub warmup: usize,
+    pub stages: StageFlags,
+    /// Jobs sharing the PS host (Figure 18); resources are partitioned.
+    pub tenants: usize,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts {
+            iterations: 3,
+            warmup: 1,
+            stages: StageFlags::all(),
+            tenants: 1,
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Steady-state time per iteration (seconds).
+    pub iter_time: f64,
+    /// Cluster-wide training throughput, samples/s.
+    pub throughput: f64,
+    /// Per-iteration time spent in worker compute.
+    pub compute_time: f64,
+    /// iter_time - compute_time: exposed exchange overhead.
+    pub exposed_overhead: f64,
+    /// Mean utilization of the busiest PS aggregation core.
+    pub max_core_util: f64,
+    /// Dispatcher utilization (MXNet stacks; 0 for PHub).
+    pub dispatcher_util: f64,
+    /// Model exchanges per second (= iterations/s).
+    pub exchange_rate: f64,
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    /// Worker w's gradient for key k is ready for exchange.
+    GradReady { w: usize, iter: usize, key: usize },
+    /// Injector finished; put the upload on the wire.
+    StartUpload { w: usize, m: usize },
+    /// PS receive path done for worker w's message m.
+    RecvDone { w: usize, m: usize },
+    /// Tall path: chunk m aggregated+optimized; wide: group agg done.
+    AggDone { m: usize },
+    /// Wide path: group optimization done.
+    OptDone { group: usize },
+    /// PS injector done; put the download on the wire.
+    StartDownload { w: usize, m: usize },
+    /// Worker-side receive finished for message m.
+    Delivered { w: usize, m: usize },
+}
+
+/// Flow tag encoding: direction (up=0/down=1) | worker | message.
+fn tag(dir: u64, w: usize, m: usize) -> u64 {
+    dir << 62 | (w as u64) << 40 | m as u64
+}
+fn untag(t: u64) -> (u64, usize, usize) {
+    (t >> 62, ((t >> 40) & 0x3F_FFFF) as usize, (t & 0xFF_FFFF_FFFF) as usize)
+}
+
+pub struct ExchangeSim<'a> {
+    cluster: &'a ClusterConfig,
+    dnn: &'a Dnn,
+    engine: ComputeEngine,
+    opts: SimOpts,
+    topo: Topology,
+    plan: Plan,
+    params: StackParams,
+    qp_cache: QpCache,
+
+    events: EventQueue<Ev>,
+    now: f64,
+
+    // Per-worker upload machinery.
+    injector: Vec<FifoServer>,
+    pending: Vec<std::collections::VecDeque<usize>>, // msg queue per worker
+    in_flight: Vec<usize>,                           // per worker
+    window: usize,
+
+    // PS-side servers.
+    dispatcher: Vec<FifoServer>,           // per PS process
+    /// Worker-by-Interface coordination: cross-core hand-off of chunks
+    /// whose arrival NIC is not the aggregation core's socket (section
+    /// 4.5); serialized through a per-PS hand-off queue.
+    wbi_coord: Vec<FifoServer>,
+    cores: Vec<Vec<FifoServer>>,           // [ps][core]
+    gang: Vec<FifoServer>,                 // per PS process (wide agg)
+    ps_injector: Vec<Vec<FifoServer>>,     // [ps][iface]
+
+    // Exchange state for the current iteration.
+    arrived: Vec<usize>,      // per msg: workers arrived
+    group_arrived: Vec<usize>, // per wide group: msgs arrived * workers
+    delivered: Vec<usize>,    // per worker: msgs received back
+    iter: usize,
+    iter_start: f64,
+    worker_done: Vec<bool>,
+
+    // Accounting.
+    iter_times: Vec<f64>,
+}
+
+impl<'a> ExchangeSim<'a> {
+    pub fn new(
+        cluster: &'a ClusterConfig,
+        dnn: &'a Dnn,
+        engine: ComputeEngine,
+        opts: SimOpts,
+    ) -> Self {
+        let mut topo = Topology::build(cluster);
+        let plan = Plan::build(cluster, dnn);
+        let params = StackParams::for_stack(cluster.stack);
+        let n = cluster.n_workers;
+        let n_ps = cluster.n_ps_processes();
+
+        // Multi-tenancy (Figure 18): tenants partition PS cores and NIC
+        // bandwidth; this job sees 1/tenants of each. Implemented by
+        // scaling the PS-side link capacities and core count.
+        let tenants = opts.tenants.max(1);
+        if tenants > 1 {
+            // Paper section 4.8 setup: the J jobs run on the SAME worker
+            // machines (the testbed has 8), so worker NICs, worker GPUs,
+            // PBox NICs, the PCIe bridge, and the aggregation cores are
+            // all timeshared J ways. We simulate one job seeing 1/J of
+            // every shared resource.
+            let scale = 1.0 / tenants as f64;
+            let mut scaled = cluster.clone();
+            scaled.ps_host.cores = (cluster.ps_host.cores / tenants).max(1);
+            scaled.ps_host.pcie_bridge_bw = cluster.ps_host.pcie_bridge_bw * scale;
+            scaled.net.link_gbps = cluster.net.link_gbps * scale;
+            topo = Topology::build(&scaled);
+        }
+        let ps_cores = if tenants > 1 {
+            (cluster.ps_host.cores / tenants).max(1)
+        } else {
+            cluster.ps_host.cores
+        };
+
+        // Upload window: outstanding wire messages per worker. Must cover
+        // every PS interface with a couple of messages or lockstep workers
+        // convoy onto a subset of PBox NICs and leave the rest idle (the
+        // real system posts receives on every QP of every card; QP *count*
+        // effects are modeled via the QP cache, section 4.6).
+        let total_ifaces: usize = {
+            let t = Topology::build(cluster);
+            t.ps.iter().map(|h| h.up.len()).sum()
+        };
+        let window =
+            (cluster.net.qps_per_connection.max(1) * total_ifaces * 2).max(8);
+        let cores = (0..n_ps)
+            .map(|_| vec![FifoServer::new(); ps_cores])
+            .collect();
+        let ps_injector = topo
+            .ps
+            .iter()
+            .map(|h| vec![FifoServer::new(); h.up.len()])
+            .collect();
+
+        let n_msgs = plan.msgs.len();
+        let n_groups = plan.groups.len();
+        ExchangeSim {
+            cluster,
+            dnn,
+            engine,
+            opts,
+            topo,
+            plan,
+            params,
+            qp_cache: QpCache::new(
+                cluster.net.qp_cache_entries,
+                cluster.net.qp_cache_miss_penalty,
+            ),
+            events: EventQueue::new(),
+            now: 0.0,
+            injector: vec![FifoServer::new(); n],
+            pending: vec![Default::default(); n],
+            in_flight: vec![0; n],
+            window,
+            dispatcher: vec![FifoServer::new(); n_ps],
+            wbi_coord: vec![FifoServer::new(); n_ps],
+            cores,
+            gang: vec![FifoServer::new(); n_ps],
+            ps_injector,
+            arrived: vec![0; n_msgs],
+            group_arrived: vec![0; n_groups],
+            delivered: vec![0; n],
+            iter: 0,
+            iter_start: 0.0,
+            worker_done: vec![false; n],
+            iter_times: Vec::new(),
+        }
+    }
+
+    /// Effective per-core aggregation+optimization bandwidth (input
+    /// gradient bytes/s), after cache policy and NUMA effects.
+    fn agg_bw(&self) -> f64 {
+        let mut bw = self.cluster.ps_host.core_agg_bw;
+        if !self.cluster.exchange.cached_agg {
+            // Non-temporal path is DRAM-bound (Table 4): roughly halves
+            // effective per-core throughput under load.
+            bw *= 0.5;
+        }
+        if !self.cluster.exchange.key_by_interface {
+            bw *= CROSS_NUMA_DERATE;
+        }
+        // Multi-tenant cache dilution: more jobs -> more optimizer state
+        // competing for LLC (Figure 18's AlexNet effect).
+        if self.opts.tenants > 1 {
+            bw /= 1.0 + 0.01 * self.opts.tenants as f64;
+        }
+        bw
+    }
+
+    /// Tall-path service time for one message on its core: aggregation
+    /// reads W gradient copies, optimization makes one model pass.
+    fn tall_service(&self, m: &Msg) -> f64 {
+        let w = self.cluster.n_workers as f64;
+        let bw = self.agg_bw();
+        let mut s = 0.0;
+        if self.opts.stages.aggregation {
+            s += m.bytes * w / bw;
+        }
+        if self.opts.stages.optimization {
+            s += m.bytes / bw;
+        }
+        s
+    }
+
+    /// Wide-path whole-slice aggregation gang service (MXNet, section
+    /// 3.2.2): one (key, shard) group at a time.
+    fn wide_agg_service(&self, group: usize) -> f64 {
+        if !self.opts.stages.aggregation {
+            return 0.0;
+        }
+        let bytes = self.plan.groups[group].bytes;
+        let w = self.cluster.n_workers as f64;
+        let threads = self.params.wide_threads as f64;
+        let mut s = bytes * w / (threads * self.agg_bw() * self.params.wide_efficiency);
+        if self.opts.stages.sync_other {
+            s += self.params.wide_sync_per_key;
+        }
+        s
+    }
+
+    /// Wide-path optimization pass.
+    fn wide_opt_service(&self, group: usize) -> f64 {
+        if !self.opts.stages.optimization {
+            return 0.0;
+        }
+        let bytes = self.plan.groups[group].bytes;
+        let threads = self.params.wide_threads as f64;
+        let mut s = bytes / (threads * self.agg_bw() * self.params.wide_efficiency);
+        if self.opts.stages.sync_other {
+            s += self.params.wide_sync_per_key;
+        }
+        s
+    }
+
+    /// Per-message fixed sender cost (CPU injection + TCP copies + QP
+    /// cache pressure), scaled by the real chunks in this sim message.
+    fn send_cost(&self, m: &Msg) -> f64 {
+        let mut c = self.params.send_overhead * m.chunks;
+        if self.opts.stages.data_copy {
+            c += self.params.copy_time(m.bytes);
+            // One staging copy between GPU and host memory always exists.
+            c += m.bytes / GPU_STAGING_BW;
+        }
+        if self.opts.stages.sync_other {
+            let aq = active_qps(
+                self.cluster.n_workers,
+                self.cluster.net.qps_per_connection,
+            );
+            c += self.qp_cache.message_overhead(aq) * m.chunks;
+        }
+        c
+    }
+
+    /// PS receive-path service (dispatcher, if this stack has one).
+    fn recv_cost(&self, m: &Msg) -> f64 {
+        let mut c = 0.0;
+        if self.params.dispatcher && self.opts.stages.sync_other {
+            c += self.params.dispatch_per_msg * m.chunks;
+        }
+        if self.opts.stages.data_copy {
+            c += self.params.copy_time(m.bytes);
+        }
+        c
+    }
+
+    /// Inter-socket link for flows whose NIC and aggregation core are in
+    /// different NUMA domains (only possible in Worker-by-Interface mode;
+    /// Key-by-Interface pins chunk, QP, and core to one socket).
+    fn cross_socket_link(
+        &self,
+        iface: usize,
+        msg: &Msg,
+        down: bool,
+    ) -> Option<crate::fabric::LinkId> {
+        let host = &self.topo.ps[msg.ps];
+        let nics = host.up.len();
+        if nics <= 1 {
+            return None;
+        }
+        let numa = host.numa_domains;
+        let cores = self.cluster.ps_host.cores;
+        let nic_dom = crate::coordinator::mapping::nic_numa(iface, nics, numa);
+        let core_dom = crate::coordinator::mapping::core_numa(msg.core, cores, numa);
+        if nic_dom == core_dom {
+            return None;
+        }
+        if down {
+            host.qpi_out
+        } else {
+            host.qpi_in
+        }
+    }
+
+    fn resolve_iface(&self, w: usize, m: &Msg) -> usize {
+        if self.cluster.exchange.key_by_interface {
+            m.iface
+        } else {
+            let nics = self.topo.ps[m.ps].up.len();
+            w % nics
+        }
+    }
+
+    fn start_iteration(&mut self) {
+        self.iter_start = self.now;
+        self.arrived.iter_mut().for_each(|a| *a = 0);
+        self.group_arrived.iter_mut().for_each(|a| *a = 0);
+        self.delivered.iter_mut().for_each(|d| *d = 0);
+        self.worker_done.iter_mut().for_each(|d| *d = false);
+        // Multi-tenancy: the GPU is timeshared by `tenants` jobs, so this
+        // job's compute stretches by that factor.
+        let tstretch = self.opts.tenants.max(1) as f64;
+        let fwd = self.engine.forward_time(self.dnn) * tstretch;
+        for w in 0..self.cluster.n_workers {
+            let straggle = self.engine.straggler_factor(w, self.iter) * tstretch;
+            for key in 0..self.dnn.layers.len() {
+                let off = self.engine.grad_ready_offset(self.dnn, key);
+                let t = self.now + fwd + off * straggle;
+                self.events.push(
+                    t,
+                    Ev::GradReady {
+                        w,
+                        iter: self.iter,
+                        key,
+                    },
+                );
+            }
+        }
+        // ZeroCompute: all GradReady at now (fwd = off = 0).
+    }
+
+    fn try_start_uploads(&mut self, w: usize) {
+        while self.in_flight[w] < self.window {
+            let Some(m) = self.pending[w].pop_front() else {
+                return;
+            };
+            self.in_flight[w] += 1;
+            let service = self.send_cost(&self.plan.msgs[m]);
+            let done = self.injector[w].submit(self.now, service);
+            self.events.push(done, Ev::StartUpload { w, m });
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::GradReady { w, iter, key } => {
+                debug_assert_eq!(iter, self.iter);
+                let (a, b) = self.plan.key_msgs[key];
+                for m in a..b {
+                    self.pending[w].push_back(m);
+                }
+                self.try_start_uploads(w);
+            }
+            Ev::StartUpload { w, m } => {
+                let msg = &self.plan.msgs[m];
+                let iface = self.resolve_iface(w, msg);
+                let mut path = self.topo.up_path(w, msg.ps, iface);
+                // Worker-by-Interface mode scatters a chunk's arrivals
+                // across sockets: traffic whose entry NIC is not in the
+                // aggregation core's NUMA domain crosses the inter-socket
+                // interconnect (section 4.5's locality penalty).
+                if let Some(qpi) = self.cross_socket_link(iface, msg, false) {
+                    path.push(qpi);
+                }
+                self.topo.fabric.start_flow(path, msg.bytes, tag(0, w, m));
+            }
+            Ev::RecvDone { w, m } => {
+                self.in_flight[w] -= 1;
+                self.try_start_uploads(w);
+                self.msg_arrived(m);
+            }
+            Ev::AggDone { m } => {
+                if self.cluster.exchange.tall_aggregation {
+                    self.send_downloads_msg(m);
+                } else {
+                    // Wide: m encodes the group; run the optimizer gang pass.
+                    let group = m;
+                    let service = self.wide_opt_service(group);
+                    let ps = self.plan.groups[group].ps;
+                    let done = self.gang[ps].submit(self.now, service);
+                    self.events.push(done, Ev::OptDone { group });
+                }
+            }
+            Ev::OptDone { group } => {
+                for i in 0..self.plan.groups[group].msgs.len() {
+                    let m = self.plan.groups[group].msgs[i];
+                    self.send_downloads_msg(m);
+                }
+            }
+            Ev::StartDownload { w, m } => {
+                let msg = &self.plan.msgs[m];
+                let iface = self.resolve_iface(w, msg);
+                let mut path = self.topo.down_path(w, msg.ps, iface);
+                if let Some(qpi) = self.cross_socket_link(iface, msg, true) {
+                    path.push(qpi);
+                }
+                self.topo.fabric.start_flow(path, msg.bytes, tag(1, w, m));
+            }
+            Ev::Delivered { w, m } => {
+                let _ = m;
+                self.delivered[w] += 1;
+                if std::env::var_os("PHUB_SIM_TRACE").is_some() && w == 0 {
+                    let all = self.plan.msgs.len();
+                    if self.delivered[0] % (all / 8).max(1) == 0 {
+                        eprintln!(
+                            "[trace] t={:.4} w0 delivered {}/{all}",
+                            self.now - self.iter_start,
+                            self.delivered[0]
+                        );
+                    }
+                }
+                if self.delivered[w] == self.plan.msgs.len() && !self.worker_done[w] {
+                    self.worker_done[w] = true;
+                    if self.worker_done.iter().all(|&d| d) {
+                        self.iter_times.push(self.now - self.iter_start);
+                        self.iter += 1;
+                        if self.iter < self.opts.iterations {
+                            self.start_iteration();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A worker's copy of message m is fully received at the PS.
+    fn msg_arrived(&mut self, m: usize) {
+        if std::env::var_os("PHUB_SIM_TRACE").is_some() {
+            let total: usize = self.arrived.iter().sum();
+            let all = self.plan.msgs.len() * self.cluster.n_workers;
+            if total % (all / 8).max(1) == 0 {
+                eprintln!(
+                    "[trace] t={:.4} arrivals {total}/{all}",
+                    self.now - self.iter_start
+                );
+            }
+        }
+        self.arrived[m] += 1;
+        let n = self.cluster.n_workers;
+        let msg = &self.plan.msgs[m];
+        if self.cluster.exchange.tall_aggregation {
+            if self.arrived[m] == n {
+                let service = self.tall_service(msg);
+                // Worker-by-Interface mode: the chunk's n arrivals landed on
+                // n different NICs/cores and must be handed to the
+                // aggregation core — per-chunk coordination that
+                // Key-by-Interface avoids entirely (section 4.5).
+                let start = if !self.cluster.exchange.key_by_interface
+                    && self.opts.stages.sync_other
+                {
+                    let coord = WBI_SYNC_PER_CHUNK * msg.chunks * n as f64;
+                    self.wbi_coord[msg.ps].submit(self.now, coord)
+                } else {
+                    self.now
+                };
+                // Under multi-tenancy this job owns a subset of cores;
+                // fold the precomputed core id onto the owned set.
+                let n_cores = self.cores[msg.ps].len();
+                let done =
+                    self.cores[msg.ps][msg.core % n_cores].submit(start, service);
+                self.events.push(done, Ev::AggDone { m });
+            }
+        } else {
+            let group = msg.group;
+            self.group_arrived[group] += 1;
+            if self.group_arrived[group] == self.plan.groups[group].msgs.len() * n {
+                // Whole slice present from all workers: wide gang
+                // aggregation on the owning shard.
+                let service = self.wide_agg_service(group);
+                let ps = msg.ps;
+                let done = self.gang[ps].submit(self.now, service);
+                // AggDone carries the group index on the wide path.
+                self.events.push(done, Ev::AggDone { m: group });
+            }
+        }
+    }
+
+    /// Queue per-worker downloads of message m through the PS injector.
+    fn send_downloads_msg(&mut self, m: usize) {
+        let msg = self.plan.msgs[m].clone();
+        for w in 0..self.cluster.n_workers {
+            let iface = self.resolve_iface(w, &msg);
+            // PS-side send cost: per-message CPU plus TCP send copies.
+            // Dispatcher stacks serialize sends through the same van
+            // thread as receives (PS-Lite); PHub uses per-interface
+            // injectors with no shared thread.
+            let mut service = self.params.send_overhead * msg.chunks;
+            if self.opts.stages.data_copy {
+                service += self.params.copy_time(msg.bytes);
+            }
+            let done = if self.params.dispatcher {
+                let mut svc = service;
+                if self.opts.stages.sync_other {
+                    svc += self.params.dispatch_per_msg * msg.chunks;
+                }
+                self.dispatcher[msg.ps].submit(self.now, svc)
+            } else {
+                self.ps_injector[msg.ps][iface].submit(self.now, service)
+            };
+            self.events.push(done, Ev::StartDownload { w, m });
+        }
+    }
+
+    /// Run the simulation; returns steady-state statistics.
+    pub fn run(mut self) -> SimResult {
+        self.start_iteration();
+        let guard_events = 50_000_000u64;
+        let mut processed = 0u64;
+        while self.iter < self.opts.iterations {
+            processed += 1;
+            assert!(
+                processed < guard_events,
+                "simulation runaway: t={} iter={} heap={} head={:?} net_dt={:?} flows={} delivered={:?} in_flight={:?} pending={:?}",
+                self.now,
+                self.iter,
+                self.events.len(),
+                self.events.peek_time(),
+                self.topo.fabric.earliest_completion(),
+                self.topo.fabric.n_active(),
+                self.delivered,
+                self.in_flight,
+                self.pending.iter().map(|q| q.len()).collect::<Vec<_>>()
+            );
+
+            let heap_t = self.events.peek_time();
+            let net_dt = self.topo.fabric.earliest_completion();
+            let net_t = net_dt.map(|dt| self.now + dt);
+            match (heap_t, net_t) {
+                (None, None) => panic!("deadlock: no events, iter {}", self.iter),
+                (Some(ht), nt) if nt.map_or(true, |n| ht <= n) => {
+                    let (t, ev) = self.events.pop().unwrap();
+                    // Apply network progress up to t.
+                    let done = self.topo.fabric.advance(t - self.now);
+                    self.now = t;
+                    for tg in done {
+                        self.flow_done(tg);
+                    }
+                    self.handle(ev);
+                }
+                (_, Some(nt)) => {
+                    let done = self.topo.fabric.advance(nt - self.now);
+                    self.now = nt;
+                    for tg in done {
+                        self.flow_done(tg);
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        self.finish()
+    }
+
+    fn flow_done(&mut self, t: u64) {
+        let (dir, w, m) = untag(t);
+        let msg = &self.plan.msgs[m];
+        let lat = self.cluster.net.base_latency;
+        if dir == 0 {
+            // Upload complete; receive path (dispatcher) then arrival.
+            let recv = self.recv_cost(msg);
+            let done = if self.params.dispatcher {
+                self.dispatcher[msg.ps].submit(self.now + lat, recv)
+            } else {
+                self.now + lat + recv
+            };
+            self.events.push(done, Ev::RecvDone { w, m });
+        } else {
+            // Download complete; worker-side copy then delivery. MXNet's
+            // single van thread serializes receive copies; PHub's zero-copy
+            // path only pays the GPU staging copy as latency.
+            let mut c = 0.0;
+            if self.opts.stages.data_copy {
+                c += self.params.copy_time(msg.bytes) + msg.bytes / GPU_STAGING_BW;
+            }
+            let done = if self.params.dispatcher {
+                // MXNet's worker van thread handles sends and receives.
+                self.injector[w].submit(self.now + lat, c)
+            } else {
+                self.now + lat + c
+            };
+            self.events.push(done, Ev::Delivered { w, m });
+        }
+    }
+
+    fn finish(self) -> SimResult {
+        let warm = &self.iter_times[self.opts.warmup.min(self.iter_times.len() - 1)..];
+        let iter_time = warm.iter().sum::<f64>() / warm.len() as f64;
+        let compute = self.engine.batch_time(self.dnn) * self.opts.tenants.max(1) as f64;
+        let total_time: f64 = self.iter_times.iter().sum();
+        let max_core_util = self
+            .cores
+            .iter()
+            .flatten()
+            .map(|c| c.busy_time / total_time)
+            .fold(0.0, f64::max);
+        let dispatcher_util = self
+            .dispatcher
+            .iter()
+            .map(|d| d.busy_time / total_time)
+            .fold(0.0, f64::max);
+        SimResult {
+            iter_time,
+            throughput: self.cluster.n_workers as f64 * self.dnn.batch as f64 / iter_time,
+            compute_time: compute,
+            exposed_overhead: (iter_time - compute).max(0.0),
+            max_core_util,
+            dispatcher_util,
+            exchange_rate: 1.0 / iter_time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Gpu;
+    use crate::config::{ClusterConfig, NetConfig, PsConfig, Stack};
+
+    fn run(cluster: &ClusterConfig, abbrev: &str, gpu: Gpu) -> SimResult {
+        let dnn = Dnn::by_abbrev(abbrev).unwrap();
+        let sim = ExchangeSim::new(
+            cluster,
+            &dnn,
+            ComputeEngine::new(gpu),
+            SimOpts::default(),
+        );
+        sim.run()
+    }
+
+    #[test]
+    fn iteration_time_at_least_compute() {
+        let c = ClusterConfig::paper_testbed();
+        let r = run(&c, "RN50", Gpu::Gtx1080Ti);
+        assert!(r.iter_time >= 0.161, "{}", r.iter_time);
+        // PHub on 56G: ResNet 50 should be close to compute-bound.
+        assert!(r.exposed_overhead / r.iter_time < 0.25, "{r:?}");
+    }
+
+    #[test]
+    fn network_bound_alexnet_on_10g() {
+        // AlexNet: 194MB model, 16ms compute. On 10 Gbps the exchange
+        // dominates; iteration time must far exceed compute.
+        let c = ClusterConfig::paper_testbed().with_net(NetConfig::cloud_10g());
+        let r = run(&c, "AN", Gpu::Gtx1080Ti);
+        assert!(r.iter_time > 5.0 * 0.016, "{r:?}");
+    }
+
+    #[test]
+    fn phub_beats_mxnet_tcp() {
+        let base = ClusterConfig::paper_testbed()
+            .with_ps(PsConfig::ColocatedSharded)
+            .with_stack(Stack::MxnetTcp)
+            .with_exchange(crate::config::ExchangeConfig::mxnet());
+        let tcp = run(&base, "RN50", Gpu::Gtx1080Ti);
+        let phub = run(&ClusterConfig::paper_testbed(), "RN50", Gpu::Gtx1080Ti);
+        assert!(
+            phub.throughput > tcp.throughput,
+            "phub {} vs tcp {}",
+            phub.throughput,
+            tcp.throughput
+        );
+    }
+
+    #[test]
+    fn zero_compute_stresses_exchange() {
+        let c = ClusterConfig::paper_testbed();
+        let r = run(&c, "RN18", Gpu::ZeroCompute);
+        assert_eq!(r.compute_time, 0.0);
+        assert!(r.iter_time > 0.0);
+        assert!(r.exchange_rate > 10.0, "{r:?}"); // well under a 45MB/links bound
+    }
+
+    #[test]
+    fn more_workers_more_aggregate_throughput_pbox() {
+        let mut prev = 0.0;
+        for n in [2, 4, 8] {
+            let c = ClusterConfig::paper_testbed().with_workers(n);
+            let r = run(&c, "RN50", Gpu::Gtx1080Ti);
+            assert!(r.throughput > prev, "n={n} {r:?}");
+            prev = r.throughput;
+        }
+    }
+
+    #[test]
+    fn colocated_contention_slower_than_pbox() {
+        let d = Dnn::by_abbrev("V11").unwrap();
+        let net = NetConfig::cloud_10g();
+        let pbox = ClusterConfig::paper_testbed().with_net(net.clone());
+        let cs = pbox
+            .clone()
+            .with_ps(PsConfig::ColocatedSharded);
+        let r_pbox = ExchangeSim::new(&pbox, &d, ComputeEngine::new(Gpu::Gtx1080Ti), SimOpts::default()).run();
+        let r_cs = ExchangeSim::new(&cs, &d, ComputeEngine::new(Gpu::Gtx1080Ti), SimOpts::default()).run();
+        // Non-colocated halves per-NIC stress (section 4.3.2).
+        assert!(r_pbox.throughput > r_cs.throughput, "{r_pbox:?} vs {r_cs:?}");
+    }
+}

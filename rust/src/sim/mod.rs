@@ -1,0 +1,86 @@
+//! Discrete-event simulation of distributed training (the paper's testbed
+//! substitute — see DESIGN.md section 2 for the substitution argument).
+//!
+//! Public entry points:
+//! * [`simulate`] — one (cluster, DNN, GPU) configuration → [`SimResult`].
+//! * [`breakdown::progressive`] — the Figure 5 / Figure 14 progressive
+//!   overhead decomposition.
+
+pub mod breakdown;
+pub mod engine;
+pub mod exchange;
+pub mod params;
+pub mod plan;
+
+pub use exchange::{ExchangeSim, SimOpts, SimResult, StageFlags};
+
+use crate::compute::{ComputeEngine, Gpu};
+use crate::config::ClusterConfig;
+use crate::dnn::Dnn;
+
+/// Simulate steady-state training of `dnn` on `cluster` with `gpu` workers.
+pub fn simulate(cluster: &ClusterConfig, dnn: &Dnn, gpu: Gpu) -> SimResult {
+    simulate_opts(cluster, dnn, gpu, SimOpts::default())
+}
+
+/// [`simulate`] with explicit options (stage flags, tenants, iterations).
+pub fn simulate_opts(
+    cluster: &ClusterConfig,
+    dnn: &Dnn,
+    gpu: Gpu,
+    opts: SimOpts,
+) -> SimResult {
+    ExchangeSim::new(cluster, dnn, ComputeEngine::new(gpu), opts).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NetConfig, PsConfig, Stack};
+
+    /// Faster networks never hurt: 56G >= 10G throughput for every stack.
+    #[test]
+    fn faster_network_helps_or_ties() {
+        let d = Dnn::by_abbrev("AN").unwrap();
+        for (ps, stack) in [
+            (PsConfig::PBox, Stack::PHub),
+            (PsConfig::ColocatedSharded, Stack::MxnetIb),
+        ] {
+            let slow = ClusterConfig::paper_testbed()
+                .with_ps(ps)
+                .with_stack(stack)
+                .with_net(NetConfig::cloud_10g());
+            let fast = slow.clone().with_net(NetConfig::infiniband_56g());
+            let rs = simulate(&slow, &d, crate::compute::Gpu::Gtx1080Ti);
+            let rf = simulate(&fast, &d, crate::compute::Gpu::Gtx1080Ti);
+            assert!(
+                rf.throughput >= rs.throughput * 0.999,
+                "{ps:?} {stack:?}: {rf:?} vs {rs:?}"
+            );
+        }
+    }
+
+    /// Figure 2's shape: as GPUs speed up, the share of iteration time
+    /// spent waiting on the exchange grows.
+    #[test]
+    fn overhead_share_grows_with_gpu_speed() {
+        let d = Dnn::by_abbrev("RN269").unwrap();
+        let c = ClusterConfig::paper_testbed()
+            .with_ps(PsConfig::ColocatedSharded)
+            .with_stack(Stack::MxnetTcp)
+            .with_net(NetConfig::cloud_10g())
+            .with_exchange(crate::config::ExchangeConfig::mxnet());
+        let mut prev_share = -1.0;
+        for gpu in [Gpu::Grid520, Gpu::K80, Gpu::Gtx1080Ti] {
+            let r = simulate(&c, &d, gpu);
+            let share = r.exposed_overhead / r.iter_time;
+            assert!(
+                share >= prev_share - 0.02,
+                "{gpu:?}: share {share} prev {prev_share}"
+            );
+            prev_share = share;
+        }
+        // With the fastest GPUs the workload is communication-dominated.
+        assert!(prev_share > 0.5, "{prev_share}");
+    }
+}

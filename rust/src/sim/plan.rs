@@ -1,0 +1,356 @@
+//! Exchange planning: cluster topology construction and the message plan
+//! (key → messages → PS process / interface / core assignment).
+
+use crate::config::{ClusterConfig, PsConfig};
+use crate::coordinator::mapping;
+use crate::dnn::Dnn;
+use crate::fabric::{Fabric, LinkId};
+
+/// Where a PS process runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PsPlacement {
+    /// Shares machine (and NIC) with worker `w`.
+    OnWorker(usize),
+    /// Dedicated machine.
+    Dedicated,
+}
+
+/// One PS process's attachment points in the fabric.
+#[derive(Debug, Clone)]
+pub struct PsHost {
+    pub placement: PsPlacement,
+    /// Per-NIC uplinks (PS -> switch) and downlinks (switch -> PS).
+    pub up: Vec<LinkId>,
+    pub down: Vec<LinkId>,
+    /// PCIe-to-memory bridge links (dedicated hosts only).
+    pub pcie_in: Option<LinkId>,
+    pub pcie_out: Option<LinkId>,
+    /// Inter-socket (QPI) links, crossed only by NUMA-mismatched flows.
+    pub qpi_in: Option<LinkId>,
+    pub qpi_out: Option<LinkId>,
+    pub cores: usize,
+    pub numa_domains: usize,
+}
+
+/// The cluster realized as fabric links.
+#[derive(Debug)]
+pub struct Topology {
+    pub fabric: Fabric,
+    pub worker_up: Vec<LinkId>,
+    pub worker_down: Vec<LinkId>,
+    pub ps: Vec<PsHost>,
+}
+
+impl Topology {
+    /// Build the intra-rack topology for a cluster (full bisection within
+    /// the rack; cross-rack handled by [`crate::coordinator::hierarchy`]).
+    pub fn build(cluster: &ClusterConfig) -> Topology {
+        let mut fabric = Fabric::new();
+        let bw = cluster.net.link_bytes_per_sec();
+        let n = cluster.n_workers;
+
+        let worker_up: Vec<_> = (0..n)
+            .map(|w| fabric.add_link(format!("w{w}-up"), bw))
+            .collect();
+        let worker_down: Vec<_> = (0..n)
+            .map(|w| fabric.add_link(format!("w{w}-down"), bw))
+            .collect();
+
+        let mut ps = Vec::new();
+        let n_ps = cluster.n_ps_processes();
+        for p in 0..n_ps {
+            let placement = if cluster.ps.colocated() {
+                PsPlacement::OnWorker(p)
+            } else {
+                PsPlacement::Dedicated
+            };
+            match placement {
+                PsPlacement::OnWorker(w) => {
+                    // Colocated PS shares the worker's single NIC: reuse the
+                    // worker's links so PS and worker traffic contend — the
+                    // paper's "2x per-interface traffic" effect (section 2.1).
+                    ps.push(PsHost {
+                        placement,
+                        up: vec![worker_up[w]],
+                        down: vec![worker_down[w]],
+                        pcie_in: None,
+                        pcie_out: None,
+                        qpi_in: None,
+                        qpi_out: None,
+                        cores: cluster.ps_host.cores,
+                        numa_domains: cluster.ps_host.numa_domains,
+                    });
+                }
+                PsPlacement::Dedicated => {
+                    let nics = if cluster.ps == PsConfig::PBox {
+                        cluster.ps_host.nics
+                    } else {
+                        1
+                    };
+                    let up = (0..nics)
+                        .map(|j| fabric.add_link(format!("ps{p}-nic{j}-up"), bw))
+                        .collect();
+                    let down = (0..nics)
+                        .map(|j| fabric.add_link(format!("ps{p}-nic{j}-down"), bw))
+                        .collect();
+                    // The PCIe-to-memory bridge: every NIC flow traverses it
+                    // (the real PBox ceiling, section 4.7).
+                    let half = cluster.ps_host.pcie_bridge_bw / 2.0;
+                    // Inter-socket interconnect: ~25 GB/s per direction on
+                    // the Broadwell-class PBox prototype.
+                    let qpi = 25e9;
+                    ps.push(PsHost {
+                        placement,
+                        up,
+                        down,
+                        pcie_in: Some(fabric.add_link(format!("ps{p}-pcie-in"), half)),
+                        pcie_out: Some(fabric.add_link(format!("ps{p}-pcie-out"), half)),
+                        qpi_in: Some(fabric.add_link(format!("ps{p}-qpi-in"), qpi)),
+                        qpi_out: Some(fabric.add_link(format!("ps{p}-qpi-out"), qpi)),
+                        cores: cluster.ps_host.cores,
+                        numa_domains: cluster.ps_host.numa_domains,
+                    });
+                }
+            }
+        }
+        Topology {
+            fabric,
+            worker_up,
+            worker_down,
+            ps,
+        }
+    }
+
+    /// Uplink path: worker `w` -> PS process `p` via PS NIC `iface`.
+    pub fn up_path(&self, w: usize, p: usize, iface: usize) -> Vec<LinkId> {
+        let host = &self.ps[p];
+        if host.placement == PsPlacement::OnWorker(w) {
+            return vec![]; // node-local
+        }
+        let mut path = vec![self.worker_up[w], host.down[iface]];
+        if let Some(l) = host.pcie_in {
+            path.push(l);
+        }
+        path
+    }
+
+    /// Downlink path: PS process `p` NIC `iface` -> worker `w`.
+    pub fn down_path(&self, w: usize, p: usize, iface: usize) -> Vec<LinkId> {
+        let host = &self.ps[p];
+        if host.placement == PsPlacement::OnWorker(w) {
+            return vec![];
+        }
+        let mut path = Vec::with_capacity(3);
+        if let Some(l) = host.pcie_out {
+            path.push(l);
+        }
+        path.push(host.up[iface]);
+        path.push(self.worker_down[w]);
+        path
+    }
+}
+
+/// One wire message (a chunk, or a coarsened train of chunks).
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub key: usize,
+    pub bytes: f64,
+    /// PS process handling this message's chunk range.
+    pub ps: usize,
+    /// NIC on the PS host (Key-by-Interface mode; Worker-by-Interface
+    /// resolves the NIC from the worker id at runtime).
+    pub iface: usize,
+    /// Core on the PS host (tall aggregation).
+    pub core: usize,
+    /// Wide-aggregation group this message belongs to: the (key, shard)
+    /// slice that a PS-Lite server treats as its own key.
+    pub group: usize,
+    /// Number of real PHub chunks this message covers (coarsening factor
+    /// for per-message fixed costs).
+    pub chunks: f64,
+}
+
+/// A wide-aggregation unit: one PS process's slice of one key (PS-Lite
+/// slices tensors above its big-array threshold across servers; each slice
+/// aggregates independently, whole-slice-at-a-time).
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub key: usize,
+    pub ps: usize,
+    pub bytes: f64,
+    /// Message indices belonging to this group.
+    pub msgs: Vec<usize>,
+}
+
+/// The full message plan for one model exchange.
+#[derive(Debug)]
+pub struct Plan {
+    pub msgs: Vec<Msg>,
+    /// Message index range (contiguous) for each key.
+    pub key_msgs: Vec<(usize, usize)>,
+    /// Wide-aggregation groups (one per (key, shard) pair with traffic).
+    pub groups: Vec<Group>,
+    /// Simulation message unit in bytes.
+    pub unit: f64,
+}
+
+/// Cap on simulated messages per (worker, direction) — coarser units are
+/// used for very large model/chunk ratios to bound event count. Per-message
+/// fixed costs scale by `Msg::chunks` so overhead accounting is preserved.
+pub const MAX_SIM_MSGS: usize = 2048;
+
+impl Plan {
+    pub fn build(cluster: &ClusterConfig, dnn: &Dnn) -> Plan {
+        let chunk = cluster.exchange.chunk_bytes as f64;
+        let model = dnn.model_bytes as f64;
+        let unit = chunk.max(model / MAX_SIM_MSGS as f64);
+        let n_ps = cluster.n_ps_processes();
+        let nics = if cluster.ps == PsConfig::PBox {
+            cluster.ps_host.nics
+        } else {
+            1
+        };
+        let cores = cluster.ps_host.cores;
+
+        // Message-granular sharding across PS processes: PS-Lite slices
+        // tensors above its big-array threshold and round-robins the
+        // slices over servers (so does PHub with its chunks). Whole-key
+        // placement would bottleneck one shard on AlexNet/VGG's giant FC
+        // keys. Small keys round-robin via the running message counter.
+        let mut msgs: Vec<Msg> = Vec::new();
+        let mut key_msgs = Vec::new();
+        let mut groups: Vec<Group> = Vec::new();
+        let mut g = 0usize;
+        for (k, l) in dnn.layers.iter().enumerate() {
+            let start = msgs.len();
+            // Group index per shard for this key (created lazily).
+            let mut group_of_ps: Vec<Option<usize>> = vec![None; n_ps];
+            let mut remaining = l.bytes as f64;
+            while remaining > 0.0 {
+                let bytes = remaining.min(unit);
+                let p = g % n_ps;
+                let (iface, core) =
+                    mapping::chunk_slot(g, nics, cores, cluster.ps_host.numa_domains);
+                let gi = *group_of_ps[p].get_or_insert_with(|| {
+                    groups.push(Group {
+                        key: k,
+                        ps: p,
+                        bytes: 0.0,
+                        msgs: Vec::new(),
+                    });
+                    groups.len() - 1
+                });
+                groups[gi].bytes += bytes;
+                groups[gi].msgs.push(msgs.len());
+                msgs.push(Msg {
+                    key: k,
+                    bytes,
+                    ps: p,
+                    iface,
+                    core,
+                    group: gi,
+                    chunks: (bytes / chunk).max(1.0),
+                });
+                remaining -= bytes;
+                g += 1;
+            }
+            key_msgs.push((start, msgs.len()));
+        }
+        Plan {
+            msgs,
+            key_msgs,
+            groups,
+            unit,
+        }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.msgs.iter().map(|m| m.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, PsConfig, Stack};
+
+    fn cluster(ps: PsConfig) -> ClusterConfig {
+        ClusterConfig::paper_testbed().with_ps(ps)
+    }
+
+    #[test]
+    fn pbox_topology_has_ten_nics_and_pcie() {
+        let t = Topology::build(&cluster(PsConfig::PBox));
+        assert_eq!(t.ps.len(), 1);
+        assert_eq!(t.ps[0].up.len(), 10);
+        assert!(t.ps[0].pcie_in.is_some());
+        // Path: worker up, pbox nic down, pcie in.
+        assert_eq!(t.up_path(3, 0, 7).len(), 3);
+    }
+
+    #[test]
+    fn colocated_local_path_is_empty() {
+        let t = Topology::build(&cluster(PsConfig::ColocatedSharded));
+        assert_eq!(t.ps.len(), 8);
+        assert!(t.up_path(2, 2, 0).is_empty());
+        assert_eq!(t.up_path(2, 3, 0).len(), 2);
+    }
+
+    #[test]
+    fn colocated_ps_shares_worker_links() {
+        let t = Topology::build(&cluster(PsConfig::ColocatedSharded));
+        // PS 4's downlink IS worker 4's downlink: contention is structural.
+        assert_eq!(t.ps[4].down[0], t.worker_down[4]);
+    }
+
+    #[test]
+    fn plan_covers_model_exactly() {
+        let c = cluster(PsConfig::PBox);
+        for abbrev in ["AN", "RN50", "GN"] {
+            let d = crate::dnn::Dnn::by_abbrev(abbrev).unwrap();
+            let plan = Plan::build(&c, &d);
+            assert!((plan.total_bytes() - d.model_bytes as f64).abs() < 1.0);
+            assert_eq!(plan.key_msgs.len(), d.layers.len());
+        }
+    }
+
+    #[test]
+    fn plan_respects_message_cap() {
+        let c = cluster(PsConfig::PBox);
+        let d = crate::dnn::Dnn::by_abbrev("V19").unwrap(); // largest model
+        let plan = Plan::build(&c, &d);
+        // Per-layer ceil rounding can exceed the cap slightly.
+        assert!(plan.msgs.len() <= MAX_SIM_MSGS + d.layers.len());
+        // Coarsened messages carry their chunk multiplicity.
+        assert!(plan.msgs[0].chunks > 1.0);
+    }
+
+    #[test]
+    fn sharded_plan_balances_bytes() {
+        let c = cluster(PsConfig::ColocatedSharded);
+        let d = crate::dnn::Dnn::by_abbrev("RN50").unwrap();
+        let plan = Plan::build(&c, &d);
+        let mut per_ps = vec![0.0; 8];
+        for m in &plan.msgs {
+            per_ps[m.ps] += m.bytes;
+        }
+        let max = per_ps.iter().cloned().fold(0.0, f64::max);
+        let min = per_ps.iter().cloned().fold(f64::INFINITY, f64::min);
+        // Greedy LPT on ~54 conv keys should balance within ~30%.
+        assert!(max / min < 1.3, "{per_ps:?}");
+    }
+
+    #[test]
+    fn pbox_plan_spreads_interfaces() {
+        let c = cluster(PsConfig::PBox).with_stack(Stack::PHub);
+        let d = crate::dnn::Dnn::by_abbrev("RN18").unwrap();
+        let plan = Plan::build(&c, &d);
+        let mut per_iface = vec![0.0; 10];
+        for m in &plan.msgs {
+            per_iface[m.iface] += m.bytes;
+        }
+        let max = per_iface.iter().cloned().fold(0.0, f64::max);
+        let min = per_iface.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.25, "{per_iface:?}");
+    }
+}

@@ -1,0 +1,332 @@
+//! Property-based tests over coordinator invariants (routing, chunking,
+//! aggregation, optimizer state) using the in-crate `prop` harness.
+
+use std::sync::Arc;
+
+use phub::coordinator::aggregation::ChunkAggregator;
+use phub::coordinator::chunk::KeyTable;
+use phub::coordinator::mapping;
+use phub::coordinator::optimizer::{NesterovSgd, Optimizer, Sgd};
+use phub::coordinator::server::{PHubServer, ServerConfig};
+use phub::prop::{check, Rng};
+
+/// Chunking invariant: for any key layout and chunk size, chunks tile the
+/// flat model exactly, never span keys, and never exceed the chunk size.
+#[test]
+fn prop_chunking_tiles_model() {
+    check("chunking tiles model", 200, |rng: &mut Rng| {
+        let n_keys = rng.usize_in(1, 40);
+        let keys: Vec<(String, usize)> = (0..n_keys)
+            .map(|i| (format!("k{i}"), rng.usize_in(1, 5000)))
+            .collect();
+        let chunk = rng.usize_in(1, 1024);
+        let t = KeyTable::new(&keys, chunk);
+        t.check_invariants();
+        let expect: usize = keys
+            .iter()
+            .map(|(_, l)| l.div_ceil(chunk))
+            .sum();
+        if t.n_chunks() != expect {
+            return Err(format!("chunk count {} != {expect}", t.n_chunks()));
+        }
+        Ok(())
+    });
+}
+
+/// LPT routing invariant: every item is assigned exactly one bin, and the
+/// makespan respects the 4/3 bound vs the trivial lower bound.
+#[test]
+fn prop_lpt_within_bound() {
+    check("lpt 4/3 bound", 300, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 200);
+        let bins = rng.usize_in(1, 32);
+        let w = rng.weights(n, 10_000);
+        let assign = mapping::lpt_partition(&w, bins);
+        if assign.len() != n {
+            return Err("assignment length".into());
+        }
+        if assign.iter().any(|&b| b >= bins) {
+            return Err("bin out of range".into());
+        }
+        let ms = mapping::makespan(&w, &assign, bins) as f64;
+        let total: usize = w.iter().sum();
+        let lb = (total as f64 / bins as f64).max(*w.iter().max().unwrap() as f64);
+        if ms > lb * 4.0 / 3.0 + 1.0 {
+            return Err(format!("makespan {ms} > 4/3 * {lb}"));
+        }
+        Ok(())
+    });
+}
+
+/// NUMA invariant: chunk_slot never pairs a core with a NIC from another
+/// NUMA domain, for any (nics, cores, numa) geometry.
+#[test]
+fn prop_chunk_slot_numa_affinity() {
+    check("chunk_slot numa affinity", 300, |rng: &mut Rng| {
+        let numa = rng.usize_in(1, 5);
+        let nics = rng.usize_in(numa, 33);
+        let cores = rng.usize_in(numa.max(2), 129);
+        for g in 0..500 {
+            let (iface, core) = mapping::chunk_slot(g, nics, cores, numa);
+            if iface >= nics || core >= cores {
+                return Err(format!("slot out of range: {iface},{core}"));
+            }
+            if mapping::nic_numa(iface, nics, numa) != mapping::core_numa(core, cores, numa) {
+                return Err(format!(
+                    "numa mismatch g={g} iface={iface} core={core} ({nics},{cores},{numa})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Aggregation invariant: for any worker count and arrival order, the mean
+/// equals the arithmetic mean (to f32 tolerance), independent of order.
+#[test]
+fn prop_aggregation_order_independent() {
+    check("aggregation order independent", 200, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 17);
+        let len = rng.usize_in(1, 300);
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.vec_f32(len, 10.0)).collect();
+        // Random arrival order.
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.usize_in(0, i + 1);
+            order.swap(i, j);
+        }
+        let mut agg = ChunkAggregator::new(len, n);
+        let mut ready = false;
+        for &w in &order {
+            ready = agg.absorb(w, &grads[w]);
+        }
+        if !ready {
+            return Err("not ready after all workers".into());
+        }
+        let mean = agg.take_mean();
+        for i in 0..len {
+            let expect: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / n as f32;
+            if (mean[i] - expect).abs() > 1e-4 * expect.abs().max(1.0) {
+                return Err(format!("mean[{i}] {} != {expect}", mean[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Server state invariant: any number of rounds on any chunking equals the
+/// sequential whole-vector optimizer (the server's sharded, multi-threaded
+/// state machine introduces no drift).
+#[test]
+fn prop_server_matches_sequential() {
+    check("server matches sequential", 25, |rng: &mut Rng| {
+        let n_workers = rng.usize_in(1, 5);
+        let elems = rng.usize_in(1, 40) * 8;
+        let chunk = [8usize, 16, 64, 1024][rng.usize_in(0, 4)].min(elems);
+        let cores = rng.usize_in(1, 5);
+        let rounds = rng.usize_in(1, 4);
+        let lr = 0.01 + rng.f64() as f32 * 0.2;
+        let mu = rng.f64() as f32 * 0.95;
+        let init = rng.vec_f32(elems, 1.0);
+        let grads: Vec<Vec<Vec<f32>>> = (0..rounds)
+            .map(|_| (0..n_workers).map(|_| rng.vec_f32(elems, 1.0)).collect())
+            .collect();
+
+        // Server path.
+        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let opt = NesterovSgd { lr, momentum: mu };
+        let job = server.init_job(
+            KeyTable::flat(elems, chunk),
+            &init,
+            Arc::new(opt.clone()),
+            n_workers,
+        );
+        let mut handles: Vec<_> = (0..n_workers).map(|w| server.worker(job, w)).collect();
+        let mut got = Vec::new();
+        for r in 0..rounds {
+            let models: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let joins: Vec<_> = handles
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(w, h)| {
+                        let g = grads[r][w].clone();
+                        s.spawn(move || h.push_pull(&g))
+                    })
+                    .collect();
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+            for m in &models[1..] {
+                if m != &models[0] {
+                    return Err(format!("workers diverged at round {r}"));
+                }
+            }
+            got = models.into_iter().next().unwrap();
+        }
+        PHubServer::shutdown(server);
+
+        // Sequential reference.
+        let mut p = init;
+        let mut st = vec![0.0f32; elems];
+        for r in 0..rounds {
+            let mut mean = vec![0.0f32; elems];
+            for w in 0..n_workers {
+                for (a, g) in mean.iter_mut().zip(&grads[r][w]) {
+                    *a += g / n_workers as f32;
+                }
+            }
+            opt.step(&mut p, &mut st, &mean);
+        }
+        for (i, (a, b)) in got.iter().zip(&p).enumerate() {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("elem {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Optimizer chunk-composition invariant for arbitrary split points: a
+/// chunked application over any partition equals the whole-vector step.
+#[test]
+fn prop_optimizer_partition_invariant() {
+    check("optimizer partition invariant", 150, |rng: &mut Rng| {
+        let elems = rng.usize_in(2, 200);
+        let opt = NesterovSgd {
+            lr: 0.1,
+            momentum: 0.9,
+        };
+        let g = rng.vec_f32(elems, 1.0);
+        let mut p_whole = rng.vec_f32(elems, 1.0);
+        let mut m_whole = rng.vec_f32(elems, 0.2);
+        let mut p_split = p_whole.clone();
+        let mut m_split = m_whole.clone();
+        let cut = rng.usize_in(1, elems);
+        opt.step(&mut p_whole, &mut m_whole, &g);
+        {
+            let (pa, pb) = p_split.split_at_mut(cut);
+            let (ma, mb) = m_split.split_at_mut(cut);
+            opt.step(pa, ma, &g[..cut]);
+            opt.step(pb, mb, &g[cut..]);
+        }
+        if p_whole != p_split || m_whole != m_split {
+            return Err(format!("partition at {cut} diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Stateless SGD: same partition invariant.
+#[test]
+fn prop_sgd_partition_invariant() {
+    check("sgd partition invariant", 100, |rng: &mut Rng| {
+        let elems = rng.usize_in(2, 100);
+        let opt = Sgd { lr: 0.3 };
+        let g = rng.vec_f32(elems, 1.0);
+        let mut whole = rng.vec_f32(elems, 1.0);
+        let mut split = whole.clone();
+        let cut = rng.usize_in(1, elems);
+        opt.step(&mut whole, &mut [], &g);
+        opt.step(&mut split[..cut], &mut [], &g[..cut]);
+        opt.step(&mut split[cut..], &mut [], &g[cut..]);
+        if whole != split {
+            return Err("sgd split diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Collectives invariant: ring and halving-doubling all-reduce both equal
+/// the elementwise sum for arbitrary rank counts / lengths.
+#[test]
+fn prop_collectives_equal_sum() {
+    check("collectives equal sum", 100, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 12);
+        let len = rng.usize_in(1, 200);
+        let bufs: Vec<Vec<f32>> = (0..n).map(|_| rng.vec_f32(len, 5.0)).collect();
+        let mut sum = vec![0.0f32; len];
+        for b in &bufs {
+            for (a, x) in sum.iter_mut().zip(b) {
+                *a += x;
+            }
+        }
+        let mut ring = bufs.clone();
+        phub::collectives::ring_allreduce_inplace(&mut ring);
+        for b in &ring {
+            for (a, s) in b.iter().zip(&sum) {
+                if (a - s).abs() > 1e-3 * s.abs().max(1.0) {
+                    return Err(format!("ring mismatch n={n} len={len}"));
+                }
+            }
+        }
+        // Halving-doubling needs a power of two.
+        let n2 = 1usize << rng.usize_in(0, 4);
+        let bufs2: Vec<Vec<f32>> = (0..n2).map(|_| rng.vec_f32(len, 5.0)).collect();
+        let mut sum2 = vec![0.0f32; len];
+        for b in &bufs2 {
+            for (a, x) in sum2.iter_mut().zip(b) {
+                *a += x;
+            }
+        }
+        let mut hd = bufs2.clone();
+        phub::collectives::halving_doubling_allreduce_inplace(&mut hd);
+        for b in &hd {
+            for (a, s) in b.iter().zip(&sum2) {
+                if (a - s).abs() > 1e-3 * s.abs().max(1.0) {
+                    return Err(format!("hd mismatch n={n2} len={len}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Hierarchical two-level reduction equals the flat mean for arbitrary
+/// rack shapes.
+#[test]
+fn prop_two_level_reduce_equals_flat() {
+    check("two-level reduce equals flat", 100, |rng: &mut Rng| {
+        let racks = rng.usize_in(1, 5);
+        let len = rng.usize_in(1, 100);
+        let grads: Vec<Vec<Vec<f32>>> = (0..racks)
+            .map(|_| {
+                let workers = rng.usize_in(1, 5);
+                (0..workers).map(|_| rng.vec_f32(len, 2.0)).collect()
+            })
+            .collect();
+        let hier = phub::coordinator::hierarchy::two_level_reduce(&grads);
+        let mut flat = vec![0.0f32; len];
+        let mut cnt = 0usize;
+        for rack in &grads {
+            for g in rack {
+                for (a, x) in flat.iter_mut().zip(g) {
+                    *a += x;
+                }
+                cnt += 1;
+            }
+        }
+        for x in flat.iter_mut() {
+            *x /= cnt as f32;
+        }
+        for (i, (a, b)) in hier.iter().zip(&flat).enumerate() {
+            if (a - b).abs() > 1e-3 {
+                return Err(format!("elem {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// JSON parser round-trip-ish property: parse never panics on fuzzed
+/// garbage, and valid generated documents parse to the expected depth.
+#[test]
+fn prop_jsonlite_fuzz_no_panic() {
+    check("jsonlite fuzz", 500, |rng: &mut Rng| {
+        let len = rng.usize_in(0, 64);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" {}[]\",:0123456789truefalsenul\\"[rng.usize_in(0, 31)])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes);
+        let _ = phub::jsonlite::parse(&s); // must not panic
+        Ok(())
+    });
+}

@@ -1,0 +1,194 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the L1/L2/L3
+//! consistency checks. Require `make artifacts` to have run (they are
+//! skipped with a message if artifacts/ is missing).
+
+use phub::coordinator::{KeyTable, NesterovSgd, PHubServer};
+use phub::coordinator::server::ServerConfig;
+use phub::prop::Rng;
+use phub::runtime::{self, Runtime};
+use std::sync::Arc;
+
+fn runtime() -> Option<Runtime> {
+    let dir = runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::cpu(dir).expect("PJRT client"))
+}
+
+#[test]
+fn manifest_is_consistent() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().unwrap();
+    assert!(m.param_count > 0);
+    assert!(m.padded_size >= m.param_count);
+    assert_eq!(m.padded_size % m.chunk_elems, 0);
+    let sum: usize = m.keys.iter().map(|(_, _, l)| l).sum();
+    assert_eq!(sum, m.param_count);
+    // Offsets are contiguous in flat order.
+    let mut off = 0;
+    for (_, o, l) in &m.keys {
+        assert_eq!(*o, off);
+        off += l;
+    }
+    let params = rt.initial_params().unwrap();
+    assert_eq!(params.len(), m.padded_size);
+    // Pad region is zero.
+    assert!(params[m.param_count..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn grad_step_executes_and_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().unwrap();
+    let f = rt.load("grad_step").unwrap();
+    let params = rt.initial_params().unwrap();
+    let mut rng = Rng::new(1);
+    let toks: Vec<i32> = (0..m.batch * (m.seq_len + 1))
+        .map(|_| rng.usize_in(0, m.vocab) as i32)
+        .collect();
+    let call = || {
+        let p = runtime::literal_f32(&params, &[m.padded_size as i64]).unwrap();
+        let t = runtime::literal_i32(&toks, &[m.batch as i64, (m.seq_len + 1) as i64]).unwrap();
+        let out = f.call(&[p, t]).unwrap();
+        let loss = runtime::to_scalar_f32(&out[0]).unwrap();
+        let grads = runtime::to_vec_f32(&out[1]).unwrap();
+        (loss, grads)
+    };
+    let (l1, g1) = call();
+    let (l2, g2) = call();
+    assert_eq!(l1, l2, "deterministic loss");
+    assert_eq!(g1, g2, "deterministic grads");
+    // Sane values: loss near ln(vocab) at init, finite gradient.
+    assert!(l1 > 1.0 && l1 < 10.0, "loss {l1}");
+    assert!(g1.iter().all(|x| x.is_finite()));
+    let norm: f32 = g1.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!(norm > 1e-4, "gradient is not degenerate: {norm}");
+    // Pad region of the gradient is zeroed (PS never folds garbage).
+    assert!(g1[m.param_count..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn eval_loss_matches_grad_step_loss() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().unwrap();
+    let gs = rt.load("grad_step").unwrap();
+    let ev = rt.load("eval_loss").unwrap();
+    let params = rt.initial_params().unwrap();
+    let mut rng = Rng::new(7);
+    let toks: Vec<i32> = (0..m.batch * (m.seq_len + 1))
+        .map(|_| rng.usize_in(0, m.vocab) as i32)
+        .collect();
+    let p = runtime::literal_f32(&params, &[m.padded_size as i64]).unwrap();
+    let t = runtime::literal_i32(&toks, &[m.batch as i64, (m.seq_len + 1) as i64]).unwrap();
+    let l_grad = runtime::to_scalar_f32(&gs.call(&[p, t]).unwrap()[0]).unwrap();
+    let p = runtime::literal_f32(&params, &[m.padded_size as i64]).unwrap();
+    let t = runtime::literal_i32(&toks, &[m.batch as i64, (m.seq_len + 1) as i64]).unwrap();
+    let l_eval = runtime::to_scalar_f32(&ev.call(&[p, t]).unwrap()[0]).unwrap();
+    assert!((l_grad - l_eval).abs() < 1e-5, "{l_grad} vs {l_eval}");
+}
+
+/// Cross-layer consistency: the L1 Pallas agg_opt artifact computes the
+/// SAME update as the Rust PHub server (tall aggregation + NesterovSgd).
+#[test]
+fn agg_opt_artifact_matches_live_server() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().unwrap();
+    let agg = rt.load("agg_opt").unwrap();
+    let k = m.padded_size;
+    let w = m.n_workers;
+    let (lr, mu) = (0.05f32, 0.9f32);
+    let mut rng = Rng::new(42);
+    let grads: Vec<Vec<f32>> = (0..w).map(|_| rng.vec_f32(k, 0.5)).collect();
+    let params = rt.initial_params().unwrap();
+    let mom = vec![0.0f32; k];
+
+    // L1 kernel path (one fused call over all workers).
+    let flat_grads: Vec<f32> = grads.iter().flatten().copied().collect();
+    let out = agg
+        .call(&[
+            runtime::literal_f32(&flat_grads, &[w as i64, k as i64]).unwrap(),
+            runtime::literal_f32(&params, &[k as i64]).unwrap(),
+            runtime::literal_f32(&mom, &[k as i64]).unwrap(),
+            runtime::literal_scalar(lr),
+            runtime::literal_scalar(mu),
+        ])
+        .unwrap();
+    let kernel_params = runtime::to_vec_f32(&out[0]).unwrap();
+    let kernel_mom = runtime::to_vec_f32(&out[1]).unwrap();
+
+    // L3 server path.
+    let server = PHubServer::start(ServerConfig { n_cores: 3 });
+    let job = server.init_job(
+        KeyTable::flat(k, m.chunk_elems),
+        &params,
+        Arc::new(NesterovSgd { lr, momentum: mu }),
+        w,
+    );
+    let mut handles: Vec<_> = (0..w).map(|i| server.worker(job, i)).collect();
+    let models: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let joins: Vec<_> = handles
+            .iter_mut()
+            .zip(&grads)
+            .map(|(h, g)| s.spawn(move || h.push_pull(g)))
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let server_params = &models[0];
+
+    let mut max_err = 0.0f32;
+    for (a, b) in kernel_params.iter().zip(server_params) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-5, "L1 kernel vs L3 server drift: {max_err}");
+    assert!(kernel_mom.iter().all(|x| x.is_finite()));
+    PHubServer::shutdown(server);
+}
+
+/// Mini end-to-end: a few live training steps through PJRT + PHub reduce
+/// the loss (the full 200-step run is examples/train_e2e.rs).
+#[test]
+fn live_training_loss_decreases() {
+    let Some(_) = runtime() else { return };
+    let dir = runtime::default_artifacts_dir();
+    let report = phub::e2e::train(&dir, 2, 30, 2, 0.05, 0.9, false).expect("train");
+    let (head, tail) = report.mean_loss_head_tail(5);
+    assert!(
+        tail < head,
+        "loss should decrease: {head} -> {tail} ({:?})",
+        report.losses
+    );
+}
+
+/// The quant2bit artifact executes and satisfies the quantizer contract.
+#[test]
+fn quant_artifact_contract() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().unwrap();
+    let q = rt.load("quant2bit").unwrap();
+    let k = m.padded_size;
+    let mut rng = Rng::new(9);
+    let grad = rng.vec_f32(k, 1.0);
+    let residual = vec![0.0f32; k];
+    let t = 0.5f32;
+    let out = q
+        .call(&[
+            runtime::literal_f32(&grad, &[k as i64]).unwrap(),
+            runtime::literal_f32(&residual, &[k as i64]).unwrap(),
+            runtime::literal_scalar(t),
+        ])
+        .unwrap();
+    let levels = runtime::to_vec_f32(&out[0]).unwrap();
+    let new_r = runtime::to_vec_f32(&out[1]).unwrap();
+    let dq = runtime::to_vec_f32(&out[2]).unwrap();
+    for i in 0..k {
+        assert!(
+            levels[i] == -1.0 || levels[i] == 0.0 || levels[i] == 1.0,
+            "levels[{i}]={}",
+            levels[i]
+        );
+        // Error feedback conserves the signal.
+        assert!((dq[i] + new_r[i] - grad[i]).abs() < 1e-5);
+    }
+}

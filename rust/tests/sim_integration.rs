@@ -1,0 +1,212 @@
+//! Integration tests asserting the paper's headline claims hold in the
+//! simulated testbed — the figure-level "shape" contracts that the bench
+//! binaries print. If a calibration change breaks a paper claim, these
+//! fail before EXPERIMENTS.md goes stale.
+
+use phub::compute::Gpu;
+use phub::config::{ClusterConfig, ExchangeConfig, NetConfig, PsConfig, Stack};
+use phub::dnn::Dnn;
+use phub::sim::{self, SimOpts};
+
+fn testbed() -> ClusterConfig {
+    ClusterConfig::paper_testbed()
+}
+
+fn mxnet_tcp(net: NetConfig) -> ClusterConfig {
+    testbed()
+        .with_ps(PsConfig::ColocatedSharded)
+        .with_stack(Stack::MxnetTcp)
+        .with_net(net)
+        .with_exchange(ExchangeConfig::mxnet())
+}
+
+fn mxnet_ib(net: NetConfig) -> ClusterConfig {
+    mxnet_tcp(net).with_stack(Stack::MxnetIb)
+}
+
+/// Table 1 shape: MXNet TCP at 8 workers lands within 25% of the paper's
+/// 688 samples/s and scales poorly (<60% efficiency); PHub scales ~linearly.
+#[test]
+fn table1_shape() {
+    let d = Dnn::by_abbrev("RN50").unwrap();
+    let tcp8 = sim::simulate(&mxnet_tcp(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+    assert!(
+        (tcp8.throughput - 688.0).abs() / 688.0 < 0.25,
+        "MXNet TCP @8: {} vs paper 688",
+        tcp8.throughput
+    );
+    let ideal = 8.0 * d.local_throughput();
+    assert!(tcp8.throughput / ideal < 0.6);
+    let phub8 = sim::simulate(&testbed(), &d, Gpu::Gtx1080Ti);
+    assert!(phub8.throughput / ideal > 0.9, "{}", phub8.throughput / ideal);
+}
+
+/// Figure 11: the IB data plane alone speeds up every network; the
+/// largest wins are the big-model networks (AN, VGG).
+#[test]
+fn fig11_dataplane_speedups() {
+    let mut an_speedup = 0.0;
+    let mut gn_speedup = 0.0;
+    for abbrev in ["AN", "GN"] {
+        let d = Dnn::by_abbrev(abbrev).unwrap();
+        let tcp = sim::simulate(&mxnet_tcp(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+        let ib = sim::simulate(&mxnet_ib(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+        let s = ib.throughput / tcp.throughput;
+        assert!(s >= 1.0, "{abbrev}: {s}");
+        if abbrev == "AN" {
+            an_speedup = s;
+        } else {
+            gn_speedup = s;
+        }
+    }
+    assert!(an_speedup > gn_speedup, "{an_speedup} vs {gn_speedup}");
+}
+
+/// Figure 12: on 10 Gbps, PBox beats the enhanced baseline on every
+/// network, with the peak speedup in the paper's 1.8-2.8x band and
+/// PShard strictly between baseline and PBox for network-bound models.
+#[test]
+fn fig12_pbox_wins_on_10g() {
+    let mut peak: f64 = 0.0;
+    for abbrev in ["AN", "V11", "RN50", "GN"] {
+        let d = Dnn::by_abbrev(abbrev).unwrap();
+        let base = sim::simulate(&mxnet_ib(NetConfig::cloud_10g()), &d, Gpu::Gtx1080Ti);
+        let pshard = sim::simulate(
+            &testbed()
+                .with_ps(PsConfig::ColocatedSharded)
+                .with_net(NetConfig::cloud_10g()),
+            &d,
+            Gpu::Gtx1080Ti,
+        );
+        let pbox = sim::simulate(&testbed().with_net(NetConfig::cloud_10g()), &d, Gpu::Gtx1080Ti);
+        let s_box = pbox.throughput / base.throughput;
+        let s_shard = pshard.throughput / base.throughput;
+        assert!(s_box >= s_shard * 0.99, "{abbrev}: pbox {s_box} < pshard {s_shard}");
+        assert!(s_shard >= 0.95, "{abbrev}: pshard {s_shard}");
+        peak = peak.max(s_box);
+    }
+    assert!(peak > 1.8 && peak < 2.9, "peak speedup {peak} (paper: up to 2.7x)");
+}
+
+/// Figure 13: at 56 Gbps, compute-bound networks see ~1x, AlexNet/VGG
+/// remain network-bound and keep a large win.
+#[test]
+fn fig13_56g_only_big_models_win() {
+    for (abbrev, lo, hi) in [("GN", 0.98, 1.1), ("I3", 0.98, 1.1), ("RN269", 0.98, 1.15)] {
+        let d = Dnn::by_abbrev(abbrev).unwrap();
+        let base = sim::simulate(&mxnet_ib(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+        let pbox = sim::simulate(&testbed(), &d, Gpu::Gtx1080Ti);
+        let s = pbox.throughput / base.throughput;
+        assert!(s >= lo && s <= hi, "{abbrev}: {s}");
+    }
+    for abbrev in ["AN", "V11"] {
+        let d = Dnn::by_abbrev(abbrev).unwrap();
+        let base = sim::simulate(&mxnet_ib(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+        let pbox = sim::simulate(&testbed(), &d, Gpu::Gtx1080Ti);
+        let s = pbox.throughput / base.throughput;
+        assert!(s > 1.5, "{abbrev}: {s} (stays network-bound on 56G)");
+    }
+}
+
+/// Figure 15: with infinitely fast compute, PBox total exchange
+/// throughput scales ~linearly 1->8 workers and dwarfs MXNet TCP.
+#[test]
+fn fig15_zerocompute_scaling() {
+    let d = Dnn::by_abbrev("RN18").unwrap();
+    let r1 = sim::simulate(&testbed().with_workers(1), &d, Gpu::ZeroCompute);
+    let r8 = sim::simulate(&testbed().with_workers(8), &d, Gpu::ZeroCompute);
+    let scaling = (8.0 * r8.exchange_rate) / r1.exchange_rate;
+    assert!(scaling > 5.5, "PBox scaling 1->8: {scaling}x (paper: ~linear)");
+    let tcp8 = sim::simulate(
+        &mxnet_tcp(NetConfig::infiniband_56g()).with_workers(8),
+        &d,
+        Gpu::ZeroCompute,
+    );
+    let vs_tcp = r8.exchange_rate / tcp8.exchange_rate;
+    assert!(vs_tcp > 10.0, "PBox vs MXNet TCP: {vs_tcp}x (paper: up to 40x)");
+}
+
+/// Section 4.5: Key-by-Interface beats Worker-by-Interface by ~1.4x.
+#[test]
+fn sec45_key_affinity() {
+    let d = Dnn::by_abbrev("RN18").unwrap();
+    let kbi = sim::simulate(&testbed(), &d, Gpu::ZeroCompute);
+    let mut wbi_cfg = testbed();
+    wbi_cfg.exchange.key_by_interface = false;
+    let wbi = sim::simulate(&wbi_cfg, &d, Gpu::ZeroCompute);
+    let ratio = kbi.exchange_rate / wbi.exchange_rate;
+    assert!(
+        ratio > 1.2 && ratio < 1.8,
+        "KbI/WbI {ratio} (paper: 1.43x)"
+    );
+}
+
+/// Figure 16 left: throughput peaks in the 16-64KB chunk band and falls
+/// off on both sides (paper optimum: 32 KB).
+#[test]
+fn fig16_chunk_size_sweet_spot() {
+    let d = Dnn::by_abbrev("RN18").unwrap();
+    let rate = |kb: usize| {
+        let mut c = testbed();
+        c.exchange.chunk_bytes = kb * 1024;
+        sim::simulate(&c, &d, Gpu::ZeroCompute).exchange_rate
+    };
+    let tiny = rate(4);
+    let sweet = rate(32);
+    let huge = rate(2048);
+    assert!(sweet > tiny * 1.2, "small chunks should hurt: {sweet} vs {tiny}");
+    assert!(sweet > huge * 1.5, "huge chunks should hurt: {sweet} vs {huge}");
+}
+
+/// Figure 16 right: more QPs per connection never helps (cache pressure).
+#[test]
+fn fig16_qp_monotone() {
+    let d = Dnn::by_abbrev("RN18").unwrap();
+    let mut prev = f64::INFINITY;
+    for qps in [1usize, 4, 16, 64] {
+        let mut c = testbed();
+        c.net.qps_per_connection = qps;
+        let r = sim::simulate(&c, &d, Gpu::ZeroCompute).exchange_rate;
+        assert!(r <= prev * 1.01, "qps={qps}: {r} > {prev}");
+        prev = r;
+    }
+}
+
+/// Figure 18: per-job efficiency under multi-tenancy stays within a few
+/// percent of fair share (the paper's "low interference" claim).
+#[test]
+fn fig18_low_tenant_interference() {
+    let d = Dnn::by_abbrev("RN50").unwrap();
+    let c = testbed().with_net(NetConfig::cloud_10g());
+    let solo = sim::simulate(&c, &d, Gpu::Gtx1080Ti).throughput;
+    for jobs in [2usize, 8] {
+        let r = sim::simulate_opts(
+            &c,
+            &d,
+            Gpu::Gtx1080Ti,
+            SimOpts {
+                tenants: jobs,
+                ..SimOpts::default()
+            },
+        );
+        let normalized = r.throughput * jobs as f64 / solo;
+        assert!(
+            normalized > 0.85 && normalized < 1.1,
+            "jobs={jobs}: normalized per-job efficiency {normalized}"
+        );
+    }
+}
+
+/// The progressive breakdown is internally consistent across stacks: PHub
+/// strictly reduces every overhead segment vs MXNet TCP on AlexNet.
+#[test]
+fn breakdown_phub_reduces_every_segment() {
+    let d = Dnn::by_abbrev("AN").unwrap();
+    let mx = sim::breakdown::progressive(&mxnet_tcp(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+    let ph = sim::breakdown::progressive(&testbed(), &d, Gpu::Gtx1080Ti);
+    assert!(ph.data_copy_comm < mx.data_copy_comm);
+    assert!(ph.aggregation <= mx.aggregation + 1e-9);
+    assert!(ph.optimization <= mx.optimization + 1e-9);
+    assert!(ph.sync_other <= mx.sync_other + 1e-9);
+    assert_eq!(ph.compute, mx.compute);
+}
