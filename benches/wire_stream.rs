@@ -1,0 +1,82 @@
+//! Streamed vs monolithic TCP exchange (run via `cargo bench --bench
+//! wire_stream`).
+//!
+//! Measures synchronous round latency of the v1 chunk-streamed wire
+//! protocol against the legacy v0 whole-frame protocol on localhost TCP,
+//! across model sizes. The streamed path overlaps reception, aggregation,
+//! optimization, and transmission per chunk (paper §3.2), so multi-chunk
+//! models should round-trip no slower — and typically faster — than the
+//! monolithic path, which fully serializes network and compute.
+//!
+//! Results feed EXPERIMENTS.md section Perf.
+
+use std::time::Instant;
+
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::wire;
+
+const CHUNK_ELEMS: usize = 8192;
+
+/// Mean seconds per synchronous round across `workers` concurrent workers.
+fn bench_proto(
+    addr: std::net::SocketAddr,
+    job: u32,
+    model: usize,
+    workers: u32,
+    rounds: usize,
+    proto: u32,
+) -> f64 {
+    let spec = JobSpec {
+        model_elems: model as u64,
+        chunk_elems: CHUNK_ELEMS.min(model) as u64,
+        n_workers: workers,
+        lr: 0.1,
+        momentum: 0.9,
+    };
+    let joins: Vec<_> = (0..workers)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut worker = TcpWorker::connect_with_proto(addr, job, spec, proto).unwrap();
+                assert_eq!(worker.proto(), proto);
+                let grad: Vec<f32> = (0..model)
+                    .map(|i| ((i + w as usize) % 7) as f32 * 0.1)
+                    .collect();
+                worker.push_pull(&grad).unwrap(); // warmup round
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    worker.push_pull(&grad).unwrap();
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                worker.bye();
+                dt
+            })
+        })
+        .collect();
+    let total: f64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    total / workers as f64 / rounds as f64
+}
+
+fn main() {
+    println!("== wire_stream: chunk-streamed (v1) vs monolithic (v0) rounds ==");
+    let workers = 2u32;
+    let rounds = 20usize;
+    let mut job = 1u32;
+    for model_kb in [64usize, 1024, 4096, 16384] {
+        let model = model_kb * 1024 / 4;
+        let chunks = model.div_ceil(CHUNK_ELEMS);
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 }).unwrap();
+        let addr = leader.local_addr();
+        let mono = bench_proto(addr, job, model, workers, rounds, wire::PROTO_MONOLITHIC);
+        let streamed = bench_proto(addr, job + 1, model, workers, rounds, wire::PROTO_CHUNK_STREAMED);
+        job += 2;
+        println!(
+            "  {model_kb:>6} KB model ({chunks:>4} chunks, {workers} workers): \
+             monolithic {:>8.3} ms/round, streamed {:>8.3} ms/round ({:+5.1}%)",
+            mono * 1e3,
+            streamed * 1e3,
+            (streamed / mono - 1.0) * 100.0
+        );
+    }
+    println!("wire_stream OK");
+}

@@ -1,18 +1,23 @@
 //! Distributed PHub over TCP: a leader process serving workers through the
-//! wire protocol, with dense and 2-bit-compressed exchange paths.
+//! wire protocol, with dense and 2-bit-compressed exchange paths at both
+//! protocol versions (v1 chunk-streamed, v0 monolithic).
 //!
 //! Spawns the leader and N worker clients (threads here; the same code
 //! works across processes/machines — see `phub::coordinator::transport`),
-//! runs synchronous rounds both dense and compressed, and reports wire
-//! bytes and round throughput for each. The compressed path demonstrates
-//! the paper's section 5 claim: PHub composes with gradient compression
-//! (~16x less push traffic) without touching the aggregation engine.
+//! runs synchronous rounds for every (protocol x compression) combination,
+//! and reports wire bytes and round throughput for each. The streamed
+//! protocol is the paper's §3.2 data plane shape: chunk frames routed to
+//! pinned cores as they arrive, per-chunk model replies overlapping later
+//! chunks' aggregation. The compressed path demonstrates the section 5
+//! claim: PHub composes with gradient compression (~16x less push
+//! traffic) without touching the aggregation engine.
 //!
 //! Run: `cargo run --release --example distributed_tcp -- [--workers 4]`
 
 use phub::cli::Args;
 use phub::coordinator::server::ServerConfig;
 use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::wire;
 
 fn main() -> anyhow::Result<()> {
     let a = Args::from_env();
@@ -22,59 +27,88 @@ fn main() -> anyhow::Result<()> {
 
     let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 })?;
     let addr = leader.local_addr();
-    println!("leader on {addr}, {workers} workers, {} KB model", model * 4 / 1024);
+    println!(
+        "leader on {addr}, {workers} workers, {} KB model",
+        model * 4 / 1024
+    );
 
-    for (label, quant) in [("dense f32", false), ("2-bit compressed", true)] {
-        let job = if quant { 2 } else { 1 };
-        let spec = JobSpec {
-            model_elems: model as u64,
-            chunk_elems: 8192,
-            n_workers: workers,
-            lr: 0.1,
-            momentum: 0.9,
-        };
-        let t0 = std::time::Instant::now();
-        let joins: Vec<_> = (0..workers)
-            .map(|w| {
-                std::thread::spawn(move || -> anyhow::Result<(Vec<f32>, usize)> {
-                    let mut worker = TcpWorker::connect(addr, job, spec)?;
-                    let grad: Vec<f32> =
-                        (0..model).map(|i| ((i + w as usize) % 13) as f32 * 0.01).collect();
-                    let mut m = Vec::new();
-                    let mut wire_bytes = 0usize;
-                    for _ in 0..rounds {
-                        if quant {
-                            wire_bytes += model / 4 + 12; // packed levels
-                            m = worker.push_pull_quant(&grad, 0.05)?;
-                        } else {
-                            wire_bytes += model * 4;
-                            m = worker.push_pull(&grad)?;
+    let mut job = 0u32;
+    for (plabel, proto) in [
+        ("streamed v1", wire::PROTO_CHUNK_STREAMED),
+        ("monolithic v0", wire::PROTO_MONOLITHIC),
+    ] {
+        for (label, quant) in [("dense f32", false), ("2-bit compressed", true)] {
+            job += 1;
+            let chunk_elems = 8192usize;
+            let spec = JobSpec {
+                model_elems: model as u64,
+                chunk_elems: chunk_elems as u64,
+                n_workers: workers,
+                lr: 0.1,
+                momentum: 0.9,
+            };
+            // Exact per-round push bytes on the wire, per protocol: v0 is
+            // one frame (16 B header) for the whole model; v1 is one frame
+            // per chunk, each with the 12 B chunk prefix (and the 12 B
+            // QuantGrad header per segment on the compressed path).
+            let chunk_lens: Vec<usize> = (0..model)
+                .step_by(chunk_elems)
+                .map(|o| chunk_elems.min(model - o))
+                .collect();
+            let round_bytes: usize = if proto == wire::PROTO_CHUNK_STREAMED {
+                chunk_lens
+                    .iter()
+                    .map(|&l| 16 + 12 + if quant { 12 + l.div_ceil(4) } else { l * 4 })
+                    .sum()
+            } else if quant {
+                16 + 12 + model.div_ceil(4)
+            } else {
+                16 + model * 4
+            };
+            let t0 = std::time::Instant::now();
+            let joins: Vec<_> = (0..workers)
+                .map(|w| {
+                    std::thread::spawn(move || -> anyhow::Result<(Vec<f32>, usize)> {
+                        let mut worker = TcpWorker::connect_with_proto(addr, job, spec, proto)?;
+                        assert_eq!(worker.proto(), proto, "negotiation");
+                        let grad: Vec<f32> = (0..model)
+                            .map(|i| ((i + w as usize) % 13) as f32 * 0.01)
+                            .collect();
+                        let mut m = Vec::new();
+                        let mut wire_bytes = 0usize;
+                        for _ in 0..rounds {
+                            wire_bytes += round_bytes;
+                            if quant {
+                                m = worker.push_pull_quant(&grad, 0.05)?;
+                            } else {
+                                m = worker.push_pull(&grad)?;
+                            }
                         }
-                    }
-                    worker.bye();
-                    Ok((m, wire_bytes))
+                        worker.bye();
+                        Ok((m, wire_bytes))
+                    })
                 })
-            })
-            .collect();
-        let mut final_models = Vec::new();
-        let mut push_bytes = 0usize;
-        for j in joins {
-            let (m, b) = j.join().unwrap()?;
-            final_models.push(m);
-            push_bytes += b;
+                .collect();
+            let mut final_models = Vec::new();
+            let mut push_bytes = 0usize;
+            for j in joins {
+                let (m, b) = j.join().unwrap()?;
+                final_models.push(m);
+                push_bytes += b;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(
+                final_models.windows(2).all(|w| w[0] == w[1]),
+                "synchronous workers must agree"
+            );
+            println!(
+                "  {plabel:<14} {label:<18} {rounds} rounds in {dt:.2}s ({:.1} rounds/s), \
+                 push traffic {:.1} MB, model[0..2]={:?}",
+                rounds as f64 / dt,
+                push_bytes as f64 / 1e6,
+                &final_models[0][..2]
+            );
         }
-        let dt = t0.elapsed().as_secs_f64();
-        assert!(
-            final_models.windows(2).all(|w| w[0] == w[1]),
-            "synchronous workers must agree"
-        );
-        println!(
-            "  {label:<18} {rounds} rounds in {dt:.2}s ({:.1} rounds/s), \
-             push traffic {:.1} MB, model[0..2]={:?}",
-            rounds as f64 / dt,
-            push_bytes as f64 / 1e6,
-            &final_models[0][..2]
-        );
     }
     println!("distributed_tcp OK");
     Ok(())

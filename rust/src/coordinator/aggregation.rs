@@ -8,7 +8,7 @@
 //! thread on the same core* — no coordination with any other chunk.
 
 /// `acc += src`, the aggregation inner loop. Kept as a free function so
-//  benches can target it directly; the optimizer pass reuses it.
+/// benches can target it directly; the optimizer pass reuses it.
 #[inline]
 pub fn add_assign(acc: &mut [f32], src: &[f32]) {
     debug_assert_eq!(acc.len(), src.len());
@@ -25,6 +25,11 @@ pub fn scale(v: &mut [f32], k: f32) {
     }
 }
 
+/// Most workers one aggregation round supports — the arrival bitmask is a
+/// u64. Single source of truth: the service and transport edges validate
+/// against this before anything reaches the assert below.
+pub const MAX_WORKERS: usize = 64;
+
 /// Streaming aggregation state for one chunk.
 #[derive(Debug, Clone)]
 pub struct ChunkAggregator {
@@ -36,7 +41,10 @@ pub struct ChunkAggregator {
 
 impl ChunkAggregator {
     pub fn new(len: usize, n_workers: usize) -> Self {
-        assert!(n_workers >= 1 && n_workers <= 64, "worker bitmask is u64");
+        assert!(
+            (1..=MAX_WORKERS).contains(&n_workers),
+            "worker bitmask is u64"
+        );
         ChunkAggregator {
             acc: vec![0.0; len],
             seen: 0,

@@ -63,6 +63,38 @@ impl Quantizer {
     }
 }
 
+/// Per-chunk compressor bank for the chunk-streamed wire protocol (v1):
+/// one error-feedback [`Quantizer`] per chunk, so each chunk's residual
+/// lives with the chunk and compression composes with streaming exactly
+/// like the dense path. Because quantization is elementwise over
+/// `grad + residual`, the concatenation of per-chunk segments is
+/// bit-identical to one whole-model [`Quantizer`] pass.
+#[derive(Debug, Clone)]
+pub struct ChunkQuantizer {
+    quants: Vec<Quantizer>,
+}
+
+impl ChunkQuantizer {
+    /// One quantizer per chunk, `chunk_lens[i]` elements each.
+    pub fn new(chunk_lens: &[usize], threshold: f32) -> Self {
+        ChunkQuantizer {
+            quants: chunk_lens
+                .iter()
+                .map(|&len| Quantizer::new(len, threshold))
+                .collect(),
+        }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.quants.len()
+    }
+
+    /// Quantize chunk `i`'s gradient slice, carrying that chunk's residual.
+    pub fn quantize_chunk(&mut self, i: usize, grad: &[f32]) -> QuantGrad {
+        self.quants[i].quantize(grad)
+    }
+}
+
 impl QuantGrad {
     /// Dequantize into a dense f32 vector (server side).
     pub fn dequantize(&self) -> Vec<f32> {
@@ -184,6 +216,30 @@ mod tests {
         let g = vec![0.7f32; 1 << 16];
         let c = q.quantize(&g);
         assert!(c.ratio() > 15.0, "{}", c.ratio());
+    }
+
+    /// Per-chunk error feedback segments concatenate to exactly the
+    /// whole-model quantizer's output, round after round.
+    #[test]
+    fn chunked_quantizer_matches_whole_model() {
+        let lens = [5usize, 4, 3];
+        let total: usize = lens.iter().sum();
+        let mut whole = Quantizer::new(total, 0.4);
+        let mut chunked = ChunkQuantizer::new(&lens, 0.4);
+        assert_eq!(chunked.n_chunks(), 3);
+        for round in 0..6 {
+            let g: Vec<f32> = (0..total)
+                .map(|i| ((i + round) as f32 * 0.37).sin() * 0.6)
+                .collect();
+            let want = whole.quantize(&g).dequantize();
+            let mut got = Vec::with_capacity(total);
+            let mut off = 0;
+            for (i, &len) in lens.iter().enumerate() {
+                got.extend(chunked.quantize_chunk(i, &g[off..off + len]).dequantize());
+                off += len;
+            }
+            assert_eq!(want, got, "round {round}");
+        }
     }
 
     #[test]

@@ -231,7 +231,7 @@ impl PHubServer {
         n_workers: usize,
     ) -> JobId {
         assert_eq!(init_params.len(), table.total_elems);
-        assert!(n_workers >= 1 && n_workers <= 64);
+        assert!((1..=super::aggregation::MAX_WORKERS).contains(&n_workers));
         let job = self.next_job.fetch_add(1, Ordering::SeqCst) as JobId;
         let table = Arc::new(table);
 
@@ -341,6 +341,52 @@ impl WorkerHandle {
         &self.table
     }
 
+    pub fn n_chunks(&self) -> usize {
+        self.table.chunks.len()
+    }
+
+    /// Element range `[lo, hi)` of chunk `i` in the flat model.
+    pub fn chunk_range(&self, i: usize) -> (usize, usize) {
+        let c = &self.table.chunks[i];
+        (c.offset, c.offset + c.len)
+    }
+
+    /// Route one chunk's gradient straight to its pinned core (the
+    /// streaming half of `push_pull`: the TCP leader calls this per
+    /// incoming `PushChunk` frame so aggregation starts when the *first*
+    /// chunk lands instead of after the whole gradient arrives).
+    ///
+    /// `data` holds exactly this chunk's elements. With `pull` set, the
+    /// core sends this worker a [`Reply`] once the chunk's round
+    /// completes; collect it with [`WorkerHandle::recv_reply`].
+    pub fn push_chunk(&mut self, chunk: u32, data: Arc<[f32]>, pull: bool) {
+        let ci = chunk as usize;
+        assert!(ci < self.table.chunks.len(), "chunk id out of range");
+        let len = self.table.chunks[ci].len;
+        assert_eq!(data.len(), len, "chunk length mismatch");
+        self.server.cores[self.core_of[ci]]
+            .send(CoreMsg::Push {
+                job: self.job,
+                chunk,
+                worker: self.worker,
+                data,
+                range: (0, len),
+                pull,
+            })
+            .expect("core thread gone");
+    }
+
+    /// Block for the next per-chunk reply (one arrives for every chunk
+    /// pushed with `pull == true` once its round completes).
+    pub fn recv_reply(&mut self) -> Reply {
+        self.rx.recv().expect("server dropped")
+    }
+
+    /// Non-blocking variant of [`WorkerHandle::recv_reply`].
+    pub fn try_recv_reply(&mut self) -> Option<Reply> {
+        self.rx.try_recv().ok()
+    }
+
     /// Fused push+pull (the paper's `PHub::PushPull`): push this worker's
     /// gradient, wait for all workers' pushes to aggregate, and return the
     /// updated model. Saves a round trip over separate push-then-pull.
@@ -412,6 +458,7 @@ impl WorkerHandle {
 }
 
 #[cfg(test)]
+#[allow(clippy::useless_vec)]
 mod tests {
     use super::*;
     use crate::coordinator::optimizer::{NesterovSgd, Sgd};
@@ -532,6 +579,58 @@ mod tests {
         h.push(&vec![2.0; 8]);
         let m = h.pull();
         assert!(m.iter().all(|&x| (x + 2.0).abs() < 1e-6), "{m:?}");
+        PHubServer::shutdown(server);
+    }
+
+    /// Pushing chunk-by-chunk (in any order) through the streaming API
+    /// produces the same bits as the monolithic `push_pull`.
+    #[test]
+    fn chunk_streaming_matches_push_pull() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let n = 40usize;
+        let init: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let opt = || Arc::new(NesterovSgd { lr: 0.2, momentum: 0.9 });
+        let ja = server.init_job(table(n, 16), &init, opt(), 2);
+        let jb = server.init_job(table(n, 16), &init, opt(), 2);
+        let grad = |w: usize| -> Vec<f32> {
+            (0..n).map(|i| w as f32 + i as f32 * 0.1).collect()
+        };
+
+        // Job A: monolithic push_pull.
+        let mut ha: Vec<_> = (0..2).map(|w| server.worker(ja, w)).collect();
+        let (a0, a1) = ha.split_at_mut(1);
+        let ma = std::thread::scope(|s| {
+            let t = s.spawn(|| a1[0].push_pull(&grad(1)));
+            let m = a0[0].push_pull(&grad(0));
+            t.join().unwrap();
+            m
+        });
+
+        // Job B: per-chunk pushes in *reverse* order, replies in any order.
+        let mut hb: Vec<_> = (0..2).map(|w| server.worker(jb, w)).collect();
+        let stream = |h: &mut WorkerHandle, g: &[f32]| -> Vec<f32> {
+            let n_chunks = h.n_chunks();
+            for i in (0..n_chunks).rev() {
+                let (lo, hi) = h.chunk_range(i);
+                h.push_chunk(i as u32, g[lo..hi].into(), true);
+            }
+            let mut model = vec![0.0f32; h.model_len()];
+            for _ in 0..n_chunks {
+                let r = h.recv_reply();
+                let (lo, hi) = h.chunk_range(r.chunk as usize);
+                model[lo..hi].copy_from_slice(&r.data);
+            }
+            model
+        };
+        let (b0, b1) = hb.split_at_mut(1);
+        let mb = std::thread::scope(|s| {
+            let t = s.spawn(|| stream(&mut b1[0], &grad(1)));
+            let m = stream(&mut b0[0], &grad(0));
+            t.join().unwrap();
+            m
+        });
+
+        assert_eq!(ma, mb, "streamed and monolithic paths must agree bitwise");
         PHubServer::shutdown(server);
     }
 

@@ -17,19 +17,40 @@ use super::optimizer::Optimizer;
 use super::server::{JobId, PHubServer, WorkerHandle};
 
 /// Errors from the service control plane.
-#[derive(Debug, thiserror::Error, PartialEq)]
+///
+/// (Hand-implemented `Display`/`Error`: the offline environment has no
+/// `thiserror`, and the derive was the crate's only proc-macro dependency.)
+#[derive(Debug, PartialEq)]
 pub enum ServiceError {
-    #[error("namespace {0:?} already exists")]
     NamespaceTaken(String),
-    #[error("unknown namespace {0:?}")]
     UnknownNamespace(String),
-    #[error("bad nonce for namespace {0:?}")]
     BadNonce(String),
-    #[error("service not initialized")]
     NotInitialized,
-    #[error("worker slot {0} already connected")]
     SlotTaken(usize),
+    /// Rejected at the control-plane edge so invalid parameters can never
+    /// reach an assert while a lock is held (see `transport.rs` for the
+    /// equivalent wire-level check).
+    InvalidSpec(String),
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::NamespaceTaken(ns) => write!(f, "namespace {ns:?} already exists"),
+            ServiceError::UnknownNamespace(ns) => write!(f, "unknown namespace {ns:?}"),
+            ServiceError::BadNonce(ns) => write!(f, "bad nonce for namespace {ns:?}"),
+            ServiceError::NotInitialized => write!(f, "service not initialized"),
+            ServiceError::SlotTaken(w) => write!(f, "worker slot {w} already connected"),
+            ServiceError::InvalidSpec(why) => write!(f, "invalid service spec: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Most workers a single job supports (see the u64 arrival bitmask in
+/// `aggregation.rs` — that module owns the authoritative constant).
+pub use super::aggregation::MAX_WORKERS;
 
 /// Handle returned by `CreateService`; the nonce is the job's credential.
 #[derive(Debug, Clone)]
@@ -72,6 +93,11 @@ impl ConnectionManager {
         namespace: &str,
         n_workers: usize,
     ) -> Result<ServiceHandle, ServiceError> {
+        if n_workers == 0 || n_workers > MAX_WORKERS {
+            return Err(ServiceError::InvalidSpec(format!(
+                "n_workers {n_workers} not in 1..={MAX_WORKERS}"
+            )));
+        }
         let mut svcs = self.services.lock().unwrap();
         if svcs.contains_key(namespace) {
             return Err(ServiceError::NamespaceTaken(namespace.to_string()));
@@ -107,6 +133,15 @@ impl ConnectionManager {
         init_params: &[f32],
         opt: Arc<dyn Optimizer>,
     ) -> Result<(), ServiceError> {
+        // Validate before touching state: `init_job` asserts on bad input,
+        // and a panic under `services` would poison the control plane.
+        if init_params.len() != table.total_elems {
+            return Err(ServiceError::InvalidSpec(format!(
+                "init_params length {} != model elems {}",
+                init_params.len(),
+                table.total_elems
+            )));
+        }
         let mut svcs = self.services.lock().unwrap();
         let st = svcs
             .get_mut(&handle.namespace)
@@ -136,6 +171,12 @@ impl ConnectionManager {
             return Err(ServiceError::BadNonce(handle.namespace.clone()));
         }
         let job = st.job.ok_or(ServiceError::NotInitialized)?;
+        if w >= st.connected.len() {
+            return Err(ServiceError::InvalidSpec(format!(
+                "worker slot {w} out of range for {}-worker service",
+                st.n_workers
+            )));
+        }
         if st.connected[w] {
             return Err(ServiceError::SlotTaken(w));
         }
@@ -165,6 +206,7 @@ impl ConnectionManager {
 }
 
 #[cfg(test)]
+#[allow(clippy::useless_vec)]
 mod tests {
     use super::*;
     use crate::coordinator::optimizer::Sgd;
@@ -226,6 +268,35 @@ mod tests {
         let a = cm.create_service("a", 1).unwrap();
         let b = cm.create_service("b", 1).unwrap();
         assert_ne!(a.nonce, b.nonce);
+    }
+
+    #[test]
+    fn invalid_specs_rejected_without_poisoning() {
+        let cm = setup();
+        // Worker counts outside 1..=64 never reach the u64-bitmask assert.
+        assert!(matches!(
+            cm.create_service("zero", 0),
+            Err(ServiceError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            cm.create_service("huge", MAX_WORKERS + 1),
+            Err(ServiceError::InvalidSpec(_))
+        ));
+        // Mismatched init params are an error, not an assert under the lock.
+        let h = cm.create_service("job", 1).unwrap();
+        assert!(matches!(
+            cm.init_service(&h, KeyTable::flat(32, 8), &vec![0.0; 16], Arc::new(Sgd { lr: 0.1 })),
+            Err(ServiceError::InvalidSpec(_))
+        ));
+        // Out-of-range slot is an error, not an index panic.
+        cm.init_service(&h, KeyTable::flat(32, 8), &vec![0.0; 32], Arc::new(Sgd { lr: 0.1 }))
+            .unwrap();
+        assert!(matches!(
+            cm.connect_service(&h, 5),
+            Err(ServiceError::InvalidSpec(_))
+        ));
+        // The control plane still works after every rejection.
+        assert_eq!(cm.connect_service(&h, 0).unwrap().model_len(), 32);
     }
 
     #[test]

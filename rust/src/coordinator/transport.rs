@@ -9,19 +9,57 @@
 //! TCP — the *architecture* (one connection per worker, chunk routing to
 //! pinned cores, fused aggregation+optimization, dense or 2-bit-compressed
 //! pushes) is the paper's.
+//!
+//! Two exchange patterns are spoken, negotiated per connection (see
+//! `wire.rs`):
+//!
+//! * **v1, chunk-streamed** (default): the worker writes one `PushChunk`
+//!   frame per chunk back-to-back; the leader's connection thread routes
+//!   each frame straight to the chunk's pinned core as it arrives and
+//!   returns `ModelChunk` frames as each chunk finishes aggregation +
+//!   optimization. Reception, aggregation, optimization, and transmission
+//!   of different chunks overlap, which is the whole point of the paper's
+//!   §3.2 data plane.
+//! * **v0, monolithic** (legacy, kept for one release): one whole-gradient
+//!   frame up, one whole-model frame back, fully serializing network and
+//!   compute.
+//!
+//! Robustness: the leader treats every byte off the wire as hostile. Job
+//! specs are validated *before* any lock is taken or any state allocated
+//! (a malformed `Hello` must never poison the shared jobs mutex), chunk
+//! frames are bounds-checked against the key table, duplicate chunk pushes
+//! are rejected at the edge (they would otherwise panic a shared core
+//! thread), and a disconnected worker's slot is released so a crashed
+//! worker can reconnect and resume its job.
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::chunk::KeyTable;
-use super::compress::{QuantGrad, Quantizer};
+use super::compress::{ChunkQuantizer, QuantGrad, Quantizer};
 use super::optimizer::NesterovSgd;
-use super::server::{JobId, PHubServer, ServerConfig};
+use super::server::{JobId, PHubServer, Reply, ServerConfig, WorkerHandle};
 use super::wire::{self, Frame, Op};
+
+/// Most workers one job admits (see the u64 arrival bitmask in
+/// `aggregation.rs`, which owns the authoritative constant).
+pub const MAX_WORKERS_PER_JOB: u32 = super::aggregation::MAX_WORKERS as u32;
+
+/// Largest model accepted from the wire: 2^28 elements (1 GiB of f32),
+/// sized so a legacy whole-model frame still fits under
+/// [`wire::MAX_FRAME_BYTES`] — the cap `read_frame` enforces on the
+/// attacker-controlled length prefix *before* any allocation.
+pub const MAX_MODEL_ELEMS: u64 = 1 << 28;
+
+/// Cap on jobs a leader will host over its lifetime (the TCP path has no
+/// job GC, so this is the bound on server state a client can mint with
+/// cheap `Hello`s — each admitted spec commits real model/optimizer
+/// memory on the cores).
+pub const MAX_JOBS: usize = 64;
 
 /// Job parameters carried in `Hello`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -34,7 +72,9 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    fn to_bytes(self) -> Vec<u8> {
+    /// Wire encoding (28 bytes; the protocol-version trailer is appended
+    /// separately by the rendezvous).
+    pub fn to_bytes(self) -> Vec<u8> {
         let mut out = Vec::with_capacity(28);
         out.extend_from_slice(&self.model_elems.to_le_bytes());
         out.extend_from_slice(&self.chunk_elems.to_le_bytes());
@@ -44,7 +84,7 @@ impl JobSpec {
         out
     }
 
-    fn from_bytes(b: &[u8]) -> Result<JobSpec> {
+    pub fn from_bytes(b: &[u8]) -> Result<JobSpec> {
         if b.len() < 28 {
             bail!("short Hello payload");
         }
@@ -56,12 +96,54 @@ impl JobSpec {
             momentum: f32::from_le_bytes(b[24..28].try_into().unwrap()),
         })
     }
+
+    /// Reject out-of-range specs. The leader calls this at the connection
+    /// edge, *before* taking the jobs lock: `init_job` and
+    /// `ChunkAggregator::new` assert on these conditions, and a panic
+    /// while holding the mutex would poison it and brick the leader for
+    /// every tenant.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=MAX_WORKERS_PER_JOB).contains(&self.n_workers),
+            "n_workers {} not in 1..={MAX_WORKERS_PER_JOB}",
+            self.n_workers
+        );
+        ensure!(self.model_elems > 0, "model_elems must be > 0");
+        ensure!(
+            self.model_elems <= MAX_MODEL_ELEMS,
+            "model_elems {} exceeds max {MAX_MODEL_ELEMS}",
+            self.model_elems
+        );
+        ensure!(self.chunk_elems > 0, "chunk_elems must be > 0");
+        ensure!(
+            self.chunk_elems <= self.model_elems,
+            "chunk_elems {} > model_elems {}",
+            self.chunk_elems,
+            self.model_elems
+        );
+        ensure!(
+            self.lr.is_finite() && self.momentum.is_finite(),
+            "non-finite hyperparameters"
+        );
+        Ok(())
+    }
+
+    fn key_table(&self) -> KeyTable {
+        KeyTable::flat(self.model_elems as usize, self.chunk_elems as usize)
+    }
 }
 
 struct JobEntry {
     job: JobId,
     spec: JobSpec,
+    /// Next never-used slot.
     next_slot: u32,
+    /// Slots whose connection ended; reusable by reconnecting workers.
+    free_slots: Vec<u32>,
+    /// Server handles of freed slots, keyed by slot, waiting for a
+    /// reconnect (the in-process server hands each worker handle out only
+    /// once, so the leader must keep it across connections).
+    parked: HashMap<u32, WorkerHandle>,
 }
 
 /// The TCP leader: accepts workers and serves exchanges.
@@ -110,6 +192,108 @@ impl TcpLeader {
     }
 }
 
+/// Admit one connection: create the job on first contact, allocate or
+/// reuse a worker slot, and hand back the server-side handle. All checks
+/// that can fail run either before this function (spec validation) or
+/// before any bookkeeping mutates, so the jobs mutex can never be
+/// poisoned and a rejected connection leaves no trace.
+///
+/// Job *creation* (gigabytes of model allocation + chunk fan-out to the
+/// cores for a max-size spec) deliberately happens with the jobs mutex
+/// released — one tenant's first `Hello` must not stall every other
+/// tenant's admission. Two racing creators are resolved by evicting the
+/// loser's freshly built job.
+fn admit(
+    server: &Arc<PHubServer>,
+    jobs: &Mutex<HashMap<u32, JobEntry>>,
+    wire_job: u32,
+    spec: JobSpec,
+) -> Result<(JobId, u32, WorkerHandle)> {
+    loop {
+        // Phase 1: admit into an existing entry under the lock.
+        {
+            let mut map = jobs.lock().unwrap();
+            if let Some(entry) = map.get_mut(&wire_job) {
+                return admit_into(server, entry, wire_job, spec);
+            }
+            if map.len() >= MAX_JOBS {
+                bail!("leader already hosts {MAX_JOBS} jobs");
+            }
+        }
+        // Phase 2: first contact — build the job outside the lock, then
+        // race to install it.
+        let init = vec![0.0f32; spec.model_elems as usize];
+        let job = server.init_job(
+            spec.key_table(),
+            &init,
+            Arc::new(NesterovSgd {
+                lr: spec.lr,
+                momentum: spec.momentum,
+            }),
+            spec.n_workers as usize,
+        );
+        drop(init);
+        {
+            let mut map = jobs.lock().unwrap();
+            // Re-check the cap: another creator may have filled the last
+            // seat while we were allocating outside the lock.
+            if map.len() >= MAX_JOBS && !map.contains_key(&wire_job) {
+                drop(map);
+                server.evict(job);
+                bail!("leader already hosts {MAX_JOBS} jobs");
+            }
+            match map.entry(wire_job) {
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    let entry = v.insert(JobEntry {
+                        job,
+                        spec,
+                        next_slot: 0,
+                        free_slots: Vec::new(),
+                        parked: HashMap::new(),
+                    });
+                    return admit_into(server, entry, wire_job, spec);
+                }
+                std::collections::hash_map::Entry::Occupied(_) => {}
+            }
+        }
+        // Lost the install race: discard our copy and retry phase 1
+        // against the winner's entry.
+        server.evict(job);
+    }
+}
+
+/// Slot allocation half of admission (entry exists, lock held).
+fn admit_into(
+    server: &Arc<PHubServer>,
+    entry: &mut JobEntry,
+    wire_job: u32,
+    spec: JobSpec,
+) -> Result<(JobId, u32, WorkerHandle)> {
+    if entry.spec != spec {
+        bail!("job {wire_job} spec mismatch");
+    }
+    // Oversubscription is checked against the job's authoritative spec
+    // (`entry.spec`, not the connecting worker's copy) and *before* the
+    // slot counter moves, so a rejected worker can't burn a slot.
+    let slot = if let Some(s) = entry.free_slots.pop() {
+        s
+    } else if entry.next_slot < entry.spec.n_workers {
+        let s = entry.next_slot;
+        entry.next_slot += 1;
+        s
+    } else {
+        bail!(
+            "job {wire_job} already has {} workers",
+            entry.spec.n_workers
+        );
+    };
+    let handle = match entry.parked.remove(&slot) {
+        Some(h) => h,
+        None => server.worker(entry.job, slot as usize),
+    };
+    Ok((entry.job, slot, handle))
+}
+
 /// Per-connection worker service loop.
 fn handle_worker(
     stream: TcpStream,
@@ -120,95 +304,223 @@ fn handle_worker(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
 
-    // Rendezvous.
+    // Rendezvous. Everything here is hostile until proven otherwise:
+    // validate the spec before touching any shared state.
     let hello = wire::read_frame(&mut reader)?;
     if hello.op != Op::Hello {
         bail!("expected Hello, got {:?}", hello.op);
     }
     let spec = JobSpec::from_bytes(&hello.payload)?;
-    let (job, slot) = {
-        let mut map = jobs.lock().unwrap();
-        let entry = map.entry(hello.job).or_insert_with(|| {
-            let table = KeyTable::flat(spec.model_elems as usize, spec.chunk_elems as usize);
-            let job = server.init_job(
-                table,
-                &vec![0.0; spec.model_elems as usize],
-                Arc::new(NesterovSgd {
-                    lr: spec.lr,
-                    momentum: spec.momentum,
-                }),
-                spec.n_workers as usize,
-            );
-            JobEntry {
-                job,
-                spec,
-                next_slot: 0,
-            }
-        });
-        if entry.spec != spec {
-            bail!("job {} spec mismatch", hello.job);
-        }
-        let slot = entry.next_slot;
-        entry.next_slot += 1;
-        if slot >= spec.n_workers {
-            bail!("job {} already has {} workers", hello.job, spec.n_workers);
-        }
-        (entry.job, slot)
-    };
-    let mut handle = server.worker(job, slot as usize);
-    wire::write_frame(
-        &mut writer,
-        &Frame {
-            op: Op::Welcome,
-            job: hello.job,
-            worker: slot,
-            payload: slot.to_le_bytes().to_vec(),
-        },
-    )?;
+    spec.validate()
+        .with_context(|| format!("job {} rejected", hello.job))?;
+    let proto = wire::proto_version_at(&hello.payload, 28).min(wire::PROTO_MAX);
 
-    // Exchange loop. Each connection thread blocks in push_pull — the
-    // chunk fan-out/fan-in runs on the core threads, so workers on other
-    // connections proceed concurrently (one service thread per worker,
-    // like one QP per worker-interface pair).
+    let (job, slot, mut handle) = admit(&server, &jobs, hello.job, spec)?;
+    // A crashed predecessor on this slot may have left already-broadcast
+    // replies in the handle's queue; drop them so rounds line up.
+    while handle.try_recv_reply().is_some() {}
+
+    // From here on every exit path must reach the parking block below: an
+    // early `?` between admission and parking would burn the slot forever
+    // (e.g. a Welcome write failing on an already-closed socket).
+    // `clean` tracks whether the connection ended *between* rounds.
+    let mut clean = true;
+    let res = (|| -> Result<()> {
+        let mut payload = slot.to_le_bytes().to_vec();
+        wire::push_proto_version(&mut payload, proto);
+        wire::write_frame(
+            &mut writer,
+            &Frame {
+                op: Op::Welcome,
+                job: hello.job,
+                worker: slot,
+                payload,
+            },
+        )?;
+        // Exchange loop. The chunk fan-out/fan-in runs on the core
+        // threads, so workers on other connections proceed concurrently
+        // (one service thread per worker, like one QP per
+        // worker-interface pair).
+        if proto >= wire::PROTO_CHUNK_STREAMED {
+            serve_streamed(&mut reader, &mut writer, &mut handle, hello.job, slot, &mut clean)
+        } else {
+            serve_monolithic(&mut reader, &mut writer, &mut handle, hello.job, slot)
+        }
+    })();
+
+    // Connection over (orderly Bye, disconnect, or protocol violation):
+    // if it ended between rounds, release the slot and park the server
+    // handle so a reconnecting worker can take the seat instead of the
+    // job sticking at N-1/N. A connection that died *mid-round* is NOT
+    // recycled: its chunks are already absorbed into the open round, and
+    // a successor re-pushing them would panic the shared core threads
+    // (the round cannot be rolled back — that job wedges, as before this
+    // fix, but other jobs are unaffected and the mutex stays healthy).
+    // Clean parking also guarantees a parked handle has zero in-flight
+    // replies, so a successor's `outstanding` accounting starts at truth.
+    if clean {
+        let mut map = jobs.lock().unwrap();
+        if let Some(entry) = map.get_mut(&hello.job) {
+            if entry.job == job {
+                entry.free_slots.push(slot);
+                entry.parked.insert(slot, handle);
+            }
+        }
+    }
+    res
+}
+
+/// v0: whole-model frames, one reply per push (legacy, kept one release).
+fn serve_monolithic<R: Read, W: Write>(
+    reader: &mut R,
+    writer: &mut W,
+    handle: &mut WorkerHandle,
+    wire_job: u32,
+    slot: u32,
+) -> Result<()> {
     loop {
-        let f = match wire::read_frame(&mut reader) {
+        let f = match wire::read_frame(reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // disconnect = Bye
+        };
+        let grad = match f.op {
+            Op::PushPull => wire::bytes_to_f32s(&f.payload)?,
+            Op::PushPullQuant => {
+                // Compressed push: dequantize at the server edge, then the
+                // normal dense tall-aggregation path (paper section 5).
+                QuantGrad::from_bytes(&f.payload)?.dequantize()
+            }
+            Op::Bye => return Ok(()),
+            other => bail!("unexpected opcode {other:?} in a monolithic (v0) session"),
+        };
+        ensure!(
+            grad.len() == handle.model_len(),
+            "gradient length {} != model {}",
+            grad.len(),
+            handle.model_len()
+        );
+        let model = handle.push_pull(&grad);
+        wire::write_frame(
+            writer,
+            &Frame {
+                op: Op::Model,
+                job: wire_job,
+                worker: slot,
+                payload: wire::f32s_to_bytes(&model),
+            },
+        )?;
+    }
+}
+
+/// v1: route each incoming chunk frame straight to its pinned core and
+/// return `ModelChunk` frames per chunk as rounds complete server-side.
+///
+/// `clean` is left `true` iff the loop exits between rounds (no chunks of
+/// an open round absorbed, no replies outstanding) — the caller only
+/// recycles the worker slot in that state.
+fn serve_streamed<R: Read, W: Write>(
+    reader: &mut R,
+    writer: &mut W,
+    handle: &mut WorkerHandle,
+    wire_job: u32,
+    slot: u32,
+    clean: &mut bool,
+) -> Result<()> {
+    let n_chunks = handle.n_chunks();
+    // Per-round receive state for THIS worker's pushes.
+    let mut seen = vec![false; n_chunks];
+    let mut pushed = 0usize;
+    // Replies owed to this worker for pulls issued this round.
+    let mut outstanding = 0usize;
+    // ModelChunk frames for chunks that finished while later pushes were
+    // still arriving. They are encoded immediately but written only once
+    // the push phase ends: writing into a worker that is still sending
+    // could deadlock both sides on full socket buffers.
+    let mut ready: Vec<u8> = Vec::new();
+    loop {
+        let f = match wire::read_frame(reader) {
             Ok(f) => f,
             Err(_) => return Ok(()), // disconnect = Bye
         };
         match f.op {
-            Op::PushPull => {
-                let grad = wire::bytes_to_f32s(&f.payload)?;
-                let model = handle.push_pull(&grad);
-                wire::write_frame(
-                    &mut writer,
-                    &Frame {
-                        op: Op::Model,
-                        job: f.job,
-                        worker: slot,
-                        payload: wire::f32s_to_bytes(&model),
-                    },
-                )?;
-            }
-            Op::PushPullQuant => {
-                // Compressed push: dequantize at the server edge, then the
-                // normal dense tall-aggregation path (paper section 5).
-                let q = QuantGrad::from_bytes(&f.payload)?;
-                let grad = q.dequantize();
-                let model = handle.push_pull(&grad);
-                wire::write_frame(
-                    &mut writer,
-                    &Frame {
-                        op: Op::Model,
-                        job: f.job,
-                        worker: slot,
-                        payload: wire::f32s_to_bytes(&model),
-                    },
-                )?;
+            Op::PushChunk | Op::PushChunkQuant => {
+                let (chunk, off, bytes) = wire::decode_chunk_payload(&f.payload)?;
+                let ci = chunk as usize;
+                ensure!(ci < n_chunks, "chunk id {ci} out of range ({n_chunks} chunks)");
+                let (lo, hi) = handle.chunk_range(ci);
+                ensure!(
+                    off as usize == lo,
+                    "chunk {ci} offset {off} != expected {lo}"
+                );
+                // A duplicate would panic the chunk's (shared) core thread;
+                // reject it here so it only costs this connection.
+                ensure!(!seen[ci], "duplicate chunk {ci} in one round");
+                let data: Vec<f32> = if f.op == Op::PushChunk {
+                    wire::bytes_to_f32s(bytes)?
+                } else {
+                    QuantGrad::from_bytes(bytes)?.dequantize()
+                };
+                ensure!(
+                    data.len() == hi - lo,
+                    "chunk {ci} length {} != expected {}",
+                    data.len(),
+                    hi - lo
+                );
+                seen[ci] = true;
+                pushed += 1;
+                outstanding += 1;
+                *clean = false;
+                handle.push_chunk(chunk, data.into(), true);
+                // Collect chunks the cores already finished (earlier chunks
+                // of this round aggregating+optimizing under the incoming
+                // frames — the paper's overlap).
+                while let Some(r) = handle.try_recv_reply() {
+                    write_model_chunk(&mut ready, handle, wire_job, slot, &r)?;
+                    outstanding -= 1;
+                }
+                if pushed == n_chunks {
+                    // Round fully received; the worker is now draining its
+                    // socket. Send everything already finished, then stream
+                    // each remaining chunk the moment it completes.
+                    writer.write_all(&ready)?;
+                    writer.flush()?;
+                    ready.clear();
+                    while outstanding > 0 {
+                        let r = handle.recv_reply();
+                        write_model_chunk(writer, handle, wire_job, slot, &r)?;
+                        writer.flush()?;
+                        outstanding -= 1;
+                    }
+                    pushed = 0;
+                    seen.fill(false);
+                    *clean = true;
+                }
             }
             Op::Bye => return Ok(()),
-            other => bail!("unexpected opcode {:?}", other),
+            other => bail!("unexpected opcode {other:?} in a chunk-streamed (v1) session"),
         }
     }
+}
+
+/// Write one `ModelChunk` frame for `r` (no flush; `w` may be the socket
+/// writer or the in-memory `ready` queue).
+fn write_model_chunk<W: Write>(
+    w: &mut W,
+    handle: &WorkerHandle,
+    wire_job: u32,
+    slot: u32,
+    r: &Reply,
+) -> std::io::Result<()> {
+    let (lo, _) = handle.chunk_range(r.chunk as usize);
+    wire::write_chunk_frame_buffered(
+        w,
+        Op::ModelChunk,
+        wire_job,
+        slot,
+        r.chunk,
+        lo as u64,
+        &wire::f32s_to_bytes(&r.data),
+    )
 }
 
 /// A remote worker's connection to a [`TcpLeader`].
@@ -217,25 +529,47 @@ pub struct TcpWorker {
     writer: BufWriter<TcpStream>,
     job: u32,
     pub slot: u32,
-    /// Error-feedback state for the compressed path.
+    /// Negotiated protocol version (`wire::PROTO_*`).
+    proto: u32,
+    /// The worker's copy of the chunk layout (derived deterministically
+    /// from the spec, so it always matches the leader's).
+    table: KeyTable,
+    /// Error-feedback state for the compressed path (v0: whole model).
     quantizer: Option<Quantizer>,
+    /// Error-feedback state for the compressed path (v1: per chunk).
+    chunk_quant: Option<ChunkQuantizer>,
 }
 
 impl TcpWorker {
-    /// Connect and rendezvous. All workers of a job must present an
-    /// identical `spec` (the first one creates the job server-side).
+    /// Connect and rendezvous at the newest protocol both sides speak.
+    /// All workers of a job must present an identical `spec` (the first
+    /// one creates the job server-side).
     pub fn connect(addr: impl ToSocketAddrs, job: u32, spec: JobSpec) -> Result<TcpWorker> {
+        Self::connect_with_proto(addr, job, spec, wire::PROTO_MAX)
+    }
+
+    /// Connect proposing a specific protocol version (the leader may
+    /// answer with a lower one; see `wire.rs` on negotiation).
+    pub fn connect_with_proto(
+        addr: impl ToSocketAddrs,
+        job: u32,
+        spec: JobSpec,
+        proto: u32,
+    ) -> Result<TcpWorker> {
+        spec.validate()?;
         let stream = TcpStream::connect(addr).context("connect to leader")?;
         stream.set_nodelay(true).ok();
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = BufWriter::new(stream);
+        let mut payload = spec.to_bytes();
+        wire::push_proto_version(&mut payload, proto.min(wire::PROTO_MAX));
         wire::write_frame(
             &mut writer,
             &Frame {
                 op: Op::Hello,
                 job,
                 worker: 0,
-                payload: spec.to_bytes(),
+                payload,
             },
         )?;
         let welcome = wire::read_frame(&mut reader)?;
@@ -247,21 +581,107 @@ impl TcpWorker {
             writer,
             job,
             slot: welcome.worker,
+            proto: wire::proto_version_at(&welcome.payload, 4).min(proto),
+            table: spec.key_table(),
             quantizer: None,
+            chunk_quant: None,
         })
+    }
+
+    /// The protocol version negotiated with the leader.
+    pub fn proto(&self) -> u32 {
+        self.proto
     }
 
     /// Dense fused push+pull.
     pub fn push_pull(&mut self, grad: &[f32]) -> Result<Vec<f32>> {
-        wire::write_frame(
-            &mut self.writer,
-            &Frame {
-                op: Op::PushPull,
-                job: self.job,
-                worker: self.slot,
-                payload: wire::f32s_to_bytes(grad),
-            },
-        )?;
+        ensure!(
+            grad.len() == self.table.total_elems,
+            "gradient length {} != model {}",
+            grad.len(),
+            self.table.total_elems
+        );
+        if self.proto >= wire::PROTO_CHUNK_STREAMED {
+            // Streamed: all chunk frames go out back-to-back (single
+            // flush), so server-side aggregation of the first chunk runs
+            // under the transmission of the rest.
+            for (i, c) in self.table.chunks.iter().enumerate() {
+                wire::write_chunk_frame_buffered(
+                    &mut self.writer,
+                    Op::PushChunk,
+                    self.job,
+                    self.slot,
+                    i as u32,
+                    c.offset as u64,
+                    &wire::f32s_to_bytes(&grad[c.offset..c.offset + c.len]),
+                )?;
+            }
+            self.writer.flush()?;
+            self.read_model_chunks()
+        } else {
+            wire::write_frame(
+                &mut self.writer,
+                &Frame {
+                    op: Op::PushPull,
+                    job: self.job,
+                    worker: self.slot,
+                    payload: wire::f32s_to_bytes(grad),
+                },
+            )?;
+            self.read_model_monolithic()
+        }
+    }
+
+    /// 2-bit compressed push+pull with error feedback (~16x less gradient
+    /// traffic on the wire). On the streamed protocol each chunk is an
+    /// independent `QuantGrad` segment with its own residual.
+    pub fn push_pull_quant(&mut self, grad: &[f32], threshold: f32) -> Result<Vec<f32>> {
+        ensure!(
+            grad.len() == self.table.total_elems,
+            "gradient length {} != model {}",
+            grad.len(),
+            self.table.total_elems
+        );
+        if self.proto >= wire::PROTO_CHUNK_STREAMED {
+            if self.chunk_quant.is_none() {
+                let lens: Vec<usize> = self.table.chunks.iter().map(|c| c.len).collect();
+                self.chunk_quant = Some(ChunkQuantizer::new(&lens, threshold));
+            }
+            let cq = self.chunk_quant.as_mut().unwrap();
+            for (i, c) in self.table.chunks.iter().enumerate() {
+                let q = cq.quantize_chunk(i, &grad[c.offset..c.offset + c.len]);
+                wire::write_chunk_frame_buffered(
+                    &mut self.writer,
+                    Op::PushChunkQuant,
+                    self.job,
+                    self.slot,
+                    i as u32,
+                    c.offset as u64,
+                    &q.to_bytes(),
+                )?;
+            }
+            self.writer.flush()?;
+            self.read_model_chunks()
+        } else {
+            let q = self
+                .quantizer
+                .get_or_insert_with(|| Quantizer::new(grad.len(), threshold));
+            let compressed = q.quantize(grad);
+            wire::write_frame(
+                &mut self.writer,
+                &Frame {
+                    op: Op::PushPullQuant,
+                    job: self.job,
+                    worker: self.slot,
+                    payload: compressed.to_bytes(),
+                },
+            )?;
+            self.read_model_monolithic()
+        }
+    }
+
+    /// v0 reply: one whole-model frame.
+    fn read_model_monolithic(&mut self) -> Result<Vec<f32>> {
         let reply = wire::read_frame(&mut self.reader)?;
         if reply.op != Op::Model {
             bail!("expected Model, got {:?}", reply.op);
@@ -269,27 +689,33 @@ impl TcpWorker {
         Ok(wire::bytes_to_f32s(&reply.payload)?)
     }
 
-    /// 2-bit compressed push+pull with error feedback (~16x less gradient
-    /// traffic on the wire).
-    pub fn push_pull_quant(&mut self, grad: &[f32], threshold: f32) -> Result<Vec<f32>> {
-        let q = self
-            .quantizer
-            .get_or_insert_with(|| Quantizer::new(grad.len(), threshold));
-        let compressed = q.quantize(grad);
-        wire::write_frame(
-            &mut self.writer,
-            &Frame {
-                op: Op::PushPullQuant,
-                job: self.job,
-                worker: self.slot,
-                payload: compressed.to_bytes(),
-            },
-        )?;
-        let reply = wire::read_frame(&mut self.reader)?;
-        if reply.op != Op::Model {
-            bail!("expected Model, got {:?}", reply.op);
+    /// v1 reply: one `ModelChunk` frame per chunk, in completion order.
+    fn read_model_chunks(&mut self) -> Result<Vec<f32>> {
+        let n_chunks = self.table.chunks.len();
+        let mut model = vec![0.0f32; self.table.total_elems];
+        let mut seen = vec![false; n_chunks];
+        for _ in 0..n_chunks {
+            let f = wire::read_frame(&mut self.reader)?;
+            if f.op != Op::ModelChunk {
+                bail!("expected ModelChunk, got {:?}", f.op);
+            }
+            let (chunk, off, bytes) = wire::decode_chunk_payload(&f.payload)?;
+            let ci = chunk as usize;
+            ensure!(ci < n_chunks, "model chunk id {ci} out of range");
+            let c = self.table.chunks[ci];
+            ensure!(off as usize == c.offset, "model chunk {ci} offset mismatch");
+            ensure!(!seen[ci], "duplicate model chunk {ci}");
+            let data = wire::bytes_to_f32s(bytes)?;
+            ensure!(
+                data.len() == c.len,
+                "model chunk {ci} length {} != {}",
+                data.len(),
+                c.len
+            );
+            model[c.offset..c.offset + c.len].copy_from_slice(&data);
+            seen[ci] = true;
         }
-        Ok(wire::bytes_to_f32s(&reply.payload)?)
+        Ok(model)
     }
 
     /// Orderly shutdown.
@@ -307,6 +733,7 @@ impl TcpWorker {
 }
 
 #[cfg(test)]
+#[allow(clippy::useless_vec)]
 mod tests {
     use super::*;
 
@@ -320,10 +747,51 @@ mod tests {
         }
     }
 
+    /// Send a raw Hello and wait for the leader to close the connection —
+    /// proof the frame was fully processed (and rejected) before we return.
+    fn raw_hello_expect_drop(addr: std::net::SocketAddr, job: u32, payload: Vec<u8>) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        wire::write_frame(
+            &mut w,
+            &Frame {
+                op: Op::Hello,
+                job,
+                worker: 0,
+                payload,
+            },
+        )
+        .unwrap();
+        let mut buf = [0u8; 64];
+        loop {
+            match stream.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+
     #[test]
     fn spec_roundtrip() {
         let s = spec(4096, 3);
         assert_eq!(JobSpec::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(spec(4096, 3).validate().is_ok());
+        assert!(spec(4096, 0).validate().is_err());
+        assert!(spec(4096, MAX_WORKERS_PER_JOB + 1).validate().is_err());
+        assert!(spec(0, 1).validate().is_err());
+        assert!(spec(MAX_MODEL_ELEMS + 1, 1).validate().is_err());
+        let mut s = spec(4096, 1);
+        s.chunk_elems = 0;
+        assert!(s.validate().is_err());
+        s.chunk_elems = 8192; // > model_elems
+        assert!(s.validate().is_err());
+        s = spec(4096, 1);
+        s.lr = f32::NAN;
+        assert!(s.validate().is_err());
     }
 
     #[test]
@@ -336,6 +804,7 @@ mod tests {
             .map(|w| {
                 std::thread::spawn(move || {
                     let mut worker = TcpWorker::connect(addr, 1, s).unwrap();
+                    assert_eq!(worker.proto(), wire::PROTO_CHUNK_STREAMED);
                     let mut model = vec![0.0f32; n];
                     for round in 0..3 {
                         let grad: Vec<f32> =
@@ -362,6 +831,26 @@ mod tests {
         for (a, b) in models[0].iter().zip(&p) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn legacy_monolithic_protocol_still_served() {
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+        let addr = leader.local_addr();
+        let n = 192usize;
+        let mut w = TcpWorker::connect_with_proto(
+            addr,
+            5,
+            spec(n as u64, 1),
+            wire::PROTO_MONOLITHIC,
+        )
+        .unwrap();
+        assert_eq!(w.proto(), wire::PROTO_MONOLITHIC);
+        let m = w.push_pull(&vec![2.0; n]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        let m = w.push_pull_quant(&vec![0.6; n], 0.5).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.25).abs() < 1e-6), "{:?}", &m[..2]);
+        w.bye();
     }
 
     #[test]
@@ -400,49 +889,218 @@ mod tests {
     }
 
     #[test]
-    fn leader_survives_abrupt_disconnect() {
-        // Failure injection: a worker vanishes without Bye; the leader
-        // must keep serving other jobs.
+    fn leader_survives_abrupt_disconnect_and_releases_the_slot() {
+        // Failure injection: a worker vanishes without Bye. The leader
+        // must keep serving other jobs AND release the dead worker's slot
+        // so the job can still reach N/N after a reconnect.
         let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
         let addr = leader.local_addr();
         {
             let w = TcpWorker::connect(addr, 20, spec(64, 2)).unwrap();
-            drop(w); // TCP reset, no Bye, job 20 now stuck at 1/2 workers
+            drop(w); // TCP reset, no Bye; job 20 momentarily at 1/2 workers
         }
         // A fresh single-worker job on the same leader still works.
         let mut w2 = TcpWorker::connect(addr, 21, spec(64, 1)).unwrap();
         let m = w2.push_pull(&vec![4.0; 64]).unwrap();
         assert!(m.iter().all(|&x| (x + 2.0).abs() < 1e-6));
         w2.bye();
+        // The crashed worker's slot frees once the leader observes the
+        // disconnect; admitting two live workers must eventually succeed
+        // (pre-fix, job 20 stayed stuck at 1/2 forever).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let a = TcpWorker::connect(addr, 20, spec(64, 2));
+            let b = TcpWorker::connect(addr, 20, spec(64, 2));
+            match (a, b) {
+                (Ok(mut a), Ok(mut b)) => {
+                    let ja = std::thread::spawn(move || {
+                        let m = a.push_pull(&vec![1.0; 64]).unwrap();
+                        a.bye();
+                        m
+                    });
+                    let mb = b.push_pull(&vec![3.0; 64]).unwrap();
+                    b.bye();
+                    let ma = ja.join().unwrap();
+                    assert_eq!(ma, mb, "rejoined workers agree");
+                    // p -= 0.5 * mean(1, 3) = -1.
+                    assert!(ma.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+                    break;
+                }
+                _ => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "slot never released after disconnect"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+            }
+        }
     }
 
     #[test]
     fn malformed_payload_drops_connection_not_leader() {
-        use super::super::wire::{self, Frame, Op};
-        use std::io::BufWriter;
-        use std::net::TcpStream;
         let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
         let addr = leader.local_addr();
         // Raw connection sending a garbage Hello payload.
-        {
-            let stream = TcpStream::connect(addr).unwrap();
-            let mut w = BufWriter::new(stream);
-            wire::write_frame(
-                &mut w,
-                &Frame {
-                    op: Op::Hello,
-                    job: 30,
-                    worker: 0,
-                    payload: vec![1, 2, 3], // too short for a JobSpec
-                },
-            )
-            .unwrap();
-        }
+        raw_hello_expect_drop(addr, 30, vec![1, 2, 3]); // too short for a JobSpec
         // Leader still serves correct clients afterwards.
         let mut ok = TcpWorker::connect(addr, 31, spec(32, 1)).unwrap();
         let m = ok.push_pull(&vec![2.0; 32]).unwrap();
         assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
         ok.bye();
+    }
+
+    /// Regression for the poisoned-lock DoS: a `Hello` whose spec fails
+    /// the asserts deep inside `init_job`/`ChunkAggregator::new` used to
+    /// panic *inside* `or_insert_with` while holding the jobs mutex,
+    /// poisoning it and killing the leader for every subsequent tenant.
+    #[test]
+    fn hostile_hello_never_poisons_the_jobs_mutex() {
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let addr = leader.local_addr();
+        let hostile = [
+            spec(64, 0),                      // zero workers
+            spec(64, MAX_WORKERS_PER_JOB + 1), // bitmask overflow
+            spec(0, 1),                       // empty model
+            {
+                let mut s = spec(64, 1);
+                s.chunk_elems = 0; // division-by-zero chunking
+                s
+            },
+            {
+                let mut s = spec(64, 1);
+                s.chunk_elems = 128; // chunk bigger than the model
+                s
+            },
+        ];
+        for (i, s) in hostile.iter().enumerate() {
+            raw_hello_expect_drop(addr, 300 + i as u32, s.to_bytes());
+        }
+        // The leader must still admit and serve brand-new jobs.
+        let mut ok = TcpWorker::connect(addr, 399, spec(32, 1)).unwrap();
+        let m = ok.push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        ok.bye();
+    }
+
+    /// A duplicate chunk push in one round must cost the hostile
+    /// connection, not a shared core thread (which would assert and take
+    /// down aggregation for every job on that core).
+    #[test]
+    fn duplicate_chunk_frame_drops_connection_not_cores() {
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let addr = leader.local_addr();
+        {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut w = BufWriter::new(stream);
+            // 2-worker job so the round cannot complete and reset `seen`.
+            let s = spec(128, 2);
+            let mut payload = s.to_bytes();
+            wire::push_proto_version(&mut payload, wire::PROTO_CHUNK_STREAMED);
+            wire::write_frame(
+                &mut w,
+                &Frame {
+                    op: Op::Hello,
+                    job: 40,
+                    worker: 0,
+                    payload,
+                },
+            )
+            .unwrap();
+            assert_eq!(wire::read_frame(&mut r).unwrap().op, Op::Welcome);
+            let chunk0 = wire::encode_chunk_payload(0, 0, &wire::f32s_to_bytes(&[1.0; 64]));
+            for _ in 0..2 {
+                wire::write_frame(
+                    &mut w,
+                    &Frame {
+                        op: Op::PushChunk,
+                        job: 40,
+                        worker: 0,
+                        payload: chunk0.clone(),
+                    },
+                )
+                .unwrap();
+            }
+            // Leader must drop us (read yields EOF/err, not a ModelChunk).
+            assert!(wire::read_frame(&mut r).is_err());
+        }
+        // With a single core, any core-thread casualty would break this.
+        let mut ok = TcpWorker::connect(addr, 41, spec(32, 1)).unwrap();
+        let m = ok.push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        ok.bye();
+    }
+
+    /// A worker that dies *mid-round* (after some chunks were absorbed
+    /// into an open round) must NOT get its slot recycled: a successor
+    /// re-pushing those chunks would panic the shared core threads. The
+    /// job wedges (documented limitation), but cores, mutex, and every
+    /// other job stay healthy.
+    #[test]
+    fn mid_round_disconnect_does_not_recycle_the_slot() {
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let addr = leader.local_addr();
+        {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut w = BufWriter::new(stream);
+            let s = spec(128, 2); // 2 chunks, 2 workers: round stays open
+            let mut payload = s.to_bytes();
+            wire::push_proto_version(&mut payload, wire::PROTO_CHUNK_STREAMED);
+            wire::write_frame(
+                &mut w,
+                &Frame {
+                    op: Op::Hello,
+                    job: 70,
+                    worker: 0,
+                    payload,
+                },
+            )
+            .unwrap();
+            assert_eq!(wire::read_frame(&mut r).unwrap().op, Op::Welcome);
+            wire::write_frame(
+                &mut w,
+                &Frame {
+                    op: Op::PushChunk,
+                    job: 70,
+                    worker: 0,
+                    payload: wire::encode_chunk_payload(0, 0, &wire::f32s_to_bytes(&[1.0; 64])),
+                },
+            )
+            .unwrap();
+            // Drop mid-round: chunk 0 is absorbed, the round is open.
+        }
+        // Slot 0 is consumed forever: exactly one more admission fits.
+        let _a = TcpWorker::connect(addr, 70, spec(128, 2)).unwrap();
+        match TcpWorker::connect(addr, 70, spec(128, 2)) {
+            Err(_) => {}
+            Ok(mut b) => assert!(b.push_pull(&vec![0.0; 128]).is_err()),
+        }
+        // Cores survived (single core: any casualty would break this).
+        let mut ok = TcpWorker::connect(addr, 71, spec(32, 1)).unwrap();
+        let m = ok.push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        ok.bye();
+    }
+
+    /// The leader hosts at most [`MAX_JOBS`] jobs: cheap `Hello`s with
+    /// fresh job ids cannot mint unbounded server state.
+    #[test]
+    fn job_cap_rejects_excess_jobs() {
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let addr = leader.local_addr();
+        let mut keep = Vec::new();
+        for j in 0..MAX_JOBS as u32 {
+            keep.push(TcpWorker::connect(addr, 1000 + j, spec(32, 1)).unwrap());
+        }
+        match TcpWorker::connect(addr, 2000, spec(32, 1)) {
+            Err(_) => {}
+            Ok(mut w) => assert!(w.push_pull(&vec![0.0; 32]).is_err()),
+        }
+        // Jobs admitted before the cap still train.
+        let m = keep[0].push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
     }
 
     #[test]

@@ -3,30 +3,101 @@
 //! Length-prefixed binary frames over TCP (the environment has no RDMA;
 //! `transport.rs` notes what the verbs path would change). Framing keeps
 //! PHub's "minimal metadata" spirit (section 3.2.1): a fixed 16-byte
-//! header — opcode, job, chunk, worker — plus the raw little-endian f32
-//! payload; no per-message serialization framework.
+//! header plus a raw little-endian payload; no per-message serialization
+//! framework.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  len     u32 LE — byte length of everything after this field
+//!      4     1  op      opcode (see [`Op`])
+//!      5     3  pad     zero
+//!      8     4  job     u32 LE — wire job id (tenant namespace)
+//!     12     4  worker  u32 LE — worker slot (0 before admission)
+//!     16   len-12       payload (opcode-specific)
+//! ```
+//!
+//! # Opcodes
+//!
+//! | op | name            | dir | payload |
+//! |----|-----------------|-----|---------|
+//! | 1  | `Hello`         | W→L | [`super::transport::JobSpec`] (28 B) + optional proposed protocol version u32 |
+//! | 2  | `Welcome`       | L→W | worker slot u32 + optional accepted protocol version u32 |
+//! | 3  | `PushPull`      | W→L | whole-model gradient, raw LE f32s (v0 only) |
+//! | 4  | `Model`         | L→W | whole updated model, raw LE f32s (v0 only) |
+//! | 5  | `PushPullQuant` | W→L | whole-model 2-bit `QuantGrad` (v0 only) |
+//! | 6  | `Bye`           | any | empty — orderly shutdown |
+//! | 7  | `PushChunk`     | W→L | chunk header + chunk gradient LE f32s (v1) |
+//! | 8  | `ModelChunk`    | L→W | chunk header + chunk params LE f32s (v1) |
+//! | 9  | `PushChunkQuant`| W→L | chunk header + per-chunk `QuantGrad` (v1) |
+//!
+//! Chunk-carrying payloads start with a 12-byte chunk header
+//! ([`CHUNK_PREFIX_BYTES`]): `[chunk u32 LE][elem offset u64 LE]`, where
+//! `offset` is the chunk's first element in the flat model. The receiver
+//! validates both against its own key table, so a corrupted or hostile
+//! frame can only kill its own connection.
+//!
+//! # Version negotiation
+//!
+//! The protocol version rides on the rendezvous, so one exchange pattern
+//! never blocks another release's workers:
+//!
+//! * v0 [`PROTO_MONOLITHIC`] — one whole-gradient frame up, one
+//!   whole-model frame back per round. Network and compute fully
+//!   serialize; kept for one release for old workers.
+//! * v1 [`PROTO_CHUNK_STREAMED`] — the paper's data plane shape (§3.2):
+//!   the worker writes all `PushChunk` frames back-to-back; the leader
+//!   routes each one to its pinned core as it arrives and returns
+//!   `ModelChunk` frames per chunk as aggregation+optimization complete,
+//!   so a fast chunk's parameters are on the wire while later chunks are
+//!   still aggregating.
+//!
+//! A worker appends its highest supported version to `Hello`; the leader
+//! answers with `min(leader_max, proposed)` in `Welcome`. Absent trailer
+//! bytes (an old peer) mean v0 on both sides: old leaders ignore trailing
+//! `Hello` bytes and send a 4-byte `Welcome`, old workers ignore trailing
+//! `Welcome` bytes.
 
 use std::io::{Read, Write};
+
+/// Legacy protocol: whole-model frames per round.
+pub const PROTO_MONOLITHIC: u32 = 0;
+/// Chunk-streamed protocol: per-chunk frames, overlap-friendly.
+pub const PROTO_CHUNK_STREAMED: u32 = 1;
+/// Highest version this build speaks.
+pub const PROTO_MAX: u32 = PROTO_CHUNK_STREAMED;
 
 /// Message opcodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Op {
     /// Worker -> server: create+join a job (payload: model elems u64,
-    /// chunk elems u64, n_workers u32, lr f32, momentum f32).
+    /// chunk elems u64, n_workers u32, lr f32, momentum f32, then an
+    /// optional proposed protocol version u32).
     Hello = 1,
-    /// Server -> worker: admission (payload: worker slot u32).
+    /// Server -> worker: admission (payload: worker slot u32, then an
+    /// optional accepted protocol version u32).
     Welcome = 2,
     /// Worker -> server: gradient push for the whole flat model
-    /// (payload: f32s); implies pull.
+    /// (payload: f32s); implies pull. v0 only.
     PushPull = 3,
-    /// Server -> worker: updated model (payload: f32s).
+    /// Server -> worker: updated model (payload: f32s). v0 only.
     Model = 4,
     /// Worker -> server: 2-bit compressed push (payload: packed levels +
-    /// f32 threshold; see `compress.rs`).
+    /// f32 threshold; see `compress.rs`). v0 only.
     PushPullQuant = 5,
     /// Either direction: orderly shutdown.
     Bye = 6,
+    /// Worker -> server: gradient push for one chunk (payload: chunk
+    /// header + f32s); implies pull of that chunk. v1.
+    PushChunk = 7,
+    /// Server -> worker: updated params for one chunk (payload: chunk
+    /// header + f32s). v1.
+    ModelChunk = 8,
+    /// Worker -> server: 2-bit compressed push for one chunk (payload:
+    /// chunk header + `QuantGrad` bytes). v1.
+    PushChunkQuant = 9,
 }
 
 impl Op {
@@ -38,6 +109,9 @@ impl Op {
             4 => Op::Model,
             5 => Op::PushPullQuant,
             6 => Op::Bye,
+            7 => Op::PushChunk,
+            8 => Op::ModelChunk,
+            9 => Op::PushChunkQuant,
             _ => return None,
         })
     }
@@ -55,6 +129,15 @@ pub struct Frame {
 /// Header layout: [len u32][op u8][pad u8;3][job u32][worker u32].
 pub const HEADER_BYTES: usize = 16;
 
+/// Byte length of the chunk header prefixing chunk-carrying payloads.
+pub const CHUNK_PREFIX_BYTES: usize = 12;
+
+/// Largest frame body [`read_frame`] accepts: a whole-model v0 frame at
+/// the transport's `MAX_MODEL_ELEMS` (2^28 f32s = 1 GiB) plus slack. The
+/// length prefix is attacker-controlled, so it must never be trusted for
+/// allocation beyond this bound.
+pub const MAX_FRAME_BYTES: usize = (1 << 30) + 1024;
+
 /// Encode a frame into a byte vector (length prefix covers the rest).
 pub fn encode(f: &Frame) -> Vec<u8> {
     let body_len = HEADER_BYTES - 4 + f.payload.len();
@@ -68,13 +151,19 @@ pub fn encode(f: &Frame) -> Vec<u8> {
     out
 }
 
-/// Write a frame to a stream.
+/// Write a frame to a stream and flush it.
 pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
     w.write_all(&encode(f))?;
     w.flush()
 }
 
 /// Read one frame from a stream.
+///
+/// Hostile-input contract: the length prefix is bounded by
+/// [`MAX_FRAME_BYTES`], and the body buffer grows with bytes actually
+/// received rather than being pre-allocated from the prefix — a peer that
+/// *claims* a huge frame without sending it cannot make the receiver
+/// allocate it (no allocation-bomb `Hello`s).
 pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4)?;
@@ -85,8 +174,20 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
             "frame too short",
         ));
     }
-    let mut body = vec![0u8; body_len];
-    r.read_exact(&mut body)?;
+    if body_len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame exceeds MAX_FRAME_BYTES",
+        ));
+    }
+    let mut body = Vec::with_capacity(body_len.min(1 << 20));
+    let got = r.take(body_len as u64).read_to_end(&mut body)?;
+    if got != body_len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "truncated frame",
+        ));
+    }
     let op = Op::from_u8(body[0]).ok_or_else(|| {
         std::io::Error::new(std::io::ErrorKind::InvalidData, "bad opcode")
     })?;
@@ -98,6 +199,65 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
         worker,
         payload: body[12..].to_vec(),
     })
+}
+
+/// Write a chunk-carrying frame straight to a (buffered) writer — header,
+/// chunk prefix, and raw payload bytes with no intermediate payload/frame
+/// buffers. This is the streamed hot path: one call per chunk per round,
+/// so the copies [`encode`] would make are worth skipping. No flush.
+pub fn write_chunk_frame_buffered(
+    w: &mut impl Write,
+    op: Op,
+    job: u32,
+    worker: u32,
+    chunk: u32,
+    elem_offset: u64,
+    bytes: &[u8],
+) -> std::io::Result<()> {
+    let body_len = HEADER_BYTES - 4 + CHUNK_PREFIX_BYTES + bytes.len();
+    w.write_all(&(body_len as u32).to_le_bytes())?;
+    w.write_all(&[op as u8, 0, 0, 0])?;
+    w.write_all(&job.to_le_bytes())?;
+    w.write_all(&worker.to_le_bytes())?;
+    w.write_all(&chunk.to_le_bytes())?;
+    w.write_all(&elem_offset.to_le_bytes())?;
+    w.write_all(bytes)
+}
+
+/// Build a chunk-carrying payload: `[chunk u32][elem offset u64][bytes]`.
+pub fn encode_chunk_payload(chunk: u32, elem_offset: u64, bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(CHUNK_PREFIX_BYTES + bytes.len());
+    out.extend_from_slice(&chunk.to_le_bytes());
+    out.extend_from_slice(&elem_offset.to_le_bytes());
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Split a chunk-carrying payload into `(chunk, elem offset, bytes)`.
+pub fn decode_chunk_payload(payload: &[u8]) -> std::io::Result<(u32, u64, &[u8])> {
+    if payload.len() < CHUNK_PREFIX_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "chunk payload too short",
+        ));
+    }
+    let chunk = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    let offset = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+    Ok((chunk, offset, &payload[CHUNK_PREFIX_BYTES..]))
+}
+
+/// Append the proposed/accepted protocol version to a rendezvous payload.
+pub fn push_proto_version(payload: &mut Vec<u8>, proto: u32) {
+    payload.extend_from_slice(&proto.to_le_bytes());
+}
+
+/// Read the protocol version trailer at `at..at+4`, or [`PROTO_MONOLITHIC`]
+/// if the peer predates version negotiation and sent a shorter payload.
+pub fn proto_version_at(payload: &[u8], at: usize) -> u32 {
+    match payload.get(at..at + 4) {
+        Some(b) => u32::from_le_bytes(b.try_into().unwrap()),
+        None => PROTO_MONOLITHIC,
+    }
 }
 
 /// f32 slice -> raw little-endian bytes.
@@ -192,5 +352,70 @@ mod tests {
             payload: vec![0; 10],
         };
         assert_eq!(encode(&f).len(), 4 + (HEADER_BYTES - 4) + 10);
+    }
+
+    #[test]
+    fn chunk_opcodes_roundtrip() {
+        for op in [Op::PushChunk, Op::ModelChunk, Op::PushChunkQuant] {
+            assert_eq!(Op::from_u8(op as u8), Some(op));
+        }
+        let f = Frame {
+            op: Op::PushChunk,
+            job: 3,
+            worker: 1,
+            payload: encode_chunk_payload(5, 320, &f32s_to_bytes(&[1.0, 2.0])),
+        };
+        let mut cursor = std::io::Cursor::new(encode(&f));
+        let g = read_frame(&mut cursor).unwrap();
+        let (chunk, off, bytes) = decode_chunk_payload(&g.payload).unwrap();
+        assert_eq!((chunk, off), (5, 320));
+        assert_eq!(bytes_to_f32s(bytes).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn short_chunk_payload_rejected() {
+        assert!(decode_chunk_payload(&[0u8; 11]).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocation() {
+        // A peer claiming a huge frame must be rejected from the prefix
+        // alone (no multi-GiB allocation, no waiting for the bytes).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(bytes);
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn buffered_chunk_writer_matches_encode() {
+        let payload = encode_chunk_payload(5, 320, &f32s_to_bytes(&[1.0, 2.0]));
+        let via_encode = encode(&Frame {
+            op: Op::PushChunk,
+            job: 3,
+            worker: 1,
+            payload,
+        });
+        let mut via_writer = Vec::new();
+        write_chunk_frame_buffered(
+            &mut via_writer,
+            Op::PushChunk,
+            3,
+            1,
+            5,
+            320,
+            &f32s_to_bytes(&[1.0, 2.0]),
+        )
+        .unwrap();
+        assert_eq!(via_encode, via_writer, "two encoders, one wire format");
+    }
+
+    #[test]
+    fn proto_version_trailer() {
+        let mut p = vec![0u8; 28]; // a 28-byte JobSpec from an old worker
+        assert_eq!(proto_version_at(&p, 28), PROTO_MONOLITHIC);
+        push_proto_version(&mut p, PROTO_CHUNK_STREAMED);
+        assert_eq!(proto_version_at(&p, 28), PROTO_CHUNK_STREAMED);
     }
 }

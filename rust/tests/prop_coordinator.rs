@@ -7,7 +7,7 @@ use phub::coordinator::aggregation::ChunkAggregator;
 use phub::coordinator::chunk::KeyTable;
 use phub::coordinator::mapping;
 use phub::coordinator::optimizer::{NesterovSgd, Optimizer, Sgd};
-use phub::coordinator::server::{PHubServer, ServerConfig};
+use phub::coordinator::server::{PHubServer, ServerConfig, WorkerHandle};
 use phub::prop::{check, Rng};
 
 /// Chunking invariant: for any key layout and chunk size, chunks tile the
@@ -327,6 +327,80 @@ fn prop_jsonlite_fuzz_no_panic() {
             .collect();
         let s = String::from_utf8_lossy(&bytes);
         let _ = phub::jsonlite::parse(&s); // must not panic
+        Ok(())
+    });
+}
+
+/// The streaming chunk API (`push_chunk`/`recv_reply`, which the v1 wire
+/// protocol rides on) produces bit-identical models to the monolithic
+/// `push_pull` for any model/chunk geometry, core count, and per-worker
+/// chunk submission order.
+#[test]
+fn prop_chunk_streaming_matches_monolithic() {
+    check("chunk streaming == monolithic", 25, |rng: &mut Rng| {
+        let n = rng.usize_in(4, 600);
+        let chunk = rng.usize_in(1, n + 1);
+        let cores = rng.usize_in(1, 5);
+        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let init = rng.vec_f32(n, 1.0);
+        let opt = NesterovSgd {
+            lr: 0.1,
+            momentum: 0.9,
+        };
+        let ja = server.init_job(KeyTable::flat(n, chunk), &init, Arc::new(opt.clone()), 2);
+        let jb = server.init_job(KeyTable::flat(n, chunk), &init, Arc::new(opt.clone()), 2);
+        let g0 = rng.vec_f32(n, 1.0);
+        let g1 = rng.vec_f32(n, 1.0);
+
+        // Job A: monolithic push_pull, two concurrent workers.
+        let mut ha: Vec<_> = (0..2).map(|w| server.worker(ja, w)).collect();
+        let (a0, a1) = ha.split_at_mut(1);
+        let ma = std::thread::scope(|s| {
+            let t = s.spawn(|| a1[0].push_pull(&g1));
+            let m = a0[0].push_pull(&g0);
+            let _ = t.join().unwrap();
+            m
+        });
+
+        // Job B: per-chunk pushes in independent shuffled orders.
+        let mut hb: Vec<_> = (0..2).map(|w| server.worker(jb, w)).collect();
+        let n_chunks = hb[0].n_chunks();
+        let shuffled = |rng: &mut Rng| {
+            let mut order: Vec<usize> = (0..n_chunks).collect();
+            for i in (1..n_chunks).rev() {
+                order.swap(i, rng.usize_in(0, i + 1));
+            }
+            order
+        };
+        let order0 = shuffled(rng);
+        let order1 = shuffled(rng);
+        let stream = |h: &mut WorkerHandle, g: &[f32], order: &[usize]| -> Vec<f32> {
+            for &i in order {
+                let (lo, hi) = h.chunk_range(i);
+                h.push_chunk(i as u32, g[lo..hi].into(), true);
+            }
+            let mut model = vec![0.0f32; h.model_len()];
+            for _ in 0..order.len() {
+                let r = h.recv_reply();
+                let (lo, hi) = h.chunk_range(r.chunk as usize);
+                model[lo..hi].copy_from_slice(&r.data);
+            }
+            model
+        };
+        let (b0, b1) = hb.split_at_mut(1);
+        let mb = std::thread::scope(|s| {
+            let t = s.spawn(|| stream(&mut b1[0], &g1, &order1));
+            let m = stream(&mut b0[0], &g0, &order0);
+            let _ = t.join().unwrap();
+            m
+        });
+
+        PHubServer::shutdown(server);
+        if ma != mb {
+            return Err(format!(
+                "streamed != monolithic (n={n} chunk={chunk} cores={cores})"
+            ));
+        }
         Ok(())
     });
 }

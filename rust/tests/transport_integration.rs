@@ -1,0 +1,205 @@
+//! Integration tests over the TCP transport: the protocol-version matrix
+//! (v0 monolithic vs v1 chunk-streamed), bit-identity of the two exchange
+//! patterns, and leader robustness under hostile clients. The in-module
+//! tests in `transport.rs` cover single-feature behavior; these exercise
+//! cross-version and multi-worker combinations end-to-end.
+
+#![allow(clippy::useless_vec)]
+
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::wire;
+
+fn spec(model: u64, chunk: u64, workers: u32) -> JobSpec {
+    JobSpec {
+        model_elems: model,
+        chunk_elems: chunk,
+        n_workers: workers,
+        lr: 0.25,
+        momentum: 0.9,
+    }
+}
+
+/// Deterministic per-worker, per-round gradient.
+fn grad(n: usize, w: usize, round: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (w as f32 - 0.5) * 0.75 + (round as f32 + 1.0) * 0.125 + i as f32 * 0.01)
+        .collect()
+}
+
+/// Run `rounds` synchronous rounds with 2 workers on `proto`, returning
+/// the final model (asserting both workers agree bitwise).
+fn run_two_workers(
+    addr: std::net::SocketAddr,
+    job: u32,
+    s: JobSpec,
+    proto: u32,
+    rounds: usize,
+    quant: Option<f32>,
+) -> Vec<f32> {
+    let n = s.model_elems as usize;
+    let joins: Vec<_> = (0..2usize)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut worker = TcpWorker::connect_with_proto(addr, job, s, proto).unwrap();
+                assert_eq!(worker.proto(), proto.min(wire::PROTO_MAX));
+                let mut model = Vec::new();
+                for r in 0..rounds {
+                    let g = grad(n, w, r);
+                    model = match quant {
+                        Some(t) => worker.push_pull_quant(&g, t).unwrap(),
+                        None => worker.push_pull(&g).unwrap(),
+                    };
+                }
+                worker.bye();
+                model
+            })
+        })
+        .collect();
+    let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(models[0], models[1], "synchronous workers agree bitwise");
+    models.into_iter().next().unwrap()
+}
+
+/// The tentpole's correctness bar: the chunk-streamed protocol produces
+/// bit-identical models to the monolithic one, dense and compressed, on a
+/// ragged multi-chunk layout.
+#[test]
+fn streamed_and_monolithic_protocols_bit_identical() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 3 }).unwrap();
+    let addr = leader.local_addr();
+    // 300 elems at chunk 64 -> 5 chunks including a ragged 44-elem tail.
+    let s = spec(300, 64, 2);
+    let dense_v0 = run_two_workers(addr, 100, s, wire::PROTO_MONOLITHIC, 4, None);
+    let dense_v1 = run_two_workers(addr, 101, s, wire::PROTO_CHUNK_STREAMED, 4, None);
+    assert_eq!(dense_v0, dense_v1, "dense: v0 and v1 must agree bitwise");
+
+    // Compressed path: per-chunk error feedback is elementwise identical
+    // to whole-model error feedback, so trajectories match bitwise too.
+    let quant_v0 = run_two_workers(addr, 102, s, wire::PROTO_MONOLITHIC, 6, Some(0.05));
+    let quant_v1 = run_two_workers(addr, 103, s, wire::PROTO_CHUNK_STREAMED, 6, Some(0.05));
+    assert_eq!(quant_v0, quant_v1, "quant: v0 and v1 must agree bitwise");
+}
+
+/// Old and new workers can share one job: the leader serves each
+/// connection at its own negotiated version against the same aggregation
+/// engine (the one-release compatibility window).
+#[test]
+fn mixed_version_workers_share_a_job() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let addr = leader.local_addr();
+    let n = 256usize;
+    let s = spec(n as u64, 64, 2);
+    let joins: Vec<_> = [wire::PROTO_CHUNK_STREAMED, wire::PROTO_MONOLITHIC]
+        .into_iter()
+        .enumerate()
+        .map(|(w, proto)| {
+            std::thread::spawn(move || {
+                let mut worker = TcpWorker::connect_with_proto(addr, 7, s, proto).unwrap();
+                assert_eq!(worker.proto(), proto);
+                let mut model = Vec::new();
+                for r in 0..3 {
+                    model = worker.push_pull(&grad(n, w, r)).unwrap();
+                }
+                worker.bye();
+                model
+            })
+        })
+        .collect();
+    let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(models[0], models[1], "mixed-version workers agree bitwise");
+}
+
+/// Streamed exchange at a worker count and chunk count big enough to get
+/// real interleaving, checked against exact analytic SGD (worker grads are
+/// small integers, so the f32 aggregation is exact in any order).
+#[test]
+fn four_workers_many_chunks_streamed_exact() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 }).unwrap();
+    let addr = leader.local_addr();
+    let n = 1000usize;
+    let rounds = 3usize;
+    let s = JobSpec {
+        model_elems: n as u64,
+        chunk_elems: 64, // 16 chunks
+        n_workers: 4,
+        lr: 0.5,
+        momentum: 0.0,
+    };
+    let joins: Vec<_> = (0..4usize)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut worker = TcpWorker::connect(addr, 9, s).unwrap();
+                let g = vec![w as f32; n]; // mean = 1.5 exactly
+                let mut model = Vec::new();
+                for _ in 0..rounds {
+                    model = worker.push_pull(&g).unwrap();
+                }
+                worker.bye();
+                model
+            })
+        })
+        .collect();
+    for j in joins {
+        let model = j.join().unwrap();
+        let expect = -0.5 * 1.5 * rounds as f32;
+        for x in model {
+            assert!((x - expect).abs() < 1e-6, "{x} vs {expect}");
+        }
+    }
+}
+
+/// A hostile `Hello` (spec that would trip the server's asserts) must be
+/// rejected at the edge while other tenants keep training — the
+/// poisoned-lock DoS regression, exercised across a live job.
+#[test]
+fn hostile_hello_while_other_tenants_train() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let addr = leader.local_addr();
+    // A healthy tenant in the middle of its run.
+    let s_ok = spec(128, 64, 1);
+    let mut w = TcpWorker::connect(addr, 50, s_ok).unwrap();
+    let m1 = w.push_pull(&vec![1.0; 128]).unwrap();
+
+    // Hostile rendezvous attempts, raw on the socket (the client-side
+    // validation in `TcpWorker::connect` would refuse to send these).
+    use phub::coordinator::wire::{Frame, Op};
+    use std::io::{BufWriter, Read};
+    use std::net::TcpStream;
+    for bad in [
+        spec(128, 64, 0),   // zero workers
+        spec(128, 64, 100), // > 64 workers
+        spec(0, 64, 1),     // empty model
+        spec(64, 0, 1),     // empty chunks
+        spec(64, 128, 1),   // chunk > model
+    ] {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut wr = BufWriter::new(stream.try_clone().unwrap());
+        wire::write_frame(
+            &mut wr,
+            &Frame {
+                op: Op::Hello,
+                job: 60,
+                worker: 0,
+                payload: bad.to_bytes(),
+            },
+        )
+        .unwrap();
+        // Leader must close the connection (rejection fully processed).
+        let mut buf = [0u8; 64];
+        loop {
+            match stream.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+
+    // The in-flight tenant continues, and new tenants are admitted.
+    let m2 = w.push_pull(&vec![1.0; 128]).unwrap();
+    assert!(m2[0] < m1[0], "training still progressing");
+    w.bye();
+    let mut w2 = TcpWorker::connect(addr, 61, spec(32, 32, 1)).unwrap();
+    assert_eq!(w2.push_pull(&vec![0.0; 32]).unwrap().len(), 32);
+    w2.bye();
+}
