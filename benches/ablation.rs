@@ -65,7 +65,11 @@ fn ablations() -> Vec<Ablation> {
 fn main() {
     let t0 = std::time::Instant::now();
     println!("== Ablation: PHub design choices, 8 workers, 10 Gbps ==");
-    for (abbrev, gpu) in [("AN", Gpu::Gtx1080Ti), ("RN50", Gpu::Gtx1080Ti), ("RN18", Gpu::ZeroCompute)] {
+    for (abbrev, gpu) in [
+        ("AN", Gpu::Gtx1080Ti),
+        ("RN50", Gpu::Gtx1080Ti),
+        ("RN18", Gpu::ZeroCompute),
+    ] {
         let d = Dnn::by_abbrev(abbrev).unwrap();
         let label = if matches!(gpu, Gpu::ZeroCompute) {
             format!("{abbrev} (ZeroCompute)")

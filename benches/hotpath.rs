@@ -91,9 +91,9 @@ fn tall_vs_wide() {
                             break;
                         }
                         for w in 0..workers {
-                            agg.absorb(w, &grads[w][off..off + chunk]);
+                            agg.absorb(w, &grads[w][off..off + chunk]).unwrap();
                         }
-                        let mean = agg.take_mean();
+                        let mean = agg.take_mean().unwrap();
                         opt.step(pc, sc, mean);
                     }
                 });
@@ -107,7 +107,10 @@ fn tall_vs_wide() {
     let dt_wide = bench(&format!("wide ({} threads, whole key)", threads), 3, || {
         wide::wide_exchange(&opt, &grad_refs, &mut params_w, &mut state_w, threads);
     });
-    println!("  -> tall/wide speedup: {:.1}x (paper: ~20x incl. overlap effects)", dt_wide / dt_tall);
+    println!(
+        "  -> tall/wide speedup: {:.1}x (paper: ~20x incl. overlap effects)",
+        dt_wide / dt_tall
+    );
 }
 
 /// Live server round latency vs core count.

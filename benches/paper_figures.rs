@@ -56,7 +56,8 @@ fn fig5_fig14() {
     );
     for abbrev in nets {
         let d = Dnn::by_abbrev(abbrev).unwrap();
-        let b = sim::breakdown::progressive(&mxnet_tcp(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+        let net = mxnet_tcp(NetConfig::infiniband_56g());
+        let b = sim::breakdown::progressive(&net, &d, Gpu::Gtx1080Ti);
         println!(
             "  {:<7} {:>8.1} {:>10.1} {:>7.1} {:>7.1} {:>7.1} {:>6.0}%",
             abbrev,

@@ -1,0 +1,156 @@
+//! Round-engine overhead microbench (run via `cargo bench --bench
+//! rollback`).
+//!
+//! The engine refactor added explicit `(epoch, round)` tags and
+//! `Result`-returning transitions to the per-chunk hot path. This bench
+//! measures what that costs at steady state: rounds/sec of the
+//! pre-refactor inner loop (raw `ChunkAggregator` absorb + mean + fused
+//! optimizer step, no tags, no job lookup) against the same rounds driven
+//! through `ShardEngine::push` with epoch tagging. Target: no measurable
+//! regression — the tag checks are two integer compares per chunk push
+//! against a memory-bandwidth-bound accumulate.
+//!
+//! Also reports the cost of the rollback transition itself (rewinding a
+//! partially aggregated round), which sits on the recovery path, not the
+//! hot path.
+//!
+//! Results feed EXPERIMENTS.md section Perf.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::coordinator::aggregation::ChunkAggregator;
+use phub::coordinator::engine::{RoundTag, ShardEngine};
+use phub::coordinator::optimizer::{NesterovSgd, Optimizer};
+use phub::prop::Rng;
+
+const CHUNK: usize = 8192;
+const N_CHUNKS: usize = 64;
+const WORKERS: usize = 8;
+const ROUNDS: usize = 40;
+
+/// Pre-refactor hot path: the raw absorb/mean/step loop a core ran before
+/// the engine existed.
+fn bench_raw(grads: &[Vec<f32>], params: &mut [f32], state: &mut [f32]) -> f64 {
+    let opt = NesterovSgd {
+        lr: 0.01,
+        momentum: 0.9,
+    };
+    let mut aggs: Vec<ChunkAggregator> = (0..N_CHUNKS)
+        .map(|_| ChunkAggregator::new(CHUNK, WORKERS))
+        .collect();
+    let t0 = Instant::now();
+    for _ in 0..ROUNDS {
+        for c in 0..N_CHUNKS {
+            let off = c * CHUNK;
+            for (w, g) in grads.iter().enumerate() {
+                let done = aggs[c].absorb(w, &g[off..off + CHUNK]).unwrap();
+                if done {
+                    let mean = aggs[c].take_mean().unwrap();
+                    opt.step(
+                        &mut params[off..off + CHUNK],
+                        &mut state[off..off + CHUNK],
+                        mean,
+                    );
+                }
+            }
+        }
+    }
+    ROUNDS as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The same rounds through the engine: job lookup, epoch/round tag checks,
+/// completion bookkeeping (pull masks off, so no reply traffic).
+fn bench_engine(grads: &[Vec<f32>], init: &[f32]) -> f64 {
+    let mut eng = ShardEngine::new();
+    let chunks: Vec<(u32, Vec<f32>)> = (0..N_CHUNKS)
+        .map(|c| (c as u32, init[c * CHUNK..(c + 1) * CHUNK].to_vec()))
+        .collect();
+    let (tx, _rx) = channel();
+    eng.init_job(
+        1,
+        chunks,
+        Arc::new(NesterovSgd {
+            lr: 0.01,
+            momentum: 0.9,
+        }),
+        WORKERS,
+        vec![tx; WORKERS],
+    );
+    let t0 = Instant::now();
+    for round in 0..ROUNDS as u64 {
+        let tag = RoundTag::new(0, round);
+        for c in 0..N_CHUNKS {
+            let off = c * CHUNK;
+            for (w, g) in grads.iter().enumerate() {
+                eng.push(1, c as u32, w as u32, &g[off..off + CHUNK], false, tag)
+                    .unwrap();
+            }
+        }
+    }
+    ROUNDS as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Recovery-path cost: rewind a half-pushed round across all chunks.
+fn bench_rollback(grads: &[Vec<f32>], init: &[f32]) -> f64 {
+    let mut eng = ShardEngine::new();
+    let chunks: Vec<(u32, Vec<f32>)> = (0..N_CHUNKS)
+        .map(|c| (c as u32, init[c * CHUNK..(c + 1) * CHUNK].to_vec()))
+        .collect();
+    let (tx, _rx) = channel();
+    eng.init_job(
+        2,
+        chunks,
+        Arc::new(NesterovSgd {
+            lr: 0.01,
+            momentum: 0.9,
+        }),
+        WORKERS,
+        vec![tx; WORKERS],
+    );
+    let iters = 200usize;
+    let t0 = Instant::now();
+    for i in 0..iters as u64 {
+        let tag = RoundTag::new(i as u32, 0);
+        // Half the workers push every chunk, then the round is rewound.
+        for c in 0..N_CHUNKS {
+            let off = c * CHUNK;
+            for (w, g) in grads.iter().enumerate().take(WORKERS / 2) {
+                eng.push(2, c as u32, w as u32, &g[off..off + CHUNK], false, tag)
+                    .unwrap();
+            }
+        }
+        eng.rollback(2, i as u32 + 1).unwrap();
+    }
+    iters as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let elems = CHUNK * N_CHUNKS;
+    println!(
+        "== rollback bench: {N_CHUNKS} x {CHUNK}-elem chunks ({} MB), {WORKERS} workers ==",
+        elems * 4 >> 20
+    );
+    let mut rng = Rng::new(7);
+    let grads: Vec<Vec<f32>> = (0..WORKERS).map(|_| rng.vec_f32(elems, 1.0)).collect();
+    let init = rng.vec_f32(elems, 1.0);
+
+    let mut params = init.clone();
+    let mut state = vec![0.0f32; elems];
+    // Warmup + measure, interleaved to share cache state fairly.
+    let _ = bench_raw(&grads, &mut params, &mut state);
+    let raw = bench_raw(&grads, &mut params, &mut state);
+    let _ = bench_engine(&grads, &init);
+    let engine = bench_engine(&grads, &init);
+    let rb = bench_rollback(&grads, &init);
+
+    println!("  raw absorb+opt loop (pre-refactor):  {raw:>8.2} rounds/s");
+    println!("  ShardEngine::push (epoch-tagged):    {engine:>8.2} rounds/s");
+    println!(
+        "  engine overhead:                     {:>+7.2}%",
+        (raw / engine - 1.0) * 100.0
+    );
+    println!("  half-round rollback + re-push:       {rb:>8.2} rollbacks/s");
+    println!("rollback bench OK");
+}

@@ -1,12 +1,14 @@
-//! Streamed vs monolithic TCP exchange (run via `cargo bench --bench
+//! Chunk-streamed exchange granularity (run via `cargo bench --bench
 //! wire_stream`).
 //!
-//! Measures synchronous round latency of the v1 chunk-streamed wire
-//! protocol against the legacy v0 whole-frame protocol on localhost TCP,
-//! across model sizes. The streamed path overlaps reception, aggregation,
-//! optimization, and transmission per chunk (paper §3.2), so multi-chunk
-//! models should round-trip no slower — and typically faster — than the
-//! monolithic path, which fully serializes network and compute.
+//! Measures synchronous round latency of the chunk-streamed wire protocol
+//! on localhost TCP across model sizes, comparing the paper's multi-chunk
+//! data plane against a single whole-model chunk — the shape the retired
+//! v0 monolithic protocol had, which fully serializes network and
+//! compute. Multi-chunk overlaps reception, aggregation, optimization,
+//! and transmission per chunk (paper §3.2), so multi-chunk models should
+//! round-trip no slower — and typically faster — than the single-chunk
+//! baseline.
 //!
 //! Results feed EXPERIMENTS.md section Perf.
 
@@ -14,22 +16,21 @@ use std::time::Instant;
 
 use phub::coordinator::server::ServerConfig;
 use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
-use phub::coordinator::wire;
 
 const CHUNK_ELEMS: usize = 8192;
 
 /// Mean seconds per synchronous round across `workers` concurrent workers.
-fn bench_proto(
+fn bench_chunking(
     addr: std::net::SocketAddr,
     job: u32,
     model: usize,
+    chunk_elems: usize,
     workers: u32,
     rounds: usize,
-    proto: u32,
 ) -> f64 {
     let spec = JobSpec {
         model_elems: model as u64,
-        chunk_elems: CHUNK_ELEMS.min(model) as u64,
+        chunk_elems: chunk_elems as u64,
         n_workers: workers,
         lr: 0.1,
         momentum: 0.9,
@@ -37,8 +38,7 @@ fn bench_proto(
     let joins: Vec<_> = (0..workers)
         .map(|w| {
             std::thread::spawn(move || {
-                let mut worker = TcpWorker::connect_with_proto(addr, job, spec, proto).unwrap();
-                assert_eq!(worker.proto(), proto);
+                let mut worker = TcpWorker::connect(addr, job, spec).unwrap();
                 let grad: Vec<f32> = (0..model)
                     .map(|i| ((i + w as usize) % 7) as f32 * 0.1)
                     .collect();
@@ -58,7 +58,7 @@ fn bench_proto(
 }
 
 fn main() {
-    println!("== wire_stream: chunk-streamed (v1) vs monolithic (v0) rounds ==");
+    println!("== wire_stream: multi-chunk streamed vs single-chunk (v0-shaped) rounds ==");
     let workers = 2u32;
     let rounds = 20usize;
     let mut job = 1u32;
@@ -67,12 +67,13 @@ fn main() {
         let chunks = model.div_ceil(CHUNK_ELEMS);
         let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 }).unwrap();
         let addr = leader.local_addr();
-        let mono = bench_proto(addr, job, model, workers, rounds, wire::PROTO_MONOLITHIC);
-        let streamed = bench_proto(addr, job + 1, model, workers, rounds, wire::PROTO_CHUNK_STREAMED);
+        let mono = bench_chunking(addr, job, model, model, workers, rounds);
+        let streamed =
+            bench_chunking(addr, job + 1, model, CHUNK_ELEMS.min(model), workers, rounds);
         job += 2;
         println!(
             "  {model_kb:>6} KB model ({chunks:>4} chunks, {workers} workers): \
-             monolithic {:>8.3} ms/round, streamed {:>8.3} ms/round ({:+5.1}%)",
+             single-chunk {:>8.3} ms/round, streamed {:>8.3} ms/round ({:+5.1}%)",
             mono * 1e3,
             streamed * 1e3,
             (streamed / mono - 1.0) * 100.0

@@ -1,23 +1,28 @@
 //! Distributed PHub over TCP: a leader process serving workers through the
-//! wire protocol, with dense and 2-bit-compressed exchange paths at both
-//! protocol versions (v1 chunk-streamed, v0 monolithic).
+//! chunk-streamed wire protocol, with dense and 2-bit-compressed exchange
+//! paths.
 //!
 //! Spawns the leader and N worker clients (threads here; the same code
 //! works across processes/machines — see `phub::coordinator::transport`),
-//! runs synchronous rounds for every (protocol x compression) combination,
+//! runs synchronous rounds for every (chunking x compression) combination,
 //! and reports wire bytes and round throughput for each. The streamed
 //! protocol is the paper's §3.2 data plane shape: chunk frames routed to
 //! pinned cores as they arrive, per-chunk model replies overlapping later
-//! chunks' aggregation. The compressed path demonstrates the section 5
-//! claim: PHub composes with gradient compression (~16x less push
-//! traffic) without touching the aggregation engine.
+//! chunks' aggregation — the single-chunk row shows what the retired v0
+//! monolithic protocol used to cost (one serialized frame each way). The
+//! compressed path demonstrates the section 5 claim: PHub composes with
+//! gradient compression (~16x less push traffic) without touching the
+//! round engine.
+//!
+//! (Wire protocol v0 — whole-model `PushPull`/`Model` frames — was retired
+//! this release; a v0 `Hello` is now rejected at rendezvous with a clear
+//! error. See `wire.rs`.)
 //!
 //! Run: `cargo run --release --example distributed_tcp -- [--workers 4]`
 
 use phub::cli::Args;
 use phub::coordinator::server::ServerConfig;
 use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
-use phub::coordinator::wire;
 
 fn main() -> anyhow::Result<()> {
     let a = Args::from_env();
@@ -33,13 +38,12 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut job = 0u32;
-    for (plabel, proto) in [
-        ("streamed v1", wire::PROTO_CHUNK_STREAMED),
-        ("monolithic v0", wire::PROTO_MONOLITHIC),
+    for (clabel, chunk_elems) in [
+        ("streamed 32KB chunks", 8192usize),
+        ("single chunk (v0-shaped)", model),
     ] {
         for (label, quant) in [("dense f32", false), ("2-bit compressed", true)] {
             job += 1;
-            let chunk_elems = 8192usize;
             let spec = JobSpec {
                 model_elems: model as u64,
                 chunk_elems: chunk_elems as u64,
@@ -47,30 +51,22 @@ fn main() -> anyhow::Result<()> {
                 lr: 0.1,
                 momentum: 0.9,
             };
-            // Exact per-round push bytes on the wire, per protocol: v0 is
-            // one frame (16 B header) for the whole model; v1 is one frame
-            // per chunk, each with the 12 B chunk prefix (and the 12 B
-            // QuantGrad header per segment on the compressed path).
+            // Exact per-round push bytes on the wire: one frame per chunk,
+            // each with the 16 B frame header and 16 B chunk prefix (and
+            // the 12 B QuantGrad header per segment when compressed).
             let chunk_lens: Vec<usize> = (0..model)
                 .step_by(chunk_elems)
                 .map(|o| chunk_elems.min(model - o))
                 .collect();
-            let round_bytes: usize = if proto == wire::PROTO_CHUNK_STREAMED {
-                chunk_lens
-                    .iter()
-                    .map(|&l| 16 + 12 + if quant { 12 + l.div_ceil(4) } else { l * 4 })
-                    .sum()
-            } else if quant {
-                16 + 12 + model.div_ceil(4)
-            } else {
-                16 + model * 4
-            };
+            let round_bytes: usize = chunk_lens
+                .iter()
+                .map(|&l| 16 + 16 + if quant { 12 + l.div_ceil(4) } else { l * 4 })
+                .sum();
             let t0 = std::time::Instant::now();
             let joins: Vec<_> = (0..workers)
                 .map(|w| {
                     std::thread::spawn(move || -> anyhow::Result<(Vec<f32>, usize)> {
-                        let mut worker = TcpWorker::connect_with_proto(addr, job, spec, proto)?;
-                        assert_eq!(worker.proto(), proto, "negotiation");
+                        let mut worker = TcpWorker::connect(addr, job, spec)?;
                         let grad: Vec<f32> = (0..model)
                             .map(|i| ((i + w as usize) % 13) as f32 * 0.01)
                             .collect();
@@ -102,7 +98,7 @@ fn main() -> anyhow::Result<()> {
                 "synchronous workers must agree"
             );
             println!(
-                "  {plabel:<14} {label:<18} {rounds} rounds in {dt:.2}s ({:.1} rounds/s), \
+                "  {clabel:<24} {label:<18} {rounds} rounds in {dt:.2}s ({:.1} rounds/s), \
                  push traffic {:.1} MB, model[0..2]={:?}",
                 rounds as f64 / dt,
                 push_bytes as f64 / 1e6,

@@ -44,5 +44,8 @@ fn main() {
             100.0 * rate * jobs as f64 / base
         );
     }
-    println!("\n(compare Figure 18: per-job efficiency stays within ~5% for\n compute-bound models; exchange-bound models degrade more)");
+    println!(
+        "\n(compare Figure 18: per-job efficiency stays within ~5% for\n \
+         compute-bound models; exchange-bound models degrade more)"
+    );
 }

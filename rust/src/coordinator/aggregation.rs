@@ -6,6 +6,14 @@
 //! first chunk, not the full key). When the last worker's copy lands, the
 //! buffer is scaled to a mean and handed to the optimizer *by the same
 //! thread on the same core* — no coordination with any other chunk.
+//!
+//! Protocol violations (a duplicate push, taking the mean early) are typed
+//! [`AggError`]s, not panics: the aggregator runs on *shared* core threads
+//! (see [`super::engine`]), and a hostile or buggy peer must only ever be
+//! able to kill its own connection, never a core. The inner loops keep
+//! `debug_assert!`s for the hot path instead of release-mode checks.
+
+use std::fmt;
 
 /// `acc += src`, the aggregation inner loop. Kept as a free function so
 /// benches can target it directly; the optimizer pass reuses it.
@@ -27,8 +35,45 @@ pub fn scale(v: &mut [f32], k: f32) {
 
 /// Most workers one aggregation round supports — the arrival bitmask is a
 /// u64. Single source of truth: the service and transport edges validate
-/// against this before anything reaches the assert below.
+/// against this before anything reaches the aggregator.
 pub const MAX_WORKERS: usize = 64;
+
+/// A round-protocol violation detected by the aggregator.
+///
+/// (Hand-implemented `Display`/`Error`: the offline environment has no
+/// `thiserror`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggError {
+    /// Worker index outside `0..n_workers`.
+    WorkerOutOfRange { worker: usize, n_workers: usize },
+    /// Gradient length does not match the chunk length.
+    LengthMismatch { got: usize, want: usize },
+    /// The same worker pushed twice in one round.
+    DuplicatePush { worker: usize },
+    /// `take_mean` before every worker's gradient arrived.
+    NotReady { arrived: usize, n_workers: usize },
+}
+
+impl fmt::Display for AggError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AggError::WorkerOutOfRange { worker, n_workers } => {
+                write!(f, "worker {worker} out of range (n_workers {n_workers})")
+            }
+            AggError::LengthMismatch { got, want } => {
+                write!(f, "chunk length mismatch: got {got}, want {want}")
+            }
+            AggError::DuplicatePush { worker } => {
+                write!(f, "duplicate push from worker {worker} in one round")
+            }
+            AggError::NotReady { arrived, n_workers } => {
+                write!(f, "take_mean with {arrived}/{n_workers} workers arrived")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AggError {}
 
 /// Streaming aggregation state for one chunk.
 #[derive(Debug, Clone)]
@@ -65,17 +110,30 @@ impl ChunkAggregator {
         self.seen.count_ones() as usize
     }
 
-    /// Absorb worker `w`'s gradient for this chunk. Returns `true` when all
-    /// workers have been absorbed (the chunk is ready to optimize).
+    /// Absorb worker `w`'s gradient for this chunk. Returns `Ok(true)` when
+    /// all workers have been absorbed (the chunk is ready to optimize).
     ///
-    /// Panics on a duplicate push from the same worker in one round — that
-    /// is a protocol violation upstream (the PS must see exactly one
-    /// gradient per worker per round).
-    pub fn absorb(&mut self, w: usize, grad: &[f32]) -> bool {
-        assert!(w < self.n_workers, "worker {w} out of range");
-        assert_eq!(grad.len(), self.acc.len(), "chunk length mismatch");
+    /// A duplicate push from the same worker in one round is a protocol
+    /// violation upstream (the PS must see exactly one gradient per worker
+    /// per round) and comes back as [`AggError::DuplicatePush`] — the
+    /// caller decides whose connection that costs.
+    pub fn absorb(&mut self, w: usize, grad: &[f32]) -> Result<bool, AggError> {
+        if w >= self.n_workers {
+            return Err(AggError::WorkerOutOfRange {
+                worker: w,
+                n_workers: self.n_workers,
+            });
+        }
+        if grad.len() != self.acc.len() {
+            return Err(AggError::LengthMismatch {
+                got: grad.len(),
+                want: self.acc.len(),
+            });
+        }
         let bit = 1u64 << w;
-        assert_eq!(self.seen & bit, 0, "duplicate push from worker {w}");
+        if self.seen & bit != 0 {
+            return Err(AggError::DuplicatePush { worker: w });
+        }
         if self.seen == 0 {
             // First arrival: copy instead of add (buffer may hold stale sums).
             self.acc.copy_from_slice(grad);
@@ -83,21 +141,32 @@ impl ChunkAggregator {
             add_assign(&mut self.acc, grad);
         }
         self.seen |= bit;
-        self.arrived() == self.n_workers
+        Ok(self.arrived() == self.n_workers)
     }
 
     /// Finish the round: scale the sum to a mean, reset arrival state, and
     /// expose the mean for the optimizer. The returned slice is valid until
     /// the next `absorb`.
-    pub fn take_mean(&mut self) -> &[f32] {
-        assert_eq!(
-            self.arrived(),
-            self.n_workers,
-            "take_mean before all workers arrived"
-        );
+    pub fn take_mean(&mut self) -> Result<&[f32], AggError> {
+        if self.arrived() != self.n_workers {
+            return Err(AggError::NotReady {
+                arrived: self.arrived(),
+                n_workers: self.n_workers,
+            });
+        }
         scale(&mut self.acc, 1.0 / self.n_workers as f32);
         self.seen = 0;
-        &self.acc
+        Ok(&self.acc)
+    }
+
+    /// Rewind the open round: forget every arrival recorded so far and
+    /// return the bitmask of workers whose gradients are being discarded.
+    ///
+    /// This is all a mid-round rollback needs — the accumulation buffer is
+    /// *not* cleared because the first `absorb` of a round copies instead
+    /// of adding, so stale sums can never leak into the replay.
+    pub fn rollback(&mut self) -> u64 {
+        std::mem::take(&mut self.seen)
     }
 }
 
@@ -108,46 +177,72 @@ mod tests {
     #[test]
     fn absorb_and_mean() {
         let mut a = ChunkAggregator::new(4, 3);
-        assert!(!a.absorb(0, &[3.0, 0.0, 3.0, 3.0]));
-        assert!(!a.absorb(2, &[3.0, 3.0, 0.0, 3.0]));
-        assert!(a.absorb(1, &[3.0, 3.0, 3.0, 0.0]));
-        let m = a.take_mean();
+        assert!(!a.absorb(0, &[3.0, 0.0, 3.0, 3.0]).unwrap());
+        assert!(!a.absorb(2, &[3.0, 3.0, 0.0, 3.0]).unwrap());
+        assert!(a.absorb(1, &[3.0, 3.0, 3.0, 0.0]).unwrap());
+        let m = a.take_mean().unwrap();
         assert_eq!(m, &[3.0, 2.0, 2.0, 2.0]);
     }
 
     #[test]
     fn rounds_reuse_buffer() {
         let mut a = ChunkAggregator::new(2, 2);
-        a.absorb(0, &[1.0, 1.0]);
-        a.absorb(1, &[3.0, 3.0]);
-        assert_eq!(a.take_mean(), &[2.0, 2.0]);
+        a.absorb(0, &[1.0, 1.0]).unwrap();
+        a.absorb(1, &[3.0, 3.0]).unwrap();
+        assert_eq!(a.take_mean().unwrap(), &[2.0, 2.0]);
         // Second round must not see residue from the first.
-        a.absorb(1, &[10.0, 10.0]);
-        a.absorb(0, &[20.0, 20.0]);
-        assert_eq!(a.take_mean(), &[15.0, 15.0]);
+        a.absorb(1, &[10.0, 10.0]).unwrap();
+        a.absorb(0, &[20.0, 20.0]).unwrap();
+        assert_eq!(a.take_mean().unwrap(), &[15.0, 15.0]);
     }
 
     #[test]
-    #[should_panic(expected = "duplicate push")]
-    fn duplicate_worker_panics() {
+    fn duplicate_worker_is_typed_error() {
         let mut a = ChunkAggregator::new(2, 2);
-        a.absorb(0, &[0.0, 0.0]);
-        a.absorb(0, &[0.0, 0.0]);
+        a.absorb(0, &[0.0, 0.0]).unwrap();
+        assert_eq!(
+            a.absorb(0, &[0.0, 0.0]),
+            Err(AggError::DuplicatePush { worker: 0 })
+        );
+        // The round is still usable after the rejected duplicate.
+        assert!(a.absorb(1, &[2.0, 2.0]).unwrap());
+        assert_eq!(a.take_mean().unwrap(), &[1.0, 1.0]);
     }
 
     #[test]
-    #[should_panic(expected = "before all workers")]
-    fn early_take_mean_panics() {
+    fn early_take_mean_is_typed_error() {
         let mut a = ChunkAggregator::new(2, 2);
-        a.absorb(0, &[0.0, 0.0]);
-        a.take_mean();
+        a.absorb(0, &[0.0, 0.0]).unwrap();
+        assert_eq!(
+            a.take_mean(),
+            Err(AggError::NotReady {
+                arrived: 1,
+                n_workers: 2
+            })
+        );
+    }
+
+    #[test]
+    fn out_of_range_and_length_mismatch_are_typed_errors() {
+        let mut a = ChunkAggregator::new(2, 2);
+        assert_eq!(
+            a.absorb(2, &[0.0, 0.0]),
+            Err(AggError::WorkerOutOfRange {
+                worker: 2,
+                n_workers: 2
+            })
+        );
+        assert_eq!(
+            a.absorb(0, &[0.0]),
+            Err(AggError::LengthMismatch { got: 1, want: 2 })
+        );
     }
 
     #[test]
     fn single_worker_mean_is_identity() {
         let mut a = ChunkAggregator::new(3, 1);
-        assert!(a.absorb(0, &[1.0, 2.0, 3.0]));
-        assert_eq!(a.take_mean(), &[1.0, 2.0, 3.0]);
+        assert!(a.absorb(0, &[1.0, 2.0, 3.0]).unwrap());
+        assert_eq!(a.take_mean().unwrap(), &[1.0, 2.0, 3.0]);
     }
 
     #[test]
@@ -155,12 +250,41 @@ mod tests {
         let g0 = [1.0f32, 2.0];
         let g1 = [5.0f32, -2.0];
         let mut a = ChunkAggregator::new(2, 2);
-        a.absorb(0, &g0);
-        a.absorb(1, &g1);
-        let m1: Vec<f32> = a.take_mean().to_vec();
+        a.absorb(0, &g0).unwrap();
+        a.absorb(1, &g1).unwrap();
+        let m1: Vec<f32> = a.take_mean().unwrap().to_vec();
         let mut b = ChunkAggregator::new(2, 2);
-        b.absorb(1, &g1);
-        b.absorb(0, &g0);
-        assert_eq!(m1, b.take_mean());
+        b.absorb(1, &g1).unwrap();
+        b.absorb(0, &g0).unwrap();
+        assert_eq!(m1, b.take_mean().unwrap());
+    }
+
+    /// Partial round → rollback → full replay is bit-identical to a clean
+    /// round: the bitmask reset plus copy-on-first-arrival is sufficient.
+    #[test]
+    fn rollback_then_replay_matches_clean_round() {
+        let g0 = [1.5f32, -0.25];
+        let g1 = [0.125f32, 8.0];
+        let mut clean = ChunkAggregator::new(2, 2);
+        clean.absorb(0, &g0).unwrap();
+        clean.absorb(1, &g1).unwrap();
+        let want: Vec<f32> = clean.take_mean().unwrap().to_vec();
+
+        let mut a = ChunkAggregator::new(2, 2);
+        a.absorb(1, &g1).unwrap();
+        assert_eq!(a.rollback(), 1u64 << 1);
+        assert_eq!(a.arrived(), 0);
+        a.absorb(0, &g0).unwrap();
+        a.absorb(1, &g1).unwrap();
+        assert_eq!(a.take_mean().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn rollback_on_idle_round_is_a_noop() {
+        let mut a = ChunkAggregator::new(2, 2);
+        assert_eq!(a.rollback(), 0);
+        a.absorb(0, &[1.0, 1.0]).unwrap();
+        a.absorb(1, &[3.0, 3.0]).unwrap();
+        assert_eq!(a.take_mean().unwrap(), &[2.0, 2.0]);
     }
 }

@@ -87,7 +87,11 @@ impl KeyTable {
     /// Parse from the AOT manifest's key list (name, len) plus padding to
     /// `padded` elements; the pad region becomes a synthetic final key so
     /// every element has an owning chunk.
-    pub fn from_manifest_keys(keys: &[(String, usize)], padded: usize, chunk_elems: usize) -> KeyTable {
+    pub fn from_manifest_keys(
+        keys: &[(String, usize)],
+        padded: usize,
+        chunk_elems: usize,
+    ) -> KeyTable {
         let total: usize = keys.iter().map(|(_, l)| l).sum();
         assert!(padded >= total);
         let mut all = keys.to_vec();

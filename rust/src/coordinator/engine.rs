@@ -1,0 +1,679 @@
+//! The round-epoch engine: the single home of PHub's per-chunk round
+//! state machine.
+//!
+//! PHub's data plane (paper §3.2) gives every chunk one pinned core that
+//! owns its whole life — receive, aggregate, optimize, transmit — with no
+//! cross-core synchronization. Before this module existed that state
+//! machine lived twice: once in the in-process server's core loop and once
+//! re-derived inside the TCP leader's connection threads. Both copies
+//! panicked on protocol violations and neither could recover a round, so a
+//! worker dying mid-round permanently wedged its job.
+//!
+//! This module is now the only place that knows what a round *is*:
+//!
+//! * [`ShardEngine`] — the server side. One instance per core thread, it
+//!   owns that core's shard of every job's chunk slots, tagged with an
+//!   explicit `(epoch, round)` ([`RoundTag`]): `epoch` counts rollbacks of
+//!   the job, `round` counts completed rounds of each chunk. `absorb` /
+//!   `complete` / `rollback` transitions return `Result` — a protocol
+//!   violation can cost at most the offending connection, never a shared
+//!   core thread.
+//! * [`WorkerRound`] — the connection edge. Tracks one worker's progress
+//!   through the open round (which chunks it pushed, how many replies it
+//!   is owed, which epoch it lives in) so transports stay thin framing
+//!   shells with no arrival bookkeeping of their own.
+//!
+//! # Mid-round rollback
+//!
+//! When a worker dies after pushing some chunks, the leader bumps the
+//! job's epoch and issues a `RollbackRound` to the owning cores. Each core
+//! rewinds only the chunks that saw partial arrivals (using the arrival
+//! bitmask — completed chunks keep their optimized parameters and their
+//! advanced `round` tag), drops the job's pending pull masks, and notifies
+//! every worker's reply channel. Surviving workers replay the round; a
+//! push that replays a chunk that had already completed is answered
+//! directly from the slot's current parameters, so the replayed round is
+//! bit-identical to an uninterrupted one. In-flight pushes that still
+//! carry the old epoch are rejected by tag ([`PushOutcome::StaleEpoch`])
+//! instead of corrupting the fresh round — and a *replayed* push that
+//! overtakes its own core's `RollbackRound` message (the pusher learned
+//! the new epoch from a faster core) makes the shard apply the rollback
+//! itself from the push's epoch tag, so the message race can never drop
+//! a replayed gradient.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use super::aggregation::{AggError, ChunkAggregator};
+use super::optimizer::Optimizer;
+
+/// Job identifier (one training job / tenant namespace).
+pub type JobId = u32;
+
+/// Position of a push in a job's life: which rollback epoch it belongs to
+/// and which round of its chunk it contributes to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundTag {
+    /// Rollback generation of the job; bumped once per mid-round recovery.
+    pub epoch: u32,
+    /// Completed-round count of the target chunk at the time of the push.
+    pub round: u64,
+}
+
+impl RoundTag {
+    pub fn new(epoch: u32, round: u64) -> RoundTag {
+        RoundTag { epoch, round }
+    }
+}
+
+/// A round-protocol violation detected by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineError {
+    UnknownJob(JobId),
+    UnknownChunk { job: JobId, chunk: u32 },
+    /// A push for a round its chunk has not opened yet (the pusher ran
+    /// ahead of the synchronous barrier).
+    FutureRound { got: u64, open: u64 },
+    /// This worker already pushed this chunk in the open round.
+    DuplicateChunk { chunk: u32 },
+    /// An aggregation-level violation (duplicate worker, bad length, ...).
+    Agg(AggError),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::UnknownJob(job) => write!(f, "unknown job {job}"),
+            EngineError::UnknownChunk { job, chunk } => {
+                write!(f, "chunk {chunk} not on this core for job {job}")
+            }
+            EngineError::FutureRound { got, open } => {
+                write!(f, "push tagged round {got} ahead of open round {open}")
+            }
+            EngineError::DuplicateChunk { chunk } => {
+                write!(f, "duplicate push of chunk {chunk} in one round")
+            }
+            EngineError::Agg(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<AggError> for EngineError {
+    fn from(e: AggError) -> EngineError {
+        EngineError::Agg(e)
+    }
+}
+
+/// What a successful push did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Absorbed; the chunk's round is still open.
+    Absorbed,
+    /// Absorbed the last missing gradient: the chunk was optimized, its
+    /// round completed, and replies went out to every puller.
+    Completed,
+    /// The push carried a pre-rollback epoch (in flight when the round was
+    /// rewound); it was dropped by tag. Not a protocol violation.
+    StaleEpoch,
+    /// The push replayed a round its chunk had already completed (rollback
+    /// recovery); the current parameters were re-sent to the pusher.
+    Replayed,
+}
+
+/// Updated parameters (or a rollback notice) for one worker.
+///
+/// `epoch` stamps the state generation a chunk reply belongs to, so a
+/// receiver that has been told about a rollback can discard replies that
+/// were already in flight for the dead round.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// Updated parameters for one chunk.
+    Chunk {
+        job: JobId,
+        chunk: u32,
+        epoch: u32,
+        data: Arc<[f32]>,
+    },
+    /// The job's open round was rewound; replay it under `epoch`.
+    RolledBack { job: JobId, epoch: u32 },
+}
+
+/// One chunk's server-side state: parameters, optimizer state, streaming
+/// aggregator, and the `(epoch, round)` position — the paper's receive →
+/// aggregate → optimize → transmit pipeline stage, pinned to one core.
+struct ChunkSlot {
+    params: Vec<f32>,
+    state: Vec<f32>,
+    agg: ChunkAggregator,
+    /// Completed rounds of this chunk (the `round` half of its tag; the
+    /// `epoch` half is job-wide and lives on the shard).
+    round: u64,
+}
+
+impl ChunkSlot {
+    fn new(params: Vec<f32>, state_words: usize, n_workers: usize) -> ChunkSlot {
+        let len = params.len();
+        ChunkSlot {
+            state: vec![0.0; len * state_words],
+            agg: ChunkAggregator::new(len, n_workers),
+            params,
+            round: 0,
+        }
+    }
+}
+
+/// One job's state on one core: that core's shard of the job's chunks.
+struct JobShard {
+    chunks: HashMap<u32, ChunkSlot>,
+    opt: Arc<dyn Optimizer>,
+    replies: Vec<Sender<Reply>>,
+    /// Which workers asked to pull each chunk this round.
+    pull_mask: HashMap<u32, u64>,
+    /// Rollback generation; pushes tagged with an older epoch are stale.
+    epoch: u32,
+    n_workers: usize,
+}
+
+/// The per-core round engine: owns every job shard on one core thread and
+/// every transition of the round state machine.
+#[derive(Default)]
+pub struct ShardEngine {
+    jobs: HashMap<JobId, JobShard>,
+}
+
+impl ShardEngine {
+    pub fn new() -> ShardEngine {
+        ShardEngine {
+            jobs: HashMap::new(),
+        }
+    }
+
+    /// Install a job's shard: this core's chunks with their initial
+    /// parameters, the shared optimizer, and one reply channel per worker.
+    pub fn init_job(
+        &mut self,
+        job: JobId,
+        chunks: Vec<(u32, Vec<f32>)>,
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        replies: Vec<Sender<Reply>>,
+    ) {
+        let mut map = HashMap::new();
+        for (id, params) in chunks {
+            map.insert(id, ChunkSlot::new(params, opt.state_words(), n_workers));
+        }
+        self.jobs.insert(
+            job,
+            JobShard {
+                chunks: map,
+                opt,
+                replies,
+                pull_mask: HashMap::new(),
+                epoch: 0,
+                n_workers,
+            },
+        );
+    }
+
+    /// Absorb worker `worker`'s gradient for `chunk`, tagged with the
+    /// pusher's `(epoch, round)` position. On the last arrival the chunk is
+    /// optimized in place and replies go out to every worker that pulled.
+    pub fn push(
+        &mut self,
+        job: JobId,
+        chunk: u32,
+        worker: u32,
+        data: &[f32],
+        pull: bool,
+        tag: RoundTag,
+    ) -> Result<PushOutcome, EngineError> {
+        let shard = self.jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        let w = worker as usize;
+        if w >= shard.n_workers {
+            return Err(EngineError::Agg(AggError::WorkerOutOfRange {
+                worker: w,
+                n_workers: shard.n_workers,
+            }));
+        }
+        if tag.epoch < shard.epoch {
+            // In flight when the round was rewound; the pusher has (or will
+            // shortly receive) a RolledBack notice telling it to replay.
+            return Ok(PushOutcome::StaleEpoch);
+        }
+        if tag.epoch > shard.epoch {
+            // The pusher learned this epoch from a core that already
+            // processed the rollback; this core's RollbackRound message is
+            // still in flight behind the push. Apply the rollback now —
+            // idempotent with the in-flight message — so a replayed
+            // gradient can never be lost to the message race.
+            rollback_shard(shard, job, tag.epoch);
+        }
+        let slot = shard
+            .chunks
+            .get_mut(&chunk)
+            .ok_or(EngineError::UnknownChunk { job, chunk })?;
+        if tag.round < slot.round {
+            // Rollback replay of a chunk that had already completed this
+            // round: its parameters already include every worker's
+            // gradient, so answer straight from the slot.
+            if pull {
+                let shared: Arc<[f32]> = slot.params.clone().into();
+                let _ = shard.replies[w].send(Reply::Chunk {
+                    job,
+                    chunk,
+                    epoch: shard.epoch,
+                    data: shared,
+                });
+            }
+            return Ok(PushOutcome::Replayed);
+        }
+        if tag.round > slot.round {
+            return Err(EngineError::FutureRound {
+                got: tag.round,
+                open: slot.round,
+            });
+        }
+        let done = slot.agg.absorb(w, data)?;
+        if pull {
+            *shard.pull_mask.entry(chunk).or_insert(0) |= 1u64 << w;
+        }
+        if !done {
+            return Ok(PushOutcome::Absorbed);
+        }
+        // Last worker arrived: mean + fused optimizer step on this same
+        // core, then broadcast to every worker that pulled.
+        let mean = slot.agg.take_mean()?;
+        shard.opt.step(&mut slot.params, &mut slot.state, mean);
+        slot.round += 1;
+        let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
+        if mask != 0 {
+            let shared: Arc<[f32]> = slot.params.clone().into();
+            for (i, tx) in shard.replies.iter().enumerate() {
+                if mask & (1u64 << i) != 0 {
+                    let _ = tx.send(Reply::Chunk {
+                        job,
+                        chunk,
+                        epoch: shard.epoch,
+                        data: shared.clone(),
+                    });
+                }
+            }
+        }
+        Ok(PushOutcome::Completed)
+    }
+
+    /// Read-only pull of `chunk`'s current parameters for `worker`.
+    pub fn pull(&mut self, job: JobId, chunk: u32, worker: u32) -> Result<(), EngineError> {
+        let shard = self.jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        let w = worker as usize;
+        if w >= shard.n_workers {
+            return Err(EngineError::Agg(AggError::WorkerOutOfRange {
+                worker: w,
+                n_workers: shard.n_workers,
+            }));
+        }
+        let slot = shard
+            .chunks
+            .get(&chunk)
+            .ok_or(EngineError::UnknownChunk { job, chunk })?;
+        let shared: Arc<[f32]> = slot.params.clone().into();
+        let _ = shard.replies[w].send(Reply::Chunk {
+            job,
+            chunk,
+            epoch: shard.epoch,
+            data: shared,
+        });
+        Ok(())
+    }
+
+    /// Rewind the open round of `job` to recover from a mid-round worker
+    /// death: advance the shard to `epoch`, roll back every chunk with
+    /// partial arrivals (completed chunks keep their parameters and round
+    /// tag), drop pending pull masks, and notify every worker's reply
+    /// channel to replay. Idempotent: an epoch the shard already reached is
+    /// a no-op, so duplicate rollback messages are harmless.
+    ///
+    /// Returns the number of chunks rewound.
+    pub fn rollback(&mut self, job: JobId, epoch: u32) -> Result<usize, EngineError> {
+        let shard = self.jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        Ok(rollback_shard(shard, job, epoch))
+    }
+
+    /// Drop a job's shard.
+    pub fn evict(&mut self, job: JobId) {
+        self.jobs.remove(&job);
+    }
+}
+
+/// The rollback transition on one shard: advance the epoch, rewind every
+/// chunk with partial arrivals, drop pending pull masks, notify every
+/// worker. Idempotent — an epoch the shard already reached is a no-op, so
+/// a duplicate `RollbackRound` message (or one arriving after a push
+/// already self-healed the shard forward) is harmless. Returns the number
+/// of chunks rewound.
+fn rollback_shard(shard: &mut JobShard, job: JobId, epoch: u32) -> usize {
+    if epoch <= shard.epoch {
+        return 0;
+    }
+    shard.epoch = epoch;
+    let mut rewound = 0usize;
+    for slot in shard.chunks.values_mut() {
+        if slot.agg.rollback() != 0 {
+            rewound += 1;
+        }
+    }
+    shard.pull_mask.clear();
+    for tx in &shard.replies {
+        let _ = tx.send(Reply::RolledBack { job, epoch });
+    }
+    rewound
+}
+
+/// One worker's view of the round state machine, kept at the connection
+/// edge (the TCP leader holds one per connection; the in-process
+/// `WorkerHandle` embeds the same counters). Transports own *no* round
+/// bookkeeping of their own — they ask this tracker.
+#[derive(Debug, Clone)]
+pub struct WorkerRound {
+    n_chunks: usize,
+    epoch: u32,
+    round: u64,
+    /// Chunks this worker pushed in the open round.
+    seen: Vec<bool>,
+    pushed: usize,
+    /// Replies owed to this worker for pulls issued this round.
+    outstanding: usize,
+}
+
+impl WorkerRound {
+    pub fn new(n_chunks: usize) -> WorkerRound {
+        WorkerRound::resume(n_chunks, 0, 0)
+    }
+
+    /// Resume a worker slot at a known position — how a successor picks up
+    /// where a parked (crashed) predecessor left off.
+    pub fn resume(n_chunks: usize, epoch: u32, round: u64) -> WorkerRound {
+        WorkerRound {
+            n_chunks,
+            epoch,
+            round,
+            seen: vec![false; n_chunks],
+            pushed: 0,
+            outstanding: 0,
+        }
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// The tag every push of the open round carries.
+    pub fn tag(&self) -> RoundTag {
+        RoundTag::new(self.epoch, self.round)
+    }
+
+    /// Record a push of `chunk` (with a pull) in the open round.
+    pub fn begin_push(&mut self, chunk: u32) -> Result<(), EngineError> {
+        let ci = chunk as usize;
+        debug_assert!(ci < self.n_chunks);
+        if self.seen[ci] {
+            return Err(EngineError::DuplicateChunk { chunk });
+        }
+        self.seen[ci] = true;
+        self.pushed += 1;
+        self.outstanding += 1;
+        Ok(())
+    }
+
+    /// Every chunk of the round has been pushed; only replies remain.
+    pub fn push_phase_done(&self) -> bool {
+        self.pushed == self.n_chunks
+    }
+
+    /// Record a reply stamped with `epoch`. Returns `true` if it belongs
+    /// to the current epoch (count it, forward it); `false` if it was in
+    /// flight for a rolled-back round (drop it).
+    pub fn note_reply(&mut self, epoch: u32) -> bool {
+        if epoch != self.epoch {
+            return false;
+        }
+        debug_assert!(self.outstanding > 0);
+        self.outstanding = self.outstanding.saturating_sub(1);
+        true
+    }
+
+    /// Apply a rollback notice. Returns `true` (state reset, epoch
+    /// advanced, same round re-opened) when `epoch` is news; duplicate
+    /// notices from other cores return `false`.
+    pub fn apply_rollback(&mut self, epoch: u32) -> bool {
+        if epoch <= self.epoch {
+            return false;
+        }
+        self.epoch = epoch;
+        self.seen.fill(false);
+        self.pushed = 0;
+        self.outstanding = 0;
+        true
+    }
+
+    /// Close the round: every chunk pushed and every reply delivered.
+    pub fn complete_round(&mut self) {
+        debug_assert!(self.push_phase_done() && self.outstanding == 0);
+        self.round += 1;
+        self.seen.fill(false);
+        self.pushed = 0;
+    }
+
+    /// Whether the connection is inside an open round — the state in which
+    /// a disconnect requires a rollback before the slot can be recycled.
+    pub fn mid_round(&self) -> bool {
+        self.pushed > 0 || self.outstanding > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::Sgd;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn engine_with_job(
+        n_workers: usize,
+        chunks: Vec<(u32, Vec<f32>)>,
+        lr: f32,
+    ) -> (ShardEngine, Vec<Receiver<Reply>>) {
+        let mut eng = ShardEngine::new();
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n_workers {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        eng.init_job(1, chunks, Arc::new(Sgd { lr }), n_workers, txs);
+        (eng, rxs)
+    }
+
+    fn chunk_reply(r: Reply) -> (u32, u32, Vec<f32>) {
+        match r {
+            Reply::Chunk {
+                chunk, epoch, data, ..
+            } => (chunk, epoch, data.to_vec()),
+            other => panic!("expected chunk reply, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn push_completes_and_replies_to_pullers() {
+        let (mut eng, rxs) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        let t = RoundTag::new(0, 0);
+        assert_eq!(
+            eng.push(1, 0, 0, &[2.0, 2.0], true, t).unwrap(),
+            PushOutcome::Absorbed
+        );
+        assert_eq!(
+            eng.push(1, 0, 1, &[4.0, 4.0], false, t).unwrap(),
+            PushOutcome::Completed
+        );
+        // p -= 0.5 * mean(2, 4) = 1 - 1.5 = -0.5; only worker 0 pulled.
+        let (chunk, epoch, data) = chunk_reply(rxs[0].recv().unwrap());
+        assert_eq!((chunk, epoch), (0, 0));
+        assert_eq!(data, vec![-0.5, -0.5]);
+        assert!(rxs[1].try_recv().is_err());
+    }
+
+    #[test]
+    fn violations_are_typed_errors_not_panics() {
+        let (mut eng, _rxs) = engine_with_job(2, vec![(0, vec![0.0])], 1.0);
+        let t = RoundTag::new(0, 0);
+        assert_eq!(eng.push(9, 0, 0, &[1.0], false, t), Err(EngineError::UnknownJob(9)));
+        assert_eq!(
+            eng.push(1, 7, 0, &[1.0], false, t),
+            Err(EngineError::UnknownChunk { job: 1, chunk: 7 })
+        );
+        eng.push(1, 0, 0, &[1.0], false, t).unwrap();
+        assert_eq!(
+            eng.push(1, 0, 0, &[1.0], false, t),
+            Err(EngineError::Agg(AggError::DuplicatePush { worker: 0 }))
+        );
+        assert_eq!(
+            eng.push(1, 0, 1, &[1.0], false, RoundTag::new(0, 5)),
+            Err(EngineError::FutureRound { got: 5, open: 0 })
+        );
+        // The engine is still healthy: the round can complete.
+        assert_eq!(
+            eng.push(1, 0, 1, &[3.0], false, t).unwrap(),
+            PushOutcome::Completed
+        );
+    }
+
+    /// The rollback/replay message race: a replayed push can reach a core
+    /// *before* that core's RollbackRound message (the pusher learned the
+    /// new epoch from a faster core). The engine must apply the rollback
+    /// itself rather than dropping the replayed gradient — otherwise the
+    /// recovery path would recreate the very wedge it exists to fix.
+    #[test]
+    fn future_epoch_push_self_heals_the_race() {
+        let (mut eng, rxs) = engine_with_job(2, vec![(0, vec![1.0])], 0.5);
+        // A partial round at epoch 0 (this is what the rollback rewinds).
+        eng.push(1, 0, 0, &[99.0], true, RoundTag::new(0, 0)).unwrap();
+        // Worker 1 replays at epoch 1 before this core saw RollbackRound.
+        let t1 = RoundTag::new(1, 0);
+        assert_eq!(
+            eng.push(1, 0, 1, &[4.0], true, t1).unwrap(),
+            PushOutcome::Absorbed
+        );
+        // The shard self-healed: partial state rewound, notices sent.
+        assert!(matches!(
+            rxs[0].recv().unwrap(),
+            Reply::RolledBack { epoch: 1, .. }
+        ));
+        // The in-flight RollbackRound message arrives late: no-op.
+        assert_eq!(eng.rollback(1, 1).unwrap(), 0);
+        // The replay completes with worker 0's re-push; the 99s are gone.
+        assert_eq!(
+            eng.push(1, 0, 0, &[2.0], true, t1).unwrap(),
+            PushOutcome::Completed
+        );
+        // p -= 0.5 * mean(2, 4) = 1 - 1.5 = -0.5.
+        loop {
+            if let Reply::Chunk { epoch, data, .. } = rxs[0].recv().unwrap() {
+                assert_eq!(epoch, 1);
+                assert_eq!(data.to_vec(), vec![-0.5]);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn rollback_rewinds_partial_keeps_completed_and_replays_bit_identical() {
+        // Two chunks: chunk 0 completes the round, chunk 1 stays partial.
+        let (mut eng, rxs) =
+            engine_with_job(2, vec![(0, vec![1.0]), (1, vec![10.0])], 0.5);
+        let t0 = RoundTag::new(0, 0);
+        eng.push(1, 0, 0, &[2.0], true, t0).unwrap();
+        assert_eq!(eng.push(1, 0, 1, &[4.0], true, t0).unwrap(), PushOutcome::Completed);
+        let completed: Vec<f32> = chunk_reply(rxs[0].recv().unwrap()).2;
+        eng.push(1, 1, 0, &[8.0], true, t0).unwrap(); // partial on chunk 1
+
+        // Worker 1 dies; the leader rolls the job to epoch 1.
+        assert_eq!(eng.rollback(1, 1).unwrap(), 1); // only chunk 1 rewound
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Reply::RolledBack { epoch, .. } => assert_eq!(epoch, 1),
+                other => panic!("expected rollback notice, got {other:?}"),
+            }
+        }
+
+        // Full replay at epoch 1: the completed chunk answers from its
+        // slot, the rewound chunk re-aggregates from scratch.
+        let t1 = RoundTag::new(1, 0);
+        assert_eq!(eng.push(1, 0, 0, &[2.0], true, t1).unwrap(), PushOutcome::Replayed);
+        assert_eq!(chunk_reply(rxs[0].recv().unwrap()).2, completed);
+        eng.push(1, 1, 0, &[8.0], true, t1).unwrap();
+        assert_eq!(eng.push(1, 1, 1, &[16.0], true, t1).unwrap(), PushOutcome::Completed);
+        // 10 - 0.5 * mean(8, 16) = 10 - 6 = 4 — as if never interrupted.
+        assert_eq!(chunk_reply(rxs[0].recv().unwrap()).2, vec![4.0]);
+
+        // A push still in flight with the dead epoch is dropped by tag.
+        assert_eq!(
+            eng.push(1, 1, 1, &[99.0], true, t0).unwrap(),
+            PushOutcome::StaleEpoch
+        );
+    }
+
+    #[test]
+    fn rollback_is_idempotent() {
+        let (mut eng, rxs) = engine_with_job(1, vec![(0, vec![0.0])], 1.0);
+        assert_eq!(eng.rollback(1, 1).unwrap(), 0);
+        assert_eq!(eng.rollback(1, 1).unwrap(), 0);
+        // Exactly one notice per effective rollback.
+        assert!(matches!(rxs[0].recv().unwrap(), Reply::RolledBack { epoch: 1, .. }));
+        assert!(rxs[0].try_recv().is_err());
+    }
+
+    #[test]
+    fn worker_round_tracks_a_round() {
+        let mut wr = WorkerRound::new(2);
+        assert!(!wr.mid_round());
+        wr.begin_push(0).unwrap();
+        assert_eq!(
+            wr.begin_push(0),
+            Err(EngineError::DuplicateChunk { chunk: 0 })
+        );
+        wr.begin_push(1).unwrap();
+        assert!(wr.push_phase_done() && wr.mid_round());
+        assert!(wr.note_reply(0));
+        assert!(wr.note_reply(0));
+        assert_eq!(wr.outstanding(), 0);
+        wr.complete_round();
+        assert_eq!(wr.round(), 1);
+        assert!(!wr.mid_round());
+    }
+
+    #[test]
+    fn worker_round_rollback_resets_but_keeps_round() {
+        let mut wr = WorkerRound::resume(2, 0, 7);
+        wr.begin_push(0).unwrap();
+        assert!(wr.apply_rollback(1));
+        assert!(!wr.apply_rollback(1), "duplicate notice ignored");
+        assert_eq!((wr.epoch(), wr.round()), (1, 7));
+        assert!(!wr.mid_round());
+        // Stale replies from the dead epoch are not counted.
+        wr.begin_push(0).unwrap();
+        assert!(!wr.note_reply(0));
+        assert!(wr.note_reply(1));
+    }
+}

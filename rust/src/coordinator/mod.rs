@@ -8,6 +8,23 @@
 //! (`CreateService` / `ConnectService` / `InitService`,
 //! `Push` / `Pull` / `PushPull`).
 //!
+//! # Layering
+//!
+//! The round state machine — who pushed what, when a chunk's round
+//! completes, what a mid-round rollback means — has exactly one home:
+//! [`engine`]. Every chunk slot carries an explicit `(epoch, round)` tag;
+//! `absorb`/`complete`/`rollback` transitions return `Result`, so a
+//! protocol violation can never kill a shared core thread. Two thin
+//! transport shells frame and route bytes into that engine:
+//!
+//! * [`server`] — in-process: channels carry chunk-sized `f32` buffers to
+//!   per-core engine instances; workers are threads holding
+//!   `WorkerHandle`s.
+//! * [`transport`] — distributed: a TCP leader speaks the chunk-streamed
+//!   wire protocol ([`wire`]) and drives the *same* engine, including
+//!   mid-round recovery — a worker dying mid-round triggers a round
+//!   rollback and slot recycle instead of wedging its job.
+//!
 //! Workers are threads (or PJRT-executing processes in `examples/`)
 //! exchanging real `f32` gradients; the aggregation math matches the L1
 //! Pallas kernel bit-for-bit up to float associativity, and pytest checks
@@ -16,6 +33,7 @@
 pub mod aggregation;
 pub mod chunk;
 pub mod compress;
+pub mod engine;
 pub mod hierarchy;
 pub mod mapping;
 pub mod optimizer;
@@ -26,6 +44,7 @@ pub mod transport;
 pub mod wire;
 
 pub use chunk::{ChunkId, KeyTable};
+pub use engine::{EngineError, PushOutcome, Reply, RoundTag, ShardEngine, WorkerRound};
 pub use optimizer::{NesterovSgd, Optimizer, Sgd};
 pub use server::{PHubServer, ServerConfig};
 pub use service::{ConnectionManager, ServiceHandle};

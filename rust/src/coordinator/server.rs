@@ -1,11 +1,18 @@
-//! The live PHub server: per-core aggregation threads, chunked exchange,
-//! fused tall aggregation + optimization, multi-tenant namespaces.
+//! The live PHub server: a thin channel-transport shell over the
+//! round-epoch engine.
 //!
 //! This is the paper's architecture realized in-process: the "wire" is a
 //! channel carrying chunk-sized `f32` buffers, each chunk is pinned to one
 //! core-thread for its whole lifetime (reception, aggregation,
 //! optimization, transmission — section 3.2.4), cores share nothing, and
 //! chunk→core assignment is computed once at init with the LPT balancer.
+//!
+//! All round logic — arrival bitmasks, `(epoch, round)` tags, completion,
+//! mid-round rollback — lives in [`super::engine::ShardEngine`]; each core
+//! thread here just drains its channel into its engine instance. A
+//! protocol violation surfaces as a typed [`super::engine::EngineError`]
+//! and costs the offending message, never the core thread. The TCP leader
+//! in [`super::transport`] is the other shell over the same engine.
 //!
 //! `examples/train_e2e.rs` drives this server with real gradients produced
 //! by the AOT-compiled JAX model running under PJRT.
@@ -16,10 +23,12 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use super::aggregation::ChunkAggregator;
 use super::chunk::KeyTable;
+use super::engine::{RoundTag, ShardEngine};
 use super::mapping;
 use super::optimizer::Optimizer;
+
+pub use super::engine::{JobId, Reply};
 
 /// Server construction parameters.
 #[derive(Debug, Clone)]
@@ -34,9 +43,6 @@ impl Default for ServerConfig {
     }
 }
 
-/// Job identifier (one training job / tenant namespace).
-pub type JobId = u32;
-
 enum CoreMsg {
     /// Register a job's chunks owned by this core: (chunk id, initial
     /// params, optimizer, n_workers, reply channels per worker).
@@ -50,7 +56,7 @@ enum CoreMsg {
     /// Worker gradient push for one chunk (optionally pulls the update).
     /// `data` is the worker's whole flat gradient, shared zero-copy (the
     /// in-process analogue of RDMA zero-copy, section 3.2.1); the core
-    /// reads only its chunk's range.
+    /// reads only its chunk's range. `tag` is the pusher's round position.
     Push {
         job: JobId,
         chunk: u32,
@@ -58,49 +64,21 @@ enum CoreMsg {
         data: Arc<[f32]>,
         range: (usize, usize),
         pull: bool,
+        tag: RoundTag,
     },
     /// Read-only pull of current chunk params.
     Pull { job: JobId, chunk: u32, worker: u32 },
+    /// Rewind the job's open round to recover from a mid-round worker
+    /// death (see `ShardEngine::rollback`).
+    RollbackRound { job: JobId, epoch: u32 },
     /// Drop a job's state.
     Evict { job: JobId },
 }
 
-/// Updated parameters for one chunk, broadcast to workers.
-pub struct Reply {
-    pub job: JobId,
-    pub chunk: u32,
-    pub data: Arc<[f32]>,
-}
-
-struct ChunkSlot {
-    params: Vec<f32>,
-    state: Vec<f32>,
-    agg: ChunkAggregator,
-}
-
-impl ChunkSlot {
-    fn new(params: Vec<f32>, state_words: usize, n_workers: usize) -> Self {
-        let len = params.len();
-        ChunkSlot {
-            state: vec![0.0; len * state_words],
-            agg: ChunkAggregator::new(len, n_workers),
-            params,
-        }
-    }
-}
-
-struct JobState {
-    chunks: HashMap<u32, ChunkSlot>,
-    opt: Arc<dyn Optimizer>,
-    replies: Vec<Sender<Reply>>,
-    /// Which workers asked to pull each chunk this round.
-    pull_mask: HashMap<u32, u64>,
-}
-
 fn core_loop(rx: Receiver<CoreMsg>) {
-    let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+    let mut engine = ShardEngine::new();
     while let Ok(msg) = rx.recv() {
-        match msg {
+        let res = match msg {
             CoreMsg::InitJob {
                 job,
                 chunks,
@@ -108,19 +86,8 @@ fn core_loop(rx: Receiver<CoreMsg>) {
                 n_workers,
                 replies,
             } => {
-                let mut map = HashMap::new();
-                for (id, params) in chunks {
-                    map.insert(id, ChunkSlot::new(params, opt.state_words(), n_workers));
-                }
-                jobs.insert(
-                    job,
-                    JobState {
-                        chunks: map,
-                        opt,
-                        replies,
-                        pull_mask: HashMap::new(),
-                    },
-                );
+                engine.init_job(job, chunks, opt, n_workers, replies);
+                Ok(())
             }
             CoreMsg::Push {
                 job,
@@ -129,45 +96,23 @@ fn core_loop(rx: Receiver<CoreMsg>) {
                 data,
                 range,
                 pull,
-            } => {
-                let js = jobs.get_mut(&job).expect("push to unknown job");
-                let slot = js.chunks.get_mut(&chunk).expect("chunk not on this core");
-                if pull {
-                    *js.pull_mask.entry(chunk).or_insert(0) |= 1 << worker;
-                }
-                if slot.agg.absorb(worker as usize, &data[range.0..range.1]) {
-                    // Last worker arrived: mean + fused optimizer step, then
-                    // broadcast to every worker that pulled.
-                    let mean = slot.agg.take_mean();
-                    js.opt.step(&mut slot.params, &mut slot.state, mean);
-                    let mask = js.pull_mask.remove(&chunk).unwrap_or(0);
-                    if mask != 0 {
-                        let shared: Arc<[f32]> = slot.params.clone().into();
-                        for (w, tx) in js.replies.iter().enumerate() {
-                            if mask & (1 << w) != 0 {
-                                let _ = tx.send(Reply {
-                                    job,
-                                    chunk,
-                                    data: shared.clone(),
-                                });
-                            }
-                        }
-                    }
-                }
-            }
-            CoreMsg::Pull { job, chunk, worker } => {
-                let js = jobs.get_mut(&job).expect("pull from unknown job");
-                let slot = &js.chunks[&chunk];
-                let shared: Arc<[f32]> = slot.params.clone().into();
-                let _ = js.replies[worker as usize].send(Reply {
-                    job,
-                    chunk,
-                    data: shared,
-                });
-            }
+                tag,
+            } => engine
+                .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
+                .map(|_| ()),
+            CoreMsg::Pull { job, chunk, worker } => engine.pull(job, chunk, worker),
+            CoreMsg::RollbackRound { job, epoch } => engine.rollback(job, epoch).map(|_| ()),
             CoreMsg::Evict { job } => {
-                jobs.remove(&job);
+                engine.evict(job);
+                Ok(())
             }
+        };
+        // A protocol violation must never kill a shared core thread: the
+        // transports reject violations at the connection edge, so anything
+        // that still reaches here is dropped (the violator's round simply
+        // never completes).
+        if let Err(e) = res {
+            eprintln!("phub-core: dropped message: {e}");
         }
     }
 }
@@ -296,6 +241,19 @@ impl PHubServer {
             core_of: meta.core_of.clone(),
             rx,
             staging: Vec::new(),
+            epoch: 0,
+            round: 0,
+        }
+    }
+
+    /// Rewind `job`'s open round on every core, advancing it to `epoch`
+    /// (the leader's recovery move after a worker dies mid-round; see
+    /// `ShardEngine::rollback` for the semantics). Workers learn about the
+    /// rollback from a [`Reply::RolledBack`] notice on their reply channel
+    /// and replay the round.
+    pub fn rollback_round(&self, job: JobId, epoch: u32) {
+        for tx in &self.cores {
+            let _ = tx.send(CoreMsg::RollbackRound { job, epoch });
         }
     }
 
@@ -320,7 +278,20 @@ impl PHubServer {
     }
 }
 
+/// Result of collecting one round's replies.
+enum Collected {
+    Done(Vec<f32>),
+    /// The round was rewound server-side; replay it under the new epoch.
+    Rolled(u32),
+}
+
 /// A worker's connection to the server.
+///
+/// Carries the worker's `(epoch, round)` position (see
+/// [`super::engine::RoundTag`]); `push_pull` / `push` / `pull` keep it
+/// current automatically, and `push_pull` transparently replays a round
+/// the engine rolled back. Manual `push_chunk` users drive
+/// [`WorkerHandle::advance_round`] themselves.
 pub struct WorkerHandle {
     server: Arc<PHubServer>,
     job: JobId,
@@ -330,6 +301,8 @@ pub struct WorkerHandle {
     rx: Receiver<Reply>,
     /// Reassembly buffer reused across rounds.
     staging: Vec<f32>,
+    epoch: u32,
+    round: u64,
 }
 
 impl WorkerHandle {
@@ -345,6 +318,30 @@ impl WorkerHandle {
         self.table.chunks.len()
     }
 
+    /// Rollback epoch this worker is operating in.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Round this worker's next push contributes to.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Reposition the worker (a transport resuming a parked slot, or an
+    /// embedder coordinating an explicit rollback).
+    pub fn set_tag(&mut self, epoch: u32, round: u64) {
+        self.epoch = epoch;
+        self.round = round;
+    }
+
+    /// Advance to the next round — for manual `push_chunk` streaming users
+    /// after they have collected the round's replies (`push_pull` and
+    /// `push` do this internally).
+    pub fn advance_round(&mut self) {
+        self.round += 1;
+    }
+
     /// Element range `[lo, hi)` of chunk `i` in the flat model.
     pub fn chunk_range(&self, i: usize) -> (usize, usize) {
         let c = &self.table.chunks[i];
@@ -352,14 +349,22 @@ impl WorkerHandle {
     }
 
     /// Route one chunk's gradient straight to its pinned core (the
-    /// streaming half of `push_pull`: the TCP leader calls this per
-    /// incoming `PushChunk` frame so aggregation starts when the *first*
-    /// chunk lands instead of after the whole gradient arrives).
+    /// streaming half of `push_pull`), tagged with this handle's current
+    /// `(epoch, round)` position.
     ///
     /// `data` holds exactly this chunk's elements. With `pull` set, the
     /// core sends this worker a [`Reply`] once the chunk's round
     /// completes; collect it with [`WorkerHandle::recv_reply`].
-    pub fn push_chunk(&mut self, chunk: u32, data: Arc<[f32]>, pull: bool) {
+    pub fn push_chunk(&self, chunk: u32, data: Arc<[f32]>, pull: bool) {
+        let tag = RoundTag::new(self.epoch, self.round);
+        self.push_chunk_tagged(chunk, data, pull, tag);
+    }
+
+    /// [`WorkerHandle::push_chunk`] with an explicit tag — the TCP leader
+    /// calls this per incoming `PushChunk` frame with its connection
+    /// tracker's position, so aggregation starts when the *first* chunk
+    /// lands instead of after the whole gradient arrives.
+    pub fn push_chunk_tagged(&self, chunk: u32, data: Arc<[f32]>, pull: bool, tag: RoundTag) {
         let ci = chunk as usize;
         assert!(ci < self.table.chunks.len(), "chunk id out of range");
         let len = self.table.chunks[ci].len;
@@ -372,64 +377,85 @@ impl WorkerHandle {
                 data,
                 range: (0, len),
                 pull,
+                tag,
             })
             .expect("core thread gone");
     }
 
     /// Block for the next per-chunk reply (one arrives for every chunk
     /// pushed with `pull == true` once its round completes).
-    pub fn recv_reply(&mut self) -> Reply {
+    pub fn recv_reply(&self) -> Reply {
         self.rx.recv().expect("server dropped")
     }
 
     /// Non-blocking variant of [`WorkerHandle::recv_reply`].
-    pub fn try_recv_reply(&mut self) -> Option<Reply> {
+    pub fn try_recv_reply(&self) -> Option<Reply> {
         self.rx.try_recv().ok()
     }
 
     /// Fused push+pull (the paper's `PHub::PushPull`): push this worker's
     /// gradient, wait for all workers' pushes to aggregate, and return the
     /// updated model. Saves a round trip over separate push-then-pull.
+    ///
+    /// If the engine rolls the round back mid-exchange (another worker of
+    /// the job died), the push is transparently replayed under the new
+    /// epoch — the caller just sees the completed round.
     pub fn push_pull(&mut self, grad: &[f32]) -> Vec<f32> {
         assert_eq!(grad.len(), self.table.total_elems, "gradient length");
         // One registration-style copy into a shared buffer (the "NIC DMA"),
         // then chunks are pushed zero-copy: cores read their ranges
         // directly (section 3.2.1 "Minimal Copy" / 3.2.4 disassembly).
         let shared: Arc<[f32]> = grad.into();
-        for (i, c) in self.table.chunks.iter().enumerate() {
-            self.server.cores[self.core_of[i]]
-                .send(CoreMsg::Push {
-                    job: self.job,
-                    chunk: i as u32,
-                    worker: self.worker,
-                    data: shared.clone(),
-                    range: (c.offset, c.offset + c.len),
-                    pull: true,
-                })
-                .expect("core thread gone");
+        loop {
+            let tag = RoundTag::new(self.epoch, self.round);
+            for (i, c) in self.table.chunks.iter().enumerate() {
+                self.server.cores[self.core_of[i]]
+                    .send(CoreMsg::Push {
+                        job: self.job,
+                        chunk: i as u32,
+                        worker: self.worker,
+                        data: shared.clone(),
+                        range: (c.offset, c.offset + c.len),
+                        pull: true,
+                        tag,
+                    })
+                    .expect("core thread gone");
+            }
+            match self.collect_model() {
+                Collected::Done(m) => {
+                    self.round += 1;
+                    return m;
+                }
+                Collected::Rolled(epoch) => {
+                    self.epoch = epoch; // same round, fresh epoch: replay
+                }
+            }
         }
-        self.collect_model()
     }
 
-    /// Push without pulling (async update contribution).
+    /// Confirmed push (the paper's `Push`): contribute this worker's
+    /// gradient and wait for the round to complete, discarding the
+    /// updated parameters.
+    ///
+    /// A push cannot be fire-and-forget under mid-round recovery: without
+    /// waiting for completion there is no way to know whether the round
+    /// was rewound after the gradient was absorbed, so an unconfirmed
+    /// contribution could be silently lost. Riding the `push_pull`
+    /// machinery makes an interrupted round replay transparently here
+    /// too.
     pub fn push(&mut self, grad: &[f32]) {
-        assert_eq!(grad.len(), self.table.total_elems);
-        let shared: Arc<[f32]> = grad.into();
-        for (i, c) in self.table.chunks.iter().enumerate() {
-            self.server.cores[self.core_of[i]]
-                .send(CoreMsg::Push {
-                    job: self.job,
-                    chunk: i as u32,
-                    worker: self.worker,
-                    data: shared.clone(),
-                    range: (c.offset, c.offset + c.len),
-                    pull: false,
-                })
-                .expect("core thread gone");
-        }
+        let _ = self.push_pull(grad);
     }
 
     /// Pull the current model (no gradient contribution).
+    ///
+    /// Read-only, so rollbacks need no replay here: a pull is answered
+    /// immediately per chunk whatever the round state, and a rollback
+    /// never modifies parameters — replies are therefore accepted
+    /// regardless of their epoch stamp (a pull has never been atomic
+    /// against concurrently completing rounds anyway). Re-requesting
+    /// after a rollback notice would orphan the first batch's replies
+    /// and desync every later round's collect by one.
     pub fn pull(&mut self) -> Vec<f32> {
         for i in 0..self.table.chunks.len() {
             self.server.cores[self.core_of[i]]
@@ -440,20 +466,76 @@ impl WorkerHandle {
                 })
                 .expect("core thread gone");
         }
-        self.collect_model()
-    }
-
-    /// Receive one reply per chunk and reassemble the flat model.
-    fn collect_model(&mut self) -> Vec<f32> {
         self.staging.clear();
         self.staging.resize(self.table.total_elems, 0.0);
-        for _ in 0..self.table.chunks.len() {
-            let r = self.rx.recv().expect("server dropped");
-            debug_assert_eq!(r.job, self.job);
-            let c = &self.table.chunks[r.chunk as usize];
-            self.staging[c.offset..c.offset + c.len].copy_from_slice(&r.data);
+        let n_chunks = self.table.chunks.len();
+        let mut seen = vec![false; n_chunks];
+        let mut got = 0usize;
+        while got < n_chunks {
+            match self.rx.recv().expect("server dropped") {
+                Reply::Chunk {
+                    job, chunk, data, ..
+                } => {
+                    debug_assert_eq!(job, self.job);
+                    let ci = chunk as usize;
+                    if seen[ci] {
+                        continue;
+                    }
+                    seen[ci] = true;
+                    let c = &self.table.chunks[ci];
+                    self.staging[c.offset..c.offset + c.len].copy_from_slice(&data);
+                    got += 1;
+                }
+                Reply::RolledBack { epoch, .. } => {
+                    // Note the epoch for later pushes; nothing to replay.
+                    if epoch > self.epoch {
+                        self.epoch = epoch;
+                    }
+                }
+            }
         }
         std::mem::take(&mut self.staging)
+    }
+
+    /// Receive one reply per chunk and reassemble the flat model, dropping
+    /// replies that were in flight for a rolled-back epoch.
+    fn collect_model(&mut self) -> Collected {
+        self.staging.clear();
+        self.staging.resize(self.table.total_elems, 0.0);
+        let n_chunks = self.table.chunks.len();
+        let mut seen = vec![false; n_chunks];
+        let mut got = 0usize;
+        while got < n_chunks {
+            match self.rx.recv().expect("server dropped") {
+                Reply::Chunk {
+                    job,
+                    chunk,
+                    epoch,
+                    data,
+                } => {
+                    debug_assert_eq!(job, self.job);
+                    if epoch < self.epoch {
+                        continue; // superseded by a rollback we already saw
+                    }
+                    debug_assert_eq!(epoch, self.epoch);
+                    let ci = chunk as usize;
+                    if seen[ci] {
+                        continue;
+                    }
+                    seen[ci] = true;
+                    let c = &self.table.chunks[ci];
+                    self.staging[c.offset..c.offset + c.len].copy_from_slice(&data);
+                    got += 1;
+                }
+                Reply::RolledBack { epoch, .. } => {
+                    if epoch > self.epoch {
+                        return Collected::Rolled(epoch);
+                    }
+                    // Duplicate notice from another core: already handled.
+                }
+            }
+        }
+        Collected::Done(std::mem::take(&mut self.staging))
     }
 }
 
@@ -474,12 +556,7 @@ mod tests {
         let server = PHubServer::start(ServerConfig { n_cores: 3 });
         let n = 64usize;
         let init = vec![1.0f32; n];
-        let job = server.init_job(
-            table(n, 16),
-            &init,
-            Arc::new(Sgd { lr: 0.5 }),
-            4,
-        );
+        let job = server.init_job(table(n, 16), &init, Arc::new(Sgd { lr: 0.5 }), 4);
         let mut joins = Vec::new();
         for w in 0..4usize {
             let mut h = server.worker(job, w);
@@ -616,10 +693,15 @@ mod tests {
             }
             let mut model = vec![0.0f32; h.model_len()];
             for _ in 0..n_chunks {
-                let r = h.recv_reply();
-                let (lo, hi) = h.chunk_range(r.chunk as usize);
-                model[lo..hi].copy_from_slice(&r.data);
+                match h.recv_reply() {
+                    Reply::Chunk { chunk, data, .. } => {
+                        let (lo, hi) = h.chunk_range(chunk as usize);
+                        model[lo..hi].copy_from_slice(&data);
+                    }
+                    other => panic!("unexpected reply {other:?}"),
+                }
             }
+            h.advance_round();
             model
         };
         let (b0, b1) = hb.split_at_mut(1);
@@ -631,6 +713,55 @@ mod tests {
         });
 
         assert_eq!(ma, mb, "streamed and monolithic paths must agree bitwise");
+        PHubServer::shutdown(server);
+    }
+
+    /// In-process mid-round rollback: a partial round rewound with
+    /// `rollback_round` and then fully replayed produces bit-identical
+    /// parameters to an uninterrupted round on a twin job.
+    #[test]
+    fn rollback_and_replay_matches_clean_round() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let n = 32usize;
+        let init: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+        let opt = || Arc::new(NesterovSgd { lr: 0.1, momentum: 0.9 });
+        let ja = server.init_job(table(n, 8), &init, opt(), 2);
+        let jb = server.init_job(table(n, 8), &init, opt(), 2);
+        let grad = |w: usize| -> Vec<f32> {
+            (0..n).map(|i| (w + 1) as f32 * 0.5 + i as f32 * 0.125).collect()
+        };
+
+        // Job A, interrupted: worker 1 pushes chunks 0..2 of the round,
+        // then "dies"; the leader rolls the round back; both workers then
+        // replay the full round.
+        let mut ha: Vec<_> = (0..2).map(|w| server.worker(ja, w)).collect();
+        {
+            let g1 = grad(1);
+            for i in 0..2u32 {
+                let (lo, hi) = ha[1].chunk_range(i as usize);
+                ha[1].push_chunk(i, g1[lo..hi].into(), true);
+            }
+        }
+        server.rollback_round(ja, 1);
+        let ma = std::thread::scope(|s| {
+            let (h0, h1) = ha.split_at_mut(1);
+            let t = s.spawn(|| h1[0].push_pull(&grad(1)));
+            let m = h0[0].push_pull(&grad(0));
+            assert_eq!(m, t.join().unwrap());
+            m
+        });
+
+        // Job B, clean.
+        let mut hb: Vec<_> = (0..2).map(|w| server.worker(jb, w)).collect();
+        let mb = std::thread::scope(|s| {
+            let (h0, h1) = hb.split_at_mut(1);
+            let t = s.spawn(|| h1[0].push_pull(&grad(1)));
+            let m = h0[0].push_pull(&grad(0));
+            t.join().unwrap();
+            m
+        });
+
+        assert_eq!(ma, mb, "replayed round must be bit-identical to clean");
         PHubServer::shutdown(server);
     }
 

@@ -64,6 +64,8 @@ struct ServiceState {
     n_workers: usize,
     job: Option<JobId>,
     connected: Vec<bool>,
+    /// Round epoch of the job (bumped by [`ConnectionManager::rollback_service`]).
+    epoch: u32,
 }
 
 /// The connection manager: the control-plane front of a PHub instance.
@@ -116,6 +118,7 @@ impl ConnectionManager {
                 n_workers,
                 job: None,
                 connected: vec![false; n_workers],
+                epoch: 0,
             },
         );
         Ok(ServiceHandle {
@@ -182,6 +185,29 @@ impl ConnectionManager {
         }
         st.connected[w] = true;
         Ok(self.server.worker(job, w))
+    }
+
+    /// Rewind the namespace's open round (nonce-authenticated): bump the
+    /// job's round epoch and issue a `RollbackRound` to the cores via
+    /// [`PHubServer::rollback_round`]. Connected in-process workers learn
+    /// about it from the rollback notice on their reply channels and
+    /// replay transparently inside `push_pull` — the embedder's lever for
+    /// recovering a job whose worker died mid-round (the TCP leader does
+    /// this automatically; see `transport.rs`).
+    ///
+    /// Returns the new epoch.
+    pub fn rollback_service(&self, handle: &ServiceHandle) -> Result<u32, ServiceError> {
+        let mut svcs = self.services.lock().unwrap();
+        let st = svcs
+            .get_mut(&handle.namespace)
+            .ok_or_else(|| ServiceError::UnknownNamespace(handle.namespace.clone()))?;
+        if st.nonce != handle.nonce {
+            return Err(ServiceError::BadNonce(handle.namespace.clone()));
+        }
+        let job = st.job.ok_or(ServiceError::NotInitialized)?;
+        st.epoch += 1;
+        self.server.rollback_round(job, st.epoch);
+        Ok(st.epoch)
     }
 
     /// Tear down a namespace and evict its state from the cores.
@@ -297,6 +323,45 @@ mod tests {
         ));
         // The control plane still works after every rejection.
         assert_eq!(cm.connect_service(&h, 0).unwrap().model_len(), 32);
+    }
+
+    /// The rollback lever is nonce-gated and requires an initialized job;
+    /// a legitimate rollback on a partially-pushed round lets the round
+    /// replay to the exact clean-round result.
+    #[test]
+    fn rollback_service_authenticated_and_recovers() {
+        let cm = setup();
+        let h = cm.create_service("rb", 2).unwrap();
+        assert_eq!(
+            cm.rollback_service(&h).unwrap_err(),
+            ServiceError::NotInitialized
+        );
+        cm.init_service(&h, KeyTable::flat(16, 8), &vec![0.0; 16], Arc::new(Sgd { lr: 0.5 }))
+            .unwrap();
+        let mut bad = h.clone();
+        bad.nonce ^= 1;
+        assert!(matches!(
+            cm.rollback_service(&bad),
+            Err(ServiceError::BadNonce(_))
+        ));
+
+        let mut w0 = cm.connect_service(&h, 0).unwrap();
+        let mut w1 = cm.connect_service(&h, 1).unwrap();
+        // Worker 1 pushes half the round, then the embedder rolls it back
+        // (as if worker 1's owner had died and been replaced).
+        let (lo, hi) = w1.chunk_range(0);
+        w1.push_chunk(0, vec![9.0f32; hi - lo].into(), true);
+        assert_eq!(cm.rollback_service(&h).unwrap(), 1);
+        // Full replay: both workers run the round; the half-push is gone.
+        let g0 = vec![1.0f32; 16];
+        let g1 = vec![3.0f32; 16];
+        let (m0, m1) = std::thread::scope(|s| {
+            let t = s.spawn(|| w1.push_pull(&g1));
+            (w0.push_pull(&g0), t.join().unwrap())
+        });
+        assert_eq!(m0, m1);
+        // p -= 0.5 * mean(1, 3) = -1, not tainted by the 9s.
+        assert!(m0.iter().all(|&x| (x + 1.0).abs() < 1e-6), "{:?}", &m0[..2]);
     }
 
     #[test]

@@ -103,8 +103,51 @@ pub fn run_concurrent_jobs(
 }
 
 #[cfg(test)]
+#[allow(clippy::useless_vec)]
 mod tests {
     use super::*;
+
+    /// A mid-round rollback in one tenant (the engine-level recovery for
+    /// a worker death) must not perturb any other tenant sharing the same
+    /// cores: rollback is per-job state, not per-core state.
+    #[test]
+    fn rollback_in_one_tenant_leaves_others_untouched() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let cm = ConnectionManager::new(server.clone());
+        let opt = || {
+            Arc::new(NesterovSgd {
+                lr: 0.5,
+                momentum: 0.0,
+            })
+        };
+        let ha = cm.create_service("tenant-a", 2).unwrap();
+        let hb = cm.create_service("tenant-b", 1).unwrap();
+        cm.init_service(&ha, KeyTable::flat(32, 8), &vec![0.0; 32], opt())
+            .unwrap();
+        cm.init_service(&hb, KeyTable::flat(32, 8), &vec![0.0; 32], opt())
+            .unwrap();
+        let mut wa0 = cm.connect_service(&ha, 0).unwrap();
+        let mut wa1 = cm.connect_service(&ha, 1).unwrap();
+        let mut wb = cm.connect_service(&hb, 0).unwrap();
+
+        // Tenant A: half a round pushed, then rolled back.
+        let (lo, hi) = wa1.chunk_range(0);
+        wa1.push_chunk(0, vec![7.0f32; hi - lo].into(), true);
+        assert_eq!(cm.rollback_service(&ha).unwrap(), 1);
+
+        // Tenant B trains cleanly straight through A's rollback.
+        let mb = wb.push_pull(&vec![2.0; 32]);
+        assert!(mb.iter().all(|&x| (x + 1.0).abs() < 1e-6), "{:?}", &mb[..2]);
+
+        // Tenant A replays and lands on the exact clean-round values.
+        let (m0, m1) = std::thread::scope(|s| {
+            let t = s.spawn(|| wa1.push_pull(&vec![3.0; 32]));
+            (wa0.push_pull(&vec![1.0; 32]), t.join().unwrap())
+        });
+        assert_eq!(m0, m1);
+        assert!(m0.iter().all(|&x| (x + 1.0).abs() < 1e-6), "{:?}", &m0[..2]);
+        PHubServer::shutdown(server);
+    }
 
     #[test]
     fn concurrent_jobs_complete() {

@@ -22,82 +22,111 @@
 //!
 //! | op | name            | dir | payload |
 //! |----|-----------------|-----|---------|
-//! | 1  | `Hello`         | W→L | [`super::transport::JobSpec`] (28 B) + optional proposed protocol version u32 |
-//! | 2  | `Welcome`       | L→W | worker slot u32 + optional accepted protocol version u32 |
-//! | 3  | `PushPull`      | W→L | whole-model gradient, raw LE f32s (v0 only) |
-//! | 4  | `Model`         | L→W | whole updated model, raw LE f32s (v0 only) |
-//! | 5  | `PushPullQuant` | W→L | whole-model 2-bit `QuantGrad` (v0 only) |
+//! | 1  | `Hello`         | W→L | [`super::transport::JobSpec`] (28 B) + proposed protocol version u32 |
+//! | 2  | `Welcome`       | L→W | worker slot u32 + round epoch u32 + rounds-done u64 + accepted protocol version u32 |
+//! | 3–5| *retired*       |     | v0 monolithic `PushPull`/`Model`/`PushPullQuant`; never reassigned |
 //! | 6  | `Bye`           | any | empty — orderly shutdown |
-//! | 7  | `PushChunk`     | W→L | chunk header + chunk gradient LE f32s (v1) |
-//! | 8  | `ModelChunk`    | L→W | chunk header + chunk params LE f32s (v1) |
-//! | 9  | `PushChunkQuant`| W→L | chunk header + per-chunk `QuantGrad` (v1) |
+//! | 7  | `PushChunk`     | W→L | chunk header + chunk gradient LE f32s |
+//! | 8  | `ModelChunk`    | L→W | chunk header + chunk params LE f32s |
+//! | 9  | `PushChunkQuant`| W→L | chunk header + per-chunk `QuantGrad` |
+//! | 10 | `RollbackRound` | L→W | round epoch u32 — rewind + replay the open round |
 //!
-//! Chunk-carrying payloads start with a 12-byte chunk header
-//! ([`CHUNK_PREFIX_BYTES`]): `[chunk u32 LE][elem offset u64 LE]`, where
-//! `offset` is the chunk's first element in the flat model. The receiver
-//! validates both against its own key table, so a corrupted or hostile
-//! frame can only kill its own connection.
+//! Chunk-carrying payloads start with a 16-byte chunk header
+//! ([`CHUNK_PREFIX_BYTES`]): `[chunk u32 LE][epoch u32 LE][elem offset
+//! u64 LE]`, where `offset` is the chunk's first element in the flat
+//! model and `epoch` is the job's **round epoch** — the rollback
+//! generation of the round state machine (see `engine.rs`). The receiver
+//! validates chunk id and offset against its own key table, so a
+//! corrupted or hostile frame can only kill its own connection.
+//!
+//! # The round epoch
+//!
+//! A worker learns its job's epoch from `Welcome` and stamps it into
+//! every chunk frame it pushes. When a worker dies mid-round the leader
+//! bumps the epoch, rewinds the partially aggregated chunks, and sends
+//! `RollbackRound` (carrying the new epoch) to the surviving workers;
+//! each one re-sends its round's chunk frames — byte-identical payloads,
+//! new epoch — so the replayed round produces exactly the parameters the
+//! uninterrupted round would have. A push frame that was already in
+//! flight with the old epoch is *rejected by tag* (silently dropped, the
+//! sender replays anyway) rather than corrupting the fresh round or
+//! panicking a core.
 //!
 //! # Version negotiation
 //!
-//! The protocol version rides on the rendezvous, so one exchange pattern
-//! never blocks another release's workers:
+//! The protocol version rides on the rendezvous, so an incompatible peer
+//! fails loudly at `Hello` instead of misparsing frames mid-training:
 //!
-//! * v0 [`PROTO_MONOLITHIC`] — one whole-gradient frame up, one
-//!   whole-model frame back per round. Network and compute fully
-//!   serialize; kept for one release for old workers.
-//! * v1 [`PROTO_CHUNK_STREAMED`] — the paper's data plane shape (§3.2):
-//!   the worker writes all `PushChunk` frames back-to-back; the leader
-//!   routes each one to its pinned core as it arrives and returns
-//!   `ModelChunk` frames per chunk as aggregation+optimization complete,
-//!   so a fast chunk's parameters are on the wire while later chunks are
-//!   still aggregating.
+//! * v0 `PROTO_MONOLITHIC` — **retired**. One whole-gradient frame up,
+//!   one whole-model frame back per round, fully serializing network and
+//!   compute. It was kept for one release after v1 shipped; a v0 `Hello`
+//!   (or one with no version trailer) is rejected with a clear error.
+//! * v1 `PROTO_CHUNK_STREAMED` — **retired**. The first chunk-streamed
+//!   framing, before rounds carried epochs. The epoch field changed the
+//!   chunk prefix and the `Welcome` payload incompatibly, so v1 peers
+//!   are rejected at rendezvous rather than served bytes they would
+//!   misparse.
+//! * v2 [`PROTO_EPOCH_TAGGED`] — the paper's data plane shape (§3.2)
+//!   plus recovery: the worker writes all `PushChunk` frames
+//!   back-to-back; the leader routes each one to its pinned core as it
+//!   arrives and returns `ModelChunk` frames per chunk as
+//!   aggregation+optimization complete, so a fast chunk's parameters are
+//!   on the wire while later chunks are still aggregating. Every chunk
+//!   frame carries the round epoch, and `RollbackRound` rewinds/replays
+//!   an interrupted round.
 //!
 //! A worker appends its highest supported version to `Hello`; the leader
-//! answers with `min(leader_max, proposed)` in `Welcome`. Absent trailer
-//! bytes (an old peer) mean v0 on both sides: old leaders ignore trailing
-//! `Hello` bytes and send a 4-byte `Welcome`, old workers ignore trailing
-//! `Welcome` bytes.
+//! answers with `min(leader_max, proposed)` in `Welcome` — and drops the
+//! connection when that minimum falls below [`PROTO_MIN`].
 
 use std::io::{Read, Write};
 
-/// Legacy protocol: whole-model frames per round.
+/// Legacy whole-model protocol — retired; the leader rejects it at
+/// rendezvous. The constant remains so rejection tests and error messages
+/// can name it.
 pub const PROTO_MONOLITHIC: u32 = 0;
-/// Chunk-streamed protocol: per-chunk frames, overlap-friendly.
+/// First-generation chunk streaming — retired. The epoch-tagged framing
+/// changed the chunk prefix (12 → 16 bytes) and the `Welcome` payload
+/// incompatibly, so a v1 peer must be rejected at rendezvous rather than
+/// silently served frames it would misparse.
 pub const PROTO_CHUNK_STREAMED: u32 = 1;
+/// Epoch-tagged chunk streaming: per-chunk frames carrying the round
+/// epoch, mid-round rollback/replay via `RollbackRound`, and successor
+/// resume info (epoch + rounds done) in `Welcome`.
+pub const PROTO_EPOCH_TAGGED: u32 = 2;
+/// Oldest version this build still serves.
+pub const PROTO_MIN: u32 = PROTO_EPOCH_TAGGED;
 /// Highest version this build speaks.
-pub const PROTO_MAX: u32 = PROTO_CHUNK_STREAMED;
+pub const PROTO_MAX: u32 = PROTO_EPOCH_TAGGED;
 
-/// Message opcodes.
+/// Message opcodes. Values 3–5 belonged to the retired v0 monolithic
+/// exchange and are never reassigned.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Op {
     /// Worker -> server: create+join a job (payload: model elems u64,
-    /// chunk elems u64, n_workers u32, lr f32, momentum f32, then an
-    /// optional proposed protocol version u32).
+    /// chunk elems u64, n_workers u32, lr f32, momentum f32, then the
+    /// proposed protocol version u32).
     Hello = 1,
-    /// Server -> worker: admission (payload: worker slot u32, then an
-    /// optional accepted protocol version u32).
+    /// Server -> worker: admission (payload: worker slot u32, round epoch
+    /// u32, completed rounds of the slot u64, accepted protocol version
+    /// u32 — the round count is how a successor learns where its crashed
+    /// predecessor left off).
     Welcome = 2,
-    /// Worker -> server: gradient push for the whole flat model
-    /// (payload: f32s); implies pull. v0 only.
-    PushPull = 3,
-    /// Server -> worker: updated model (payload: f32s). v0 only.
-    Model = 4,
-    /// Worker -> server: 2-bit compressed push (payload: packed levels +
-    /// f32 threshold; see `compress.rs`). v0 only.
-    PushPullQuant = 5,
     /// Either direction: orderly shutdown.
     Bye = 6,
     /// Worker -> server: gradient push for one chunk (payload: chunk
-    /// header + f32s); implies pull of that chunk. v1.
+    /// header + f32s); implies pull of that chunk.
     PushChunk = 7,
     /// Server -> worker: updated params for one chunk (payload: chunk
-    /// header + f32s). v1.
+    /// header + f32s).
     ModelChunk = 8,
     /// Worker -> server: 2-bit compressed push for one chunk (payload:
-    /// chunk header + `QuantGrad` bytes). v1.
+    /// chunk header + `QuantGrad` bytes).
     PushChunkQuant = 9,
+    /// Server -> worker: the open round was rewound (payload: new round
+    /// epoch u32); re-send the round's chunk frames under that epoch.
+    RollbackRound = 10,
 }
 
 impl Op {
@@ -105,13 +134,11 @@ impl Op {
         Some(match v {
             1 => Op::Hello,
             2 => Op::Welcome,
-            3 => Op::PushPull,
-            4 => Op::Model,
-            5 => Op::PushPullQuant,
             6 => Op::Bye,
             7 => Op::PushChunk,
             8 => Op::ModelChunk,
             9 => Op::PushChunkQuant,
+            10 => Op::RollbackRound,
             _ => return None,
         })
     }
@@ -129,11 +156,12 @@ pub struct Frame {
 /// Header layout: [len u32][op u8][pad u8;3][job u32][worker u32].
 pub const HEADER_BYTES: usize = 16;
 
-/// Byte length of the chunk header prefixing chunk-carrying payloads.
-pub const CHUNK_PREFIX_BYTES: usize = 12;
+/// Byte length of the chunk header prefixing chunk-carrying payloads:
+/// `[chunk u32][epoch u32][elem offset u64]`.
+pub const CHUNK_PREFIX_BYTES: usize = 16;
 
-/// Largest frame body [`read_frame`] accepts: a whole-model v0 frame at
-/// the transport's `MAX_MODEL_ELEMS` (2^28 f32s = 1 GiB) plus slack. The
+/// Largest frame body [`read_frame`] accepts: a single-chunk job at the
+/// transport's `MAX_MODEL_ELEMS` (2^28 f32s = 1 GiB) plus slack. The
 /// length prefix is attacker-controlled, so it must never be trusted for
 /// allocation beyond this bound.
 pub const MAX_FRAME_BYTES: usize = (1 << 30) + 1024;
@@ -205,12 +233,14 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
 /// chunk prefix, and raw payload bytes with no intermediate payload/frame
 /// buffers. This is the streamed hot path: one call per chunk per round,
 /// so the copies [`encode`] would make are worth skipping. No flush.
+#[allow(clippy::too_many_arguments)]
 pub fn write_chunk_frame_buffered(
     w: &mut impl Write,
     op: Op,
     job: u32,
     worker: u32,
     chunk: u32,
+    epoch: u32,
     elem_offset: u64,
     bytes: &[u8],
 ) -> std::io::Result<()> {
@@ -220,21 +250,24 @@ pub fn write_chunk_frame_buffered(
     w.write_all(&job.to_le_bytes())?;
     w.write_all(&worker.to_le_bytes())?;
     w.write_all(&chunk.to_le_bytes())?;
+    w.write_all(&epoch.to_le_bytes())?;
     w.write_all(&elem_offset.to_le_bytes())?;
     w.write_all(bytes)
 }
 
-/// Build a chunk-carrying payload: `[chunk u32][elem offset u64][bytes]`.
-pub fn encode_chunk_payload(chunk: u32, elem_offset: u64, bytes: &[u8]) -> Vec<u8> {
+/// Build a chunk-carrying payload:
+/// `[chunk u32][epoch u32][elem offset u64][bytes]`.
+pub fn encode_chunk_payload(chunk: u32, epoch: u32, elem_offset: u64, bytes: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(CHUNK_PREFIX_BYTES + bytes.len());
     out.extend_from_slice(&chunk.to_le_bytes());
+    out.extend_from_slice(&epoch.to_le_bytes());
     out.extend_from_slice(&elem_offset.to_le_bytes());
     out.extend_from_slice(bytes);
     out
 }
 
-/// Split a chunk-carrying payload into `(chunk, elem offset, bytes)`.
-pub fn decode_chunk_payload(payload: &[u8]) -> std::io::Result<(u32, u64, &[u8])> {
+/// Split a chunk-carrying payload into `(chunk, epoch, elem offset, bytes)`.
+pub fn decode_chunk_payload(payload: &[u8]) -> std::io::Result<(u32, u32, u64, &[u8])> {
     if payload.len() < CHUNK_PREFIX_BYTES {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -242,8 +275,9 @@ pub fn decode_chunk_payload(payload: &[u8]) -> std::io::Result<(u32, u64, &[u8])
         ));
     }
     let chunk = u32::from_le_bytes(payload[0..4].try_into().unwrap());
-    let offset = u64::from_le_bytes(payload[4..12].try_into().unwrap());
-    Ok((chunk, offset, &payload[CHUNK_PREFIX_BYTES..]))
+    let epoch = u32::from_le_bytes(payload[4..8].try_into().unwrap());
+    let offset = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+    Ok((chunk, epoch, offset, &payload[CHUNK_PREFIX_BYTES..]))
 }
 
 /// Append the proposed/accepted protocol version to a rendezvous payload.
@@ -252,7 +286,8 @@ pub fn push_proto_version(payload: &mut Vec<u8>, proto: u32) {
 }
 
 /// Read the protocol version trailer at `at..at+4`, or [`PROTO_MONOLITHIC`]
-/// if the peer predates version negotiation and sent a shorter payload.
+/// if the peer predates version negotiation and sent a shorter payload
+/// (the leader then rejects it: v0 is retired).
 pub fn proto_version_at(payload: &[u8], at: usize) -> u32 {
     match payload.get(at..at + 4) {
         Some(b) => u32::from_le_bytes(b.try_into().unwrap()),
@@ -289,7 +324,7 @@ mod tests {
     #[test]
     fn frame_roundtrip() {
         let f = Frame {
-            op: Op::PushPull,
+            op: Op::PushChunk,
             job: 7,
             worker: 3,
             payload: f32s_to_bytes(&[1.0, -2.5, 3.25]),
@@ -326,10 +361,28 @@ mod tests {
         assert!(read_frame(&mut cursor).is_err());
     }
 
+    /// The v0 monolithic opcodes (3–5) are retired: frames carrying them
+    /// no longer decode, so a legacy worker fails fast and loud.
+    #[test]
+    fn retired_v0_opcodes_rejected() {
+        for retired in [3u8, 4, 5] {
+            assert_eq!(Op::from_u8(retired), None);
+            let mut bytes = encode(&Frame {
+                op: Op::Bye,
+                job: 1,
+                worker: 0,
+                payload: vec![],
+            });
+            bytes[4] = retired;
+            let mut cursor = std::io::Cursor::new(bytes);
+            assert!(read_frame(&mut cursor).is_err());
+        }
+    }
+
     #[test]
     fn truncated_frame_rejected() {
         let bytes = encode(&Frame {
-            op: Op::Model,
+            op: Op::ModelChunk,
             job: 1,
             worker: 0,
             payload: vec![1, 2, 3, 4],
@@ -355,26 +408,26 @@ mod tests {
     }
 
     #[test]
-    fn chunk_opcodes_roundtrip() {
-        for op in [Op::PushChunk, Op::ModelChunk, Op::PushChunkQuant] {
+    fn chunk_opcodes_roundtrip_with_epoch() {
+        for op in [Op::PushChunk, Op::ModelChunk, Op::PushChunkQuant, Op::RollbackRound] {
             assert_eq!(Op::from_u8(op as u8), Some(op));
         }
         let f = Frame {
             op: Op::PushChunk,
             job: 3,
             worker: 1,
-            payload: encode_chunk_payload(5, 320, &f32s_to_bytes(&[1.0, 2.0])),
+            payload: encode_chunk_payload(5, 2, 320, &f32s_to_bytes(&[1.0, 2.0])),
         };
         let mut cursor = std::io::Cursor::new(encode(&f));
         let g = read_frame(&mut cursor).unwrap();
-        let (chunk, off, bytes) = decode_chunk_payload(&g.payload).unwrap();
-        assert_eq!((chunk, off), (5, 320));
+        let (chunk, epoch, off, bytes) = decode_chunk_payload(&g.payload).unwrap();
+        assert_eq!((chunk, epoch, off), (5, 2, 320));
         assert_eq!(bytes_to_f32s(bytes).unwrap(), vec![1.0, 2.0]);
     }
 
     #[test]
     fn short_chunk_payload_rejected() {
-        assert!(decode_chunk_payload(&[0u8; 11]).is_err());
+        assert!(decode_chunk_payload(&[0u8; CHUNK_PREFIX_BYTES - 1]).is_err());
     }
 
     #[test]
@@ -390,7 +443,7 @@ mod tests {
 
     #[test]
     fn buffered_chunk_writer_matches_encode() {
-        let payload = encode_chunk_payload(5, 320, &f32s_to_bytes(&[1.0, 2.0]));
+        let payload = encode_chunk_payload(5, 2, 320, &f32s_to_bytes(&[1.0, 2.0]));
         let via_encode = encode(&Frame {
             op: Op::PushChunk,
             job: 3,
@@ -404,6 +457,7 @@ mod tests {
             3,
             1,
             5,
+            2,
             320,
             &f32s_to_bytes(&[1.0, 2.0]),
         )
@@ -413,9 +467,17 @@ mod tests {
 
     #[test]
     fn proto_version_trailer() {
-        let mut p = vec![0u8; 28]; // a 28-byte JobSpec from an old worker
+        let mut p = vec![0u8; 28]; // a 28-byte JobSpec from a v0-era worker
         assert_eq!(proto_version_at(&p, 28), PROTO_MONOLITHIC);
-        push_proto_version(&mut p, PROTO_CHUNK_STREAMED);
-        assert_eq!(proto_version_at(&p, 28), PROTO_CHUNK_STREAMED);
+        push_proto_version(&mut p, PROTO_EPOCH_TAGGED);
+        assert_eq!(proto_version_at(&p, 28), PROTO_EPOCH_TAGGED);
+    }
+
+    #[test]
+    fn retired_versions_fall_below_proto_min() {
+        // Both pre-epoch generations are rejected by the PROTO_MIN gate.
+        assert!(PROTO_MONOLITHIC < PROTO_MIN);
+        assert!(PROTO_CHUNK_STREAMED < PROTO_MIN);
+        assert!(PROTO_MIN <= PROTO_MAX);
     }
 }

@@ -775,8 +775,12 @@ mod tests {
         let cs = pbox
             .clone()
             .with_ps(PsConfig::ColocatedSharded);
-        let r_pbox = ExchangeSim::new(&pbox, &d, ComputeEngine::new(Gpu::Gtx1080Ti), SimOpts::default()).run();
-        let r_cs = ExchangeSim::new(&cs, &d, ComputeEngine::new(Gpu::Gtx1080Ti), SimOpts::default()).run();
+        let r_pbox =
+            ExchangeSim::new(&pbox, &d, ComputeEngine::new(Gpu::Gtx1080Ti), SimOpts::default())
+                .run();
+        let r_cs =
+            ExchangeSim::new(&cs, &d, ComputeEngine::new(Gpu::Gtx1080Ti), SimOpts::default())
+                .run();
         // Non-colocated halves per-NIC stress (section 4.3.2).
         assert!(r_pbox.throughput > r_cs.throughput, "{r_pbox:?} vs {r_cs:?}");
     }

@@ -5,6 +5,8 @@ use std::sync::Arc;
 
 use phub::coordinator::aggregation::ChunkAggregator;
 use phub::coordinator::chunk::KeyTable;
+use phub::coordinator::compress::ChunkQuantizer;
+use phub::coordinator::engine::Reply;
 use phub::coordinator::mapping;
 use phub::coordinator::optimizer::{NesterovSgd, Optimizer, Sgd};
 use phub::coordinator::server::{PHubServer, ServerConfig, WorkerHandle};
@@ -98,12 +100,12 @@ fn prop_aggregation_order_independent() {
         let mut agg = ChunkAggregator::new(len, n);
         let mut ready = false;
         for &w in &order {
-            ready = agg.absorb(w, &grads[w]);
+            ready = agg.absorb(w, &grads[w]).map_err(|e| e.to_string())?;
         }
         if !ready {
             return Err("not ready after all workers".into());
         }
-        let mean = agg.take_mean();
+        let mean = agg.take_mean().map_err(|e| e.to_string())?;
         for i in 0..len {
             let expect: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / n as f32;
             if (mean[i] - expect).abs() > 1e-4 * expect.abs().max(1.0) {
@@ -381,10 +383,15 @@ fn prop_chunk_streaming_matches_monolithic() {
             }
             let mut model = vec![0.0f32; h.model_len()];
             for _ in 0..order.len() {
-                let r = h.recv_reply();
-                let (lo, hi) = h.chunk_range(r.chunk as usize);
-                model[lo..hi].copy_from_slice(&r.data);
+                match h.recv_reply() {
+                    Reply::Chunk { chunk, data, .. } => {
+                        let (lo, hi) = h.chunk_range(chunk as usize);
+                        model[lo..hi].copy_from_slice(&data);
+                    }
+                    other => panic!("unexpected reply {other:?}"),
+                }
             }
+            h.advance_round();
             model
         };
         let (b0, b1) = hb.split_at_mut(1);
@@ -401,6 +408,221 @@ fn prop_chunk_streaming_matches_monolithic() {
                 "streamed != monolithic (n={n} chunk={chunk} cores={cores})"
             ));
         }
+        Ok(())
+    });
+}
+
+/// Collect exactly one `epoch`-stamped reply per chunk for this worker,
+/// skipping anything left over from rolled-back rounds (stale chunk
+/// replies, rollback notices).
+fn collect_epoch(h: &WorkerHandle, epoch: u32) -> Vec<f32> {
+    let n_chunks = h.n_chunks();
+    let mut model = vec![0.0f32; h.model_len()];
+    let mut seen = vec![false; n_chunks];
+    let mut got = 0usize;
+    while got < n_chunks {
+        if let Reply::Chunk {
+            chunk,
+            epoch: e,
+            data,
+            ..
+        } = h.recv_reply()
+        {
+            let ci = chunk as usize;
+            if e != epoch || seen[ci] {
+                continue;
+            }
+            seen[ci] = true;
+            let (lo, hi) = h.chunk_range(ci);
+            model[lo..hi].copy_from_slice(&data);
+            got += 1;
+        }
+    }
+    model
+}
+
+/// Rollback equivalence (the tentpole's correctness bar): for any model /
+/// chunk geometry, core count, and worker count, a round that is
+/// partially pushed, rolled back with `rollback_round`, and then fully
+/// replayed produces parameters bit-identical to a clean round on a twin
+/// job. Pushes are issued worker-major in both jobs so every chunk sees
+/// the same absorb order (f32 addition is order-sensitive beyond two
+/// workers; the engine must not add any reordering of its own).
+#[test]
+fn prop_rollback_replay_bit_identical() {
+    check("rollback replay bit identical", 20, |rng: &mut Rng| {
+        let n_workers = rng.usize_in(2, 7);
+        let elems = rng.usize_in(1, 30) * 8;
+        let chunk = [4usize, 8, 16, 64][rng.usize_in(0, 4)].min(elems);
+        let cores = rng.usize_in(1, 5);
+        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let init = rng.vec_f32(elems, 1.0);
+        let opt = NesterovSgd {
+            lr: 0.05 + rng.f64() as f32 * 0.2,
+            momentum: rng.f64() as f32 * 0.9,
+        };
+        let ja = server.init_job(
+            KeyTable::flat(elems, chunk),
+            &init,
+            Arc::new(opt.clone()),
+            n_workers,
+        );
+        let jb = server.init_job(
+            KeyTable::flat(elems, chunk),
+            &init,
+            Arc::new(opt.clone()),
+            n_workers,
+        );
+        let grads: Vec<Vec<f32>> = (0..n_workers).map(|_| rng.vec_f32(elems, 1.0)).collect();
+
+        // Job A: a random partial round (worker-major), then rollback,
+        // then a full worker-major replay.
+        let mut ha: Vec<_> = (0..n_workers).map(|w| server.worker(ja, w)).collect();
+        let n_chunks = ha[0].n_chunks();
+        for (w, h) in ha.iter_mut().enumerate() {
+            for c in 0..n_chunks {
+                if rng.usize_in(0, 3) == 0 {
+                    let (lo, hi) = h.chunk_range(c);
+                    h.push_chunk(c as u32, grads[w][lo..hi].into(), true);
+                }
+            }
+        }
+        server.rollback_round(ja, 1);
+        for (w, h) in ha.iter_mut().enumerate() {
+            h.set_tag(1, 0);
+            for c in 0..n_chunks {
+                let (lo, hi) = h.chunk_range(c);
+                h.push_chunk(c as u32, grads[w][lo..hi].into(), true);
+            }
+        }
+        let models_a: Vec<Vec<f32>> = ha.iter().map(|h| collect_epoch(h, 1)).collect();
+
+        // Job B: one clean worker-major round.
+        let mut hb: Vec<_> = (0..n_workers).map(|w| server.worker(jb, w)).collect();
+        for (w, h) in hb.iter_mut().enumerate() {
+            for c in 0..n_chunks {
+                let (lo, hi) = h.chunk_range(c);
+                h.push_chunk(c as u32, grads[w][lo..hi].into(), true);
+            }
+        }
+        let models_b: Vec<Vec<f32>> = hb.iter().map(|h| collect_epoch(h, 0)).collect();
+
+        PHubServer::shutdown(server);
+        for w in 0..n_workers {
+            if models_a[w] != models_b[w] {
+                return Err(format!(
+                    "worker {w}: replayed round != clean round \
+                     (elems={elems} chunk={chunk} cores={cores} workers={n_workers})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized rollback equivalence: per-chunk error-feedback residuals
+/// live with the *worker*, and a replayed round re-applies the same
+/// dequantized bytes exactly once — so a run whose second round is
+/// interrupted and replayed matches a clean run bit-for-bit, residuals
+/// included (each round's gradients are quantized exactly once and the
+/// identical dequantized data drives both jobs).
+#[test]
+fn prop_rollback_replay_quantized_error_feedback() {
+    check("quant rollback error feedback", 15, |rng: &mut Rng| {
+        let n_workers = rng.usize_in(2, 5);
+        let elems = rng.usize_in(1, 16) * 8;
+        let chunk = [4usize, 8, 32][rng.usize_in(0, 3)].min(elems);
+        let cores = rng.usize_in(1, 4);
+        let threshold = 0.02 + rng.f64() as f32 * 0.1;
+        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let init = rng.vec_f32(elems, 0.5);
+        let opt = NesterovSgd {
+            lr: 0.1,
+            momentum: 0.9,
+        };
+        let ja = server.init_job(
+            KeyTable::flat(elems, chunk),
+            &init,
+            Arc::new(opt.clone()),
+            n_workers,
+        );
+        let jb = server.init_job(
+            KeyTable::flat(elems, chunk),
+            &init,
+            Arc::new(opt.clone()),
+            n_workers,
+        );
+        let mut ha: Vec<_> = (0..n_workers).map(|w| server.worker(ja, w)).collect();
+        let mut hb: Vec<_> = (0..n_workers).map(|w| server.worker(jb, w)).collect();
+        let n_chunks = ha[0].n_chunks();
+        let chunk_lens: Vec<usize> = (0..n_chunks)
+            .map(|c| {
+                let (lo, hi) = ha[0].chunk_range(c);
+                hi - lo
+            })
+            .collect();
+        // One client-side quantizer bank per worker, shared by both jobs:
+        // each round is quantized exactly once, like a real worker would.
+        let mut quants: Vec<ChunkQuantizer> = (0..n_workers)
+            .map(|_| ChunkQuantizer::new(&chunk_lens, threshold))
+            .collect();
+
+        for round in 0..2u64 {
+            // Sub-threshold gradients so only error feedback moves params.
+            let dq: Vec<Vec<Vec<f32>>> = (0..n_workers)
+                .map(|w| {
+                    let g = rng.vec_f32(elems, threshold * 0.9);
+                    (0..n_chunks)
+                        .map(|c| {
+                            let (lo, hi) = ha[0].chunk_range(c);
+                            quants[w].quantize_chunk(c, &g[lo..hi]).dequantize()
+                        })
+                        .collect()
+                })
+                .collect();
+
+            // Job A, round 1 only: partial push, rollback, full replay.
+            if round == 1 {
+                for (w, h) in ha.iter_mut().enumerate() {
+                    if w % 2 == 0 {
+                        h.push_chunk(0, dq[w][0].clone().into(), true);
+                    }
+                }
+                server.rollback_round(ja, 1);
+                for h in ha.iter_mut() {
+                    h.set_tag(1, round);
+                }
+            }
+            for (w, h) in ha.iter_mut().enumerate() {
+                for c in 0..n_chunks {
+                    h.push_chunk(c as u32, dq[w][c].clone().into(), true);
+                }
+            }
+            let epoch_a = if round == 1 { 1 } else { 0 };
+            let ma: Vec<Vec<f32>> = ha.iter().map(|h| collect_epoch(h, epoch_a)).collect();
+            for h in ha.iter_mut() {
+                h.advance_round();
+            }
+
+            // Job B: clean rounds from the same dequantized data.
+            for (w, h) in hb.iter_mut().enumerate() {
+                for c in 0..n_chunks {
+                    h.push_chunk(c as u32, dq[w][c].clone().into(), true);
+                }
+            }
+            let mb: Vec<Vec<f32>> = hb.iter().map(|h| collect_epoch(h, 0)).collect();
+            for h in hb.iter_mut() {
+                h.advance_round();
+            }
+
+            if ma != mb {
+                return Err(format!(
+                    "round {round}: interrupted quant run != clean run \
+                     (elems={elems} chunk={chunk} workers={n_workers})"
+                ));
+            }
+        }
+        PHubServer::shutdown(server);
         Ok(())
     });
 }

@@ -202,7 +202,8 @@ fn fig18_low_tenant_interference() {
 #[test]
 fn breakdown_phub_reduces_every_segment() {
     let d = Dnn::by_abbrev("AN").unwrap();
-    let mx = sim::breakdown::progressive(&mxnet_tcp(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
+    let mx =
+        sim::breakdown::progressive(&mxnet_tcp(NetConfig::infiniband_56g()), &d, Gpu::Gtx1080Ti);
     let ph = sim::breakdown::progressive(&testbed(), &d, Gpu::Gtx1080Ti);
     assert!(ph.data_copy_comm < mx.data_copy_comm);
     assert!(ph.aggregation <= mx.aggregation + 1e-9);

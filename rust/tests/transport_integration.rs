@@ -1,14 +1,19 @@
-//! Integration tests over the TCP transport: the protocol-version matrix
-//! (v0 monolithic vs v1 chunk-streamed), bit-identity of the two exchange
-//! patterns, and leader robustness under hostile clients. The in-module
-//! tests in `transport.rs` cover single-feature behavior; these exercise
-//! cross-version and multi-worker combinations end-to-end.
+//! Integration tests over the TCP transport: chunk-streamed exchange
+//! correctness across chunk geometries, leader robustness under hostile
+//! clients, and — the tentpole — mid-round worker death with rollback and
+//! successor recovery. The in-module tests in `transport.rs` cover
+//! single-feature behavior; these exercise multi-worker, multi-round
+//! combinations end-to-end.
 
 #![allow(clippy::useless_vec)]
 
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+
+use phub::coordinator::compress::ChunkQuantizer;
 use phub::coordinator::server::ServerConfig;
 use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
-use phub::coordinator::wire;
+use phub::coordinator::wire::{self, Frame, Op};
 
 fn spec(model: u64, chunk: u64, workers: u32) -> JobSpec {
     JobSpec {
@@ -27,25 +32,26 @@ fn grad(n: usize, w: usize, round: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Run `rounds` synchronous rounds with 2 workers on `proto`, returning
-/// the final model (asserting both workers agree bitwise).
+/// Run `rounds` synchronous rounds with 2 workers, returning the final
+/// model (asserting both workers agree bitwise). Gradients come from
+/// `grad(n, slot, round)`, keyed by the *leader-assigned* slot so an
+/// interrupted run and its clean twin feed identical data per seat.
 fn run_two_workers(
     addr: std::net::SocketAddr,
     job: u32,
     s: JobSpec,
-    proto: u32,
     rounds: usize,
     quant: Option<f32>,
 ) -> Vec<f32> {
     let n = s.model_elems as usize;
     let joins: Vec<_> = (0..2usize)
-        .map(|w| {
+        .map(|_| {
             std::thread::spawn(move || {
-                let mut worker = TcpWorker::connect_with_proto(addr, job, s, proto).unwrap();
-                assert_eq!(worker.proto(), proto.min(wire::PROTO_MAX));
+                let mut worker = TcpWorker::connect(addr, job, s).unwrap();
+                let slot = worker.slot as usize;
                 let mut model = Vec::new();
                 for r in 0..rounds {
-                    let g = grad(n, w, r);
+                    let g = grad(n, slot, r);
                     model = match quant {
                         Some(t) => worker.push_pull_quant(&g, t).unwrap(),
                         None => worker.push_pull(&g).unwrap(),
@@ -61,53 +67,24 @@ fn run_two_workers(
     models.into_iter().next().unwrap()
 }
 
-/// The tentpole's correctness bar: the chunk-streamed protocol produces
-/// bit-identical models to the monolithic one, dense and compressed, on a
-/// ragged multi-chunk layout.
+/// Chunk geometry must be invisible to training: the same job run with a
+/// multi-chunk ragged layout and with one whole-model chunk produces
+/// bit-identical models, dense and compressed (aggregation and per-chunk
+/// error feedback are both elementwise).
 #[test]
-fn streamed_and_monolithic_protocols_bit_identical() {
+fn chunk_geometry_does_not_change_the_bits() {
     let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 3 }).unwrap();
     let addr = leader.local_addr();
     // 300 elems at chunk 64 -> 5 chunks including a ragged 44-elem tail.
-    let s = spec(300, 64, 2);
-    let dense_v0 = run_two_workers(addr, 100, s, wire::PROTO_MONOLITHIC, 4, None);
-    let dense_v1 = run_two_workers(addr, 101, s, wire::PROTO_CHUNK_STREAMED, 4, None);
-    assert_eq!(dense_v0, dense_v1, "dense: v0 and v1 must agree bitwise");
+    let ragged = spec(300, 64, 2);
+    let single = spec(300, 300, 2);
+    let dense_r = run_two_workers(addr, 100, ragged, 4, None);
+    let dense_s = run_two_workers(addr, 101, single, 4, None);
+    assert_eq!(dense_r, dense_s, "dense: chunking must not change bits");
 
-    // Compressed path: per-chunk error feedback is elementwise identical
-    // to whole-model error feedback, so trajectories match bitwise too.
-    let quant_v0 = run_two_workers(addr, 102, s, wire::PROTO_MONOLITHIC, 6, Some(0.05));
-    let quant_v1 = run_two_workers(addr, 103, s, wire::PROTO_CHUNK_STREAMED, 6, Some(0.05));
-    assert_eq!(quant_v0, quant_v1, "quant: v0 and v1 must agree bitwise");
-}
-
-/// Old and new workers can share one job: the leader serves each
-/// connection at its own negotiated version against the same aggregation
-/// engine (the one-release compatibility window).
-#[test]
-fn mixed_version_workers_share_a_job() {
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
-    let addr = leader.local_addr();
-    let n = 256usize;
-    let s = spec(n as u64, 64, 2);
-    let joins: Vec<_> = [wire::PROTO_CHUNK_STREAMED, wire::PROTO_MONOLITHIC]
-        .into_iter()
-        .enumerate()
-        .map(|(w, proto)| {
-            std::thread::spawn(move || {
-                let mut worker = TcpWorker::connect_with_proto(addr, 7, s, proto).unwrap();
-                assert_eq!(worker.proto(), proto);
-                let mut model = Vec::new();
-                for r in 0..3 {
-                    model = worker.push_pull(&grad(n, w, r)).unwrap();
-                }
-                worker.bye();
-                model
-            })
-        })
-        .collect();
-    let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
-    assert_eq!(models[0], models[1], "mixed-version workers agree bitwise");
+    let quant_r = run_two_workers(addr, 102, ragged, 6, Some(0.05));
+    let quant_s = run_two_workers(addr, 103, single, 6, Some(0.05));
+    assert_eq!(quant_r, quant_s, "quant: chunking must not change bits");
 }
 
 /// Streamed exchange at a worker count and chunk count big enough to get
@@ -163,9 +140,6 @@ fn hostile_hello_while_other_tenants_train() {
 
     // Hostile rendezvous attempts, raw on the socket (the client-side
     // validation in `TcpWorker::connect` would refuse to send these).
-    use phub::coordinator::wire::{Frame, Op};
-    use std::io::{BufWriter, Read};
-    use std::net::TcpStream;
     for bad in [
         spec(128, 64, 0),   // zero workers
         spec(128, 64, 100), // > 64 workers
@@ -175,13 +149,15 @@ fn hostile_hello_while_other_tenants_train() {
     ] {
         let mut stream = TcpStream::connect(addr).unwrap();
         let mut wr = BufWriter::new(stream.try_clone().unwrap());
+        let mut payload = bad.to_bytes();
+        wire::push_proto_version(&mut payload, wire::PROTO_EPOCH_TAGGED);
         wire::write_frame(
             &mut wr,
             &Frame {
                 op: Op::Hello,
                 job: 60,
                 worker: 0,
-                payload: bad.to_bytes(),
+                payload,
             },
         )
         .unwrap();
@@ -202,4 +178,259 @@ fn hostile_hello_while_other_tenants_train() {
     let mut w2 = TcpWorker::connect(addr, 61, spec(32, 32, 1)).unwrap();
     assert_eq!(w2.push_pull(&vec![0.0; 32]).unwrap().len(), 32);
     w2.bye();
+}
+
+/// A raw worker for failure injection: speaks just enough of the wire
+/// protocol to run clean rounds and then die at a chosen point.
+struct RawWorker {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    job: u32,
+    slot: u32,
+    epoch: u32,
+    chunks: Vec<(usize, usize)>, // (offset, len) per chunk
+}
+
+impl RawWorker {
+    fn connect(addr: std::net::SocketAddr, job: u32, s: JobSpec) -> RawWorker {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = RawWorker {
+            reader,
+            writer: BufWriter::new(stream),
+            job,
+            slot: 0,
+            epoch: 0,
+            chunks: (0..s.model_elems)
+                .step_by(s.chunk_elems as usize)
+                .map(|o| {
+                    (
+                        o as usize,
+                        (s.chunk_elems.min(s.model_elems - o)) as usize,
+                    )
+                })
+                .collect(),
+        };
+        let mut payload = s.to_bytes();
+        wire::push_proto_version(&mut payload, wire::PROTO_EPOCH_TAGGED);
+        wire::write_frame(
+            &mut w.writer,
+            &Frame {
+                op: Op::Hello,
+                job,
+                worker: 0,
+                payload,
+            },
+        )
+        .unwrap();
+        let welcome = wire::read_frame(&mut w.reader).unwrap();
+        assert_eq!(welcome.op, Op::Welcome);
+        w.slot = welcome.worker;
+        w.epoch = u32::from_le_bytes(welcome.payload[4..8].try_into().unwrap());
+        w
+    }
+
+    /// Push chunk `c` of `g` (dense or pre-encoded bytes).
+    fn push_chunk_bytes(&mut self, c: usize, bytes: &[u8], op: Op) {
+        let (off, _) = self.chunks[c];
+        wire::write_chunk_frame_buffered(
+            &mut self.writer,
+            op,
+            self.job,
+            self.slot,
+            c as u32,
+            self.epoch,
+            off as u64,
+            bytes,
+        )
+        .unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// One full clean dense round: push every chunk, read every reply.
+    fn full_round(&mut self, g: &[f32]) {
+        for c in 0..self.chunks.len() {
+            let (off, len) = self.chunks[c];
+            self.push_chunk_bytes(c, &wire::f32s_to_bytes(&g[off..off + len]), Op::PushChunk);
+        }
+        let mut got = 0;
+        while got < self.chunks.len() {
+            let f = wire::read_frame(&mut self.reader).unwrap();
+            assert_eq!(f.op, Op::ModelChunk, "clean round expects model chunks");
+            got += 1;
+        }
+    }
+}
+
+/// The tentpole's acceptance bar: a worker killed *mid-round* (after a
+/// clean first round, partway through its second) no longer wedges the
+/// job. The leader rolls the round back, the survivor transparently
+/// replays it, a successor takes the dead worker's seat and finishes
+/// training — and the final parameters are bit-identical to a run that
+/// was never interrupted.
+#[test]
+fn worker_killed_mid_round_successor_recovers_bit_identical() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let addr = leader.local_addr();
+    let n = 256usize;
+    let s = spec(n as u64, 64, 2); // 4 chunks
+    let rounds = 3usize;
+    let job = 200u32;
+
+    // Victim connects first (slot 0), survivor second (slot 1).
+    let mut victim = RawWorker::connect(addr, job, s);
+    assert_eq!(victim.slot, 0);
+    let survivor = std::thread::spawn(move || {
+        let mut w = TcpWorker::connect(addr, job, s).unwrap();
+        assert_eq!(w.slot, 1);
+        let mut model = Vec::new();
+        for r in 0..rounds {
+            // Round 1 is interrupted under this worker's feet: push_pull
+            // sees a RollbackRound frame and replays internally.
+            model = w.push_pull(&grad(n, 1, r)).unwrap();
+        }
+        w.bye();
+        model
+    });
+
+    // Victim: clean round 0, then die after pushing 1 of 4 chunks of
+    // round 1.
+    victim.full_round(&grad(n, 0, 0));
+    let g1 = grad(n, 0, 1);
+    let (off, len) = victim.chunks[0];
+    victim.push_chunk_bytes(0, &wire::f32s_to_bytes(&g1[off..off + len]), Op::PushChunk);
+    drop(victim); // no Bye: a crash mid-round
+
+    // Successor: takes slot 0 once the leader has noticed the death and
+    // rolled the round back, then finishes rounds 1..3 with the same
+    // per-seat gradients the victim would have pushed.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut successor = loop {
+        match TcpWorker::connect(addr, job, s) {
+            Ok(w) => break w,
+            Err(_) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "dead worker's slot never recycled"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(successor.slot, 0, "successor takes the dead worker's seat");
+    assert_eq!(successor.epoch(), 1, "welcome carries the bumped epoch");
+    assert_eq!(
+        successor.rounds_done(),
+        1,
+        "welcome tells the successor where its predecessor left off"
+    );
+    let mut succ_model = Vec::new();
+    for r in successor.rounds_done() as usize..rounds {
+        succ_model = successor.push_pull(&grad(n, 0, r)).unwrap();
+    }
+    successor.bye();
+    let surv_model = survivor.join().unwrap();
+    assert_eq!(surv_model, succ_model, "survivor and successor agree");
+
+    // Uninterrupted twin job: identical gradients, no failure.
+    let clean = run_two_workers(addr, 201, s, rounds, None);
+    assert_eq!(
+        surv_model, clean,
+        "recovered run must be bit-identical to the uninterrupted run"
+    );
+}
+
+/// Quantized recovery: the survivor's round is rolled back and replayed
+/// *without re-quantizing* — its per-chunk error-feedback residuals
+/// advance exactly once per round — and the successor starts from fresh
+/// residuals exactly like the worker it replaces would have at round 0.
+/// End state must be bit-identical to an uninterrupted compressed run.
+#[test]
+fn quantized_worker_killed_mid_round_recovers_bit_identical() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let addr = leader.local_addr();
+    let n = 128usize;
+    let s = spec(n as u64, 64, 2); // 2 chunks
+    let rounds = 4usize;
+    let t = 0.05f32;
+    let job = 210u32;
+    // Sub-threshold gradients: progress exists only through error
+    // feedback, so any double-advanced residual shows up in the bits.
+    let qgrad = move |slot: usize, r: usize| -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                0.6 * t * (1.0 + 0.1 * slot as f32) + 0.001 * (i % 7) as f32 + 0.002 * r as f32
+            })
+            .collect()
+    };
+
+    // Victim (slot 0): pushes one *quantized* chunk of round 0, dies.
+    let mut victim = RawWorker::connect(addr, job, s);
+    assert_eq!(victim.slot, 0);
+    let survivor = std::thread::spawn(move || {
+        let mut w = TcpWorker::connect(addr, job, s).unwrap();
+        assert_eq!(w.slot, 1);
+        let mut model = Vec::new();
+        for r in 0..rounds {
+            model = w.push_pull_quant(&qgrad(1, r), t).unwrap();
+        }
+        w.bye();
+        model
+    });
+    let g0 = qgrad(0, 0);
+    let (off, len) = victim.chunks[0];
+    let mut vq = ChunkQuantizer::new(&[len, len], t);
+    let bytes = vq.quantize_chunk(0, &g0[off..off + len]).to_bytes();
+    victim.push_chunk_bytes(0, &bytes, Op::PushChunkQuant);
+    drop(victim);
+
+    // Successor restarts seat 0 from round 0 with fresh residuals — the
+    // same state the dead worker had when it first quantized round 0.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut successor = loop {
+        match TcpWorker::connect(addr, job, s) {
+            Ok(w) => break w,
+            Err(_) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "dead worker's slot never recycled"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(successor.slot, 0);
+    let mut succ_model = Vec::new();
+    for r in 0..rounds {
+        succ_model = successor.push_pull_quant(&qgrad(0, r), t).unwrap();
+    }
+    successor.bye();
+    let surv_model = survivor.join().unwrap();
+    assert_eq!(surv_model, succ_model, "survivor and successor agree");
+
+    // Uninterrupted compressed twin with the same per-seat gradients.
+    let clean_q = {
+        let job = 212u32;
+        let joins: Vec<_> = (0..2usize)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(addr, job, s).unwrap();
+                    let slot = w.slot as usize;
+                    let mut model = Vec::new();
+                    for r in 0..rounds {
+                        model = w.push_pull_quant(&qgrad(slot, r), t).unwrap();
+                    }
+                    w.bye();
+                    model
+                })
+            })
+            .collect();
+        let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(models[0], models[1]);
+        models.into_iter().next().unwrap()
+    };
+    assert_eq!(
+        surv_model, clean_q,
+        "recovered compressed run must be bit-identical to the clean run"
+    );
 }
