@@ -1,0 +1,254 @@
+//! End-to-end chunk-round data-plane bench (run via `cargo bench --bench
+//! dataplane`).
+//!
+//! Measures the leader-shaped push → aggregate → fused-optimize → reply
+//! path over pre-encoded wire frames, comparing:
+//!
+//! * **vec path** — the pre-refactor shape: owning `read_frame`,
+//!   `bytes_to_f32s` into a fresh `Vec<f32>`, slice absorb, unfused
+//!   `take_mean` + optimizer step, reply via `f32s_to_bytes`.
+//! * **pooled path** — the allocation-free shape: pooled
+//!   `read_frame_into`, byte-level absorb fold, fused
+//!   `take_mean_into_step` + `step_scaled`, reply serialized straight
+//!   from a pooled parameter buffer.
+//!
+//! Reports aggregation throughput (gradient GB/s) and allocations per
+//! round via a counting global allocator, then emits a single-line JSON
+//! summary (last stdout line) suitable for `BENCH_dataplane.json`
+//! trajectory tracking.
+//!
+//! Results feed EXPERIMENTS.md section Perf.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Cursor;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::coordinator::aggregation::{ChunkAggregator, GradSrc};
+use phub::coordinator::engine::{PushOutcome, RoundTag, ShardEngine};
+use phub::coordinator::optimizer::{NesterovSgd, Optimizer};
+use phub::coordinator::pool::{BytePool, F32Pool, Pool};
+use phub::coordinator::wire::{self, Op};
+use phub::prop::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const JOB: u32 = 1;
+const WORKERS: usize = 4;
+const CHUNKS: usize = 32;
+const CHUNK_ELEMS: usize = 8192;
+const ROUNDS: usize = 30;
+
+/// One round of worker-major PushChunk frames as raw wire bytes.
+fn encode_round(rng: &mut Rng) -> Vec<u8> {
+    let mut out = Vec::new();
+    for w in 0..WORKERS {
+        for c in 0..CHUNKS {
+            let grad = rng.vec_f32(CHUNK_ELEMS, 1.0);
+            wire::write_chunk_frame_f32s(
+                &mut out,
+                Op::PushChunk,
+                JOB,
+                w as u32,
+                c as u32,
+                0,
+                (c * CHUNK_ELEMS) as u64,
+                &grad,
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+fn engine_with_job() -> ShardEngine {
+    let mut eng = ShardEngine::new();
+    let chunks: Vec<(u32, Vec<f32>)> = (0..CHUNKS)
+        .map(|c| (c as u32, vec![0.1f32; CHUNK_ELEMS]))
+        .collect();
+    let (tx, _rx) = channel();
+    eng.init_job(
+        JOB,
+        chunks,
+        Arc::new(NesterovSgd {
+            lr: 0.01,
+            momentum: 0.9,
+        }),
+        WORKERS,
+        vec![tx; WORKERS],
+    );
+    eng
+}
+
+/// The pre-refactor path: every frame decoded into fresh vectors, mean
+/// and optimizer as two separate passes, replies via `f32s_to_bytes`.
+fn bench_vec_path(frames: &[u8]) -> (f64, f64) {
+    let opt = NesterovSgd {
+        lr: 0.01,
+        momentum: 0.9,
+    };
+    let mut aggs: Vec<ChunkAggregator> = (0..CHUNKS)
+        .map(|_| ChunkAggregator::new(CHUNK_ELEMS, WORKERS))
+        .collect();
+    let mut params = vec![0.1f32; CHUNKS * CHUNK_ELEMS];
+    let mut state = vec![0.0f32; CHUNKS * CHUNK_ELEMS];
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..ROUNDS {
+        let mut cur = Cursor::new(frames);
+        for _ in 0..WORKERS * CHUNKS {
+            let f = wire::read_frame(&mut cur).unwrap();
+            let (chunk, _epoch, _off, bytes) = wire::decode_chunk_payload(&f.payload).unwrap();
+            let grad = wire::bytes_to_f32s(bytes).unwrap();
+            let ci = chunk as usize;
+            let done = aggs[ci].absorb(f.worker as usize, &grad).unwrap();
+            if done {
+                let lo = ci * CHUNK_ELEMS;
+                let hi = lo + CHUNK_ELEMS;
+                let mean: Vec<f32> = aggs[ci].take_mean().unwrap().to_vec();
+                opt.step(&mut params[lo..hi], &mut state[lo..hi], &mean);
+                let _reply = wire::f32s_to_bytes(&params[lo..hi]);
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / ROUNDS as f64;
+    (dt, allocs)
+}
+
+/// The pooled path: exactly the steady-state leader loop (see
+/// `rust/tests/alloc_discipline.rs`, which asserts its allocation count
+/// is zero).
+fn bench_pooled_path(frames: &[u8]) -> (f64, f64) {
+    let mut eng = engine_with_job();
+    let pool: Arc<BytePool> = Pool::new(16);
+    let fpool: Arc<F32Pool> = Pool::new(16);
+    let mut ready: Vec<u8> = Vec::new();
+    // Warm the pools and slot state with one untimed round.
+    run_pooled_round(frames, &mut eng, &pool, &fpool, &mut ready, 0);
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for r in 0..ROUNDS {
+        run_pooled_round(frames, &mut eng, &pool, &fpool, &mut ready, (r + 1) as u64);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / ROUNDS as f64;
+    (dt, allocs)
+}
+
+fn run_pooled_round(
+    frames: &[u8],
+    eng: &mut ShardEngine,
+    pool: &Arc<BytePool>,
+    fpool: &Arc<F32Pool>,
+    ready: &mut Vec<u8>,
+    round: u64,
+) {
+    let tag = RoundTag::new(0, round);
+    let mut cur = Cursor::new(frames);
+    for _ in 0..WORKERS * CHUNKS {
+        let mut fb = pool.take();
+        let (chunk, worker) = {
+            let v = wire::read_frame_into(&mut cur, &mut fb).unwrap();
+            let (chunk, _epoch, _off, _bytes) = wire::decode_chunk_payload(v.payload).unwrap();
+            (chunk, v.worker)
+        };
+        let bytes = &fb[wire::CHUNK_PREFIX_BYTES..];
+        let outcome = eng
+            .push_src(JOB, chunk, worker, GradSrc::LeBytes(bytes), false, tag)
+            .unwrap();
+        if outcome == PushOutcome::Completed {
+            let params = eng.chunk_params(JOB, chunk).unwrap();
+            let mut rb = fpool.take();
+            rb.extend_from_slice(params);
+            ready.clear();
+            wire::write_chunk_frame_f32s(
+                ready,
+                Op::ModelChunk,
+                JOB,
+                0,
+                chunk,
+                0,
+                chunk as u64 * CHUNK_ELEMS as u64,
+                &rb,
+            )
+            .unwrap();
+        }
+    }
+}
+
+fn main() {
+    let grad_bytes_per_round = (WORKERS * CHUNKS * CHUNK_ELEMS * 4) as f64;
+    println!(
+        "== dataplane: {CHUNKS} x {CHUNK_ELEMS}-elem chunks ({} MB model), \
+         {WORKERS} workers, {ROUNDS} rounds ==",
+        CHUNKS * CHUNK_ELEMS * 4 >> 20
+    );
+    let mut rng = Rng::new(11);
+    let frames = encode_round(&mut rng);
+
+    // Interleave warm-up and measurement so both paths see warm caches.
+    let _ = bench_vec_path(&frames);
+    let (vec_dt, vec_allocs) = bench_vec_path(&frames);
+    let _ = bench_pooled_path(&frames);
+    let (pooled_dt, pooled_allocs) = bench_pooled_path(&frames);
+
+    let gbps = |dt: f64| grad_bytes_per_round * ROUNDS as f64 / dt / 1e9;
+    let vec_gbps = gbps(vec_dt);
+    let pooled_gbps = gbps(pooled_dt);
+    println!(
+        "  vec path    (read_frame + bytes_to_f32s + unfused): \
+         {vec_gbps:>7.2} GB/s, {vec_allocs:>8.1} allocs/round"
+    );
+    println!(
+        "  pooled path (read_frame_into + byte fold + fused):  \
+         {pooled_gbps:>7.2} GB/s, {pooled_allocs:>8.1} allocs/round"
+    );
+    println!(
+        "  speedup: {:+.1}%  alloc reduction: {:.1}x",
+        (pooled_gbps / vec_gbps - 1.0) * 100.0,
+        if pooled_allocs > 0.0 {
+            vec_allocs / pooled_allocs
+        } else {
+            f64::INFINITY
+        }
+    );
+    println!("dataplane OK");
+    // Single-line JSON summary for BENCH_dataplane.json trajectory
+    // tracking (keep last on stdout).
+    println!(
+        "{{\"bench\":\"dataplane\",\"chunks\":{CHUNKS},\"chunk_elems\":{CHUNK_ELEMS},\
+         \"workers\":{WORKERS},\"rounds\":{ROUNDS},\
+         \"vec_gbps\":{vec_gbps:.3},\"pooled_gbps\":{pooled_gbps:.3},\
+         \"vec_allocs_per_round\":{vec_allocs:.1},\
+         \"pooled_allocs_per_round\":{pooled_allocs:.1}}}"
+    );
+}

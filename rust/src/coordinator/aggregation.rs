@@ -12,24 +12,173 @@
 //! (see [`super::engine`]), and a hostile or buggy peer must only ever be
 //! able to kill its own connection, never a core. The inner loops keep
 //! `debug_assert!`s for the hot path instead of release-mode checks.
+//!
+//! # Memory discipline
+//!
+//! The pipeline is memory-bandwidth-bound (paper §4.3), so the aggregator
+//! is built to touch each gradient byte exactly once and allocate nothing
+//! at steady state:
+//!
+//! * [`GradSrc`] lets a push be absorbed straight from its wire form. The
+//!   TCP leader hands the pooled frame payload to the core and
+//!   [`ChunkAggregator::absorb_bytes`] folds `f32::from_le_bytes` (a pure
+//!   bit reinterpretation) directly into the accumulate loop — the
+//!   intermediate `Vec<f32>` the old `bytes_to_f32s` path materialized is
+//!   gone. The 2-bit path does the same: dequantization folds into the
+//!   accumulate ([`ChunkAggregator::absorb_quant`]), no dense scratch
+//!   vector. The slice-based [`ChunkAggregator::absorb`] remains for the
+//!   in-process server; the byte paths are bit-identical to it
+//!   (property-tested, NaN/inf payloads included — `from_le_bytes`
+//!   preserves every bit pattern).
+//! * A round's gradient is touched twice total: once by the absorb fold,
+//!   once by the fused mean+optimizer pass
+//!   ([`ChunkAggregator::take_mean_into_step`]), which hands the raw sum
+//!   and `1/n` to the optimizer's single fused loop instead of
+//!   materializing the mean with a separate `scale` pass. Bit-identical
+//!   to the unfused `take_mean` → `step` sequence (property-tested).
+//! * The inner loops are lane-chunked (8 wide) so the autovectorizer can
+//!   lift them to SIMD; the environment has no intrinsics toolchain, so
+//!   explicit vector code is out of scope (see ROADMAP).
+//!
+//! Copies per chunk per round (leader receive side), before → after this
+//! refactor: frame body `Vec` + payload re-slice `Vec` + `bytes_to_f32s`
+//! `Vec` + accumulate (3 copies, ≥3 allocations) → pooled frame read +
+//! accumulate fold (1 copy, 0 allocations at steady state).
 
 use std::fmt;
+
+/// Lane width of the chunked inner loops. Eight f32s = one 256-bit
+/// vector; the fixed-size inner loops below are shaped for the
+/// autovectorizer, not unrolling by hand.
+const LANES: usize = 8;
 
 /// `acc += src`, the aggregation inner loop. Kept as a free function so
 /// benches can target it directly; the optimizer pass reuses it.
 #[inline]
 pub fn add_assign(acc: &mut [f32], src: &[f32]) {
     debug_assert_eq!(acc.len(), src.len());
-    for (a, s) in acc.iter_mut().zip(src) {
-        *a += s;
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (aa, ss) in (&mut a).zip(&mut s) {
+        for i in 0..LANES {
+            aa[i] += ss[i];
+        }
+    }
+    for (aa, ss) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *aa += ss;
     }
 }
 
 /// `v *= k` (mean scaling).
 #[inline]
 pub fn scale(v: &mut [f32], k: f32) {
-    for x in v.iter_mut() {
+    let mut c = v.chunks_exact_mut(LANES);
+    for vv in &mut c {
+        for x in vv.iter_mut() {
+            *x *= k;
+        }
+    }
+    for x in c.into_remainder() {
         *x *= k;
+    }
+}
+
+/// `dst = le_bytes` reinterpreted as little-endian f32s (bit-exact; NaN
+/// payloads survive). `le_bytes.len()` must be `4 * dst.len()`.
+#[inline]
+pub fn copy_f32s_le(dst: &mut [f32], le_bytes: &[u8]) {
+    debug_assert_eq!(le_bytes.len(), dst.len() * 4);
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = le_bytes.chunks_exact(LANES * 4);
+    for (dd, ss) in (&mut d).zip(&mut s) {
+        for i in 0..LANES {
+            dd[i] = f32::from_le_bytes(ss[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+    }
+    for (dd, ss) in d
+        .into_remainder()
+        .iter_mut()
+        .zip(s.remainder().chunks_exact(4))
+    {
+        *dd = f32::from_le_bytes(ss.try_into().unwrap());
+    }
+}
+
+/// `acc += le_bytes` reinterpreted as little-endian f32s: the byte-level
+/// aggregation fold — decode and accumulate in one pass, no intermediate
+/// f32 vector. Bit-identical to `bytes_to_f32s` + [`add_assign`].
+#[inline]
+pub fn add_assign_le(acc: &mut [f32], le_bytes: &[u8]) {
+    debug_assert_eq!(le_bytes.len(), acc.len() * 4);
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut s = le_bytes.chunks_exact(LANES * 4);
+    for (aa, ss) in (&mut a).zip(&mut s) {
+        for i in 0..LANES {
+            aa[i] += f32::from_le_bytes(ss[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+    }
+    for (aa, ss) in a
+        .into_remainder()
+        .iter_mut()
+        .zip(s.remainder().chunks_exact(4))
+    {
+        *aa += f32::from_le_bytes(ss.try_into().unwrap());
+    }
+}
+
+/// Decode one 2-bit level (encoding 0b00 = 0, 0b01 = +t, 0b10 = -t).
+#[inline(always)]
+fn dequant_level(threshold: f32, code: u8) -> f32 {
+    match code & 0b11 {
+        0b01 => threshold,
+        0b10 => -threshold,
+        _ => 0.0,
+    }
+}
+
+/// `dst = dequantize(packed)`: 4 levels per byte, `packed.len()` must be
+/// `dst.len().div_ceil(4)`. The single home of the 2-bit decode mapping —
+/// `QuantGrad::dequantize` delegates here.
+#[inline]
+pub fn copy_dequant(dst: &mut [f32], threshold: f32, packed: &[u8]) {
+    debug_assert_eq!(packed.len(), dst.len().div_ceil(4));
+    // Split at a lane boundary explicitly: the tail's packed bytes start
+    // at `main / 4` (exact, since `main` is a multiple of LANES).
+    let main = dst.len() / LANES * LANES;
+    let (dm, dr) = dst.split_at_mut(main);
+    for (dd, pp) in dm
+        .chunks_exact_mut(LANES)
+        .zip(packed[..main / 4].chunks_exact(LANES / 4))
+    {
+        for i in 0..LANES {
+            dd[i] = dequant_level(threshold, pp[i / 4] >> ((i % 4) * 2));
+        }
+    }
+    let pr = &packed[main / 4..];
+    for (i, x) in dr.iter_mut().enumerate() {
+        *x = dequant_level(threshold, pr[i / 4] >> ((i % 4) * 2));
+    }
+}
+
+/// `acc += dequantize(packed)`: dequantization folded into the
+/// accumulate — the 2-bit wire path never materializes a dense scratch
+/// vector. Bit-identical to `dequantize` + [`add_assign`].
+#[inline]
+pub fn add_assign_dequant(acc: &mut [f32], threshold: f32, packed: &[u8]) {
+    debug_assert_eq!(packed.len(), acc.len().div_ceil(4));
+    let main = acc.len() / LANES * LANES;
+    let (am, ar) = acc.split_at_mut(main);
+    for (aa, pp) in am
+        .chunks_exact_mut(LANES)
+        .zip(packed[..main / 4].chunks_exact(LANES / 4))
+    {
+        for i in 0..LANES {
+            aa[i] += dequant_level(threshold, pp[i / 4] >> ((i % 4) * 2));
+        }
+    }
+    let pr = &packed[main / 4..];
+    for (i, x) in ar.iter_mut().enumerate() {
+        *x += dequant_level(threshold, pr[i / 4] >> ((i % 4) * 2));
     }
 }
 
@@ -37,6 +186,51 @@ pub fn scale(v: &mut [f32], k: f32) {
 /// u64. Single source of truth: the service and transport edges validate
 /// against this before anything reaches the aggregator.
 pub const MAX_WORKERS: usize = 64;
+
+/// One worker's chunk gradient in whatever form it arrived — the
+/// aggregator absorbs each form directly, so the transport never has to
+/// materialize an intermediate `Vec<f32>` to push.
+#[derive(Debug, Clone, Copy)]
+pub enum GradSrc<'a> {
+    /// Decoded f32 slice (the in-process server's zero-copy path).
+    F32s(&'a [f32]),
+    /// Raw little-endian f32 bytes straight off the wire.
+    LeBytes(&'a [u8]),
+    /// 2-bit quantized levels straight off the wire: threshold, element
+    /// count, and the packed levels (4 per byte).
+    Quant2Bit {
+        threshold: f32,
+        len: usize,
+        packed: &'a [u8],
+    },
+}
+
+impl GradSrc<'_> {
+    /// Gradient length in elements, or a typed error for a malformed
+    /// payload (misaligned dense bytes, short/long packed levels).
+    pub fn elems(&self) -> Result<usize, AggError> {
+        match *self {
+            GradSrc::F32s(g) => Ok(g.len()),
+            GradSrc::LeBytes(b) => {
+                if b.len() % 4 != 0 {
+                    Err(AggError::MisalignedBytes { bytes: b.len() })
+                } else {
+                    Ok(b.len() / 4)
+                }
+            }
+            GradSrc::Quant2Bit { len, packed, .. } => {
+                if packed.len() != len.div_ceil(4) {
+                    Err(AggError::QuantPayloadMismatch {
+                        packed: packed.len(),
+                        want: len.div_ceil(4),
+                    })
+                } else {
+                    Ok(len)
+                }
+            }
+        }
+    }
+}
 
 /// A round-protocol violation detected by the aggregator.
 ///
@@ -48,6 +242,11 @@ pub enum AggError {
     WorkerOutOfRange { worker: usize, n_workers: usize },
     /// Gradient length does not match the chunk length.
     LengthMismatch { got: usize, want: usize },
+    /// A dense byte payload whose length is not a multiple of 4.
+    MisalignedBytes { bytes: usize },
+    /// A 2-bit payload whose packed length disagrees with its element
+    /// count.
+    QuantPayloadMismatch { packed: usize, want: usize },
     /// The same worker pushed twice in one round.
     DuplicatePush { worker: usize },
     /// `take_mean` before every worker's gradient arrived.
@@ -62,6 +261,12 @@ impl fmt::Display for AggError {
             }
             AggError::LengthMismatch { got, want } => {
                 write!(f, "chunk length mismatch: got {got}, want {want}")
+            }
+            AggError::MisalignedBytes { bytes } => {
+                write!(f, "dense payload of {bytes} bytes is not f32-aligned")
+            }
+            AggError::QuantPayloadMismatch { packed, want } => {
+                write!(f, "quant payload has {packed} packed bytes, want {want}")
             }
             AggError::DuplicatePush { worker } => {
                 write!(f, "duplicate push from worker {worker} in one round")
@@ -110,23 +315,30 @@ impl ChunkAggregator {
         self.seen.count_ones() as usize
     }
 
-    /// Absorb worker `w`'s gradient for this chunk. Returns `Ok(true)` when
-    /// all workers have been absorbed (the chunk is ready to optimize).
+    /// Absorb worker `w`'s gradient for this chunk, in whatever wire form
+    /// it arrived (see [`GradSrc`]). Returns `Ok(true)` when all workers
+    /// have been absorbed (the chunk is ready to optimize).
+    ///
+    /// The first arrival of a round *copies* (decodes) into the buffer
+    /// instead of adding — the buffer may hold the previous round's stale
+    /// sums — and every later arrival folds its decode directly into the
+    /// accumulate loop.
     ///
     /// A duplicate push from the same worker in one round is a protocol
     /// violation upstream (the PS must see exactly one gradient per worker
     /// per round) and comes back as [`AggError::DuplicatePush`] — the
     /// caller decides whose connection that costs.
-    pub fn absorb(&mut self, w: usize, grad: &[f32]) -> Result<bool, AggError> {
+    pub fn absorb_src(&mut self, w: usize, src: GradSrc<'_>) -> Result<bool, AggError> {
         if w >= self.n_workers {
             return Err(AggError::WorkerOutOfRange {
                 worker: w,
                 n_workers: self.n_workers,
             });
         }
-        if grad.len() != self.acc.len() {
+        let len = src.elems()?;
+        if len != self.acc.len() {
             return Err(AggError::LengthMismatch {
-                got: grad.len(),
+                got: len,
                 want: self.acc.len(),
             });
         }
@@ -134,19 +346,77 @@ impl ChunkAggregator {
         if self.seen & bit != 0 {
             return Err(AggError::DuplicatePush { worker: w });
         }
-        if self.seen == 0 {
-            // First arrival: copy instead of add (buffer may hold stale sums).
-            self.acc.copy_from_slice(grad);
-        } else {
-            add_assign(&mut self.acc, grad);
+        let first = self.seen == 0;
+        match src {
+            GradSrc::F32s(g) => {
+                if first {
+                    self.acc.copy_from_slice(g);
+                } else {
+                    add_assign(&mut self.acc, g);
+                }
+            }
+            GradSrc::LeBytes(b) => {
+                if first {
+                    copy_f32s_le(&mut self.acc, b);
+                } else {
+                    add_assign_le(&mut self.acc, b);
+                }
+            }
+            GradSrc::Quant2Bit {
+                threshold, packed, ..
+            } => {
+                if first {
+                    copy_dequant(&mut self.acc, threshold, packed);
+                } else {
+                    add_assign_dequant(&mut self.acc, threshold, packed);
+                }
+            }
         }
         self.seen |= bit;
         Ok(self.arrived() == self.n_workers)
     }
 
+    /// Slice-form [`ChunkAggregator::absorb_src`] (the in-process server's
+    /// path).
+    pub fn absorb(&mut self, w: usize, grad: &[f32]) -> Result<bool, AggError> {
+        self.absorb_src(w, GradSrc::F32s(grad))
+    }
+
+    /// Byte-form [`ChunkAggregator::absorb_src`]: the wire hot path —
+    /// `le_bytes` is the dense frame payload, decoded inside the
+    /// accumulate fold. Bit-identical to `absorb(bytes_to_f32s(..))`.
+    pub fn absorb_bytes(&mut self, w: usize, le_bytes: &[u8]) -> Result<bool, AggError> {
+        self.absorb_src(w, GradSrc::LeBytes(le_bytes))
+    }
+
+    /// 2-bit-form [`ChunkAggregator::absorb_src`]: dequantization folded
+    /// into the accumulate. Bit-identical to `absorb(&q.dequantize())`.
+    pub fn absorb_quant(
+        &mut self,
+        w: usize,
+        threshold: f32,
+        len: usize,
+        packed: &[u8],
+    ) -> Result<bool, AggError> {
+        self.absorb_src(
+            w,
+            GradSrc::Quant2Bit {
+                threshold,
+                len,
+                packed,
+            },
+        )
+    }
+
     /// Finish the round: scale the sum to a mean, reset arrival state, and
     /// expose the mean for the optimizer. The returned slice is valid until
     /// the next `absorb`.
+    ///
+    /// This is the *unfused* finish (two passes: scale, then the caller's
+    /// optimizer step). The engine uses
+    /// [`ChunkAggregator::take_mean_into_step`], which does both in one
+    /// pass; this form remains for callers that want the mean itself and
+    /// as the reference the fused path is property-tested against.
     pub fn take_mean(&mut self) -> Result<&[f32], AggError> {
         if self.arrived() != self.n_workers {
             return Err(AggError::NotReady {
@@ -157,6 +427,32 @@ impl ChunkAggregator {
         scale(&mut self.acc, 1.0 / self.n_workers as f32);
         self.seen = 0;
         Ok(&self.acc)
+    }
+
+    /// Fused finish: close the round and hand `(sum, 1/n)` to `step` —
+    /// one pass over the accumulator instead of a scale pass followed by
+    /// an optimizer pass (the paper's "touch the gradient twice, not five
+    /// times" pipeline; see `Optimizer::step_scaled`). The step computes
+    /// `mean[i] = sum[i] * inv_n` inline, which is bit-identical to
+    /// [`ChunkAggregator::take_mean`]'s scale (same multiply, same
+    /// rounding) — property-tested.
+    ///
+    /// The accumulator is left holding the raw sum; the next round's
+    /// first absorb overwrites it (copy-on-first-arrival), so rollback
+    /// and replay semantics are unchanged.
+    pub fn take_mean_into_step<R>(
+        &mut self,
+        step: impl FnOnce(&[f32], f32) -> R,
+    ) -> Result<R, AggError> {
+        if self.arrived() != self.n_workers {
+            return Err(AggError::NotReady {
+                arrived: self.arrived(),
+                n_workers: self.n_workers,
+            });
+        }
+        let out = step(&self.acc, 1.0 / self.n_workers as f32);
+        self.seen = 0;
+        Ok(out)
     }
 
     /// Rewind the open round: forget every arrival recorded so far and
@@ -220,6 +516,13 @@ mod tests {
                 n_workers: 2
             })
         );
+        assert_eq!(
+            a.take_mean_into_step(|_, _| ()),
+            Err(AggError::NotReady {
+                arrived: 1,
+                n_workers: 2
+            })
+        );
     }
 
     #[test]
@@ -236,6 +539,29 @@ mod tests {
             a.absorb(0, &[0.0]),
             Err(AggError::LengthMismatch { got: 1, want: 2 })
         );
+    }
+
+    #[test]
+    fn malformed_byte_payloads_are_typed_errors() {
+        let mut a = ChunkAggregator::new(2, 2);
+        assert_eq!(
+            a.absorb_bytes(0, &[0u8; 7]),
+            Err(AggError::MisalignedBytes { bytes: 7 })
+        );
+        assert_eq!(
+            a.absorb_bytes(0, &[0u8; 12]),
+            Err(AggError::LengthMismatch { got: 3, want: 2 })
+        );
+        assert_eq!(
+            a.absorb_quant(0, 0.5, 2, &[0u8; 3]),
+            Err(AggError::QuantPayloadMismatch { packed: 3, want: 1 })
+        );
+        assert_eq!(
+            a.absorb_quant(0, 0.5, 5, &[0u8; 2]),
+            Err(AggError::LengthMismatch { got: 5, want: 2 })
+        );
+        // None of the rejections recorded an arrival.
+        assert_eq!(a.arrived(), 0);
     }
 
     #[test]
@@ -257,6 +583,70 @@ mod tests {
         b.absorb(1, &g1).unwrap();
         b.absorb(0, &g0).unwrap();
         assert_eq!(m1, b.take_mean().unwrap());
+    }
+
+    /// The byte fold is the slice path bit-for-bit, first arrival and
+    /// accumulate alike, for lengths that exercise lane remainders.
+    #[test]
+    fn absorb_bytes_matches_absorb() {
+        for len in [1usize, 7, 8, 9, 16, 37] {
+            let g0: Vec<f32> = (0..len).map(|i| (i as f32 * 0.7).sin()).collect();
+            let g1: Vec<f32> = (0..len).map(|i| (i as f32 * 1.3).cos()).collect();
+            let bytes = |g: &[f32]| -> Vec<u8> {
+                g.iter().flat_map(|x| x.to_le_bytes()).collect()
+            };
+            let mut a = ChunkAggregator::new(len, 2);
+            a.absorb(0, &g0).unwrap();
+            a.absorb(1, &g1).unwrap();
+            let mut b = ChunkAggregator::new(len, 2);
+            b.absorb_bytes(0, &bytes(&g0)).unwrap();
+            b.absorb_bytes(1, &bytes(&g1)).unwrap();
+            let ma: Vec<u32> = a.take_mean().unwrap().iter().map(|x| x.to_bits()).collect();
+            let mb: Vec<u32> = b.take_mean().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ma, mb, "len {len}");
+        }
+    }
+
+    /// The dequantize fold matches dequantize-then-absorb bit-for-bit,
+    /// including ragged tails (len not a multiple of 4 or 8).
+    #[test]
+    fn absorb_quant_matches_dense_dequantized() {
+        for len in [1usize, 4, 5, 9, 13, 16, 23] {
+            let t = 0.5f32;
+            // All four 2-bit codes cycled through the packed bytes.
+            let packed: Vec<u8> = (0..len.div_ceil(4)).map(|i| (i as u8).wrapping_mul(0x39)).collect();
+            let mut dense = vec![0.0f32; len];
+            copy_dequant(&mut dense, t, &packed);
+            let mut a = ChunkAggregator::new(len, 2);
+            a.absorb(0, &dense).unwrap();
+            a.absorb(1, &dense).unwrap();
+            let mut b = ChunkAggregator::new(len, 2);
+            b.absorb_quant(0, t, len, &packed).unwrap();
+            b.absorb_quant(1, t, len, &packed).unwrap();
+            assert_eq!(a.take_mean().unwrap(), b.take_mean().unwrap(), "len {len}");
+        }
+    }
+
+    /// The fused finish equals the unfused scale+read bit-for-bit.
+    #[test]
+    fn take_mean_into_step_matches_take_mean() {
+        let g0 = [1.5f32, -0.25, 3.0];
+        let g1 = [0.125f32, 8.0, -1.0];
+        let mut a = ChunkAggregator::new(3, 2);
+        a.absorb(0, &g0).unwrap();
+        a.absorb(1, &g1).unwrap();
+        let want: Vec<f32> = a.take_mean().unwrap().to_vec();
+        let mut b = ChunkAggregator::new(3, 2);
+        b.absorb(0, &g0).unwrap();
+        b.absorb(1, &g1).unwrap();
+        let got: Vec<f32> = b
+            .take_mean_into_step(|sum, inv| sum.iter().map(|x| x * inv).collect())
+            .unwrap();
+        assert_eq!(want, got);
+        // Both paths closed the round.
+        assert_eq!(b.arrived(), 0);
+        b.absorb(0, &g0).unwrap();
+        assert_eq!(b.arrived(), 1);
     }
 
     /// Partial round → rollback → full replay is bit-identical to a clean

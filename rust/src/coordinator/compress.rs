@@ -6,6 +6,19 @@
 //! its normal tall-aggregation path, so compression composes with PHub
 //! exactly as the paper argues ("PHub can also work with gradient
 //! compression to gain further benefits").
+//!
+//! Memory discipline: the round hot path is [`Quantizer::quantize_into`],
+//! which writes the wire encoding into a caller-owned buffer reused
+//! across rounds (zero allocations at steady state — the old per-call
+//! `vec![0u8; ..]` is gone from the round loop). Server-side the wire
+//! bytes are *not* decoded into a dense vector at all: [`QuantGrad::parse`]
+//! borrows the packed levels in place and the aggregator folds
+//! dequantization into its accumulate loop
+//! (`aggregation::add_assign_dequant`). The owning [`QuantGrad`] /
+//! [`QuantGrad::dequantize`] forms remain for tests and cold paths, and
+//! share the same decode mapping.
+
+use super::aggregation;
 
 /// Per-worker compressor state (the error-feedback residual).
 #[derive(Debug, Clone)]
@@ -23,6 +36,18 @@ pub struct QuantGrad {
     pub packed: Vec<u8>,
 }
 
+/// A compressed gradient borrowed from its wire bytes (no copy): what the
+/// server-side hot path hands to the aggregator's dequantize-fold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantView<'a> {
+    pub threshold: f32,
+    pub len: usize,
+    pub packed: &'a [u8],
+}
+
+/// Wire header: `[len u64][threshold f32]` before the packed levels.
+pub const QUANT_HEADER_BYTES: usize = 12;
+
 impl Quantizer {
     pub fn new(len: usize, threshold: f32) -> Self {
         assert!(threshold > 0.0);
@@ -32,12 +57,20 @@ impl Quantizer {
         }
     }
 
-    /// Quantize `grad` (accumulating the carried residual), updating the
-    /// residual in place. Matches `quant2bit_ref` elementwise.
-    pub fn quantize(&mut self, grad: &[f32]) -> QuantGrad {
+    /// Quantize `grad` (accumulating the carried residual) and write the
+    /// wire encoding `[len u64][threshold f32][packed]` into `out`
+    /// (cleared first; capacity reused across rounds — the round hot
+    /// path allocates nothing once warm). Updates the residual in place;
+    /// matches `quant2bit_ref` elementwise. This is *the* quantization
+    /// implementation — [`Quantizer::quantize`] wraps it.
+    pub fn quantize_into(&mut self, grad: &[f32], out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.residual.len());
         let t = self.threshold;
-        let mut packed = vec![0u8; grad.len().div_ceil(4)];
+        out.clear();
+        out.extend_from_slice(&(grad.len() as u64).to_le_bytes());
+        out.extend_from_slice(&t.to_le_bytes());
+        out.resize(QUANT_HEADER_BYTES + grad.len().div_ceil(4), 0);
+        let packed = &mut out[QUANT_HEADER_BYTES..];
         for (i, (g, r)) in grad.iter().zip(self.residual.iter_mut()).enumerate() {
             let acc = g + *r;
             let (code, dq) = if acc > t {
@@ -50,10 +83,17 @@ impl Quantizer {
             *r = acc - dq;
             packed[i / 4] |= code << ((i % 4) * 2);
         }
+    }
+
+    /// Quantize into a fresh owning [`QuantGrad`] (tests/cold paths; the
+    /// round loop uses [`Quantizer::quantize_into`] with a reused buffer).
+    pub fn quantize(&mut self, grad: &[f32]) -> QuantGrad {
+        let mut out = Vec::new();
+        self.quantize_into(grad, &mut out);
         QuantGrad {
-            threshold: t,
+            threshold: self.threshold,
             len: grad.len(),
-            packed,
+            packed: out.split_off(QUANT_HEADER_BYTES),
         }
     }
 
@@ -63,7 +103,7 @@ impl Quantizer {
     }
 }
 
-/// Per-chunk compressor bank for the chunk-streamed wire protocol (v1):
+/// Per-chunk compressor bank for the chunk-streamed wire protocol:
 /// one error-feedback [`Quantizer`] per chunk, so each chunk's residual
 /// lives with the chunk and compression composes with streaming exactly
 /// like the dense path. Because quantization is elementwise over
@@ -93,34 +133,19 @@ impl ChunkQuantizer {
     pub fn quantize_chunk(&mut self, i: usize, grad: &[f32]) -> QuantGrad {
         self.quants[i].quantize(grad)
     }
+
+    /// [`Quantizer::quantize_into`] for chunk `i`: the round hot path,
+    /// writing the wire bytes into a caller-reused buffer.
+    pub fn quantize_chunk_into(&mut self, i: usize, grad: &[f32], out: &mut Vec<u8>) {
+        self.quants[i].quantize_into(grad, out);
+    }
 }
 
-impl QuantGrad {
-    /// Dequantize into a dense f32 vector (server side).
-    pub fn dequantize(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.len];
-        for (i, o) in out.iter_mut().enumerate() {
-            let code = (self.packed[i / 4] >> ((i % 4) * 2)) & 0b11;
-            *o = match code {
-                0b01 => self.threshold,
-                0b10 => -self.threshold,
-                _ => 0.0,
-            };
-        }
-        out
-    }
-
-    /// Wire encoding: [len u64][threshold f32][packed bytes].
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(12 + self.packed.len());
-        out.extend_from_slice(&(self.len as u64).to_le_bytes());
-        out.extend_from_slice(&self.threshold.to_le_bytes());
-        out.extend_from_slice(&self.packed);
-        out
-    }
-
-    pub fn from_bytes(b: &[u8]) -> std::io::Result<QuantGrad> {
-        if b.len() < 12 {
+impl<'a> QuantView<'a> {
+    /// Borrow a compressed gradient straight from its wire bytes —
+    /// validates the header and packed length, copies nothing.
+    pub fn parse(b: &'a [u8]) -> std::io::Result<QuantView<'a>> {
+        if b.len() < QUANT_HEADER_BYTES {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 "quant payload too short",
@@ -128,17 +153,46 @@ impl QuantGrad {
         }
         let len = u64::from_le_bytes(b[0..8].try_into().unwrap()) as usize;
         let threshold = f32::from_le_bytes(b[8..12].try_into().unwrap());
-        let packed = b[12..].to_vec();
+        let packed = &b[QUANT_HEADER_BYTES..];
         if packed.len() != len.div_ceil(4) {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 "quant payload length mismatch",
             ));
         }
-        Ok(QuantGrad {
+        Ok(QuantView {
             threshold,
             len,
             packed,
+        })
+    }
+}
+
+impl QuantGrad {
+    /// Dequantize into a dense f32 vector (tests/cold paths; the server's
+    /// hot path folds dequantization into the aggregator instead — same
+    /// decode mapping, one home: `aggregation::copy_dequant`).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        aggregation::copy_dequant(&mut out, self.threshold, &self.packed);
+        out
+    }
+
+    /// Wire encoding: [len u64][threshold f32][packed bytes].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(QUANT_HEADER_BYTES + self.packed.len());
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        out.extend_from_slice(&self.threshold.to_le_bytes());
+        out.extend_from_slice(&self.packed);
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> std::io::Result<QuantGrad> {
+        let v = QuantView::parse(b)?;
+        Ok(QuantGrad {
+            threshold: v.threshold,
+            len: v.len,
+            packed: v.packed.to_vec(),
         })
     }
 
@@ -210,6 +264,32 @@ mod tests {
         assert_eq!(c.dequantize(), d.dequantize());
     }
 
+    /// `quantize_into` writes exactly the bytes `quantize().to_bytes()`
+    /// produces, reusing the output buffer across rounds (the residual
+    /// recurrence advances identically through both forms).
+    #[test]
+    fn quantize_into_matches_quantize_and_reuses_buffer() {
+        let mut qa = Quantizer::new(11, 0.3);
+        let mut qb = Quantizer::new(11, 0.3);
+        let mut out = Vec::new();
+        let mut last_cap = 0usize;
+        for round in 0..5 {
+            let g: Vec<f32> = (0..11)
+                .map(|i| ((i + round) as f32 * 0.47).sin() * 0.5)
+                .collect();
+            qa.quantize_into(&g, &mut out);
+            let want = qb.quantize(&g).to_bytes();
+            assert_eq!(out, want, "round {round}");
+            let v = QuantView::parse(&out).unwrap();
+            assert_eq!((v.len, v.threshold), (11, 0.3));
+            if round > 0 {
+                assert_eq!(out.capacity(), last_cap, "buffer capacity is stable");
+            }
+            last_cap = out.capacity();
+        }
+        assert_eq!(qa.residual_linf(), qb.residual_linf());
+    }
+
     #[test]
     fn compression_ratio_near_16x() {
         let mut q = Quantizer::new(1 << 16, 0.5);
@@ -245,9 +325,11 @@ mod tests {
     #[test]
     fn bad_wire_payloads_rejected() {
         assert!(QuantGrad::from_bytes(&[0; 4]).is_err());
+        assert!(QuantView::parse(&[0; 4]).is_err());
         let mut q = Quantizer::new(8, 0.5);
         let mut bytes = q.quantize(&[0.9; 8]).to_bytes();
         bytes.pop();
         assert!(QuantGrad::from_bytes(&bytes).is_err());
+        assert!(QuantView::parse(&bytes).is_err());
     }
 }

@@ -23,6 +23,25 @@
 //!   is owed, which epoch it lives in) so transports stay thin framing
 //!   shells with no arrival bookkeeping of their own.
 //!
+//! # Memory discipline
+//!
+//! The engine's steady-state round is allocation-free and touches each
+//! gradient twice (absorb fold, fused mean+optimizer pass):
+//!
+//! * Pushes arrive as [`GradSrc`] — an f32 slice from the in-process
+//!   path, or raw wire bytes (dense or 2-bit) from the TCP leader's
+//!   pooled frame buffers. The aggregator folds the decode into its
+//!   accumulate loop, so no intermediate `Vec<f32>` exists on the push
+//!   path (`aggregation.rs` has the loop-level contract).
+//! * Round completion runs `ChunkAggregator::take_mean_into_step` +
+//!   `Optimizer::step_scaled`: one fused pass over the accumulator
+//!   instead of a scale pass plus an optimizer pass.
+//! * Replies carry pooled parameter buffers ([`PooledF32`], one per
+//!   puller, recycled when the transport finishes serializing) instead
+//!   of freshly allocated `Arc<[f32]>` snapshots. The remaining per-reply
+//!   cost outside this module's control is the mpsc channel's internal
+//!   block allocation (amortized ~1/31 sends) — see ROADMAP.
+//!
 //! # Mid-round rollback
 //!
 //! When a worker dies after pushing some chunks, the leader bumps the
@@ -46,11 +65,17 @@ use std::fmt;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
-use super::aggregation::{AggError, ChunkAggregator};
+use super::aggregation::{AggError, ChunkAggregator, GradSrc};
 use super::optimizer::Optimizer;
+use super::pool::{F32Pool, Pool, PooledF32};
 
 /// Job identifier (one training job / tenant namespace).
 pub type JobId = u32;
+
+/// Idle reply buffers an engine retains (soft cap; see `pool.rs`). Sized
+/// comfortably above the in-flight reply count of a busy core so the
+/// steady state never re-allocates.
+const REPLY_POOL_MAX_FREE: usize = 1024;
 
 /// Position of a push in a job's life: which rollback epoch it belongs to
 /// and which round of its chunk it contributes to.
@@ -131,12 +156,14 @@ pub enum PushOutcome {
 /// were already in flight for the dead round.
 #[derive(Debug, Clone)]
 pub enum Reply {
-    /// Updated parameters for one chunk.
+    /// Updated parameters for one chunk. `data` is a pooled buffer owned
+    /// by this worker's reply alone — dropping it (after serializing or
+    /// copying) recycles it to the engine's pool.
     Chunk {
         job: JobId,
         chunk: u32,
         epoch: u32,
-        data: Arc<[f32]>,
+        data: PooledF32,
     },
     /// The job's open round was rewound; replay it under `epoch`.
     RolledBack { job: JobId, epoch: u32 },
@@ -178,17 +205,57 @@ struct JobShard {
     n_workers: usize,
 }
 
+/// Copy `params` into a pooled buffer and send it to `tx` as a chunk
+/// reply. The one copy here is the per-puller transmission the paper's
+/// data plane makes anyway; the buffer recycles once the receiver drops
+/// it.
+///
+/// Deliberate trade-off: a round completion with `P` pullers does `P`
+/// parameter copies *on the core* (exclusively-owned buffers, zero
+/// allocations), where the pre-pool code did one copy into a fresh
+/// `Arc<[f32]>` (one allocation per completion) and let connection
+/// threads copy during serialization. Total bytes moved are comparable
+/// (≤ the bytes the core just absorbed aggregating `n` gradients), but
+/// at high fan-out the copies serialize on the core; a refcount-pooled
+/// buffer would restore single-copy broadcast while keeping the
+/// zero-allocation invariant — see ROADMAP.
+fn send_params(
+    pool: &Arc<F32Pool>,
+    tx: &Sender<Reply>,
+    job: JobId,
+    chunk: u32,
+    epoch: u32,
+    params: &[f32],
+) {
+    let mut buf = pool.take();
+    buf.extend_from_slice(params);
+    let _ = tx.send(Reply::Chunk {
+        job,
+        chunk,
+        epoch,
+        data: buf,
+    });
+}
+
 /// The per-core round engine: owns every job shard on one core thread and
 /// every transition of the round state machine.
-#[derive(Default)]
 pub struct ShardEngine {
     jobs: HashMap<JobId, JobShard>,
+    /// Recycling pool behind every reply this engine sends.
+    pool: Arc<F32Pool>,
+}
+
+impl Default for ShardEngine {
+    fn default() -> Self {
+        ShardEngine::new()
+    }
 }
 
 impl ShardEngine {
     pub fn new() -> ShardEngine {
         ShardEngine {
             jobs: HashMap::new(),
+            pool: Pool::new(REPLY_POOL_MAX_FREE),
         }
     }
 
@@ -219,9 +286,17 @@ impl ShardEngine {
         );
     }
 
-    /// Absorb worker `worker`'s gradient for `chunk`, tagged with the
-    /// pusher's `(epoch, round)` position. On the last arrival the chunk is
-    /// optimized in place and replies go out to every worker that pulled.
+    /// Borrow a chunk's current parameters (tests/diagnostics — the data
+    /// plane reads them only through replies).
+    pub fn chunk_params(&self, job: JobId, chunk: u32) -> Option<&[f32]> {
+        self.jobs
+            .get(&job)
+            .and_then(|s| s.chunks.get(&chunk))
+            .map(|c| c.params.as_slice())
+    }
+
+    /// Absorb worker `worker`'s gradient for `chunk` from a decoded f32
+    /// slice (see [`ShardEngine::push_src`] for the wire-byte forms).
     pub fn push(
         &mut self,
         job: JobId,
@@ -231,7 +306,26 @@ impl ShardEngine {
         pull: bool,
         tag: RoundTag,
     ) -> Result<PushOutcome, EngineError> {
-        let shard = self.jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        self.push_src(job, chunk, worker, GradSrc::F32s(data), pull, tag)
+    }
+
+    /// Absorb worker `worker`'s gradient for `chunk`, tagged with the
+    /// pusher's `(epoch, round)` position. The gradient arrives in
+    /// whatever form the transport has ([`GradSrc`]) and is folded into
+    /// the accumulator without intermediate buffers. On the last arrival
+    /// the chunk is optimized in place (fused mean+step, one pass) and
+    /// pooled-parameter replies go out to every worker that pulled.
+    pub fn push_src(
+        &mut self,
+        job: JobId,
+        chunk: u32,
+        worker: u32,
+        src: GradSrc<'_>,
+        pull: bool,
+        tag: RoundTag,
+    ) -> Result<PushOutcome, EngineError> {
+        let ShardEngine { jobs, pool } = self;
+        let shard = jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
         let w = worker as usize;
         if w >= shard.n_workers {
             return Err(EngineError::Agg(AggError::WorkerOutOfRange {
@@ -261,13 +355,14 @@ impl ShardEngine {
             // round: its parameters already include every worker's
             // gradient, so answer straight from the slot.
             if pull {
-                let shared: Arc<[f32]> = slot.params.clone().into();
-                let _ = shard.replies[w].send(Reply::Chunk {
+                send_params(
+                    pool,
+                    &shard.replies[w],
                     job,
                     chunk,
-                    epoch: shard.epoch,
-                    data: shared,
-                });
+                    shard.epoch,
+                    &slot.params,
+                );
             }
             return Ok(PushOutcome::Replayed);
         }
@@ -277,29 +372,33 @@ impl ShardEngine {
                 open: slot.round,
             });
         }
-        let done = slot.agg.absorb(w, data)?;
+        let done = slot.agg.absorb_src(w, src)?;
         if pull {
             *shard.pull_mask.entry(chunk).or_insert(0) |= 1u64 << w;
         }
         if !done {
             return Ok(PushOutcome::Absorbed);
         }
-        // Last worker arrived: mean + fused optimizer step on this same
-        // core, then broadcast to every worker that pulled.
-        let mean = slot.agg.take_mean()?;
-        shard.opt.step(&mut slot.params, &mut slot.state, mean);
-        slot.round += 1;
+        // Last worker arrived: fused mean+optimizer step on this same
+        // core (one pass over the accumulator), then broadcast to every
+        // worker that pulled.
+        let ChunkSlot {
+            params,
+            state,
+            agg,
+            round,
+        } = slot;
+        agg.take_mean_into_step(|sum, inv_n| {
+            shard
+                .opt
+                .step_scaled(&mut params[..], &mut state[..], sum, inv_n)
+        })?;
+        *round += 1;
         let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
         if mask != 0 {
-            let shared: Arc<[f32]> = slot.params.clone().into();
             for (i, tx) in shard.replies.iter().enumerate() {
                 if mask & (1u64 << i) != 0 {
-                    let _ = tx.send(Reply::Chunk {
-                        job,
-                        chunk,
-                        epoch: shard.epoch,
-                        data: shared.clone(),
-                    });
+                    send_params(pool, tx, job, chunk, shard.epoch, params);
                 }
             }
         }
@@ -308,7 +407,8 @@ impl ShardEngine {
 
     /// Read-only pull of `chunk`'s current parameters for `worker`.
     pub fn pull(&mut self, job: JobId, chunk: u32, worker: u32) -> Result<(), EngineError> {
-        let shard = self.jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        let ShardEngine { jobs, pool } = self;
+        let shard = jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
         let w = worker as usize;
         if w >= shard.n_workers {
             return Err(EngineError::Agg(AggError::WorkerOutOfRange {
@@ -320,13 +420,14 @@ impl ShardEngine {
             .chunks
             .get(&chunk)
             .ok_or(EngineError::UnknownChunk { job, chunk })?;
-        let shared: Arc<[f32]> = slot.params.clone().into();
-        let _ = shard.replies[w].send(Reply::Chunk {
+        send_params(
+            pool,
+            &shard.replies[w],
             job,
             chunk,
-            epoch: shard.epoch,
-            data: shared,
-        });
+            shard.epoch,
+            &slot.params,
+        );
         Ok(())
     }
 
@@ -534,6 +635,32 @@ mod tests {
         assert!(rxs[1].try_recv().is_err());
     }
 
+    /// Wire-byte pushes produce the same completion and bits as slice
+    /// pushes — the leader's pooled-buffer path rides `push_src`.
+    #[test]
+    fn push_src_bytes_matches_slices() {
+        let (mut eng_a, rxs_a) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        let (mut eng_b, rxs_b) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        let t = RoundTag::new(0, 0);
+        let g0 = [2.0f32, -3.5];
+        let g1 = [4.0f32, 0.25];
+        let le = |g: &[f32]| -> Vec<u8> { g.iter().flat_map(|x| x.to_le_bytes()).collect() };
+        eng_a.push(1, 0, 0, &g0, true, t).unwrap();
+        eng_a.push(1, 0, 1, &g1, true, t).unwrap();
+        eng_b
+            .push_src(1, 0, 0, GradSrc::LeBytes(&le(&g0)), true, t)
+            .unwrap();
+        eng_b
+            .push_src(1, 0, 1, GradSrc::LeBytes(&le(&g1)), true, t)
+            .unwrap();
+        for rxs in [&rxs_a, &rxs_b] {
+            for rx in rxs.iter() {
+                assert!(matches!(rx.recv().unwrap(), Reply::Chunk { .. }));
+            }
+        }
+        assert_eq!(eng_a.chunk_params(1, 0), eng_b.chunk_params(1, 0));
+    }
+
     #[test]
     fn violations_are_typed_errors_not_panics() {
         let (mut eng, _rxs) = engine_with_job(2, vec![(0, vec![0.0])], 1.0);
@@ -551,6 +678,11 @@ mod tests {
         assert_eq!(
             eng.push(1, 0, 1, &[1.0], false, RoundTag::new(0, 5)),
             Err(EngineError::FutureRound { got: 5, open: 0 })
+        );
+        // Malformed wire bytes are typed errors too, not panics.
+        assert_eq!(
+            eng.push_src(1, 0, 1, GradSrc::LeBytes(&[0u8; 3]), false, t),
+            Err(EngineError::Agg(AggError::MisalignedBytes { bytes: 3 }))
         );
         // The engine is still healthy: the round can complete.
         assert_eq!(
@@ -642,6 +774,21 @@ mod tests {
         // Exactly one notice per effective rollback.
         assert!(matches!(rxs[0].recv().unwrap(), Reply::RolledBack { epoch: 1, .. }));
         assert!(rxs[0].try_recv().is_err());
+    }
+
+    /// Reply buffers recycle: after the receiver drops a reply, the next
+    /// completion reuses its buffer instead of allocating a fresh one.
+    #[test]
+    fn reply_buffers_recycle_through_the_pool() {
+        let (mut eng, rxs) = engine_with_job(1, vec![(0, vec![0.0, 0.0])], 1.0);
+        eng.push(1, 0, 0, &[1.0, 1.0], true, RoundTag::new(0, 0)).unwrap();
+        let (_, _, first) = chunk_reply(rxs[0].recv().unwrap()); // buffer dropped here
+        assert_eq!(eng.pool.free_count(), 1, "dropped reply returned its buffer");
+        eng.push(1, 0, 0, &[1.0, 1.0], true, RoundTag::new(0, 1)).unwrap();
+        let (_, _, second) = chunk_reply(rxs[0].recv().unwrap());
+        assert_eq!(eng.pool.free_count(), 1);
+        assert_eq!(first, vec![-1.0, -1.0]);
+        assert_eq!(second, vec![-2.0, -2.0]);
     }
 
     #[test]

@@ -29,6 +29,36 @@
 //! exchanging real `f32` gradients; the aggregation math matches the L1
 //! Pallas kernel bit-for-bit up to float associativity, and pytest checks
 //! the kernel against the same Nesterov reference.
+//!
+//! # Memory discipline
+//!
+//! The data plane is memory-bandwidth-bound (paper §4.3), so the steady
+//! state of a round is allocation-free per chunk and touches each
+//! gradient byte as few times as possible. Buffer ownership:
+//!
+//! * **Frame buffers** (leader receive): owned by each connection's
+//!   recycling [`pool::BytePool`]. `wire::read_frame_into` fills one,
+//!   the buffer travels to the chunk's pinned core, the core folds the
+//!   wire bytes straight into the accumulator
+//!   (`aggregation::absorb_bytes` / `absorb_quant` — no intermediate
+//!   `Vec<f32>`, no dequantize scratch), and the drop recycles it.
+//! * **Reply buffers** (engine → worker): owned by each core engine's
+//!   [`pool::F32Pool`]. Completion copies the chunk slot's parameters
+//!   into one pooled buffer per puller; the transport serializes it
+//!   straight into its reused staging vector
+//!   (`wire::write_chunk_frame_f32s`) and the drop recycles it.
+//! * **Accumulators, optimizer state, round caches**: owned by their
+//!   chunk slots / connections and reused for the process lifetime;
+//!   the fused `take_mean_into_step` + `step_scaled` pass finishes a
+//!   round in one sweep over the accumulator.
+//!
+//! Per chunk per round the leader path is one copy in (socket →
+//! pooled buffer), one absorb fold, one fused optimize pass, one copy
+//! out per puller — and zero steady-state heap allocations, asserted by
+//! `rust/tests/alloc_discipline.rs` and measured by
+//! `benches/dataplane.rs`. The one allocation left on the reply route is
+//! inside `std::sync::mpsc` itself (a queue block per ~31 sends); see
+//! ROADMAP.
 
 pub mod aggregation;
 pub mod chunk;
@@ -37,14 +67,17 @@ pub mod engine;
 pub mod hierarchy;
 pub mod mapping;
 pub mod optimizer;
+pub mod pool;
 pub mod server;
 pub mod service;
 pub mod tenancy;
 pub mod transport;
 pub mod wire;
 
+pub use aggregation::GradSrc;
 pub use chunk::{ChunkId, KeyTable};
 pub use engine::{EngineError, PushOutcome, Reply, RoundTag, ShardEngine, WorkerRound};
 pub use optimizer::{NesterovSgd, Optimizer, Sgd};
+pub use pool::{BytePool, F32Pool, Pool, Pooled, PooledBytes, PooledF32};
 pub use server::{PHubServer, ServerConfig};
 pub use service::{ConnectionManager, ServiceHandle};

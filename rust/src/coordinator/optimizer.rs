@@ -6,6 +6,20 @@
 //! the same chunk on the same core, so implementations must be pure
 //! element-range updates with per-chunk state slices and no cross-chunk
 //! coupling.
+//!
+//! The engine drives the *fused* entry point [`Optimizer::step_scaled`]:
+//! it receives the raw gradient **sum** plus `1/n` and computes the mean
+//! inline, so finishing a round is one pass over the accumulator instead
+//! of a scale pass followed by an optimizer pass. Built-in impls override
+//! it with lane-chunked (8-wide) loops the autovectorizer can lift to
+//! SIMD; the default materializes the mean and delegates to `step`, so
+//! any external impl stays correct unchanged. `step_scaled` must be
+//! bit-identical to `scale(sum, 1/n)` followed by `step` — compute
+//! `g = sum[i] * inv_n` first (one f32 rounding, same as the unfused
+//! scale) and never reassociate it into the update arithmetic.
+
+/// Lane width of the fused update loops (mirrors `aggregation::LANES`).
+const LANES: usize = 8;
 
 /// A chunk-granular optimizer.
 ///
@@ -17,6 +31,18 @@ pub trait Optimizer: Send + Sync {
     fn state_words(&self) -> usize;
     fn step(&self, params: &mut [f32], state: &mut [f32], grad: &[f32]);
     fn name(&self) -> &'static str;
+
+    /// Fused mean+step: update from the raw gradient sum `grad_sum`,
+    /// where the mean gradient is `grad_sum[i] * inv_n`. Must produce
+    /// exactly the bits of scaling first and then calling
+    /// [`Optimizer::step`] (the engine relies on this for
+    /// rollback-replay bit-identity). The default does exactly that —
+    /// with an allocation — so implementations on the hot path should
+    /// override it with a single fused loop.
+    fn step_scaled(&self, params: &mut [f32], state: &mut [f32], grad_sum: &[f32], inv_n: f32) {
+        let mean: Vec<f32> = grad_sum.iter().map(|g| g * inv_n).collect();
+        self.step(params, state, &mean);
+    }
 }
 
 /// Plain SGD: `p -= lr * g`.
@@ -32,8 +58,33 @@ impl Optimizer for Sgd {
 
     fn step(&self, params: &mut [f32], _state: &mut [f32], grad: &[f32]) {
         debug_assert_eq!(params.len(), grad.len());
-        for (p, g) in params.iter_mut().zip(grad) {
-            *p -= self.lr * g;
+        let lr = self.lr;
+        let mut p = params.chunks_exact_mut(LANES);
+        let mut g = grad.chunks_exact(LANES);
+        for (pp, gg) in (&mut p).zip(&mut g) {
+            for i in 0..LANES {
+                pp[i] -= lr * gg[i];
+            }
+        }
+        for (pp, gg) in p.into_remainder().iter_mut().zip(g.remainder()) {
+            *pp -= lr * gg;
+        }
+    }
+
+    fn step_scaled(&self, params: &mut [f32], _state: &mut [f32], grad_sum: &[f32], inv_n: f32) {
+        debug_assert_eq!(params.len(), grad_sum.len());
+        let lr = self.lr;
+        let mut p = params.chunks_exact_mut(LANES);
+        let mut s = grad_sum.chunks_exact(LANES);
+        for (pp, ss) in (&mut p).zip(&mut s) {
+            for i in 0..LANES {
+                let g = ss[i] * inv_n;
+                pp[i] -= lr * g;
+            }
+        }
+        for (pp, ss) in p.into_remainder().iter_mut().zip(s.remainder()) {
+            let g = ss * inv_n;
+            *pp -= lr * g;
         }
     }
 
@@ -67,10 +118,53 @@ impl Optimizer for NesterovSgd {
         debug_assert_eq!(params.len(), grad.len());
         debug_assert_eq!(state.len(), grad.len());
         let (lr, mu) = (self.lr, self.momentum);
-        for i in 0..params.len() {
-            let m = mu * state[i] + grad[i];
-            state[i] = m;
-            params[i] -= lr * (grad[i] + mu * m);
+        let mut p = params.chunks_exact_mut(LANES);
+        let mut st = state.chunks_exact_mut(LANES);
+        let mut g = grad.chunks_exact(LANES);
+        for ((pp, mm), gg) in (&mut p).zip(&mut st).zip(&mut g) {
+            for i in 0..LANES {
+                let m = mu * mm[i] + gg[i];
+                mm[i] = m;
+                pp[i] -= lr * (gg[i] + mu * m);
+            }
+        }
+        for ((pp, mm), gg) in p
+            .into_remainder()
+            .iter_mut()
+            .zip(st.into_remainder().iter_mut())
+            .zip(g.remainder())
+        {
+            let m = mu * *mm + gg;
+            *mm = m;
+            *pp -= lr * (gg + mu * m);
+        }
+    }
+
+    fn step_scaled(&self, params: &mut [f32], state: &mut [f32], grad_sum: &[f32], inv_n: f32) {
+        debug_assert_eq!(params.len(), grad_sum.len());
+        debug_assert_eq!(state.len(), grad_sum.len());
+        let (lr, mu) = (self.lr, self.momentum);
+        let mut p = params.chunks_exact_mut(LANES);
+        let mut st = state.chunks_exact_mut(LANES);
+        let mut s = grad_sum.chunks_exact(LANES);
+        for ((pp, mm), ss) in (&mut p).zip(&mut st).zip(&mut s) {
+            for i in 0..LANES {
+                let g = ss[i] * inv_n;
+                let m = mu * mm[i] + g;
+                mm[i] = m;
+                pp[i] -= lr * (g + mu * m);
+            }
+        }
+        for ((pp, mm), ss) in p
+            .into_remainder()
+            .iter_mut()
+            .zip(st.into_remainder().iter_mut())
+            .zip(s.remainder())
+        {
+            let g = ss * inv_n;
+            let m = mu * *mm + g;
+            *mm = m;
+            *pp -= lr * (g + mu * m);
         }
     }
 
@@ -132,6 +226,37 @@ mod tests {
         }
         assert_eq!(p1, p2);
         assert_eq!(m1, m2);
+    }
+
+    /// The fused pass equals scale-then-step bit-for-bit for both
+    /// built-ins, across lengths that exercise the lane remainders.
+    #[test]
+    fn step_scaled_matches_scale_then_step() {
+        for len in [1usize, 7, 8, 9, 40] {
+            let sum: Vec<f32> = (0..len).map(|i| (i as f32 * 0.61).sin() * 3.0).collect();
+            let inv_n = 1.0f32 / 3.0;
+            let mean: Vec<f32> = sum.iter().map(|g| g * inv_n).collect();
+
+            let sgd = Sgd { lr: 0.37 };
+            let mut pa: Vec<f32> = (0..len).map(|i| i as f32 * 0.1).collect();
+            let mut pb = pa.clone();
+            sgd.step(&mut pa, &mut [], &mean);
+            sgd.step_scaled(&mut pb, &mut [], &sum, inv_n);
+            assert_eq!(pa, pb, "sgd len {len}");
+
+            let nes = NesterovSgd {
+                lr: 0.1,
+                momentum: 0.9,
+            };
+            let mut pa: Vec<f32> = (0..len).map(|i| i as f32 * 0.1).collect();
+            let mut ma: Vec<f32> = (0..len).map(|i| (i as f32 * 0.2).cos()).collect();
+            let mut pb = pa.clone();
+            let mut mb = ma.clone();
+            nes.step(&mut pa, &mut ma, &mean);
+            nes.step_scaled(&mut pb, &mut mb, &sum, inv_n);
+            assert_eq!(pa, pb, "nesterov params len {len}");
+            assert_eq!(ma, mb, "nesterov momentum len {len}");
+        }
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Recycling buffer pools for the allocation-free data plane.
+//!
+//! PHub's aggregation pipeline is memory-bandwidth-bound (paper §3.2,
+//! §4.3): the design goal is to touch every gradient byte as few times as
+//! possible and to allocate nothing at steady state. These pools are the
+//! ownership half of that discipline — the arithmetic half lives in
+//! [`super::aggregation`].
+//!
+//! A [`Pool`] hands out [`Pooled`] buffers; dropping a `Pooled` returns
+//! the underlying buffer (cleared, capacity kept) to its pool, from any
+//! thread. Buffers therefore cycle through the pipeline instead of being
+//! reallocated per frame:
+//!
+//! ```text
+//! leader:  pool ─take→ read_frame_into ─send→ core absorbs bytes ─drop→ pool
+//! replies: pool ─take→ copy params ─send→ conn serializes frame ─drop→ pool
+//! ```
+//!
+//! After one warm-up round every buffer in the cycle has reached its
+//! high-water capacity and the steady state performs zero heap
+//! allocations on the per-chunk path (asserted by
+//! `rust/tests/alloc_discipline.rs`).
+//!
+//! Retention is bounded: a pool keeps at most `max_free` idle buffers and
+//! drops the rest, so a transient burst (or a hostile peer forcing huge
+//! frames) cannot pin unbounded memory forever.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+/// A buffer type that can be reset for reuse while keeping its capacity.
+pub trait Recycle: Default + Send {
+    fn recycle(&mut self);
+}
+
+impl Recycle for Vec<u8> {
+    fn recycle(&mut self) {
+        self.clear();
+    }
+}
+
+impl Recycle for Vec<f32> {
+    fn recycle(&mut self) {
+        self.clear();
+    }
+}
+
+/// A recycling pool of buffers. Cheap to share (`Arc`); safe to return
+/// buffers into from any thread.
+pub struct Pool<T: Recycle> {
+    free: Mutex<Vec<T>>,
+    max_free: usize,
+}
+
+impl<T: Recycle> Pool<T> {
+    /// A pool retaining at most `max_free` idle buffers.
+    pub fn new(max_free: usize) -> Arc<Pool<T>> {
+        Arc::new(Pool {
+            free: Mutex::new(Vec::new()),
+            max_free,
+        })
+    }
+
+    /// Take a (cleared) buffer: recycled if one is idle, fresh otherwise.
+    pub fn take(self: &Arc<Self>) -> Pooled<T> {
+        let buf = self.free.lock().unwrap().pop().unwrap_or_default();
+        Pooled {
+            inner: Some(buf),
+            pool: Some(self.clone()),
+        }
+    }
+
+    /// Idle buffers currently retained (diagnostics/tests).
+    pub fn free_count(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    fn put(&self, mut buf: T) {
+        buf.recycle();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_free {
+            free.push(buf);
+        } // else: drop — retention is bounded
+    }
+}
+
+/// A buffer borrowed from a [`Pool`] (or detached, pool-less). Derefs to
+/// the underlying buffer; returns to its pool on drop.
+pub struct Pooled<T: Recycle> {
+    /// `Some` until drop.
+    inner: Option<T>,
+    /// `None` for detached buffers (plain owned, never recycled).
+    pool: Option<Arc<Pool<T>>>,
+}
+
+impl<T: Recycle> Pooled<T> {
+    /// Wrap a plain buffer with no pool behind it — same type, ordinary
+    /// ownership. Used where a `Pooled` is expected but recycling is not
+    /// worth a pool (tests, cold paths, deep clones).
+    pub fn detached(buf: T) -> Pooled<T> {
+        Pooled {
+            inner: Some(buf),
+            pool: None,
+        }
+    }
+}
+
+impl<T: Recycle> Deref for Pooled<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("pooled buffer present until drop")
+    }
+}
+
+impl<T: Recycle> DerefMut for Pooled<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("pooled buffer present until drop")
+    }
+}
+
+impl<T: Recycle> Drop for Pooled<T> {
+    fn drop(&mut self) {
+        if let (Some(buf), Some(pool)) = (self.inner.take(), self.pool.take()) {
+            pool.put(buf);
+        }
+    }
+}
+
+impl<T: Recycle + Clone> Clone for Pooled<T> {
+    /// Deep copy, detached: a clone never shares or steals pool capacity.
+    fn clone(&self) -> Pooled<T> {
+        Pooled::detached((**self).clone())
+    }
+}
+
+impl<T: Recycle + std::fmt::Debug> std::fmt::Debug for Pooled<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+/// Frame-payload byte pool (wire receive path).
+pub type BytePool = Pool<Vec<u8>>;
+/// A pooled frame payload.
+pub type PooledBytes = Pooled<Vec<u8>>;
+/// Reply-parameter pool (engine → worker path).
+pub type F32Pool = Pool<Vec<f32>>;
+/// A pooled parameter buffer.
+pub type PooledF32 = Pooled<Vec<f32>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_recycle_with_capacity() {
+        let pool: Arc<BytePool> = Pool::new(4);
+        let ptr;
+        {
+            let mut b = pool.take();
+            b.extend_from_slice(&[1, 2, 3, 4]);
+            ptr = b.as_ptr();
+        } // drop → back to pool, cleared
+        assert_eq!(pool.free_count(), 1);
+        let b = pool.take();
+        assert!(b.is_empty(), "recycled buffer is cleared");
+        assert!(b.capacity() >= 4, "recycled buffer keeps capacity");
+        assert_eq!(b.as_ptr(), ptr, "same allocation came back");
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let pool: Arc<F32Pool> = Pool::new(2);
+        let bufs: Vec<PooledF32> = (0..5).map(|_| pool.take()).collect();
+        drop(bufs);
+        assert_eq!(pool.free_count(), 2, "excess buffers dropped, not hoarded");
+    }
+
+    #[test]
+    fn detached_and_clone_never_touch_a_pool() {
+        let pool: Arc<F32Pool> = Pool::new(4);
+        let mut b = pool.take();
+        b.extend_from_slice(&[1.0, 2.0]);
+        let c = b.clone();
+        drop(c); // detached clone: no pool return
+        assert_eq!(pool.free_count(), 0);
+        drop(b);
+        assert_eq!(pool.free_count(), 1);
+        let d = Pooled::detached(vec![9.0f32]);
+        assert_eq!(&*d, &vec![9.0]);
+        drop(d); // no pool: plain drop
+    }
+
+    #[test]
+    fn returns_cross_thread() {
+        let pool: Arc<BytePool> = Pool::new(8);
+        let b = pool.take();
+        std::thread::spawn(move || drop(b)).join().unwrap();
+        assert_eq!(pool.free_count(), 1);
+    }
+}

@@ -14,6 +14,12 @@
 //! and costs the offending message, never the core thread. The TCP leader
 //! in [`super::transport`] is the other shell over the same engine.
 //!
+//! Two push forms reach the cores: `Push` carries a shared `Arc<[f32]>`
+//! gradient (the in-process zero-copy path), and `PushBytes` carries the
+//! TCP leader's pooled frame buffer so the core absorbs the wire bytes
+//! directly and the buffer recycles — the allocation-free data plane
+//! (see `aggregation.rs` for the memory-discipline contract).
+//!
 //! `examples/train_e2e.rs` drives this server with real gradients produced
 //! by the AOT-compiled JAX model running under PJRT.
 
@@ -23,10 +29,13 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use super::aggregation::GradSrc;
 use super::chunk::KeyTable;
+use super::compress::QuantView;
 use super::engine::{RoundTag, ShardEngine};
 use super::mapping;
 use super::optimizer::Optimizer;
+use super::pool::PooledBytes;
 
 pub use super::engine::{JobId, Reply};
 
@@ -66,6 +75,22 @@ enum CoreMsg {
         pull: bool,
         tag: RoundTag,
     },
+    /// Worker gradient push for one chunk as raw wire bytes in a pooled,
+    /// recycling frame buffer — the TCP leader's allocation-free path.
+    /// The gradient bytes are `data[grad_off..]` (dense LE f32s, or a
+    /// `QuantGrad` wire encoding when `quant`); the engine folds them
+    /// straight into the accumulator and dropping `data` here recycles
+    /// the buffer back to the connection's pool.
+    PushBytes {
+        job: JobId,
+        chunk: u32,
+        worker: u32,
+        data: PooledBytes,
+        grad_off: usize,
+        quant: bool,
+        pull: bool,
+        tag: RoundTag,
+    },
     /// Read-only pull of current chunk params.
     Pull { job: JobId, chunk: u32, worker: u32 },
     /// Rewind the job's open round to recover from a mid-round worker
@@ -100,6 +125,39 @@ fn core_loop(rx: Receiver<CoreMsg>) {
             } => engine
                 .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
                 .map(|_| ()),
+            CoreMsg::PushBytes {
+                job,
+                chunk,
+                worker,
+                data,
+                grad_off,
+                quant,
+                pull,
+                tag,
+            } => {
+                let bytes = &data[grad_off..];
+                let src = if quant {
+                    match QuantView::parse(bytes) {
+                        Ok(q) => GradSrc::Quant2Bit {
+                            threshold: q.threshold,
+                            len: q.len,
+                            packed: q.packed,
+                        },
+                        Err(e) => {
+                            // The transport validates before sending, so
+                            // this is a bug or a torn message: drop it
+                            // like any other protocol violation.
+                            eprintln!("phub-core: dropped quant push: {e}");
+                            continue;
+                        }
+                    }
+                } else {
+                    GradSrc::LeBytes(bytes)
+                };
+                engine.push_src(job, chunk, worker, src, pull, tag).map(|_| ())
+                // `data` drops at the end of this arm: the frame buffer
+                // recycles to its pool.
+            }
             CoreMsg::Pull { job, chunk, worker } => engine.pull(job, chunk, worker),
             CoreMsg::RollbackRound { job, epoch } => engine.rollback(job, epoch).map(|_| ()),
             CoreMsg::Evict { job } => {
@@ -376,6 +434,46 @@ impl WorkerHandle {
                 worker: self.worker,
                 data,
                 range: (0, len),
+                pull,
+                tag,
+            })
+            .expect("core thread gone");
+    }
+
+    /// [`WorkerHandle::push_chunk_tagged`] for raw wire bytes in a pooled
+    /// frame buffer — the TCP leader's allocation-free hot path. The
+    /// frame payload travels to the pinned core *in the buffer it was
+    /// received into*; the core folds the bytes straight into the
+    /// accumulator (no intermediate `Vec<f32>`), then the buffer recycles
+    /// to the connection's pool. `data[grad_off..]` holds the gradient
+    /// bytes: dense LE f32s, or a `QuantGrad` wire encoding when `quant`.
+    pub fn push_chunk_bytes_tagged(
+        &self,
+        chunk: u32,
+        data: PooledBytes,
+        grad_off: usize,
+        quant: bool,
+        pull: bool,
+        tag: RoundTag,
+    ) {
+        let ci = chunk as usize;
+        assert!(ci < self.table.chunks.len(), "chunk id out of range");
+        let len = self.table.chunks[ci].len;
+        if !quant {
+            assert_eq!(
+                data.len() - grad_off,
+                len * 4,
+                "chunk byte length mismatch"
+            );
+        }
+        self.server.cores[self.core_of[ci]]
+            .send(CoreMsg::PushBytes {
+                job: self.job,
+                chunk,
+                worker: self.worker,
+                data,
+                grad_off,
+                quant,
                 pull,
                 tag,
             })

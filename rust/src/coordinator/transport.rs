@@ -26,6 +26,29 @@
 //! [`super::engine::WorkerRound`]; the connection loop only parses
 //! frames, validates them against the key table, and moves bytes.
 //!
+//! # Memory discipline
+//!
+//! The steady-state round allocates nothing per chunk on either side of
+//! the wire (the paper's bandwidth-bound pipeline; see `aggregation.rs`
+//! and `wire.rs` for the loop- and frame-level contracts):
+//!
+//! * **Leader receive**: each connection owns a recycling
+//!   [`super::pool::BytePool`]; `read_frame_into` decodes into a pooled
+//!   buffer, the buffer itself travels to the chunk's pinned core
+//!   (`CoreMsg::PushBytes`), the core folds the wire bytes straight into
+//!   the accumulator (dense or 2-bit — no `bytes_to_f32s`, no
+//!   dequantize scratch), and the buffer returns to the pool on drop.
+//! * **Leader reply**: the engine hands each puller a pooled parameter
+//!   buffer; the connection serializes it into its reused `ready`
+//!   staging vector with `write_chunk_frame_f32s` (no `f32s_to_bytes`
+//!   vector) and the buffer recycles.
+//! * **Client**: dense rounds serialize frames straight from the
+//!   caller's gradient; quantized rounds encode into per-chunk buffers
+//!   reused across rounds (`quantize_into`); `ModelChunk` payloads
+//!   decode into the round's model vector through a single reused
+//!   receive buffer. The per-round model allocation is the API's return
+//!   value, not a per-chunk cost.
+//!
 //! # Robustness and mid-round recovery
 //!
 //! The leader treats every byte off the wire as hostile. Job specs are
@@ -55,9 +78,10 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::chunk::KeyTable;
-use super::compress::{ChunkQuantizer, QuantGrad};
+use super::compress::{ChunkQuantizer, QuantView};
 use super::engine::{Reply, WorkerRound};
 use super::optimizer::NesterovSgd;
+use super::pool::{BytePool, Pool};
 use super::server::{JobId, PHubServer, ServerConfig, WorkerHandle};
 use super::wire::{self, Frame, Op};
 
@@ -431,7 +455,10 @@ fn apply_reply(
             // dropped; the worker re-pushes and gets a fresh one.
             if wr.note_reply(epoch) {
                 let (lo, _) = handle.chunk_range(chunk as usize);
-                wire::write_chunk_frame_buffered(
+                // Serialize straight from the pooled reply buffer into
+                // the reused staging vector; `data` drops right after
+                // and recycles to the engine's pool.
+                wire::write_chunk_frame_f32s(
                     ready,
                     Op::ModelChunk,
                     wire_job,
@@ -439,7 +466,7 @@ fn apply_reply(
                     chunk,
                     epoch,
                     lo as u64,
-                    &wire::f32s_to_bytes(&data),
+                    &data,
                 )?;
             }
             Ok(false)
@@ -501,88 +528,116 @@ fn serve_streamed<R: Read, W: Write>(
     wr: &mut WorkerRound,
 ) -> Result<()> {
     let n_chunks = handle.n_chunks();
+    // Frame buffers recycle through this pool: connection thread →
+    // owning core (bytes absorbed in place) → dropped → back here.
+    // In-flight buffers are bounded by the round's chunk count, and
+    // after one warm round the receive loop allocates nothing per frame.
+    let pool: Arc<BytePool> = Pool::new(n_chunks.max(8));
     // ModelChunk frames for chunks that finished while later pushes were
-    // still arriving. They are encoded immediately but written only once
-    // the push phase ends: writing into a worker that is still sending
-    // could deadlock both sides on full socket buffers.
+    // still arriving. They are encoded immediately (straight from the
+    // pooled reply buffers) but written only once the push phase ends:
+    // writing into a worker that is still sending could deadlock both
+    // sides on full socket buffers.
     let mut ready: Vec<u8> = Vec::new();
     loop {
-        let f = match wire::read_frame(reader) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // disconnect = Bye
-        };
-        match f.op {
-            Op::PushChunk | Op::PushChunkQuant => {
-                let (chunk, epoch, off, bytes) = wire::decode_chunk_payload(&f.payload)?;
-                // Apply queued engine notifications first: a rollback that
-                // already happened decides how this frame is judged.
-                if drain_replies(handle, wr, wire_job, slot, &mut ready)? {
-                    write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
+        let mut fb = pool.take();
+        // Decode the frame into the pooled buffer; keep only scalars from
+        // the borrowed view so the buffer itself can travel to the core.
+        let (op, chunk, epoch, off, grad_len) = {
+            let view = match wire::read_frame_into(reader, &mut fb) {
+                Ok(v) => v,
+                Err(_) => return Ok(()), // disconnect = Bye
+            };
+            match view.op {
+                Op::PushChunk | Op::PushChunkQuant => {
+                    let (chunk, epoch, off, bytes) = wire::decode_chunk_payload(view.payload)?;
+                    (view.op, chunk, epoch, off, bytes.len())
                 }
-                if epoch < wr.epoch() {
-                    // Stale in-flight push from before a rollback:
-                    // rejected by tag; the worker replays once it sees
-                    // the RollbackRound frame.
-                    continue;
-                }
-                ensure!(
-                    epoch == wr.epoch(),
-                    "push epoch {epoch} ahead of connection epoch {}",
-                    wr.epoch()
-                );
-                let ci = chunk as usize;
-                ensure!(ci < n_chunks, "chunk id {ci} out of range ({n_chunks} chunks)");
-                let (lo, hi) = handle.chunk_range(ci);
-                ensure!(
-                    off as usize == lo,
-                    "chunk {ci} offset {off} != expected {lo}"
-                );
-                let data: Vec<f32> = if f.op == Op::PushChunk {
-                    wire::bytes_to_f32s(bytes)?
-                } else {
-                    QuantGrad::from_bytes(bytes)?.dequantize()
-                };
-                ensure!(
-                    data.len() == hi - lo,
-                    "chunk {ci} length {} != expected {}",
-                    data.len(),
-                    hi - lo
-                );
-                // A duplicate violates the round protocol; the typed error
-                // costs this connection, never a shared core.
-                wr.begin_push(chunk)?;
-                handle.push_chunk_tagged(chunk, data.into(), true, wr.tag());
-                // Collect chunks the cores already finished (earlier chunks
-                // of this round aggregating+optimizing under the incoming
-                // frames — the paper's overlap).
-                if drain_replies(handle, wr, wire_job, slot, &mut ready)? {
-                    write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
-                    continue;
-                }
-                if wr.push_phase_done() {
-                    // Round fully received; the worker is now draining its
-                    // socket. Send everything already finished, then stream
-                    // each remaining chunk the moment it completes.
-                    writer.write_all(&ready)?;
-                    writer.flush()?;
-                    ready.clear();
-                    let mut rolled = false;
-                    while !rolled && wr.outstanding() > 0 {
-                        let r = handle.recv_reply();
-                        rolled = apply_reply(r, wr, handle, wire_job, slot, &mut ready)?;
-                        writer.write_all(&ready)?;
-                        writer.flush()?;
-                        ready.clear();
-                    }
-                    if rolled {
-                        write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
-                    } else {
-                        wr.complete_round();
-                    }
-                }
+                Op::Bye => return Ok(()),
+                other => bail!("unexpected opcode {other:?} in a chunk-streamed session"),
             }
-            Op::Bye => return Ok(()),
-            other => bail!("unexpected opcode {other:?} in a chunk-streamed session"),
+        };
+        // Apply queued engine notifications first: a rollback that
+        // already happened decides how this frame is judged.
+        if drain_replies(handle, wr, wire_job, slot, &mut ready)? {
+            write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
+        }
+        if epoch < wr.epoch() {
+            // Stale in-flight push from before a rollback: rejected by
+            // tag; the worker replays once it sees the RollbackRound
+            // frame. (The buffer recycles on this `continue`.)
+            continue;
+        }
+        ensure!(
+            epoch == wr.epoch(),
+            "push epoch {epoch} ahead of connection epoch {}",
+            wr.epoch()
+        );
+        let ci = chunk as usize;
+        ensure!(ci < n_chunks, "chunk id {ci} out of range ({n_chunks} chunks)");
+        let (lo, hi) = handle.chunk_range(ci);
+        ensure!(
+            off as usize == lo,
+            "chunk {ci} offset {off} != expected {lo}"
+        );
+        // Validate the payload shape at the edge (typed rejection costs
+        // this connection) without decoding it — the owning core folds
+        // the bytes straight into its accumulator.
+        let quant = op == Op::PushChunkQuant;
+        if quant {
+            let q = QuantView::parse(&fb[wire::CHUNK_PREFIX_BYTES..])?;
+            ensure!(
+                q.len == hi - lo,
+                "chunk {ci} quant length {} != expected {}",
+                q.len,
+                hi - lo
+            );
+        } else {
+            ensure!(
+                grad_len == (hi - lo) * 4,
+                "chunk {ci} payload {} bytes != expected {}",
+                grad_len,
+                (hi - lo) * 4
+            );
+        }
+        // A duplicate violates the round protocol; the typed error
+        // costs this connection, never a shared core.
+        wr.begin_push(chunk)?;
+        handle.push_chunk_bytes_tagged(
+            chunk,
+            fb,
+            wire::CHUNK_PREFIX_BYTES,
+            quant,
+            true,
+            wr.tag(),
+        );
+        // Collect chunks the cores already finished (earlier chunks
+        // of this round aggregating+optimizing under the incoming
+        // frames — the paper's overlap).
+        if drain_replies(handle, wr, wire_job, slot, &mut ready)? {
+            write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
+            continue;
+        }
+        if wr.push_phase_done() {
+            // Round fully received; the worker is now draining its
+            // socket. Send everything already finished, then stream
+            // each remaining chunk the moment it completes.
+            writer.write_all(&ready)?;
+            writer.flush()?;
+            ready.clear();
+            let mut rolled = false;
+            while !rolled && wr.outstanding() > 0 {
+                let r = handle.recv_reply();
+                rolled = apply_reply(r, wr, handle, wire_job, slot, &mut ready)?;
+                writer.write_all(&ready)?;
+                writer.flush()?;
+                ready.clear();
+            }
+            if rolled {
+                write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
+            } else {
+                wr.complete_round();
+            }
         }
     }
 }
@@ -607,13 +662,19 @@ pub struct TcpWorker {
     /// Error-feedback state for the compressed path: one residual per
     /// chunk.
     chunk_quant: Option<ChunkQuantizer>,
-    /// The in-flight round's quantized chunk payloads. Kept until the
-    /// round completes so a `RollbackRound` can be answered by replaying
+    /// The open round's quantized chunk payloads (full `QuantGrad` wire
+    /// encodings), one reused buffer per chunk. During a round they are
+    /// the replay cache: a `RollbackRound` is answered by re-sending these
     /// byte-identical payloads — re-quantizing would corrupt the
-    /// error-feedback residuals. The dense path keeps no copy: its replay
-    /// re-encodes from the caller's gradient, which is still borrowed for
-    /// the whole exchange.
+    /// error-feedback residuals. Buffers persist across rounds
+    /// (`quantize_into` overwrites in place), so the quantized round loop
+    /// allocates nothing once warm. The dense path keeps no copy: its
+    /// replay re-encodes from the caller's gradient, which is still
+    /// borrowed for the whole exchange.
     quant_round: Vec<Vec<u8>>,
+    /// Receive-payload buffer reused across frames (the client handles
+    /// one frame at a time, so one buffer suffices — no pool needed).
+    recv_buf: Vec<u8>,
 }
 
 impl TcpWorker {
@@ -674,6 +735,7 @@ impl TcpWorker {
             table: spec.key_table(),
             chunk_quant: None,
             quant_round: Vec::new(),
+            recv_buf: Vec::new(),
         })
     }
 
@@ -697,30 +759,35 @@ impl TcpWorker {
 
     /// Write one round — one chunk frame per chunk, back-to-back with a
     /// single flush, so server-side aggregation of the first chunk runs
-    /// under the transmission of the rest. `Some(grad)` encodes dense
-    /// frames straight from the gradient; `None` sends the cached
-    /// quantized payloads. Also how a round is *replayed* after
-    /// `RollbackRound`: identical bytes, new epoch.
+    /// under the transmission of the rest. `Some(grad)` serializes dense
+    /// frames straight from the gradient slice (no intermediate byte
+    /// vector); `None` sends the cached quantized payloads. Also how a
+    /// round is *replayed* after `RollbackRound`: identical bytes, new
+    /// epoch.
     fn send_round(&mut self, grad: Option<&[f32]>) -> Result<()> {
         for (i, c) in self.table.chunks.iter().enumerate() {
-            let dense;
-            let (op, bytes): (Op, &[u8]) = match grad {
-                Some(g) => {
-                    dense = wire::f32s_to_bytes(&g[c.offset..c.offset + c.len]);
-                    (Op::PushChunk, &dense)
-                }
-                None => (Op::PushChunkQuant, &self.quant_round[i]),
-            };
-            wire::write_chunk_frame_buffered(
-                &mut self.writer,
-                op,
-                self.job,
-                self.slot,
-                i as u32,
-                self.epoch,
-                c.offset as u64,
-                bytes,
-            )?;
+            match grad {
+                Some(g) => wire::write_chunk_frame_f32s(
+                    &mut self.writer,
+                    Op::PushChunk,
+                    self.job,
+                    self.slot,
+                    i as u32,
+                    self.epoch,
+                    c.offset as u64,
+                    &g[c.offset..c.offset + c.len],
+                )?,
+                None => wire::write_chunk_frame_buffered(
+                    &mut self.writer,
+                    Op::PushChunkQuant,
+                    self.job,
+                    self.slot,
+                    i as u32,
+                    self.epoch,
+                    c.offset as u64,
+                    &self.quant_round[i],
+                )?,
+            }
         }
         self.writer.flush()?;
         Ok(())
@@ -754,14 +821,19 @@ impl TcpWorker {
             let lens: Vec<usize> = self.table.chunks.iter().map(|c| c.len).collect();
             self.chunk_quant = Some(ChunkQuantizer::new(&lens, threshold));
         }
+        if self.quant_round.len() != self.table.chunks.len() {
+            self.quant_round = vec![Vec::new(); self.table.chunks.len()];
+        }
+        // Quantize each chunk into its reused round buffer (wire encoding
+        // included): the round loop allocates nothing once warm.
         let cq = self.chunk_quant.as_mut().unwrap();
-        self.quant_round = self
-            .table
-            .chunks
-            .iter()
-            .enumerate()
-            .map(|(i, c)| cq.quantize_chunk(i, &grad[c.offset..c.offset + c.len]).to_bytes())
-            .collect();
+        for (i, c) in self.table.chunks.iter().enumerate() {
+            cq.quantize_chunk_into(
+                i,
+                &grad[c.offset..c.offset + c.len],
+                &mut self.quant_round[i],
+            );
+        }
         self.send_round(None)?;
         self.read_model_chunks(None)
     }
@@ -769,7 +841,10 @@ impl TcpWorker {
     /// Collect one `ModelChunk` frame per chunk (in completion order),
     /// transparently replaying the round if the leader rewinds it
     /// (`grad` re-encodes a dense replay; `None` replays the cached
-    /// quantized payloads).
+    /// quantized payloads). Frames decode through the reused receive
+    /// buffer and payloads land directly in the round's model vector —
+    /// the per-round allocation is the returned model itself, nothing
+    /// per chunk.
     fn read_model_chunks(&mut self, grad: Option<&[f32]>) -> Result<Vec<f32>> {
         let n_chunks = self.table.chunks.len();
         'round: loop {
@@ -777,51 +852,62 @@ impl TcpWorker {
             let mut seen = vec![false; n_chunks];
             let mut got = 0usize;
             while got < n_chunks {
-                let f = wire::read_frame(&mut self.reader)?;
-                match f.op {
-                    Op::ModelChunk => {
-                        let (chunk, epoch, off, bytes) = wire::decode_chunk_payload(&f.payload)?;
-                        if epoch < self.epoch {
-                            continue; // superseded by a rollback we saw
+                // Everything needed from the borrowed frame view is
+                // extracted inside this block — replaying a rollback
+                // needs `&mut self` again afterwards.
+                let rolled_to = {
+                    let f = wire::read_frame_into(&mut self.reader, &mut self.recv_buf)?;
+                    match f.op {
+                        Op::ModelChunk => {
+                            let (chunk, epoch, off, bytes) =
+                                wire::decode_chunk_payload(f.payload)?;
+                            if epoch < self.epoch {
+                                continue; // superseded by a rollback we saw
+                            }
+                            ensure!(
+                                epoch == self.epoch,
+                                "model chunk epoch {epoch} ahead of ours ({})",
+                                self.epoch
+                            );
+                            let ci = chunk as usize;
+                            ensure!(ci < n_chunks, "model chunk id {ci} out of range");
+                            let c = self.table.chunks[ci];
+                            ensure!(off as usize == c.offset, "model chunk {ci} offset mismatch");
+                            ensure!(!seen[ci], "duplicate model chunk {ci}");
+                            ensure!(
+                                bytes.len() == c.len * 4,
+                                "model chunk {ci} payload {} bytes != {}",
+                                bytes.len(),
+                                c.len * 4
+                            );
+                            wire::copy_f32s_from_le(
+                                &mut model[c.offset..c.offset + c.len],
+                                bytes,
+                            )?;
+                            seen[ci] = true;
+                            got += 1;
+                            None
                         }
-                        ensure!(
-                            epoch == self.epoch,
-                            "model chunk epoch {epoch} ahead of ours ({})",
-                            self.epoch
-                        );
-                        let ci = chunk as usize;
-                        ensure!(ci < n_chunks, "model chunk id {ci} out of range");
-                        let c = self.table.chunks[ci];
-                        ensure!(off as usize == c.offset, "model chunk {ci} offset mismatch");
-                        ensure!(!seen[ci], "duplicate model chunk {ci}");
-                        let data = wire::bytes_to_f32s(bytes)?;
-                        ensure!(
-                            data.len() == c.len,
-                            "model chunk {ci} length {} != {}",
-                            data.len(),
-                            c.len
-                        );
-                        model[c.offset..c.offset + c.len].copy_from_slice(&data);
-                        seen[ci] = true;
-                        got += 1;
-                    }
-                    Op::RollbackRound => {
-                        ensure!(f.payload.len() >= 4, "short RollbackRound payload");
-                        let e = u32::from_le_bytes(f.payload[0..4].try_into().unwrap());
-                        if e <= self.epoch {
-                            continue; // stale notice, already replayed
+                        Op::RollbackRound => {
+                            ensure!(f.payload.len() >= 4, "short RollbackRound payload");
+                            let e = u32::from_le_bytes(f.payload[0..4].try_into().unwrap());
+                            if e <= self.epoch {
+                                continue; // stale notice, already replayed
+                            }
+                            Some(e)
                         }
-                        // The open round was rewound (another worker of the
-                        // job died mid-round). Discard partial results and
-                        // replay the identical payloads under the new epoch.
-                        self.epoch = e;
-                        self.send_round(grad)?;
-                        continue 'round;
+                        other => bail!("expected ModelChunk, got {other:?}"),
                     }
-                    other => bail!("expected ModelChunk, got {other:?}"),
+                };
+                if let Some(e) = rolled_to {
+                    // The open round was rewound (another worker of the
+                    // job died mid-round). Discard partial results and
+                    // replay the identical payloads under the new epoch.
+                    self.epoch = e;
+                    self.send_round(grad)?;
+                    continue 'round;
                 }
             }
-            self.quant_round.clear();
             return Ok(model);
         }
     }

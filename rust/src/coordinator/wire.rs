@@ -39,6 +39,37 @@
 //! validates chunk id and offset against its own key table, so a
 //! corrupted or hostile frame can only kill its own connection.
 //!
+//! # Memory discipline
+//!
+//! The steady-state round must not allocate or copy per frame beyond the
+//! single receive itself (the pipeline is memory-bandwidth-bound; paper
+//! §4.3). Buffer ownership on the hot path:
+//!
+//! * **Receive**: [`read_frame_into`] decodes the 12-byte frame header
+//!   *in place* (a stack array, no body `Vec` to re-slice) and reads the
+//!   payload into a caller-owned buffer, returning a borrowed
+//!   [`FrameView`]. The leader passes buffers from a recycling
+//!   [`super::pool::BytePool`]; the payload then travels to the owning
+//!   core *in that buffer*, is absorbed directly as bytes
+//!   (`aggregation::absorb_bytes` — no `bytes_to_f32s` vector), and the
+//!   buffer returns to the pool on drop. Growth is receive-driven
+//!   (`read_to_end` after a bounds check on the attacker-controlled
+//!   length prefix), so a claimed-huge frame still cannot
+//!   allocation-bomb the receiver, and after one warm round the buffer
+//!   sits at its high-water capacity: zero allocations per frame.
+//! * **Transmit**: [`write_chunk_frame_f32s`] serializes a chunk frame
+//!   straight from an `f32` slice (the chunk slot's parameters or the
+//!   worker's gradient) through a small stack staging array — the
+//!   `f32s_to_bytes` intermediate vector is gone from the round path.
+//!   Quantized payloads are written from the client's cached round
+//!   buffers via [`write_chunk_frame_buffered`].
+//!
+//! Copies per chunk per round before → after: leader receive went from 3
+//! payload copies and ~5 allocations (body `Vec`, payload re-slice,
+//! `bytes_to_f32s`, `Arc` gradient, reply `f32s_to_bytes`) to 1 copy
+//! (the socket read) and 0 steady-state allocations. [`read_frame`] /
+//! [`encode`] remain for rendezvous/control frames and tests.
+//!
 //! # The round epoch
 //!
 //! A worker learns its job's epoch from `Welcome` and stamps it into
@@ -80,6 +111,8 @@
 //! connection when that minimum falls below [`PROTO_MIN`].
 
 use std::io::{Read, Write};
+
+use super::aggregation;
 
 /// Legacy whole-model protocol — retired; the leader rejects it at
 /// rendezvous. The constant remains so rejection tests and error messages
@@ -144,13 +177,24 @@ impl Op {
     }
 }
 
-/// A decoded frame.
+/// A decoded frame (owning form — rendezvous/control paths and tests;
+/// the streamed hot path borrows a [`FrameView`] instead).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     pub op: Op,
     pub job: u32,
     pub worker: u32,
     pub payload: Vec<u8>,
+}
+
+/// A decoded frame borrowing its payload from the caller's (pooled,
+/// reused) receive buffer — the zero-copy result of [`read_frame_into`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameView<'a> {
+    pub op: Op,
+    pub job: u32,
+    pub worker: u32,
+    pub payload: &'a [u8],
 }
 
 /// Header layout: [len u32][op u8][pad u8;3][job u32][worker u32].
@@ -185,14 +229,21 @@ pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
     w.flush()
 }
 
-/// Read one frame from a stream.
+/// Read one frame into `payload` (cleared first; capacity reused across
+/// calls), returning a borrowed [`FrameView`]. This is the streamed hot
+/// path: the 12-byte frame header is decoded in place from a stack
+/// array — no body buffer to re-slice — and once `payload`'s capacity
+/// reaches its high-water mark the call performs zero allocations.
 ///
 /// Hostile-input contract: the length prefix is bounded by
-/// [`MAX_FRAME_BYTES`], and the body buffer grows with bytes actually
-/// received rather than being pre-allocated from the prefix — a peer that
-/// *claims* a huge frame without sending it cannot make the receiver
-/// allocate it (no allocation-bomb `Hello`s).
-pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
+/// [`MAX_FRAME_BYTES`], and the payload buffer grows with bytes actually
+/// received (`read_to_end`) rather than being pre-allocated from the
+/// prefix — a peer that *claims* a huge frame without sending it cannot
+/// make the receiver allocate it (no allocation-bomb `Hello`s).
+pub fn read_frame_into<'a>(
+    r: &mut impl Read,
+    payload: &'a mut Vec<u8>,
+) -> std::io::Result<FrameView<'a>> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4)?;
     let body_len = u32::from_le_bytes(len4) as usize;
@@ -208,31 +259,52 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
             "frame exceeds MAX_FRAME_BYTES",
         ));
     }
-    let mut body = Vec::with_capacity(body_len.min(1 << 20));
-    let got = r.take(body_len as u64).read_to_end(&mut body)?;
-    if got != body_len {
+    let mut head = [0u8; HEADER_BYTES - 4];
+    r.read_exact(&mut head)?;
+    let op = Op::from_u8(head[0]).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "bad opcode")
+    })?;
+    let job = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    let worker = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    let want = body_len - (HEADER_BYTES - 4);
+    payload.clear();
+    let got = r.take(want as u64).read_to_end(payload)?;
+    if got != want {
         return Err(std::io::Error::new(
             std::io::ErrorKind::UnexpectedEof,
             "truncated frame",
         ));
     }
-    let op = Op::from_u8(body[0]).ok_or_else(|| {
-        std::io::Error::new(std::io::ErrorKind::InvalidData, "bad opcode")
-    })?;
-    let job = u32::from_le_bytes(body[4..8].try_into().unwrap());
-    let worker = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    Ok(FrameView {
+        op,
+        job,
+        worker,
+        payload,
+    })
+}
+
+/// Read one frame from a stream into an owning [`Frame`] (one payload
+/// allocation, no second copy — the header decodes from the stack via
+/// [`read_frame_into`]).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Frame> {
+    let mut payload = Vec::new();
+    let (op, job, worker) = {
+        let v = read_frame_into(r, &mut payload)?;
+        (v.op, v.job, v.worker)
+    };
     Ok(Frame {
         op,
         job,
         worker,
-        payload: body[12..].to_vec(),
+        payload,
     })
 }
 
 /// Write a chunk-carrying frame straight to a (buffered) writer — header,
 /// chunk prefix, and raw payload bytes with no intermediate payload/frame
-/// buffers. This is the streamed hot path: one call per chunk per round,
-/// so the copies [`encode`] would make are worth skipping. No flush.
+/// buffers. This is the streamed hot path for byte payloads (quantized
+/// pushes, cached replays): one call per chunk per round, so the copies
+/// [`encode`] would make are worth skipping. No flush.
 #[allow(clippy::too_many_arguments)]
 pub fn write_chunk_frame_buffered(
     w: &mut impl Write,
@@ -253,6 +325,42 @@ pub fn write_chunk_frame_buffered(
     w.write_all(&epoch.to_le_bytes())?;
     w.write_all(&elem_offset.to_le_bytes())?;
     w.write_all(bytes)
+}
+
+/// [`write_chunk_frame_buffered`] for f32 payloads: serialize the frame
+/// straight from the f32 slice (a gradient range or a chunk slot's
+/// parameters) through a stack staging array — no `f32s_to_bytes`
+/// vector, zero allocations. No flush.
+#[allow(clippy::too_many_arguments)]
+pub fn write_chunk_frame_f32s(
+    w: &mut impl Write,
+    op: Op,
+    job: u32,
+    worker: u32,
+    chunk: u32,
+    epoch: u32,
+    elem_offset: u64,
+    data: &[f32],
+) -> std::io::Result<()> {
+    let body_len = HEADER_BYTES - 4 + CHUNK_PREFIX_BYTES + data.len() * 4;
+    w.write_all(&(body_len as u32).to_le_bytes())?;
+    w.write_all(&[op as u8, 0, 0, 0])?;
+    w.write_all(&job.to_le_bytes())?;
+    w.write_all(&worker.to_le_bytes())?;
+    w.write_all(&chunk.to_le_bytes())?;
+    w.write_all(&epoch.to_le_bytes())?;
+    w.write_all(&elem_offset.to_le_bytes())?;
+    const GROUP: usize = 64;
+    let mut stage = [0u8; GROUP * 4];
+    for group in data.chunks(GROUP) {
+        let mut n = 0;
+        for x in group {
+            stage[n..n + 4].copy_from_slice(&x.to_le_bytes());
+            n += 4;
+        }
+        w.write_all(&stage[..n])?;
+    }
+    Ok(())
 }
 
 /// Build a chunk-carrying payload:
@@ -295,7 +403,8 @@ pub fn proto_version_at(payload: &[u8], at: usize) -> u32 {
     }
 }
 
-/// f32 slice -> raw little-endian bytes.
+/// f32 slice -> raw little-endian bytes (allocating; tests/cold paths —
+/// the round path writes frames with [`write_chunk_frame_f32s`]).
 pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(v.len() * 4);
     for x in v {
@@ -304,7 +413,9 @@ pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     out
 }
 
-/// Raw little-endian bytes -> f32 vector.
+/// Raw little-endian bytes -> f32 vector (allocating; tests/cold paths —
+/// the round path decodes in place with [`copy_f32s_from_le`] or absorbs
+/// bytes directly server-side).
 pub fn bytes_to_f32s(b: &[u8]) -> std::io::Result<Vec<f32>> {
     if b.len() % 4 != 0 {
         return Err(std::io::Error::new(
@@ -312,9 +423,22 @@ pub fn bytes_to_f32s(b: &[u8]) -> std::io::Result<Vec<f32>> {
             "payload not f32-aligned",
         ));
     }
-    Ok(b.chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    let mut out = vec![0.0f32; b.len() / 4];
+    aggregation::copy_f32s_le(&mut out, b);
+    Ok(out)
+}
+
+/// Decode raw little-endian f32 bytes into an existing slice (bit-exact,
+/// zero allocations). Errors unless `bytes` is exactly `4 * dst.len()`.
+pub fn copy_f32s_from_le(dst: &mut [f32], bytes: &[u8]) -> std::io::Result<()> {
+    if bytes.len() != dst.len() * 4 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "payload length does not match destination",
+        ));
+    }
+    aggregation::copy_f32s_le(dst, bytes);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -334,6 +458,34 @@ mod tests {
         let g = read_frame(&mut cursor).unwrap();
         assert_eq!(f, g);
         assert_eq!(bytes_to_f32s(&g.payload).unwrap(), vec![1.0, -2.5, 3.25]);
+    }
+
+    /// The borrowed read path decodes the same frames as the owning one
+    /// and reuses the payload buffer's allocation across frames.
+    #[test]
+    fn read_frame_into_reuses_the_buffer() {
+        let mut stream = Vec::new();
+        for i in 0..3u32 {
+            stream.extend_from_slice(&encode(&Frame {
+                op: Op::PushChunk,
+                job: i,
+                worker: i + 1,
+                payload: f32s_to_bytes(&vec![i as f32; 32]),
+            }));
+        }
+        let mut cursor = std::io::Cursor::new(stream);
+        let mut buf = Vec::new();
+        let mut cap_after_first = 0usize;
+        for i in 0..3u32 {
+            let v = read_frame_into(&mut cursor, &mut buf).unwrap();
+            assert_eq!((v.op, v.job, v.worker), (Op::PushChunk, i, i + 1));
+            assert_eq!(bytes_to_f32s(v.payload).unwrap(), vec![i as f32; 32]);
+            if i == 0 {
+                cap_after_first = buf.capacity();
+            } else {
+                assert_eq!(buf.capacity(), cap_after_first, "no regrowth");
+            }
+        }
     }
 
     #[test]
@@ -394,6 +546,9 @@ mod tests {
     #[test]
     fn misaligned_f32_payload_rejected() {
         assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+        let mut dst = [0.0f32; 2];
+        assert!(copy_f32s_from_le(&mut dst, &[0u8; 7]).is_err());
+        assert!(copy_f32s_from_le(&mut dst, &[0u8; 12]).is_err());
     }
 
     #[test]
@@ -463,6 +618,32 @@ mod tests {
         )
         .unwrap();
         assert_eq!(via_encode, via_writer, "two encoders, one wire format");
+    }
+
+    /// The f32-slice frame writer produces byte-identical frames to the
+    /// byte-payload writer, across lengths that exercise the staging
+    /// array's group boundary.
+    #[test]
+    fn f32_chunk_writer_matches_buffered() {
+        for len in [0usize, 1, 63, 64, 65, 200] {
+            let data: Vec<f32> = (0..len).map(|i| (i as f32 * 0.73).sin()).collect();
+            let mut via_bytes = Vec::new();
+            write_chunk_frame_buffered(
+                &mut via_bytes,
+                Op::ModelChunk,
+                3,
+                1,
+                5,
+                2,
+                320,
+                &f32s_to_bytes(&data),
+            )
+            .unwrap();
+            let mut via_f32s = Vec::new();
+            write_chunk_frame_f32s(&mut via_f32s, Op::ModelChunk, 3, 1, 5, 2, 320, &data)
+                .unwrap();
+            assert_eq!(via_bytes, via_f32s, "len {len}");
+        }
     }
 
     #[test]

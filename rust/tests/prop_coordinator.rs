@@ -5,11 +5,13 @@ use std::sync::Arc;
 
 use phub::coordinator::aggregation::ChunkAggregator;
 use phub::coordinator::chunk::KeyTable;
-use phub::coordinator::compress::ChunkQuantizer;
-use phub::coordinator::engine::Reply;
+use phub::coordinator::compress::{ChunkQuantizer, QuantGrad};
+use phub::coordinator::engine::{Reply, RoundTag};
 use phub::coordinator::mapping;
 use phub::coordinator::optimizer::{NesterovSgd, Optimizer, Sgd};
+use phub::coordinator::pool::{BytePool, Pool};
 use phub::coordinator::server::{PHubServer, ServerConfig, WorkerHandle};
+use phub::coordinator::wire;
 use phub::prop::{check, Rng};
 
 /// Chunking invariant: for any key layout and chunk size, chunks tile the
@@ -110,6 +112,135 @@ fn prop_aggregation_order_independent() {
             let expect: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / n as f32;
             if (mean[i] - expect).abs() > 1e-4 * expect.abs().max(1.0) {
                 return Err(format!("mean[{i}] {} != {expect}", mean[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Byte-level absorption is the slice path bit-for-bit for *arbitrary*
+/// payload bit patterns — NaN payloads, infinities, and subnormals
+/// included (`f32::from_le_bytes` is a pure bit reinterpretation, and
+/// both paths run the same accumulate in the same order, so even NaN
+/// propagation is identical).
+#[test]
+fn prop_absorb_bytes_bit_identical_to_absorb() {
+    check("absorb_bytes == absorb", 150, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 9);
+        let len = rng.usize_in(1, 100);
+        // Raw bit patterns: a large fraction of u32 space is NaN/inf.
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..len * 4).map(|_| rng.next_u64() as u8).collect())
+            .collect();
+        let mut by_slice = ChunkAggregator::new(len, n);
+        let mut by_bytes = ChunkAggregator::new(len, n);
+        for (w, p) in payloads.iter().enumerate() {
+            let decoded = wire::bytes_to_f32s(p).map_err(|e| e.to_string())?;
+            by_slice.absorb(w, &decoded).map_err(|e| e.to_string())?;
+            by_bytes.absorb_bytes(w, p).map_err(|e| e.to_string())?;
+        }
+        let a: Vec<u32> = by_slice
+            .take_mean()
+            .map_err(|e| e.to_string())?
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        let b: Vec<u32> = by_bytes
+            .take_mean()
+            .map_err(|e| e.to_string())?
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        if a != b {
+            return Err(format!("bit mismatch (n={n} len={len})"));
+        }
+        Ok(())
+    });
+}
+
+/// The dequantize-absorb fold is dequantize-then-absorb bit-for-bit for
+/// arbitrary packed level bytes (invalid 0b11 codes and ragged tails
+/// included) and thresholds.
+#[test]
+fn prop_absorb_quant_bit_identical_to_dense() {
+    check("absorb_quant == dequantize+absorb", 150, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 6);
+        let len = rng.usize_in(1, 80);
+        let threshold = 0.01 + rng.f64() as f32;
+        let packed_len = len.div_ceil(4);
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..packed_len).map(|_| rng.next_u64() as u8).collect())
+            .collect();
+        let mut dense = ChunkAggregator::new(len, n);
+        let mut quant = ChunkAggregator::new(len, n);
+        for (w, p) in payloads.iter().enumerate() {
+            let qg = QuantGrad {
+                threshold,
+                len,
+                packed: p.clone(),
+            };
+            dense.absorb(w, &qg.dequantize()).map_err(|e| e.to_string())?;
+            quant
+                .absorb_quant(w, threshold, len, p)
+                .map_err(|e| e.to_string())?;
+        }
+        let a = dense.take_mean().map_err(|e| e.to_string())?.to_vec();
+        let b = quant.take_mean().map_err(|e| e.to_string())?.to_vec();
+        if a != b {
+            return Err(format!("quant fold mismatch (n={n} len={len})"));
+        }
+        Ok(())
+    });
+}
+
+/// The fused mean+optimizer pass (`take_mean_into_step` + `step_scaled`)
+/// equals the unfused `take_mean` → `step` sequence bit-for-bit, for both
+/// built-in optimizers, arbitrary worker counts, lengths, and
+/// hyperparameters.
+#[test]
+fn prop_fused_mean_step_bit_identical() {
+    check("fused == unfused mean+step", 100, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 8);
+        let len = rng.usize_in(1, 100);
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.vec_f32(len, 2.0)).collect();
+        let fill = |agg: &mut ChunkAggregator| -> Result<(), String> {
+            for (w, g) in grads.iter().enumerate() {
+                agg.absorb(w, g).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        };
+        let opts: [Box<dyn Optimizer>; 2] = [
+            Box::new(Sgd {
+                lr: 0.01 + rng.f64() as f32,
+            }),
+            Box::new(NesterovSgd {
+                lr: 0.01 + rng.f64() as f32,
+                momentum: rng.f64() as f32 * 0.95,
+            }),
+        ];
+        for opt in &opts {
+            let mut p_unfused = rng.vec_f32(len, 1.0);
+            let mut s_unfused = rng.vec_f32(len * opt.state_words(), 0.5);
+            let mut p_fused = p_unfused.clone();
+            let mut s_fused = s_unfused.clone();
+
+            let mut a = ChunkAggregator::new(len, n);
+            fill(&mut a)?;
+            let mean = a.take_mean().map_err(|e| e.to_string())?;
+            opt.step(&mut p_unfused, &mut s_unfused, mean);
+
+            let mut b = ChunkAggregator::new(len, n);
+            fill(&mut b)?;
+            b.take_mean_into_step(|sum, inv_n| {
+                opt.step_scaled(&mut p_fused, &mut s_fused, sum, inv_n)
+            })
+            .map_err(|e| e.to_string())?;
+
+            if p_unfused != p_fused || s_unfused != s_fused {
+                return Err(format!(
+                    "{} fused pass diverged (n={n} len={len})",
+                    opt.name()
+                ));
             }
         }
         Ok(())
@@ -448,6 +579,11 @@ fn collect_epoch(h: &WorkerHandle, epoch: u32) -> Vec<f32> {
 /// job. Pushes are issued worker-major in both jobs so every chunk sees
 /// the same absorb order (f32 addition is order-sensitive beyond two
 /// workers; the engine must not add any reordering of its own).
+///
+/// The interrupted job pushes through the **pooled byte path**
+/// (`push_chunk_bytes_tagged` with recycling frame buffers — the form
+/// the TCP leader forwards) while the clean twin uses plain slices, so
+/// this also proves replay through pooled buffers changes no bits.
 #[test]
 fn prop_rollback_replay_bit_identical() {
     check("rollback replay bit identical", 20, |rng: &mut Rng| {
@@ -475,15 +611,24 @@ fn prop_rollback_replay_bit_identical() {
         );
         let grads: Vec<Vec<f32>> = (0..n_workers).map(|_| rng.vec_f32(elems, 1.0)).collect();
 
-        // Job A: a random partial round (worker-major), then rollback,
-        // then a full worker-major replay.
+        // Job A: a random partial round (worker-major) pushed through
+        // the pooled byte path, then rollback, then a full worker-major
+        // byte-path replay.
+        let pool: Arc<BytePool> = Pool::new(64);
+        let push_bytes = |h: &WorkerHandle, c: usize, g: &[f32], tag: RoundTag| {
+            let (lo, hi) = h.chunk_range(c);
+            let mut fb = pool.take();
+            for x in &g[lo..hi] {
+                fb.extend_from_slice(&x.to_le_bytes());
+            }
+            h.push_chunk_bytes_tagged(c as u32, fb, 0, false, true, tag);
+        };
         let mut ha: Vec<_> = (0..n_workers).map(|w| server.worker(ja, w)).collect();
         let n_chunks = ha[0].n_chunks();
         for (w, h) in ha.iter_mut().enumerate() {
             for c in 0..n_chunks {
                 if rng.usize_in(0, 3) == 0 {
-                    let (lo, hi) = h.chunk_range(c);
-                    h.push_chunk(c as u32, grads[w][lo..hi].into(), true);
+                    push_bytes(h, c, &grads[w], RoundTag::new(0, 0));
                 }
             }
         }
@@ -491,8 +636,7 @@ fn prop_rollback_replay_bit_identical() {
         for (w, h) in ha.iter_mut().enumerate() {
             h.set_tag(1, 0);
             for c in 0..n_chunks {
-                let (lo, hi) = h.chunk_range(c);
-                h.push_chunk(c as u32, grads[w][lo..hi].into(), true);
+                push_bytes(h, c, &grads[w], RoundTag::new(1, 0));
             }
         }
         let models_a: Vec<Vec<f32>> = ha.iter().map(|h| collect_epoch(h, 1)).collect();
