@@ -22,14 +22,15 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::Cursor;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
 use phub::coordinator::aggregation::{ChunkAggregator, GradSrc};
-use phub::coordinator::engine::{PushOutcome, RoundTag, ShardEngine};
+use phub::coordinator::engine::{
+    single_lane_fabrics, PushOutcome, Reply, ReplyRx, RoundTag, ShardEngine,
+};
 use phub::coordinator::optimizer::{NesterovSgd, Optimizer};
-use phub::coordinator::pool::{BytePool, F32Pool, Pool};
+use phub::coordinator::pool::{BytePool, Pool};
 use phub::coordinator::wire::{self, Op};
 use phub::prop::Rng;
 
@@ -89,12 +90,12 @@ fn encode_round(rng: &mut Rng) -> Vec<u8> {
     out
 }
 
-fn engine_with_job() -> ShardEngine {
+fn engine_with_job() -> (ShardEngine, Vec<ReplyRx>) {
     let mut eng = ShardEngine::new();
     let chunks: Vec<(u32, Vec<f32>)> = (0..CHUNKS)
         .map(|c| (c as u32, vec![0.1f32; CHUNK_ELEMS]))
         .collect();
-    let (tx, _rx) = channel();
+    let (txs, rxs) = single_lane_fabrics(JOB, WORKERS, 16);
     eng.init_job(
         JOB,
         chunks,
@@ -103,9 +104,9 @@ fn engine_with_job() -> ShardEngine {
             momentum: 0.9,
         }),
         WORKERS,
-        vec![tx; WORKERS],
+        txs,
     );
-    eng
+    (eng, rxs)
 }
 
 /// The pre-refactor path: every frame decoded into fresh vectors, mean
@@ -144,20 +145,22 @@ fn bench_vec_path(frames: &[u8]) -> (f64, f64) {
     (dt, allocs)
 }
 
-/// The pooled path: exactly the steady-state leader loop (see
-/// `rust/tests/alloc_discipline.rs`, which asserts its allocation count
-/// is zero).
+/// The pooled path: exactly the steady-state leader loop as deployed
+/// (see `rust/tests/alloc_discipline.rs`, which asserts its allocation
+/// count is zero) — worker 0 pulls, so each completion broadcasts one
+/// refcount-shared parameter buffer over a real SPSC reply ring and the
+/// reply frame serializes straight out of it. One reply serialization
+/// per completion, matching the vec path's reply leg.
 fn bench_pooled_path(frames: &[u8]) -> (f64, f64) {
-    let mut eng = engine_with_job();
+    let (mut eng, mut rxs) = engine_with_job();
     let pool: Arc<BytePool> = Pool::new(16);
-    let fpool: Arc<F32Pool> = Pool::new(16);
     let mut ready: Vec<u8> = Vec::new();
     // Warm the pools and slot state with one untimed round.
-    run_pooled_round(frames, &mut eng, &pool, &fpool, &mut ready, 0);
+    run_pooled_round(frames, &mut eng, &pool, &mut rxs, &mut ready, 0);
     let a0 = ALLOCS.load(Ordering::Relaxed);
     let t0 = Instant::now();
     for r in 0..ROUNDS {
-        run_pooled_round(frames, &mut eng, &pool, &fpool, &mut ready, (r + 1) as u64);
+        run_pooled_round(frames, &mut eng, &pool, &mut rxs, &mut ready, (r + 1) as u64);
     }
     let dt = t0.elapsed().as_secs_f64();
     let allocs = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / ROUNDS as f64;
@@ -168,7 +171,7 @@ fn run_pooled_round(
     frames: &[u8],
     eng: &mut ShardEngine,
     pool: &Arc<BytePool>,
-    fpool: &Arc<F32Pool>,
+    rxs: &mut [ReplyRx],
     ready: &mut Vec<u8>,
     round: u64,
 ) {
@@ -183,24 +186,30 @@ fn run_pooled_round(
         };
         let bytes = &fb[wire::CHUNK_PREFIX_BYTES..];
         let outcome = eng
-            .push_src(JOB, chunk, worker, GradSrc::LeBytes(bytes), false, tag)
+            .push_src(JOB, chunk, worker, GradSrc::LeBytes(bytes), worker == 0, tag)
             .unwrap();
         if outcome == PushOutcome::Completed {
-            let params = eng.chunk_params(JOB, chunk).unwrap();
-            let mut rb = fpool.take();
-            rb.extend_from_slice(params);
-            ready.clear();
-            wire::write_chunk_frame_f32s(
-                ready,
-                Op::ModelChunk,
-                JOB,
-                0,
-                chunk,
-                0,
-                chunk as u64 * CHUNK_ELEMS as u64,
-                &rb,
-            )
-            .unwrap();
+            // Reply leg as deployed: drain worker 0's ring and serialize
+            // the ModelChunk frame out of the shared broadcast buffer.
+            match rxs[0].try_recv() {
+                Some(Reply::Chunk {
+                    chunk, epoch, data, ..
+                }) => {
+                    ready.clear();
+                    wire::write_chunk_frame_f32s(
+                        ready,
+                        Op::ModelChunk,
+                        JOB,
+                        0,
+                        chunk,
+                        epoch,
+                        chunk as u64 * CHUNK_ELEMS as u64,
+                        &data,
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected worker 0's reply, got {other:?}"),
+            }
         }
     }
 }

@@ -1,0 +1,367 @@
+//! Queue-fabric microbench (run via `cargo bench --bench ring`).
+//!
+//! Three measurements, matching the tentpole's two claims:
+//!
+//! 1. **Ping-pong**: one message bouncing between two threads — SPSC
+//!    ring pair vs `std::sync::mpsc` channel pair. Latency-shaped: this
+//!    is where mpsc's receiver lock and park-heavy blocking hurt, and
+//!    where the ring's spin-then-park wait pays off.
+//! 2. **Fan-in**: 4 producer threads streaming into one consumer —
+//!    4 SPSC rings behind one shared waiter (the core's port-mesh
+//!    shape) vs 4 cloned mpsc senders into one receiver.
+//!    Throughput-shaped: the ring consumer takes no lock and the
+//!    producers never contend with each other.
+//! 3. **Reply broadcast**: end-to-end engine rounds/s at 1/4/8 pulling
+//!    workers, single-copy (the deployed refcount-shared broadcast —
+//!    one parameter copy per completion regardless of puller count)
+//!    vs per-puller-copy (the pre-refactor shape: one exclusive pooled
+//!    copy per puller). Both sides serialize one wire frame per puller,
+//!    so the delta isolates the copy fan-out on the core.
+//!
+//! Emits a single-line JSON summary (last stdout line) for
+//! `BENCH_ring.json` trajectory tracking. Results feed EXPERIMENTS.md
+//! section Perf.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::coordinator::engine::{
+    single_lane_fabrics, PushOutcome, Reply, ReplyRx, RoundTag, ShardEngine,
+};
+use phub::coordinator::optimizer::NesterovSgd;
+use phub::coordinator::pool::{F32Pool, Pool};
+use phub::coordinator::ring;
+use phub::coordinator::wire::{self, Op};
+use phub::prop::Rng;
+
+const PINGPONG_ROUNDTRIPS: usize = 200_000;
+const FANIN_PRODUCERS: usize = 4;
+const FANIN_MSGS_EACH: usize = 250_000;
+
+const JOB: u32 = 1;
+const CHUNKS: usize = 16;
+const CHUNK_ELEMS: usize = 4096;
+const BROADCAST_ROUNDS: usize = 40;
+
+/// Ring ping-pong: a token bounces A→B→A `n` times. Returns round trips
+/// per second.
+fn ring_pingpong(n: usize) -> f64 {
+    let (tx_ab, rx_ab) = ring::spsc::<u64>(4);
+    let (tx_ba, rx_ba) = ring::spsc::<u64>(4);
+    let echo = std::thread::spawn(move || {
+        while let Ok(v) = rx_ab.recv() {
+            if tx_ba.send(v).is_err() {
+                break;
+            }
+        }
+    });
+    let t0 = Instant::now();
+    for i in 0..n as u64 {
+        tx_ab.send(i).unwrap();
+        assert_eq!(rx_ba.recv().unwrap(), i);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(tx_ab);
+    echo.join().unwrap();
+    n as f64 / dt
+}
+
+/// `std::sync::mpsc` ping-pong with the same shape.
+fn mpsc_pingpong(n: usize) -> f64 {
+    let (tx_ab, rx_ab) = mpsc::channel::<u64>();
+    let (tx_ba, rx_ba) = mpsc::channel::<u64>();
+    let echo = std::thread::spawn(move || {
+        while let Ok(v) = rx_ab.recv() {
+            if tx_ba.send(v).is_err() {
+                break;
+            }
+        }
+    });
+    let t0 = Instant::now();
+    for i in 0..n as u64 {
+        tx_ab.send(i).unwrap();
+        assert_eq!(rx_ba.recv().unwrap(), i);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(tx_ab);
+    echo.join().unwrap();
+    n as f64 / dt
+}
+
+/// Ring fan-in: `p` producer threads each send `each` messages over
+/// their own SPSC ring; one consumer drains all rings behind one shared
+/// waiter (the core port-mesh shape). Returns messages per second.
+fn ring_fanin(p: usize, each: usize) -> f64 {
+    let waiter = Arc::new(ring::Waiter::new());
+    let mut txs = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..p {
+        let (tx, rx) = ring::spsc_shared::<u64>(1024, waiter.clone());
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let producers: Vec<_> = txs
+        .into_iter()
+        .map(|tx| {
+            std::thread::spawn(move || {
+                for i in 0..each as u64 {
+                    tx.send(i).unwrap();
+                }
+            })
+        })
+        .collect();
+    let total = p * each;
+    let t0 = Instant::now();
+    let mut got = 0usize;
+    let mut sum = 0u64;
+    while got < total {
+        let mut idle = true;
+        for rx in &rxs {
+            while let Ok(v) = rx.try_recv() {
+                sum = sum.wrapping_add(v);
+                got += 1;
+                idle = false;
+            }
+        }
+        if idle {
+            waiter.wait_until(|| rxs.iter().any(|r| !r.is_empty()));
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        sum,
+        (p as u64) * (each as u64 * (each as u64 - 1) / 2),
+        "fan-in lost or duplicated messages"
+    );
+    for h in producers {
+        h.join().unwrap();
+    }
+    total as f64 / dt
+}
+
+/// `std::sync::mpsc` fan-in with the same shape (cloned senders).
+fn mpsc_fanin(p: usize, each: usize) -> f64 {
+    let (tx, rx) = mpsc::channel::<u64>();
+    let producers: Vec<_> = (0..p)
+        .map(|_| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                for i in 0..each as u64 {
+                    tx.send(i).unwrap();
+                }
+            })
+        })
+        .collect();
+    drop(tx);
+    let total = p * each;
+    let t0 = Instant::now();
+    let mut sum = 0u64;
+    for _ in 0..total {
+        sum = sum.wrapping_add(rx.recv().unwrap());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(sum, (p as u64) * (each as u64 * (each as u64 - 1) / 2));
+    for h in producers {
+        h.join().unwrap();
+    }
+    total as f64 / dt
+}
+
+fn broadcast_engine(pullers: usize) -> (ShardEngine, Vec<ReplyRx>) {
+    let mut eng = ShardEngine::new();
+    let chunks: Vec<(u32, Vec<f32>)> = (0..CHUNKS)
+        .map(|c| (c as u32, vec![0.1f32; CHUNK_ELEMS]))
+        .collect();
+    let (txs, rxs) = single_lane_fabrics(JOB, pullers, 32);
+    eng.init_job(
+        JOB,
+        chunks,
+        Arc::new(NesterovSgd {
+            lr: 0.01,
+            momentum: 0.9,
+        }),
+        pullers,
+        txs,
+    );
+    (eng, rxs)
+}
+
+/// End-to-end rounds/s with the deployed single-copy broadcast: every
+/// worker pulls, the engine copies each completed chunk once into a
+/// shared buffer, and each worker's lane serializes its frame out of it.
+fn bench_broadcast_shared(pullers: usize, grads: &[Vec<f32>]) -> f64 {
+    let (mut eng, mut rxs) = broadcast_engine(pullers);
+    let mut ready: Vec<Vec<u8>> = vec![Vec::new(); pullers];
+    let run = |eng: &mut ShardEngine, rxs: &mut [ReplyRx], ready: &mut [Vec<u8>], r: u64| {
+        let tag = RoundTag::new(0, r);
+        for c in 0..CHUNKS as u32 {
+            for (w, g) in grads.iter().enumerate().take(pullers) {
+                let lo = c as usize * CHUNK_ELEMS;
+                let outcome = eng
+                    .push_src(
+                        JOB,
+                        c,
+                        w as u32,
+                        phub::coordinator::GradSrc::F32s(&g[lo..lo + CHUNK_ELEMS]),
+                        true,
+                        tag,
+                    )
+                    .unwrap();
+                if outcome == PushOutcome::Completed {
+                    for (i, rx) in rxs.iter_mut().enumerate() {
+                        match rx.try_recv() {
+                            Some(Reply::Chunk { chunk, epoch, data, .. }) => {
+                                ready[i].clear();
+                                wire::write_chunk_frame_f32s(
+                                    &mut ready[i],
+                                    Op::ModelChunk,
+                                    JOB,
+                                    i as u32,
+                                    chunk,
+                                    epoch,
+                                    lo as u64,
+                                    &data,
+                                )
+                                .unwrap();
+                            }
+                            other => panic!("expected reply, got {other:?}"),
+                        }
+                    }
+                }
+            }
+        }
+    };
+    run(&mut eng, &mut rxs, &mut ready, 0); // warm
+    let t0 = Instant::now();
+    for r in 0..BROADCAST_ROUNDS {
+        run(&mut eng, &mut rxs, &mut ready, (r + 1) as u64);
+    }
+    BROADCAST_ROUNDS as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The pre-refactor reply shape: on each completion the core copies the
+/// parameters into one exclusive pooled buffer **per puller** before the
+/// per-puller serialization. Same engine, same serialization work — the
+/// delta is the copy fan-out.
+fn bench_broadcast_copy_per_puller(pullers: usize, grads: &[Vec<f32>]) -> f64 {
+    let (mut eng, _rxs) = broadcast_engine(pullers);
+    let fpool: Arc<F32Pool> = Pool::new(64);
+    let mut ready: Vec<Vec<u8>> = vec![Vec::new(); pullers];
+    let run = |eng: &mut ShardEngine, ready: &mut [Vec<u8>], r: u64| {
+        let tag = RoundTag::new(0, r);
+        for c in 0..CHUNKS as u32 {
+            for (w, g) in grads.iter().enumerate().take(pullers) {
+                let lo = c as usize * CHUNK_ELEMS;
+                let outcome = eng
+                    .push_src(
+                        JOB,
+                        c,
+                        w as u32,
+                        phub::coordinator::GradSrc::F32s(&g[lo..lo + CHUNK_ELEMS]),
+                        false,
+                        tag,
+                    )
+                    .unwrap();
+                if outcome == PushOutcome::Completed {
+                    let params = eng.chunk_params(JOB, c).unwrap();
+                    for (i, rd) in ready.iter_mut().enumerate() {
+                        let mut buf = fpool.take();
+                        buf.extend_from_slice(params); // per-puller copy
+                        rd.clear();
+                        wire::write_chunk_frame_f32s(
+                            rd,
+                            Op::ModelChunk,
+                            JOB,
+                            i as u32,
+                            c,
+                            0,
+                            lo as u64,
+                            &buf,
+                        )
+                        .unwrap();
+                    }
+                }
+            }
+        }
+    };
+    run(&mut eng, &mut ready, 0); // warm
+    let t0 = Instant::now();
+    for r in 0..BROADCAST_ROUNDS {
+        run(&mut eng, &mut ready, (r + 1) as u64);
+    }
+    BROADCAST_ROUNDS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== ring fabric: SPSC ring vs std::sync::mpsc ==");
+    // Interleave warm-up and measurement so both see warm caches.
+    let _ = ring_pingpong(PINGPONG_ROUNDTRIPS / 10);
+    let _ = mpsc_pingpong(PINGPONG_ROUNDTRIPS / 10);
+    let ring_pp = ring_pingpong(PINGPONG_ROUNDTRIPS);
+    let mpsc_pp = mpsc_pingpong(PINGPONG_ROUNDTRIPS);
+    println!(
+        "  ping-pong:  ring {:>9.0} rt/s   mpsc {:>9.0} rt/s   ({:.2}x)",
+        ring_pp,
+        mpsc_pp,
+        ring_pp / mpsc_pp
+    );
+
+    let _ = ring_fanin(FANIN_PRODUCERS, FANIN_MSGS_EACH / 10);
+    let _ = mpsc_fanin(FANIN_PRODUCERS, FANIN_MSGS_EACH / 10);
+    let ring_fi = ring_fanin(FANIN_PRODUCERS, FANIN_MSGS_EACH);
+    let mpsc_fi = mpsc_fanin(FANIN_PRODUCERS, FANIN_MSGS_EACH);
+    println!(
+        "  fan-in x{FANIN_PRODUCERS}:  ring {:>9.0} msg/s  mpsc {:>9.0} msg/s  ({:.2}x)",
+        ring_fi,
+        mpsc_fi,
+        ring_fi / mpsc_fi
+    );
+
+    println!(
+        "== reply broadcast: {CHUNKS} x {CHUNK_ELEMS}-elem chunks, \
+         {BROADCAST_ROUNDS} rounds =="
+    );
+    let mut rng = Rng::new(17);
+    let grads: Vec<Vec<f32>> = (0..8).map(|_| rng.vec_f32(CHUNKS * CHUNK_ELEMS, 1.0)).collect();
+    let chunk_bytes = CHUNK_ELEMS * 4;
+    let mut shared_rps = Vec::new();
+    let mut copy_rps = Vec::new();
+    for &p in &[1usize, 4, 8] {
+        let s = bench_broadcast_shared(p, &grads);
+        let c = bench_broadcast_copy_per_puller(p, &grads);
+        shared_rps.push((p, s));
+        copy_rps.push((p, c));
+        println!(
+            "  {p} puller(s): single-copy {s:>8.1} rounds/s \
+             ({chunk_bytes} B copied/completion), per-puller-copy \
+             {c:>8.1} rounds/s ({} B copied/completion)",
+            p * chunk_bytes
+        );
+    }
+    println!("ring OK");
+    // Single-line JSON summary for BENCH_ring.json (keep last on stdout).
+    println!(
+        "{{\"bench\":\"ring\",\
+         \"pingpong_roundtrips\":{PINGPONG_ROUNDTRIPS},\
+         \"ring_pingpong_rts\":{ring_pp:.0},\"mpsc_pingpong_rts\":{mpsc_pp:.0},\
+         \"pingpong_speedup\":{:.3},\
+         \"fanin_producers\":{FANIN_PRODUCERS},\"fanin_msgs_each\":{FANIN_MSGS_EACH},\
+         \"ring_fanin_mps\":{ring_fi:.0},\"mpsc_fanin_mps\":{mpsc_fi:.0},\
+         \"fanin_speedup\":{:.3},\
+         \"chunk_bytes\":{chunk_bytes},\
+         \"shared_rps_1\":{:.1},\"shared_rps_4\":{:.1},\"shared_rps_8\":{:.1},\
+         \"copy_rps_1\":{:.1},\"copy_rps_4\":{:.1},\"copy_rps_8\":{:.1},\
+         \"shared_copied_bytes_per_completion\":{chunk_bytes},\
+         \"copy_copied_bytes_per_completion_8p\":{}}}",
+        ring_pp / mpsc_pp,
+        ring_fi / mpsc_fi,
+        shared_rps[0].1,
+        shared_rps[1].1,
+        shared_rps[2].1,
+        copy_rps[0].1,
+        copy_rps[1].1,
+        copy_rps[2].1,
+        8 * chunk_bytes
+    );
+}

@@ -16,12 +16,11 @@
 //!
 //! Results feed EXPERIMENTS.md section Perf.
 
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
 use phub::coordinator::aggregation::ChunkAggregator;
-use phub::coordinator::engine::{RoundTag, ShardEngine};
+use phub::coordinator::engine::{single_lane_fabrics, RoundTag, ShardEngine};
 use phub::coordinator::optimizer::{NesterovSgd, Optimizer};
 use phub::prop::Rng;
 
@@ -67,7 +66,8 @@ fn bench_engine(grads: &[Vec<f32>], init: &[f32]) -> f64 {
     let chunks: Vec<(u32, Vec<f32>)> = (0..N_CHUNKS)
         .map(|c| (c as u32, init[c * CHUNK..(c + 1) * CHUNK].to_vec()))
         .collect();
-    let (tx, _rx) = channel();
+    // Pull is off in this bench, so the reply consumers just stay alive.
+    let (txs, _rxs) = single_lane_fabrics(1, WORKERS, 16);
     eng.init_job(
         1,
         chunks,
@@ -76,7 +76,7 @@ fn bench_engine(grads: &[Vec<f32>], init: &[f32]) -> f64 {
             momentum: 0.9,
         }),
         WORKERS,
-        vec![tx; WORKERS],
+        txs,
     );
     let t0 = Instant::now();
     for round in 0..ROUNDS as u64 {
@@ -98,7 +98,7 @@ fn bench_rollback(grads: &[Vec<f32>], init: &[f32]) -> f64 {
     let chunks: Vec<(u32, Vec<f32>)> = (0..N_CHUNKS)
         .map(|c| (c as u32, init[c * CHUNK..(c + 1) * CHUNK].to_vec()))
         .collect();
-    let (tx, _rx) = channel();
+    let (txs, _rxs) = single_lane_fabrics(2, WORKERS, 16);
     eng.init_job(
         2,
         chunks,
@@ -107,7 +107,7 @@ fn bench_rollback(grads: &[Vec<f32>], init: &[f32]) -> f64 {
             momentum: 0.9,
         }),
         WORKERS,
-        vec![tx; WORKERS],
+        txs,
     );
     let iters = 200usize;
     let t0 = Instant::now();

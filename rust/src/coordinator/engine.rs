@@ -25,8 +25,9 @@
 //!
 //! # Memory discipline
 //!
-//! The engine's steady-state round is allocation-free and touches each
-//! gradient twice (absorb fold, fused mean+optimizer pass):
+//! The engine's steady-state round is **exact-zero allocation** (no
+//! exclusions) and touches each gradient twice (absorb fold, fused
+//! mean+optimizer pass):
 //!
 //! * Pushes arrive as [`GradSrc`] — an f32 slice from the in-process
 //!   path, or raw wire bytes (dense or 2-bit) from the TCP leader's
@@ -36,11 +37,16 @@
 //! * Round completion runs `ChunkAggregator::take_mean_into_step` +
 //!   `Optimizer::step_scaled`: one fused pass over the accumulator
 //!   instead of a scale pass plus an optimizer pass.
-//! * Replies carry pooled parameter buffers ([`PooledF32`], one per
-//!   puller, recycled when the transport finishes serializing) instead
-//!   of freshly allocated `Arc<[f32]>` snapshots. The remaining per-reply
-//!   cost outside this module's control is the mpsc channel's internal
-//!   block allocation (amortized ~1/31 sends) — see ROADMAP.
+//! * A completion with `P` pullers copies the fresh parameters **once**
+//!   into a refcount-shared pooled buffer ([`SharedF32`]) and hands each
+//!   puller a refcount bump; the buffer (refcount block included)
+//!   recycles to the engine's pool when the last receiver drops it —
+//!   single-copy broadcast with no per-completion `Arc` allocation.
+//! * Replies travel over bounded lock-free SPSC rings ([`super::ring`],
+//!   one per (worker, core)); the old `std::sync::mpsc` hop — a lock
+//!   under contention plus a queue-block allocation every ~31 sends —
+//!   is gone, so the reply route holds the same exact-zero invariant as
+//!   the rest of the path (`rust/tests/alloc_discipline.rs`).
 //!
 //! # Mid-round rollback
 //!
@@ -62,12 +68,12 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use super::aggregation::{AggError, ChunkAggregator, GradSrc};
 use super::optimizer::Optimizer;
-use super::pool::{F32Pool, Pool, PooledF32};
+use super::pool::{SharedF32, SharedF32Pool, SharedPool};
+use super::ring;
 
 /// Job identifier (one training job / tenant namespace).
 pub type JobId = u32;
@@ -156,17 +162,176 @@ pub enum PushOutcome {
 /// were already in flight for the dead round.
 #[derive(Debug, Clone)]
 pub enum Reply {
-    /// Updated parameters for one chunk. `data` is a pooled buffer owned
-    /// by this worker's reply alone — dropping it (after serializing or
-    /// copying) recycles it to the engine's pool.
+    /// Updated parameters for one chunk. `data` is a refcount-shared
+    /// pooled buffer: every puller of the completion holds the *same*
+    /// serialized-once parameters, and the last receiver to drop its
+    /// reference recycles the buffer to the owning engine's pool.
     Chunk {
         job: JobId,
         chunk: u32,
         epoch: u32,
-        data: PooledF32,
+        data: SharedF32,
     },
-    /// The job's open round was rewound; replay it under `epoch`.
+    /// The job's open round was rewound; replay it under `epoch`. On the
+    /// wire between engine and worker this never occupies a ring slot —
+    /// it is synthesized by [`ReplyRx`] from the ring's monotone epoch
+    /// bulletin ([`ring::Producer::post_epoch`]), so a full ring of
+    /// dead-round replies can never wedge a recovery notice.
     RolledBack { job: JobId, epoch: u32 },
+}
+
+/// The engine side of one worker's reply route: one SPSC producer per
+/// (worker, core) ring.
+pub type ReplyTx = ring::Producer<Reply>;
+
+/// The worker side of its reply route: the per-core reply rings
+/// multiplexed behind one waiter, with rollback notices synthesized from
+/// the rings' epoch bulletins.
+///
+/// Delivery order is the drain-on-epoch-bump rule from the recovery
+/// design: before any queued reply from a ring is handed out, that
+/// ring's bulletin is checked, so a worker always learns about a
+/// rollback **no later than** the first reply sent after it — exactly
+/// the FIFO guarantee the old in-band mpsc notice gave — while stale
+/// dead-round replies drain naturally through the receiver's existing
+/// epoch filters.
+pub struct ReplyRx {
+    job: JobId,
+    rings: Vec<ring::Consumer<Reply>>,
+    /// Bulletin level already delivered, per ring.
+    seen: Vec<u64>,
+    /// Ring observed empty+disconnected (job evicted / engine gone).
+    dead: Vec<bool>,
+    /// A reply popped together with fresh bulletin news: the notice goes
+    /// out first, this reply on the next call.
+    stashed: Option<Reply>,
+    /// Scan cursor for round-robin fairness across rings.
+    cursor: usize,
+    waiter: Arc<ring::Waiter>,
+}
+
+impl ReplyRx {
+    /// Multiplex `rings` (all built on `waiter` via [`ring::spsc_shared`])
+    /// into one receiver for `job`'s worker.
+    pub fn new(job: JobId, rings: Vec<ring::Consumer<Reply>>, waiter: Arc<ring::Waiter>) -> ReplyRx {
+        let n = rings.len();
+        ReplyRx {
+            job,
+            rings,
+            seen: vec![0; n],
+            dead: vec![false; n],
+            stashed: None,
+            cursor: 0,
+            waiter,
+        }
+    }
+
+    /// Non-blocking receive across all rings; `None` when nothing is
+    /// deliverable right now.
+    pub fn try_recv(&mut self) -> Option<Reply> {
+        if let Some(r) = self.stashed.take() {
+            return Some(r);
+        }
+        // Bulletins first: a rollback notice outranks queued data.
+        for i in 0..self.rings.len() {
+            let lvl = self.rings[i].epoch_level();
+            if lvl > self.seen[i] {
+                self.seen[i] = lvl;
+                return Some(Reply::RolledBack {
+                    job: self.job,
+                    epoch: (lvl - 1) as u32,
+                });
+            }
+        }
+        let n = self.rings.len();
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            match self.rings[i].try_recv() {
+                Ok(r) => {
+                    self.cursor = (i + 1) % n;
+                    // Same-ring ordering: if this ring posted a bulletin
+                    // before (or while) sending `r`, deliver the notice
+                    // first and stash the reply.
+                    let lvl = self.rings[i].epoch_level();
+                    if lvl > self.seen[i] {
+                        self.seen[i] = lvl;
+                        self.stashed = Some(r);
+                        return Some(Reply::RolledBack {
+                            job: self.job,
+                            epoch: (lvl - 1) as u32,
+                        });
+                    }
+                    return Some(r);
+                }
+                Err(ring::TryRecvError::Empty) => {}
+                Err(ring::TryRecvError::Disconnected) => self.dead[i] = true,
+            }
+        }
+        None
+    }
+
+    /// Blocking receive: parks until a reply or rollback notice arrives.
+    /// `None` means every ring's engine side is gone (job evicted or
+    /// server shut down) — nothing will ever arrive.
+    pub fn recv(&mut self) -> Option<Reply> {
+        loop {
+            if let Some(r) = self.try_recv() {
+                return Some(r);
+            }
+            if self.dead.iter().all(|&d| d) {
+                return None;
+            }
+            let ReplyRx {
+                rings,
+                seen,
+                dead,
+                waiter,
+                ..
+            } = self;
+            waiter.wait_until(|| {
+                rings
+                    .iter()
+                    .zip(seen.iter())
+                    .zip(dead.iter())
+                    .any(|((r, &s), &d)| !d && r.pollable(s))
+            });
+        }
+    }
+}
+
+/// Build one worker's reply fabric across `n_cores` cores: the engine
+/// producers (index = core) and the worker's multiplexed receiver. Each
+/// ring holds `capacity` replies; producers block (backpressure) beyond
+/// that.
+pub fn reply_fabric(job: JobId, n_cores: usize, capacity: usize) -> (Vec<ReplyTx>, ReplyRx) {
+    let waiter = Arc::new(ring::Waiter::new());
+    let mut txs = Vec::with_capacity(n_cores);
+    let mut rxs = Vec::with_capacity(n_cores);
+    for _ in 0..n_cores {
+        let (tx, rx) = ring::spsc_shared(capacity, waiter.clone());
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    (txs, ReplyRx::new(job, rxs, waiter))
+}
+
+/// [`reply_fabric`] in the common test/bench shape: `n_workers`
+/// independent single-core lanes for `job`. Returns the engine-side
+/// producers (index = worker, as `ShardEngine::init_job` expects) and
+/// each worker's receiver.
+pub fn single_lane_fabrics(
+    job: JobId,
+    n_workers: usize,
+    capacity: usize,
+) -> (Vec<ReplyTx>, Vec<ReplyRx>) {
+    let mut txs = Vec::with_capacity(n_workers);
+    let mut rxs = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (mut tx, rx) = reply_fabric(job, 1, capacity);
+        txs.push(tx.pop().expect("single lane"));
+        rxs.push(rx);
+    }
+    (txs, rxs)
 }
 
 /// One chunk's server-side state: parameters, optimizer state, streaming
@@ -197,7 +362,9 @@ impl ChunkSlot {
 struct JobShard {
     chunks: HashMap<u32, ChunkSlot>,
     opt: Arc<dyn Optimizer>,
-    replies: Vec<Sender<Reply>>,
+    /// One SPSC reply ring producer per worker (this core's lane of each
+    /// worker's reply fabric).
+    replies: Vec<ReplyTx>,
     /// Which workers asked to pull each chunk this round.
     pull_mask: HashMap<u32, u64>,
     /// Rollback generation; pushes tagged with an older epoch are stale.
@@ -205,44 +372,64 @@ struct JobShard {
     n_workers: usize,
 }
 
-/// Copy `params` into a pooled buffer and send it to `tx` as a chunk
-/// reply. The one copy here is the per-puller transmission the paper's
-/// data plane makes anyway; the buffer recycles once the receiver drops
-/// it.
+/// Copy `params` once into a refcount-shared pooled buffer and send it
+/// to every worker whose bit is set in `mask` — the single-copy reply
+/// broadcast. Each send is a refcount bump, not a copy; the buffer
+/// (refcount block included) recycles to `pool` when the last receiver
+/// drops it. A send to a vanished worker is ignored: the handed-back
+/// reply drops its reference on the spot.
 ///
-/// Deliberate trade-off: a round completion with `P` pullers does `P`
-/// parameter copies *on the core* (exclusively-owned buffers, zero
-/// allocations), where the pre-pool code did one copy into a fresh
-/// `Arc<[f32]>` (one allocation per completion) and let connection
-/// threads copy during serialization. Total bytes moved are comparable
-/// (≤ the bytes the core just absorbed aggregating `n` gradients), but
-/// at high fan-out the copies serialize on the core; a refcount-pooled
-/// buffer would restore single-copy broadcast while keeping the
-/// zero-allocation invariant — see ROADMAP.
-fn send_params(
-    pool: &Arc<F32Pool>,
-    tx: &Sender<Reply>,
+/// The serialization work on the core is therefore independent of the
+/// puller count: one copy of `params.len()` floats whether 1 or 64
+/// workers pulled (`benches/ring.rs` measures exactly this).
+///
+/// The sends block on a full ring (backpressure). Within the round
+/// protocol that cannot happen: a worker has at most one round in
+/// flight (the TCP connection thread reads no further frames until the
+/// round's replies drain; the in-process `push_pull`/`pull` APIs are
+/// `&mut self` barriers), so outstanding replies per (worker, core)
+/// ring never exceed the `2 * chunks_on_core + slack` the server sizes
+/// it for — a hostile wire peer cannot wedge a shared core. Only an
+/// in-process embedder driving the manual `push_chunk(pull=true)` API
+/// across rounds without collecting replies can invoke the
+/// backpressure, and it stalls exactly the chunks it shares a core
+/// with — the documented bounded-memory trade, not a protocol hazard.
+fn broadcast_params(
+    pool: &Arc<SharedF32Pool>,
+    txs: &[ReplyTx],
+    mask: u64,
     job: JobId,
     chunk: u32,
     epoch: u32,
     params: &[f32],
 ) {
+    if mask == 0 {
+        return;
+    }
     let mut buf = pool.take();
     buf.extend_from_slice(params);
-    let _ = tx.send(Reply::Chunk {
-        job,
-        chunk,
-        epoch,
-        data: buf,
-    });
+    let data = buf; // shared from here on: clones bump the pooled refcount
+    for (i, tx) in txs.iter().enumerate() {
+        if mask & (1u64 << i) != 0 {
+            let _ = tx.send(Reply::Chunk {
+                job,
+                chunk,
+                epoch,
+                data: data.clone(),
+            });
+        }
+    }
+    // `data` drops here; the buffer returns to the pool once every
+    // receiver is done with it.
 }
 
 /// The per-core round engine: owns every job shard on one core thread and
 /// every transition of the round state machine.
 pub struct ShardEngine {
     jobs: HashMap<JobId, JobShard>,
-    /// Recycling pool behind every reply this engine sends.
-    pool: Arc<F32Pool>,
+    /// Recycling pool behind every reply this engine sends (buffer and
+    /// refcount block recycle together).
+    pool: Arc<SharedF32Pool>,
 }
 
 impl Default for ShardEngine {
@@ -255,7 +442,7 @@ impl ShardEngine {
     pub fn new() -> ShardEngine {
         ShardEngine {
             jobs: HashMap::new(),
-            pool: Pool::new(REPLY_POOL_MAX_FREE),
+            pool: SharedPool::new(REPLY_POOL_MAX_FREE),
         }
     }
 
@@ -267,7 +454,7 @@ impl ShardEngine {
         chunks: Vec<(u32, Vec<f32>)>,
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
-        replies: Vec<Sender<Reply>>,
+        replies: Vec<ReplyTx>,
     ) {
         let mut map = HashMap::new();
         for (id, params) in chunks {
@@ -355,9 +542,10 @@ impl ShardEngine {
             // round: its parameters already include every worker's
             // gradient, so answer straight from the slot.
             if pull {
-                send_params(
+                broadcast_params(
                     pool,
-                    &shard.replies[w],
+                    &shard.replies,
+                    1u64 << w,
                     job,
                     chunk,
                     shard.epoch,
@@ -395,13 +583,7 @@ impl ShardEngine {
         })?;
         *round += 1;
         let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
-        if mask != 0 {
-            for (i, tx) in shard.replies.iter().enumerate() {
-                if mask & (1u64 << i) != 0 {
-                    send_params(pool, tx, job, chunk, shard.epoch, params);
-                }
-            }
-        }
+        broadcast_params(pool, &shard.replies, mask, job, chunk, shard.epoch, params);
         Ok(PushOutcome::Completed)
     }
 
@@ -420,9 +602,10 @@ impl ShardEngine {
             .chunks
             .get(&chunk)
             .ok_or(EngineError::UnknownChunk { job, chunk })?;
-        send_params(
+        broadcast_params(
             pool,
-            &shard.replies[w],
+            &shard.replies,
+            1u64 << w,
             job,
             chunk,
             shard.epoch,
@@ -456,7 +639,14 @@ impl ShardEngine {
 /// a duplicate `RollbackRound` message (or one arriving after a push
 /// already self-healed the shard forward) is harmless. Returns the number
 /// of chunks rewound.
-fn rollback_shard(shard: &mut JobShard, job: JobId, epoch: u32) -> usize {
+///
+/// The notice rides the reply rings' out-of-band epoch bulletin
+/// ([`ring::Producer::post_epoch`]), not a ring slot: it is monotone and
+/// capacity-independent, so a worker whose reply ring is wedged full of
+/// dead-round traffic (or whose seat is parked awaiting a successor)
+/// still learns the new epoch immediately — recovery can never deadlock
+/// behind the very round it is rewinding.
+fn rollback_shard(shard: &mut JobShard, _job: JobId, epoch: u32) -> usize {
     if epoch <= shard.epoch {
         return 0;
     }
@@ -469,7 +659,7 @@ fn rollback_shard(shard: &mut JobShard, job: JobId, epoch: u32) -> usize {
     }
     shard.pull_mask.clear();
     for tx in &shard.replies {
-        let _ = tx.send(Reply::RolledBack { job, epoch });
+        tx.post_epoch(epoch);
     }
     rewound
 }
@@ -588,21 +778,15 @@ impl WorkerRound {
 mod tests {
     use super::*;
     use crate::coordinator::optimizer::Sgd;
-    use std::sync::mpsc::{channel, Receiver};
 
     fn engine_with_job(
         n_workers: usize,
         chunks: Vec<(u32, Vec<f32>)>,
         lr: f32,
-    ) -> (ShardEngine, Vec<Receiver<Reply>>) {
+    ) -> (ShardEngine, Vec<ReplyRx>) {
         let mut eng = ShardEngine::new();
-        let mut txs = Vec::new();
-        let mut rxs = Vec::new();
-        for _ in 0..n_workers {
-            let (tx, rx) = channel();
-            txs.push(tx);
-            rxs.push(rx);
-        }
+        // One "core" in these unit tests: single-lane reply fabrics.
+        let (txs, rxs) = single_lane_fabrics(1, n_workers, 64);
         eng.init_job(1, chunks, Arc::new(Sgd { lr }), n_workers, txs);
         (eng, rxs)
     }
@@ -618,7 +802,7 @@ mod tests {
 
     #[test]
     fn push_completes_and_replies_to_pullers() {
-        let (mut eng, rxs) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        let (mut eng, mut rxs) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
         let t = RoundTag::new(0, 0);
         assert_eq!(
             eng.push(1, 0, 0, &[2.0, 2.0], true, t).unwrap(),
@@ -632,15 +816,15 @@ mod tests {
         let (chunk, epoch, data) = chunk_reply(rxs[0].recv().unwrap());
         assert_eq!((chunk, epoch), (0, 0));
         assert_eq!(data, vec![-0.5, -0.5]);
-        assert!(rxs[1].try_recv().is_err());
+        assert!(rxs[1].try_recv().is_none());
     }
 
     /// Wire-byte pushes produce the same completion and bits as slice
     /// pushes — the leader's pooled-buffer path rides `push_src`.
     #[test]
     fn push_src_bytes_matches_slices() {
-        let (mut eng_a, rxs_a) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
-        let (mut eng_b, rxs_b) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        let (mut eng_a, mut rxs_a) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        let (mut eng_b, mut rxs_b) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
         let t = RoundTag::new(0, 0);
         let g0 = [2.0f32, -3.5];
         let g1 = [4.0f32, 0.25];
@@ -653,8 +837,8 @@ mod tests {
         eng_b
             .push_src(1, 0, 1, GradSrc::LeBytes(&le(&g1)), true, t)
             .unwrap();
-        for rxs in [&rxs_a, &rxs_b] {
-            for rx in rxs.iter() {
+        for rxs in [&mut rxs_a, &mut rxs_b] {
+            for rx in rxs.iter_mut() {
                 assert!(matches!(rx.recv().unwrap(), Reply::Chunk { .. }));
             }
         }
@@ -698,7 +882,7 @@ mod tests {
     /// recovery path would recreate the very wedge it exists to fix.
     #[test]
     fn future_epoch_push_self_heals_the_race() {
-        let (mut eng, rxs) = engine_with_job(2, vec![(0, vec![1.0])], 0.5);
+        let (mut eng, mut rxs) = engine_with_job(2, vec![(0, vec![1.0])], 0.5);
         // A partial round at epoch 0 (this is what the rollback rewinds).
         eng.push(1, 0, 0, &[99.0], true, RoundTag::new(0, 0)).unwrap();
         // Worker 1 replays at epoch 1 before this core saw RollbackRound.
@@ -732,7 +916,7 @@ mod tests {
     #[test]
     fn rollback_rewinds_partial_keeps_completed_and_replays_bit_identical() {
         // Two chunks: chunk 0 completes the round, chunk 1 stays partial.
-        let (mut eng, rxs) =
+        let (mut eng, mut rxs) =
             engine_with_job(2, vec![(0, vec![1.0]), (1, vec![10.0])], 0.5);
         let t0 = RoundTag::new(0, 0);
         eng.push(1, 0, 0, &[2.0], true, t0).unwrap();
@@ -742,7 +926,7 @@ mod tests {
 
         // Worker 1 dies; the leader rolls the job to epoch 1.
         assert_eq!(eng.rollback(1, 1).unwrap(), 1); // only chunk 1 rewound
-        for rx in &rxs {
+        for rx in rxs.iter_mut() {
             match rx.recv().unwrap() {
                 Reply::RolledBack { epoch, .. } => assert_eq!(epoch, 1),
                 other => panic!("expected rollback notice, got {other:?}"),
@@ -768,19 +952,20 @@ mod tests {
 
     #[test]
     fn rollback_is_idempotent() {
-        let (mut eng, rxs) = engine_with_job(1, vec![(0, vec![0.0])], 1.0);
+        let (mut eng, mut rxs) = engine_with_job(1, vec![(0, vec![0.0])], 1.0);
         assert_eq!(eng.rollback(1, 1).unwrap(), 0);
         assert_eq!(eng.rollback(1, 1).unwrap(), 0);
-        // Exactly one notice per effective rollback.
+        // Exactly one notice per effective rollback (the bulletin is
+        // monotone, so the duplicate rollback posts nothing new).
         assert!(matches!(rxs[0].recv().unwrap(), Reply::RolledBack { epoch: 1, .. }));
-        assert!(rxs[0].try_recv().is_err());
+        assert!(rxs[0].try_recv().is_none());
     }
 
     /// Reply buffers recycle: after the receiver drops a reply, the next
     /// completion reuses its buffer instead of allocating a fresh one.
     #[test]
     fn reply_buffers_recycle_through_the_pool() {
-        let (mut eng, rxs) = engine_with_job(1, vec![(0, vec![0.0, 0.0])], 1.0);
+        let (mut eng, mut rxs) = engine_with_job(1, vec![(0, vec![0.0, 0.0])], 1.0);
         eng.push(1, 0, 0, &[1.0, 1.0], true, RoundTag::new(0, 0)).unwrap();
         let (_, _, first) = chunk_reply(rxs[0].recv().unwrap()); // buffer dropped here
         assert_eq!(eng.pool.free_count(), 1, "dropped reply returned its buffer");
@@ -789,6 +974,36 @@ mod tests {
         assert_eq!(eng.pool.free_count(), 1);
         assert_eq!(first, vec![-1.0, -1.0]);
         assert_eq!(second, vec![-2.0, -2.0]);
+    }
+
+    /// Single-copy broadcast: a completion with several pullers sends
+    /// refcount bumps of *one* pooled buffer, and the pool gets exactly
+    /// one slot back once every receiver has dropped its reference.
+    #[test]
+    fn completion_broadcasts_one_shared_buffer() {
+        let (mut eng, mut rxs) = engine_with_job(3, vec![(0, vec![1.0, 1.0])], 0.5);
+        let t = RoundTag::new(0, 0);
+        eng.push(1, 0, 0, &[3.0, 3.0], true, t).unwrap();
+        eng.push(1, 0, 1, &[3.0, 3.0], true, t).unwrap();
+        assert_eq!(
+            eng.push(1, 0, 2, &[3.0, 3.0], true, t).unwrap(),
+            PushOutcome::Completed
+        );
+        let datas: Vec<SharedF32> = rxs
+            .iter_mut()
+            .map(|rx| match rx.recv().unwrap() {
+                Reply::Chunk { data, .. } => data,
+                other => panic!("expected chunk reply, got {other:?}"),
+            })
+            .collect();
+        let ptr = datas[0].as_ptr();
+        for d in &datas {
+            assert_eq!(d.as_ptr(), ptr, "all pullers share the one buffer");
+            assert_eq!(&**d, &vec![-0.5, -0.5]); // 1 - 0.5 * 3
+        }
+        assert_eq!(eng.pool.free_count(), 0, "still referenced");
+        drop(datas);
+        assert_eq!(eng.pool.free_count(), 1, "one buffer recycled, not three");
     }
 
     #[test]

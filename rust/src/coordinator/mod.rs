@@ -17,8 +17,9 @@
 //! protocol violation can never kill a shared core thread. Two thin
 //! transport shells frame and route bytes into that engine:
 //!
-//! * [`server`] — in-process: channels carry chunk-sized `f32` buffers to
-//!   per-core engine instances; workers are threads holding
+//! * [`server`] — in-process: bounded lock-free SPSC rings ([`ring`])
+//!   carry chunk-sized `f32` buffers to per-core engine instances, one
+//!   request ring per (worker, core); workers are threads holding
 //!   `WorkerHandle`s.
 //! * [`transport`] — distributed: a TCP leader speaks the chunk-streamed
 //!   wire protocol ([`wire`]) and drives the *same* engine, including
@@ -33,8 +34,9 @@
 //! # Memory discipline
 //!
 //! The data plane is memory-bandwidth-bound (paper §4.3), so the steady
-//! state of a round is allocation-free per chunk and touches each
-//! gradient byte as few times as possible. Buffer ownership:
+//! state of a round is **exact-zero** — no heap allocation and no mutex
+//! acquisition per chunk, with no exclusions — and touches each gradient
+//! byte as few times as possible. Buffer and queue ownership:
 //!
 //! * **Frame buffers** (leader receive): owned by each connection's
 //!   recycling [`pool::BytePool`]. `wire::read_frame_into` fills one,
@@ -43,22 +45,30 @@
 //!   (`aggregation::absorb_bytes` / `absorb_quant` — no intermediate
 //!   `Vec<f32>`, no dequantize scratch), and the drop recycles it.
 //! * **Reply buffers** (engine → worker): owned by each core engine's
-//!   [`pool::F32Pool`]. Completion copies the chunk slot's parameters
-//!   into one pooled buffer per puller; the transport serializes it
-//!   straight into its reused staging vector
-//!   (`wire::write_chunk_frame_f32s`) and the drop recycles it.
+//!   [`pool::SharedF32Pool`]. Completion copies the chunk slot's
+//!   parameters **once** into a refcount-shared pooled buffer and every
+//!   puller gets a refcount bump (single-copy broadcast, no
+//!   per-completion `Arc` allocation — the refcount block recycles with
+//!   the buffer); the transport serializes straight out of the shared
+//!   buffer into its reused staging vector
+//!   (`wire::write_chunk_frame_f32s`) and the last drop recycles it.
+//! * **Queues** (the fabric): bounded lock-free SPSC rings ([`ring`]),
+//!   one request ring per (worker, core) and one reply ring back, each
+//!   allocated once at job init. Cores poll only their own rings and
+//!   park when idle; a full ring blocks exactly its one producer
+//!   (backpressure). `std::sync::mpsc` — a lock under contention plus a
+//!   queue-block allocation every ~31 sends — is gone from the tree.
 //! * **Accumulators, optimizer state, round caches**: owned by their
 //!   chunk slots / connections and reused for the process lifetime;
 //!   the fused `take_mean_into_step` + `step_scaled` pass finishes a
 //!   round in one sweep over the accumulator.
 //!
 //! Per chunk per round the leader path is one copy in (socket →
-//! pooled buffer), one absorb fold, one fused optimize pass, one copy
-//! out per puller — and zero steady-state heap allocations, asserted by
-//! `rust/tests/alloc_discipline.rs` and measured by
-//! `benches/dataplane.rs`. The one allocation left on the reply route is
-//! inside `std::sync::mpsc` itself (a queue block per ~31 sends); see
-//! ROADMAP.
+//! pooled buffer), one absorb fold, one fused optimize pass, one shared
+//! copy out regardless of puller count — and exactly zero steady-state
+//! heap allocations and mutex acquisitions, asserted with no exclusions
+//! by `rust/tests/alloc_discipline.rs` and measured by
+//! `benches/dataplane.rs` and `benches/ring.rs`.
 
 pub mod aggregation;
 pub mod chunk;
@@ -68,6 +78,7 @@ pub mod hierarchy;
 pub mod mapping;
 pub mod optimizer;
 pub mod pool;
+pub mod ring;
 pub mod server;
 pub mod service;
 pub mod tenancy;
@@ -76,8 +87,13 @@ pub mod wire;
 
 pub use aggregation::GradSrc;
 pub use chunk::{ChunkId, KeyTable};
-pub use engine::{EngineError, PushOutcome, Reply, RoundTag, ShardEngine, WorkerRound};
+pub use engine::{
+    EngineError, PushOutcome, Reply, ReplyRx, ReplyTx, RoundTag, ShardEngine, WorkerRound,
+};
 pub use optimizer::{NesterovSgd, Optimizer, Sgd};
-pub use pool::{BytePool, F32Pool, Pool, Pooled, PooledBytes, PooledF32};
+pub use pool::{
+    BytePool, F32Pool, Pool, Pooled, PooledBytes, PooledF32, SharedF32, SharedF32Pool, SharedPool,
+    SharedPooled,
+};
 pub use server::{PHubServer, ServerConfig};
 pub use service::{ConnectionManager, ServiceHandle};

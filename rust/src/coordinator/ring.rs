@@ -1,0 +1,725 @@
+//! Bounded lock-free SPSC rings: the queue-per-core fabric.
+//!
+//! PHub's data plane is fast because its cores share nothing (paper
+//! §3.2; the same queue-per-core discipline underpins the PBox appliance
+//! in *Parameter Box*): a chunk is pinned to one core for its whole
+//! lifetime and nothing on the NIC→optimizer path takes a lock or
+//! allocates. `std::sync::mpsc` broke that discipline twice — its
+//! receiver takes a lock under contention and its internal queue
+//! allocates a block every ~31 sends. This module replaces it with the
+//! paper-shaped primitive: a **bounded single-producer/single-consumer
+//! ring** whose whole life is
+//!
+//! * **zero allocation after construction** — the slot array is allocated
+//!   once, messages are moved in and out of it by value;
+//! * **lock-free progress** — one cache-line-padded Acquire/Release
+//!   head/tail pair; the producer writes only `tail`, the consumer only
+//!   `head`, so the steady state is two uncontended atomic ops per
+//!   message and no RMW at all;
+//! * **park/unpark blocking at the edges** — an idle consumer spins
+//!   briefly then parks instead of burning its core; a full ring blocks
+//!   the producer (backpressure) instead of dropping or deadlocking;
+//! * **monotone epoch sideband** — [`Producer::post_epoch`] publishes a
+//!   rollback epoch *past* the ring capacity (a `fetch_max` on a
+//!   dedicated atomic), so recovery notices can never be wedged behind a
+//!   full ring of dead-round traffic. This is the transport half of the
+//!   drain-on-epoch-bump rule: consumers observe the bulletin, then
+//!   drain and discard stale-epoch messages instead of blocking on them
+//!   (`engine.rs` owns the state-machine half).
+//!
+//! # Topology
+//!
+//! [`spsc`] builds an isolated pair. [`spsc_shared`] builds a pair whose
+//! *consumer-side* wakeups go to a caller-supplied [`Waiter`], which is
+//! how one thread multiplexes many rings without locks: the in-process
+//! server gives every core one `Waiter` shared by all the request rings
+//! it consumes, and every worker one `Waiter` shared by its per-core
+//! reply rings. A producer finishing a push notifies that shared waiter;
+//! the consumer re-scans its rings before parking (Dekker-style
+//! registration, see [`Waiter::wait_until`]) so a wakeup can never be
+//! lost between the scan and the park.
+//!
+//! # Contract
+//!
+//! Exactly one thread may use the [`Producer`] and one the [`Consumer`]
+//! at a time (they are `Send` but deliberately not `Clone`/`Sync`), and
+//! when several rings share a `Waiter`, all their consumer endpoints
+//! must be polled by that same single thread.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::Thread;
+
+/// Pad-and-align wrapper keeping the producer's and consumer's hot
+/// indices on separate cache lines (false sharing would otherwise make
+/// every push invalidate the consumer's line and vice versa).
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+/// Iterations of the spin phase before a blocked endpoint registers and
+/// parks. Sized so a ping-pong between two running threads stays in user
+/// space, while a genuinely idle core reaches `thread::park` quickly.
+const SPIN_BEFORE_PARK: u32 = 256;
+
+// ---------------------------------------------------------------------------
+// Waiter: one-thread park/unpark cell (the blocking half of the fabric).
+// ---------------------------------------------------------------------------
+
+const W_EMPTY: u8 = 0;
+const W_REGISTERING: u8 = 1;
+const W_WAITING: u8 = 2;
+const W_NOTIFYING: u8 = 3;
+const W_NOTIFIED: u8 = 4;
+
+/// A lock-free park/unpark cell for **one** waiting thread and any number
+/// of notifiers.
+///
+/// The waiter publishes its `Thread` handle through a small state machine
+/// (`EMPTY → REGISTERING → WAITING → NOTIFYING → NOTIFIED → EMPTY`) so a
+/// notifier can clone the handle out without a mutex and without ever
+/// racing the waiter's re-registration: the handle cell is only written
+/// in `REGISTERING` and only read in `NOTIFYING`, and the two states
+/// exclude each other by CAS. `Thread::clone` is a refcount bump, so
+/// notification allocates nothing.
+pub struct Waiter {
+    state: AtomicU8,
+    /// Written by the waiter in `REGISTERING`, read by the notifier in
+    /// `NOTIFYING`; the state machine makes the two exclusive.
+    thread: UnsafeCell<Option<Thread>>,
+}
+
+// Safety: the `thread` cell is guarded by the `state` machine as
+// documented above; all other fields are atomics.
+unsafe impl Send for Waiter {}
+unsafe impl Sync for Waiter {}
+
+impl Default for Waiter {
+    fn default() -> Self {
+        Waiter::new()
+    }
+}
+
+impl Waiter {
+    pub fn new() -> Waiter {
+        Waiter {
+            state: AtomicU8::new(W_EMPTY),
+            thread: UnsafeCell::new(None),
+        }
+    }
+
+    /// Block the calling thread until `ready()` returns true, parking
+    /// between checks. `ready` must be driven by state the notifiers
+    /// change *before* calling [`Waiter::notify`]; the Dekker-style
+    /// re-check after registration then guarantees no lost wakeup:
+    /// either the notifier sees `WAITING` and unparks us, or we see its
+    /// state change in the re-check and never park.
+    ///
+    /// Only one thread may wait on a `Waiter` (the fabric's consumer
+    /// sides are single-threaded by contract).
+    pub fn wait_until(&self, mut ready: impl FnMut() -> bool) {
+        let mut spins = 0u32;
+        loop {
+            if ready() {
+                return;
+            }
+            if spins < SPIN_BEFORE_PARK {
+                spins += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            // Register for a wakeup. A leftover NOTIFYING/NOTIFIED from a
+            // notifier we raced on the previous lap is consumed first.
+            match self.state.compare_exchange(
+                W_EMPTY,
+                W_REGISTERING,
+                Ordering::Acquire,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {}
+                Err(_) => {
+                    self.settle();
+                    continue;
+                }
+            }
+            // Sole writer while in REGISTERING (notifiers only read the
+            // cell from NOTIFYING, which this state excludes).
+            unsafe { *self.thread.get() = Some(std::thread::current()) };
+            self.state.store(W_WAITING, Ordering::Release);
+            // The store-load fence of the Dekker handshake: our WAITING
+            // store must be globally visible before we re-read the
+            // condition, mirroring the notifier's publish-then-fence.
+            fence(Ordering::SeqCst);
+            if ready() {
+                self.cancel_wait();
+                return;
+            }
+            loop {
+                match self.state.load(Ordering::Acquire) {
+                    W_WAITING | W_NOTIFYING => std::thread::park(),
+                    _ => break,
+                }
+            }
+            self.state.store(W_EMPTY, Ordering::Release);
+        }
+    }
+
+    /// Withdraw a registration (the condition turned true on its own).
+    fn cancel_wait(&self) {
+        if self
+            .state
+            .compare_exchange(W_WAITING, W_EMPTY, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return;
+        }
+        // A notifier is mid-flight; let it finish with the handle cell,
+        // then absorb the (now spurious) notification.
+        self.settle();
+    }
+
+    /// Spin out a NOTIFYING/NOTIFIED transient back to EMPTY.
+    fn settle(&self) {
+        loop {
+            match self.state.load(Ordering::Acquire) {
+                W_NOTIFIED => {
+                    self.state.store(W_EMPTY, Ordering::Release);
+                    return;
+                }
+                W_NOTIFYING => std::hint::spin_loop(),
+                // EMPTY (or a concurrent re-registration state we cannot
+                // be in ourselves): nothing to settle.
+                _ => return,
+            }
+        }
+    }
+
+    /// Wake the waiter if one is registered. Callers must change the
+    /// waited-on state (e.g. publish a message with Release) *before*
+    /// notifying. The fast path is one fence and one load.
+    pub fn notify(&self) {
+        // Store-load fence pairing with the waiter's post-registration
+        // re-check: either our state change is visible to its re-check,
+        // or its WAITING is visible to us here.
+        fence(Ordering::SeqCst);
+        if self.state.load(Ordering::Relaxed) != W_WAITING {
+            return;
+        }
+        if self
+            .state
+            .compare_exchange(W_WAITING, W_NOTIFYING, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            // Clone the handle out (refcount bump, no allocation), hand
+            // the cell back, then unpark. The waiter cannot touch the
+            // cell until it sees NOTIFIED.
+            let t = unsafe { (*self.thread.get()).clone() };
+            self.state.store(W_NOTIFIED, Ordering::Release);
+            if let Some(t) = t {
+                t.unpark();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The ring itself.
+// ---------------------------------------------------------------------------
+
+struct Ring<T> {
+    /// Slot array, allocated once at construction; `mask` is `cap - 1`.
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Consumer's read index (free-running; slot = index & mask).
+    head: CachePadded<AtomicUsize>,
+    /// Producer's write index.
+    tail: CachePadded<AtomicUsize>,
+    /// Monotone out-of-band epoch bulletin (rollback notices must not be
+    /// able to wedge behind a full ring; see module docs).
+    epoch: AtomicU64,
+    tx_alive: AtomicBool,
+    rx_alive: AtomicBool,
+    /// Wakes the consumer; possibly shared across a thread's rings.
+    rx_waiter: Arc<Waiter>,
+    /// Wakes the producer blocked on a full ring; always private.
+    tx_waiter: Waiter,
+}
+
+// Safety: slots are handed off producer→consumer through the
+// Acquire/Release tail/head protocol; each slot is written by exactly
+// one side at a time.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // Both endpoints are gone; drop any messages still in flight.
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        let mut i = head;
+        while i != tail {
+            unsafe { (*self.buf[i & self.mask].get()).assume_init_drop() };
+            i = i.wrapping_add(1);
+        }
+    }
+}
+
+/// Error from [`Producer::send`]: the consumer is gone; the message is
+/// handed back.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error from [`Producer::try_send`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Ring at capacity; the message is handed back. Blocking [`
+    /// Producer::send`] turns this into backpressure.
+    Full(T),
+    /// Consumer dropped; the message is handed back.
+    Disconnected(T),
+}
+
+/// The sending half of an SPSC ring. `Send` but not `Clone`/`Sync`:
+/// exactly one producer.
+pub struct Producer<T> {
+    ring: Arc<Ring<T>>,
+    /// `Cell` is `Send + !Sync`: the endpoint may move between threads
+    /// but two threads can never share it by reference, which is what
+    /// makes the unsynchronized `tail` ownership sound.
+    _not_sync: std::marker::PhantomData<std::cell::Cell<()>>,
+}
+
+impl<T> Producer<T> {
+    /// Non-blocking send.
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        if !self.ring.rx_alive.load(Ordering::Acquire) {
+            return Err(TrySendError::Disconnected(v));
+        }
+        let tail = self.ring.tail.0.load(Ordering::Relaxed); // we own tail
+        let head = self.ring.head.0.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > self.ring.mask {
+            return Err(TrySendError::Full(v));
+        }
+        unsafe { (*self.ring.buf[tail & self.ring.mask].get()).write(v) };
+        self.ring.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        self.ring.rx_waiter.notify();
+        Ok(())
+    }
+
+    /// Blocking send: parks while the ring is full (backpressure — a slow
+    /// consumer stalls exactly its own producers, nothing else), errors
+    /// only if the consumer is gone.
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut v = v;
+        loop {
+            match self.try_send(v) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Disconnected(x)) => return Err(SendError(x)),
+                Err(TrySendError::Full(x)) => {
+                    v = x;
+                    let ring = &self.ring;
+                    ring.tx_waiter.wait_until(|| {
+                        let tail = ring.tail.0.load(Ordering::Relaxed);
+                        let head = ring.head.0.load(Ordering::Acquire);
+                        tail.wrapping_sub(head) <= ring.mask
+                            || !ring.rx_alive.load(Ordering::Acquire)
+                    });
+                }
+            }
+        }
+    }
+
+    /// Publish a rollback epoch on the out-of-band bulletin: a monotone
+    /// `fetch_max` that bypasses ring capacity entirely, so a recovery
+    /// notice can never be wedged behind a full ring (the other half of
+    /// the drain-on-epoch-bump rule). Wakes the consumer.
+    pub fn post_epoch(&self, epoch: u32) {
+        self.ring.epoch.fetch_max(epoch as u64 + 1, Ordering::AcqRel);
+        self.ring.rx_waiter.notify();
+    }
+
+    /// Slots currently queued (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        let tail = self.ring.tail.0.load(Ordering::Relaxed);
+        let head = self.ring.head.0.load(Ordering::Acquire);
+        tail.wrapping_sub(head)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Slot capacity fixed at construction.
+    pub fn capacity(&self) -> usize {
+        self.ring.mask + 1
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.ring.tx_alive.store(false, Ordering::Release);
+        self.ring.rx_waiter.notify();
+    }
+}
+
+/// Error from [`Consumer::try_recv`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryRecvError {
+    /// Nothing queued right now.
+    Empty,
+    /// Nothing queued and the producer is gone: nothing will ever arrive.
+    Disconnected,
+}
+
+/// The receiving half of an SPSC ring. `Send` but not `Clone`/`Sync`:
+/// exactly one consumer.
+pub struct Consumer<T> {
+    ring: Arc<Ring<T>>,
+    /// See [`Producer`]: movable, never shareable by reference.
+    _not_sync: std::marker::PhantomData<std::cell::Cell<()>>,
+}
+
+impl<T> Consumer<T> {
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let head = self.ring.head.0.load(Ordering::Relaxed); // we own head
+        let tail = self.ring.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            if self.ring.tx_alive.load(Ordering::Acquire) {
+                return Err(TryRecvError::Empty);
+            }
+            // The producer may have pushed right before dropping; one
+            // re-read after the Acquire on the flag settles it.
+            if self.ring.tail.0.load(Ordering::Acquire) == head {
+                return Err(TryRecvError::Disconnected);
+            }
+        }
+        let v = unsafe { (*self.ring.buf[head & self.ring.mask].get()).assume_init_read() };
+        self.ring.head.0.store(head.wrapping_add(1), Ordering::Release);
+        self.ring.tx_waiter.notify();
+        Ok(v)
+    }
+
+    /// Blocking receive: spins briefly, then parks on the ring's waiter.
+    /// `Err` means the producer is gone and the ring is drained.
+    pub fn recv(&self) -> Result<T, TryRecvError> {
+        loop {
+            match self.try_recv() {
+                Ok(v) => return Ok(v),
+                Err(TryRecvError::Disconnected) => return Err(TryRecvError::Disconnected),
+                Err(TryRecvError::Empty) => {
+                    let ring = &self.ring;
+                    ring.rx_waiter.wait_until(|| {
+                        ring.head.0.load(Ordering::Relaxed)
+                            != ring.tail.0.load(Ordering::Acquire)
+                            || !ring.tx_alive.load(Ordering::Acquire)
+                    });
+                }
+            }
+        }
+    }
+
+    /// Latest epoch posted on the out-of-band bulletin, if any. Returns
+    /// the raw monotone level: 0 = never posted, `e + 1` = epoch `e`
+    /// posted. Callers keep their own high-water mark and deliver the
+    /// difference (see `engine::ReplyRx`).
+    pub fn epoch_level(&self) -> u64 {
+        self.ring.epoch.load(Ordering::Acquire)
+    }
+
+    /// Messages currently queued.
+    pub fn len(&self) -> usize {
+        let head = self.ring.head.0.load(Ordering::Relaxed);
+        let tail = self.ring.tail.0.load(Ordering::Acquire);
+        tail.wrapping_sub(head)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once the producer is gone *and* the ring is drained — the
+    /// point at which a port can be retired from a poll set.
+    pub fn is_disconnected(&self) -> bool {
+        // Empty-check first: tx_alive must be read after tail so a final
+        // push before the drop is never missed.
+        self.is_empty() && !self.ring.tx_alive.load(Ordering::Acquire) && self.is_empty()
+    }
+
+    /// True when a scan of this port could make progress (data queued, a
+    /// fresh bulletin above `seen_epoch`, or a disconnect to observe).
+    pub fn pollable(&self, seen_epoch: u64) -> bool {
+        !self.is_empty()
+            || self.epoch_level() > seen_epoch
+            || !self.ring.tx_alive.load(Ordering::Acquire)
+    }
+
+    /// The waiter producer-side pushes notify — shared across all rings
+    /// built with [`spsc_shared`] on the same waiter.
+    pub fn waiter(&self) -> &Arc<Waiter> {
+        &self.ring.rx_waiter
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.ring.rx_alive.store(false, Ordering::Release);
+        self.ring.tx_waiter.notify();
+    }
+}
+
+/// Build a bounded SPSC ring holding at least `capacity` messages
+/// (rounded up to a power of two). All slot memory is allocated here;
+/// nothing allocates afterwards.
+pub fn spsc<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    spsc_shared(capacity, Arc::new(Waiter::new()))
+}
+
+/// [`spsc`] whose consumer-side wakeups go to `rx_waiter`, so one thread
+/// can park once for many rings (see module docs).
+pub fn spsc_shared<T>(capacity: usize, rx_waiter: Arc<Waiter>) -> (Producer<T>, Consumer<T>) {
+    assert!(capacity >= 1, "ring capacity must be at least 1");
+    let cap = capacity.next_power_of_two();
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> = (0..cap)
+        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .collect();
+    let ring = Arc::new(Ring {
+        buf,
+        mask: cap - 1,
+        head: CachePadded(AtomicUsize::new(0)),
+        tail: CachePadded(AtomicUsize::new(0)),
+        epoch: AtomicU64::new(0),
+        tx_alive: AtomicBool::new(true),
+        rx_alive: AtomicBool::new(true),
+        rx_waiter,
+        tx_waiter: Waiter::new(),
+    });
+    (
+        Producer {
+            ring: ring.clone(),
+            _not_sync: std::marker::PhantomData,
+        },
+        Consumer {
+            ring,
+            _not_sync: std::marker::PhantomData,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn fifo_roundtrip_same_thread() {
+        let (tx, rx) = spsc::<u32>(4);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        for i in 0..4 {
+            tx.try_send(i).unwrap();
+        }
+        assert_eq!(tx.try_send(99), Err(TrySendError::Full(99)));
+        for i in 0..4 {
+            assert_eq!(rx.try_recv(), Ok(i));
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        // Space reclaimed: the ring cycles indefinitely.
+        for lap in 0..100u32 {
+            tx.try_send(lap).unwrap();
+            assert_eq!(rx.try_recv(), Ok(lap));
+        }
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        let (tx, _rx) = spsc::<u8>(5);
+        assert_eq!(tx.capacity(), 8);
+        let (tx, _rx) = spsc::<u8>(1);
+        assert_eq!(tx.capacity(), 1);
+    }
+
+    #[test]
+    fn cross_thread_blocking_roundtrip() {
+        let (tx, rx) = spsc::<u64>(8);
+        let n = 10_000u64;
+        let h = std::thread::spawn(move || {
+            let mut sum = 0u64;
+            for _ in 0..n {
+                sum += rx.recv().unwrap();
+            }
+            assert_eq!(rx.recv(), Err(TryRecvError::Disconnected));
+            sum
+        });
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        assert_eq!(h.join().unwrap(), n * (n - 1) / 2);
+    }
+
+    /// Backpressure: a full ring blocks its producer without dropping or
+    /// reordering anything; every message arrives exactly once.
+    #[test]
+    fn full_ring_blocks_producer_without_drop() {
+        let (tx, rx) = spsc::<u32>(2);
+        let n = 1000u32;
+        let h = std::thread::spawn(move || {
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+        });
+        // Drain slowly at first so the producer provably hits Full.
+        std::thread::sleep(Duration::from_millis(10));
+        for i in 0..n {
+            assert_eq!(rx.recv(), Ok(i));
+        }
+        h.join().unwrap();
+    }
+
+    /// The queue-per-core isolation claim: a deliberately slow consumer
+    /// stalls only its own producer; an independent ring pair on the same
+    /// machine streams freely the whole time.
+    #[test]
+    fn slow_consumer_stalls_only_its_own_producer() {
+        let (slow_tx, slow_rx) = spsc::<u32>(2);
+        let (fast_tx, fast_rx) = spsc::<u32>(8);
+        let slow = std::thread::spawn(move || {
+            for i in 0..100 {
+                slow_tx.send(i).unwrap(); // blocks almost immediately
+            }
+        });
+        let fast = std::thread::spawn(move || {
+            for i in 0..100_000u32 {
+                fast_tx.send(i).unwrap();
+            }
+        });
+        // The fast pair completes while the slow consumer sleeps.
+        for i in 0..100_000u32 {
+            assert_eq!(fast_rx.recv(), Ok(i));
+        }
+        fast.join().unwrap();
+        assert!(!slow.is_finished(), "slow producer should still be blocked");
+        for i in 0..100 {
+            assert_eq!(slow_rx.recv(), Ok(i)); // no drop, order intact
+        }
+        slow.join().unwrap();
+    }
+
+    /// The epoch bulletin bypasses a full ring: a rollback posted while
+    /// the ring is wedged with dead-round traffic is visible immediately.
+    #[test]
+    fn epoch_bulletin_bypasses_a_full_ring() {
+        let (tx, rx) = spsc::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert!(matches!(tx.try_send(3), Err(TrySendError::Full(3))));
+        assert_eq!(rx.epoch_level(), 0);
+        tx.post_epoch(4);
+        tx.post_epoch(2); // monotone: lower epochs never regress the level
+        assert_eq!(rx.epoch_level(), 5, "level = epoch + 1");
+        // The wedged data is still there, in order, behind the bulletin.
+        assert_eq!(rx.try_recv(), Ok(1));
+    }
+
+    /// A consumer parked on a shared waiter wakes for a bulletin post
+    /// even when no message is ever pushed (rollback still delivered).
+    #[test]
+    fn parked_consumer_wakes_on_bulletin_alone() {
+        let (tx, rx) = spsc::<u32>(2);
+        let h = std::thread::spawn(move || {
+            let mut seen = 0u64;
+            rx.waiter().clone().wait_until(|| rx.pollable(seen));
+            seen = rx.epoch_level();
+            seen
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        tx.post_epoch(7);
+        assert_eq!(h.join().unwrap(), 8);
+    }
+
+    #[test]
+    fn producer_drop_unblocks_and_disconnects_consumer() {
+        let (tx, rx) = spsc::<String>(4);
+        tx.send("last".to_string()).unwrap();
+        let h = std::thread::spawn(move || {
+            assert_eq!(rx.recv().unwrap(), "last");
+            // Blocks until the drop below, then reports disconnect.
+            rx.recv()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        drop(tx);
+        assert_eq!(h.join().unwrap(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn consumer_drop_unblocks_producer_with_message_back() {
+        let (tx, rx) = spsc::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || tx.send(2));
+        std::thread::sleep(Duration::from_millis(10));
+        drop(rx);
+        assert_eq!(h.join().unwrap(), Err(SendError(2)));
+    }
+
+    /// In-flight messages are dropped (destructors run) when both ends go.
+    #[test]
+    fn ring_drop_releases_in_flight_messages() {
+        let payload = Arc::new(());
+        let (tx, rx) = spsc::<Arc<()>>(4);
+        for _ in 0..3 {
+            tx.try_send(payload.clone()).unwrap();
+        }
+        drop(rx.try_recv().unwrap());
+        drop((tx, rx));
+        assert_eq!(Arc::strong_count(&payload), 1, "queued clones dropped");
+    }
+
+    /// Two rings sharing one waiter: the consumer thread parks once and
+    /// wakes for traffic on either.
+    #[test]
+    fn shared_waiter_multiplexes_rings() {
+        let waiter = Arc::new(Waiter::new());
+        let (tx_a, rx_a) = spsc_shared::<u32>(4, waiter.clone());
+        let (tx_b, rx_b) = spsc_shared::<u32>(4, waiter.clone());
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while got.len() < 4 {
+                waiter.wait_until(|| rx_a.pollable(0) || rx_b.pollable(0));
+                while let Ok(v) = rx_a.try_recv() {
+                    got.push(v);
+                }
+                while let Ok(v) = rx_b.try_recv() {
+                    got.push(v);
+                }
+            }
+            got.sort_unstable();
+            got
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        tx_a.send(1).unwrap();
+        tx_b.send(2).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        tx_a.send(3).unwrap();
+        tx_b.send(4).unwrap();
+        assert_eq!(h.join().unwrap(), vec![1, 2, 3, 4]);
+        drop((tx_a, tx_b));
+    }
+
+    /// An idle consumer parks rather than spinning: its thread burns no
+    /// meaningful CPU while waiting (smoke check via wall-clock park).
+    #[test]
+    fn idle_consumer_parks_until_notified() {
+        let (tx, rx) = spsc::<u32>(2);
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            let v = rx.recv().unwrap();
+            (v, Instant::now())
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        tx.send(42).unwrap();
+        let (v, woke) = h.join().unwrap();
+        assert_eq!(v, 42);
+        assert!(woke.duration_since(t0) >= Duration::from_millis(45));
+    }
+}

@@ -1,18 +1,46 @@
-//! The live PHub server: a thin channel-transport shell over the
-//! round-epoch engine.
+//! The live PHub server: a thin shell over the round-epoch engine, wired
+//! with the lock-free queue-per-core fabric.
 //!
 //! This is the paper's architecture realized in-process: the "wire" is a
-//! channel carrying chunk-sized `f32` buffers, each chunk is pinned to one
-//! core-thread for its whole lifetime (reception, aggregation,
-//! optimization, transmission — section 3.2.4), cores share nothing, and
-//! chunk→core assignment is computed once at init with the LPT balancer.
+//! bounded SPSC ring ([`super::ring`]) carrying chunk-sized `f32`
+//! buffers, each chunk is pinned to one core-thread for its whole
+//! lifetime (reception, aggregation, optimization, transmission —
+//! section 3.2.4), cores share nothing, and chunk→core assignment is
+//! computed once at init with the LPT balancer.
+//!
+//! # The port mesh
+//!
+//! Every core thread polls only its own rings — a *port list* of SPSC
+//! consumers, all sharing that core's one parker:
+//!
+//! * one **control ring** per core (port 0), carrying `InitJob` /
+//!   `RollbackRound` / `Evict` / `Connect` from the server frontend
+//!   (its producer sits behind a mutex, but that mutex is control-plane
+//!   only — nothing on the data path touches it);
+//! * one **request ring** per (worker-slot, core) pair, carrying that
+//!   worker's `Push`/`PushBytes`/`Pull` traffic with no lock and no
+//!   allocation; a full ring blocks the one worker pushing into it
+//!   (backpressure) and nobody else;
+//! * one **reply ring** per (worker-slot, core) pair going the other
+//!   way, multiplexed worker-side by [`super::engine::ReplyRx`].
+//!
+//! New request ports reach a core as `Connect` messages *behind* the
+//! job's `InitJob` on the same FIFO control ring, so a push can never be
+//! popped by a core that has not yet installed its job. Ports whose
+//! producer is gone (worker handle dropped) are retired once drained;
+//! the core exits when its last port disconnects. Rollback notices ride
+//! the reply rings' monotone epoch bulletin rather than ring slots, so
+//! recovery is delivered even to a wedged or parked consumer
+//! (drain-on-epoch-bump; see `engine.rs` and `ring.rs`).
 //!
 //! All round logic — arrival bitmasks, `(epoch, round)` tags, completion,
 //! mid-round rollback — lives in [`super::engine::ShardEngine`]; each core
-//! thread here just drains its channel into its engine instance. A
+//! thread here just drains its ports into its engine instance. A
 //! protocol violation surfaces as a typed [`super::engine::EngineError`]
-//! and costs the offending message, never the core thread. The TCP leader
-//! in [`super::transport`] is the other shell over the same engine.
+//! and costs the offending message, never the core thread — counted in
+//! [`crate::metrics::DataPlaneMetrics`] (no stderr scraping). The TCP
+//! leader in [`super::transport`] is the other shell over the same
+//! engine.
 //!
 //! Two push forms reach the cores: `Push` carries a shared `Arc<[f32]>`
 //! gradient (the in-process zero-copy path), and `PushBytes` carries the
@@ -25,17 +53,19 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+use crate::metrics::DataPlaneMetrics;
 
 use super::aggregation::GradSrc;
 use super::chunk::KeyTable;
 use super::compress::QuantView;
-use super::engine::{RoundTag, ShardEngine};
+use super::engine::{ReplyRx, ReplyTx, RoundTag, ShardEngine};
 use super::mapping;
 use super::optimizer::Optimizer;
 use super::pool::PooledBytes;
+use super::ring;
 
 pub use super::engine::{JobId, Reply};
 
@@ -52,16 +82,34 @@ impl Default for ServerConfig {
     }
 }
 
+/// Slack added on top of a ring's worst-case in-flight count so replay
+/// traffic racing a drain can never wedge capacity (see the sizing notes
+/// in [`PHubServer::init_job`]).
+const RING_SLACK: usize = 8;
+
+/// Control-ring capacity per core. Control messages are rare and the
+/// frontend may block briefly if a burst fills it (the core always
+/// drains); data traffic never rides this ring.
+const CTRL_RING_CAP: usize = 256;
+
+/// Messages a core pops from one port before moving to the next, so one
+/// hot producer cannot starve its neighbours.
+const PORT_BATCH: usize = 64;
+
 enum CoreMsg {
     /// Register a job's chunks owned by this core: (chunk id, initial
-    /// params, optimizer, n_workers, reply channels per worker).
+    /// params, optimizer, n_workers, reply-ring producers per worker).
     InitJob {
         job: JobId,
         chunks: Vec<(u32, Vec<f32>)>,
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
-        replies: Vec<Sender<Reply>>,
+        replies: Vec<ReplyTx>,
     },
+    /// Attach a new request port to this core's poll set. Always sent on
+    /// the control ring *after* the owning job's `InitJob`, so FIFO order
+    /// guarantees a push popped from the port finds its job installed.
+    Connect { port: ring::Consumer<CoreMsg> },
     /// Worker gradient push for one chunk (optionally pulls the update).
     /// `data` is the worker's whole flat gradient, shared zero-copy (the
     /// in-process analogue of RDMA zero-copy, section 3.2.1); the core
@@ -100,79 +148,140 @@ enum CoreMsg {
     Evict { job: JobId },
 }
 
-fn core_loop(rx: Receiver<CoreMsg>) {
+/// Apply one message to this core's engine. Returns a new port to adopt
+/// when the message was `Connect`.
+fn apply_core_msg(
+    engine: &mut ShardEngine,
+    msg: CoreMsg,
+    metrics: &DataPlaneMetrics,
+) -> Option<ring::Consumer<CoreMsg>> {
+    let res = match msg {
+        CoreMsg::InitJob {
+            job,
+            chunks,
+            opt,
+            n_workers,
+            replies,
+        } => {
+            engine.init_job(job, chunks, opt, n_workers, replies);
+            Ok(())
+        }
+        CoreMsg::Connect { port } => return Some(port),
+        CoreMsg::Push {
+            job,
+            chunk,
+            worker,
+            data,
+            range,
+            pull,
+            tag,
+        } => engine
+            .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
+            .map(|_| ()),
+        CoreMsg::PushBytes {
+            job,
+            chunk,
+            worker,
+            data,
+            grad_off,
+            quant,
+            pull,
+            tag,
+        } => {
+            let bytes = &data[grad_off..];
+            let src = if quant {
+                match QuantView::parse(bytes) {
+                    Ok(q) => GradSrc::Quant2Bit {
+                        threshold: q.threshold,
+                        len: q.len,
+                        packed: q.packed,
+                    },
+                    Err(_) => {
+                        // The transport validates before sending, so this
+                        // is a bug or a torn message: drop it like any
+                        // other protocol violation, observably.
+                        metrics.dropped_quant_payloads.inc();
+                        return None;
+                    }
+                }
+            } else {
+                GradSrc::LeBytes(bytes)
+            };
+            engine.push_src(job, chunk, worker, src, pull, tag).map(|_| ())
+            // `data` drops at the end of this arm: the frame buffer
+            // recycles to its pool.
+        }
+        CoreMsg::Pull { job, chunk, worker } => engine.pull(job, chunk, worker),
+        CoreMsg::RollbackRound { job, epoch } => {
+            metrics.rollbacks.inc();
+            engine.rollback(job, epoch).map(|_| ())
+        }
+        CoreMsg::Evict { job } => {
+            engine.evict(job);
+            Ok(())
+        }
+    };
+    // A protocol violation must never kill a shared core thread: the
+    // transports reject violations at the connection edge, so anything
+    // that still reaches here is dropped (the violator's round simply
+    // never completes) and counted where an operator can see it.
+    if res.is_err() {
+        metrics.dropped_messages.inc();
+    }
+    None
+}
+
+/// One core thread: poll the port list (control ring first — it carries
+/// the `InitJob`s that `Connect`ed ports' traffic depends on), retire
+/// disconnected ports, and park on the shared waiter when every port is
+/// idle. The whole loop is lock-free and allocation-free at steady state;
+/// the only allocation is the port-list growth on `Connect` (control
+/// plane).
+fn core_loop(
+    ctrl: ring::Consumer<CoreMsg>,
+    waiter: Arc<ring::Waiter>,
+    metrics: Arc<DataPlaneMetrics>,
+) {
     let mut engine = ShardEngine::new();
-    while let Ok(msg) = rx.recv() {
-        let res = match msg {
-            CoreMsg::InitJob {
-                job,
-                chunks,
-                opt,
-                n_workers,
-                replies,
-            } => {
-                engine.init_job(job, chunks, opt, n_workers, replies);
-                Ok(())
-            }
-            CoreMsg::Push {
-                job,
-                chunk,
-                worker,
-                data,
-                range,
-                pull,
-                tag,
-            } => engine
-                .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
-                .map(|_| ()),
-            CoreMsg::PushBytes {
-                job,
-                chunk,
-                worker,
-                data,
-                grad_off,
-                quant,
-                pull,
-                tag,
-            } => {
-                let bytes = &data[grad_off..];
-                let src = if quant {
-                    match QuantView::parse(bytes) {
-                        Ok(q) => GradSrc::Quant2Bit {
-                            threshold: q.threshold,
-                            len: q.len,
-                            packed: q.packed,
-                        },
-                        Err(e) => {
-                            // The transport validates before sending, so
-                            // this is a bug or a torn message: drop it
-                            // like any other protocol violation.
-                            eprintln!("phub-core: dropped quant push: {e}");
-                            continue;
+    let mut ports: Vec<ring::Consumer<CoreMsg>> = vec![ctrl];
+    loop {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < ports.len() {
+            // Bounded batch per port per sweep: one hot worker cannot
+            // starve its neighbours on the same core.
+            for _ in 0..PORT_BATCH {
+                match ports[i].try_recv() {
+                    Ok(msg) => {
+                        progressed = true;
+                        if let Some(port) = apply_core_msg(&mut engine, msg, &metrics) {
+                            ports.push(port);
                         }
                     }
-                } else {
-                    GradSrc::LeBytes(bytes)
-                };
-                engine.push_src(job, chunk, worker, src, pull, tag).map(|_| ())
-                // `data` drops at the end of this arm: the frame buffer
-                // recycles to its pool.
+                    Err(_) => break,
+                }
             }
-            CoreMsg::Pull { job, chunk, worker } => engine.pull(job, chunk, worker),
-            CoreMsg::RollbackRound { job, epoch } => engine.rollback(job, epoch).map(|_| ()),
-            CoreMsg::Evict { job } => {
-                engine.evict(job);
-                Ok(())
+            i += 1;
+        }
+        if !progressed {
+            ports.retain(|p| !p.is_disconnected());
+            if ports.is_empty() {
+                // Control ring and every worker port gone: shutdown.
+                return;
             }
-        };
-        // A protocol violation must never kill a shared core thread: the
-        // transports reject violations at the connection edge, so anything
-        // that still reaches here is dropped (the violator's round simply
-        // never completes).
-        if let Err(e) = res {
-            eprintln!("phub-core: dropped message: {e}");
+            waiter.wait_until(|| {
+                ports.iter().any(|p| !p.is_empty() || p.is_disconnected())
+            });
         }
     }
+}
+
+/// A worker slot's half of the fabric, parked until claimed by
+/// [`PHubServer::worker`]: one request-ring producer per core plus the
+/// multiplexed reply receiver.
+struct WorkerPort {
+    reqs: Vec<ring::Producer<CoreMsg>>,
+    rx: ReplyRx,
 }
 
 /// Per-job bookkeeping on the server frontend.
@@ -181,30 +290,60 @@ struct JobMeta {
     /// Core index per chunk.
     core_of: Vec<usize>,
     n_workers: usize,
-    /// Reply receivers not yet claimed by worker handles.
-    pending_rx: Vec<Option<Receiver<Reply>>>,
+    /// Worker-slot fabric ends not yet claimed by worker handles.
+    pending: Vec<Option<WorkerPort>>,
+}
+
+/// The frontend's handle on one core: the control-ring producer (mutex
+/// here is control-plane only — init/rollback/evict/connect; the data
+/// path never touches it) and the core's parker, shared by every ring
+/// the core consumes.
+struct CoreCtrl {
+    ctrl: Mutex<ring::Producer<CoreMsg>>,
+    waiter: Arc<ring::Waiter>,
+}
+
+impl CoreCtrl {
+    /// Send a control message, preserving FIFO order against concurrent
+    /// frontend threads. Panics if the core thread died (it only exits on
+    /// orderly shutdown).
+    fn send(&self, msg: CoreMsg) {
+        self.ctrl
+            .lock()
+            .unwrap()
+            .send(msg)
+            .map_err(|_| ())
+            .expect("core thread gone");
+    }
 }
 
 /// The PHub server: owns the core threads.
 pub struct PHubServer {
-    cores: Vec<Sender<CoreMsg>>,
+    cores: Vec<CoreCtrl>,
     handles: Vec<JoinHandle<()>>,
     jobs: Mutex<HashMap<JobId, JobMeta>>,
     next_job: AtomicU64,
+    metrics: Arc<DataPlaneMetrics>,
 }
 
 impl PHubServer {
     pub fn start(cfg: ServerConfig) -> Arc<PHubServer> {
         assert!(cfg.n_cores >= 1);
+        let metrics = Arc::new(DataPlaneMetrics::default());
         let mut cores = Vec::new();
         let mut handles = Vec::new();
         for i in 0..cfg.n_cores {
-            let (tx, rx) = channel();
-            cores.push(tx);
+            let waiter = Arc::new(ring::Waiter::new());
+            let (tx, rx) = ring::spsc_shared(CTRL_RING_CAP, waiter.clone());
+            cores.push(CoreCtrl {
+                ctrl: Mutex::new(tx),
+                waiter: waiter.clone(),
+            });
+            let metrics = metrics.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("phub-core-{i}"))
-                    .spawn(move || core_loop(rx))
+                    .spawn(move || core_loop(rx, waiter, metrics))
                     .expect("spawn core thread"),
             );
         }
@@ -213,6 +352,7 @@ impl PHubServer {
             handles,
             jobs: Mutex::new(HashMap::new()),
             next_job: AtomicU64::new(1),
+            metrics,
         })
     }
 
@@ -220,9 +360,25 @@ impl PHubServer {
         self.cores.len()
     }
 
+    /// Data-plane counters (dropped messages, rollbacks, ...) shared by
+    /// every core thread of this server.
+    pub fn metrics(&self) -> &DataPlaneMetrics {
+        &self.metrics
+    }
+
     /// Register a job: allocate chunk→core mapping, install initial model
     /// state on the core threads (the `PHub::InitService` step), and
-    /// prepare one reply channel per worker.
+    /// build each worker slot's fabric (request ring + reply ring per
+    /// core).
+    ///
+    /// Ring sizing: a synchronous worker never has more than one round in
+    /// flight, so per (worker, core) at most `chunks_on_core` requests
+    /// and `chunks_on_core` replies are outstanding — doubled for replay
+    /// traffic racing a post-rollback drain, plus [`RING_SLACK`]. Within
+    /// those bounds a full ring means a genuinely slow core (requests) or
+    /// a genuinely slow worker (replies), and blocking the one producer
+    /// involved is exactly the backpressure the shared-nothing design
+    /// wants.
     ///
     /// Returns the job id. Worker handles are then created with
     /// [`PHubServer::worker`].
@@ -242,17 +398,59 @@ impl PHubServer {
         // chunks make this round-robin; ragged tails stay balanced).
         let lens: Vec<usize> = table.chunks.iter().map(|c| c.len).collect();
         let core_of = mapping::lpt_partition(&lens, self.cores.len());
+        let chunks_on_core: Vec<usize> = (0..self.cores.len())
+            .map(|ci| core_of.iter().filter(|&&c| c == ci).count())
+            .collect();
 
-        let mut reply_txs = Vec::new();
-        let mut reply_rxs = Vec::new();
+        // Build each worker's fabric: per-core reply rings behind one
+        // waiter, per-core request rings behind each core's waiter.
+        let mut reply_rows: Vec<Vec<ReplyTx>> = Vec::with_capacity(n_workers);
+        let mut req_rows: Vec<Vec<ring::Consumer<CoreMsg>>> = Vec::with_capacity(n_workers);
+        let mut pending: Vec<Option<WorkerPort>> = Vec::with_capacity(n_workers);
         for _ in 0..n_workers {
-            let (tx, rx) = channel();
-            reply_txs.push(tx);
-            reply_rxs.push(Some(rx));
+            let reply_waiter = Arc::new(ring::Waiter::new());
+            let mut reply_txs = Vec::with_capacity(self.cores.len());
+            let mut reply_rxs = Vec::with_capacity(self.cores.len());
+            let mut req_txs = Vec::with_capacity(self.cores.len());
+            let mut req_rxs = Vec::with_capacity(self.cores.len());
+            for (ci, core) in self.cores.iter().enumerate() {
+                let cap = 2 * chunks_on_core[ci] + RING_SLACK;
+                let (rtx, rrx) = ring::spsc_shared(cap, reply_waiter.clone());
+                reply_txs.push(rtx);
+                reply_rxs.push(rrx);
+                let (qtx, qrx) = ring::spsc_shared(cap, core.waiter.clone());
+                req_txs.push(qtx);
+                req_rxs.push(qrx);
+            }
+            reply_rows.push(reply_txs);
+            req_rows.push(req_rxs);
+            pending.push(Some(WorkerPort {
+                reqs: req_txs,
+                rx: ReplyRx::new(job, reply_rxs, reply_waiter),
+            }));
         }
 
-        // Partition initial params per core.
-        for (ci, tx) in self.cores.iter().enumerate() {
+        // Install the job on every core. Holding the control mutex across
+        // InitJob + the Connects keeps them contiguous FIFO on the ring:
+        // a core adopts a worker's request port only after installing the
+        // job, so no push can ever race its own InitJob.
+        let mut req_cols: Vec<Vec<ring::Consumer<CoreMsg>>> = (0..self.cores.len())
+            .map(|_| Vec::with_capacity(n_workers))
+            .collect();
+        for row in req_rows {
+            for (ci, rx) in row.into_iter().enumerate() {
+                req_cols[ci].push(rx);
+            }
+        }
+        let mut reply_cols: Vec<Vec<ReplyTx>> = (0..self.cores.len())
+            .map(|_| Vec::with_capacity(n_workers))
+            .collect();
+        for row in reply_rows {
+            for (ci, tx) in row.into_iter().enumerate() {
+                reply_cols[ci].push(tx);
+            }
+        }
+        for (ci, core) in self.cores.iter().enumerate() {
             let chunks: Vec<(u32, Vec<f32>)> = table
                 .chunks
                 .iter()
@@ -260,14 +458,21 @@ impl PHubServer {
                 .filter(|(i, _)| core_of[*i] == ci)
                 .map(|(i, c)| (i as u32, init_params[c.offset..c.offset + c.len].to_vec()))
                 .collect();
-            tx.send(CoreMsg::InitJob {
+            let ctrl = core.ctrl.lock().unwrap();
+            ctrl.send(CoreMsg::InitJob {
                 job,
                 chunks,
                 opt: opt.clone(),
                 n_workers,
-                replies: reply_txs.clone(),
+                replies: std::mem::take(&mut reply_cols[ci]),
             })
+            .map_err(|_| ())
             .expect("core thread gone");
+            for rx in req_cols[ci].drain(..) {
+                ctrl.send(CoreMsg::Connect { port: rx })
+                    .map_err(|_| ())
+                    .expect("core thread gone");
+            }
         }
 
         self.jobs.lock().unwrap().insert(
@@ -276,7 +481,7 @@ impl PHubServer {
                 table,
                 core_of,
                 n_workers,
-                pending_rx: reply_rxs,
+                pending,
             },
         );
         job
@@ -288,16 +493,17 @@ impl PHubServer {
         let mut jobs = self.jobs.lock().unwrap();
         let meta = jobs.get_mut(&job).expect("unknown job");
         assert!(w < meta.n_workers, "worker index out of range");
-        let rx = meta.pending_rx[w]
+        let port = meta.pending[w]
             .take()
             .expect("worker handle already taken");
         WorkerHandle {
-            server: self.clone(),
+            _server: self.clone(),
             job,
             worker: w as u32,
             table: meta.table.clone(),
             core_of: meta.core_of.clone(),
-            rx,
+            reqs: port.reqs,
+            rx: port.rx,
             staging: Vec::new(),
             epoch: 0,
             round: 0,
@@ -307,19 +513,19 @@ impl PHubServer {
     /// Rewind `job`'s open round on every core, advancing it to `epoch`
     /// (the leader's recovery move after a worker dies mid-round; see
     /// `ShardEngine::rollback` for the semantics). Workers learn about the
-    /// rollback from a [`Reply::RolledBack`] notice on their reply channel
-    /// and replay the round.
+    /// rollback from a [`Reply::RolledBack`] notice on their reply route
+    /// (delivered via the rings' epoch bulletin) and replay the round.
     pub fn rollback_round(&self, job: JobId, epoch: u32) {
-        for tx in &self.cores {
-            let _ = tx.send(CoreMsg::RollbackRound { job, epoch });
+        for core in &self.cores {
+            core.send(CoreMsg::RollbackRound { job, epoch });
         }
     }
 
     /// Remove a job's state from all cores.
     pub fn evict(&self, job: JobId) {
         self.jobs.lock().unwrap().remove(&job);
-        for tx in &self.cores {
-            let _ = tx.send(CoreMsg::Evict { job });
+        for core in &self.cores {
+            core.send(CoreMsg::Evict { job });
         }
     }
 
@@ -329,7 +535,11 @@ impl PHubServer {
             Ok(s) => s,
             Err(_) => return, // other handles alive; threads exit when they drop
         };
-        server.cores.clear(); // closes channels
+        // Disconnect every producer the frontend still holds — the
+        // unclaimed worker ports in the jobs map and the control rings —
+        // so each core's port list drains to empty and its loop exits.
+        server.jobs.lock().unwrap().clear();
+        server.cores.clear();
         for h in server.handles.drain(..) {
             let _ = h.join();
         }
@@ -351,12 +561,18 @@ enum Collected {
 /// the engine rolled back. Manual `push_chunk` users drive
 /// [`WorkerHandle::advance_round`] themselves.
 pub struct WorkerHandle {
-    server: Arc<PHubServer>,
+    /// Keeps the core threads alive for as long as this handle exists
+    /// (shutdown requires the last server `Arc`).
+    _server: Arc<PHubServer>,
     job: JobId,
     worker: u32,
     table: Arc<KeyTable>,
     core_of: Vec<usize>,
-    rx: Receiver<Reply>,
+    /// This worker's lane into each core: one SPSC request-ring producer
+    /// per core. A full ring blocks this worker alone (backpressure).
+    reqs: Vec<ring::Producer<CoreMsg>>,
+    /// The per-core reply rings, multiplexed behind one parker.
+    rx: ReplyRx,
     /// Reassembly buffer reused across rounds.
     staging: Vec<f32>,
     epoch: u32,
@@ -427,7 +643,7 @@ impl WorkerHandle {
         assert!(ci < self.table.chunks.len(), "chunk id out of range");
         let len = self.table.chunks[ci].len;
         assert_eq!(data.len(), len, "chunk length mismatch");
-        self.server.cores[self.core_of[ci]]
+        self.reqs[self.core_of[ci]]
             .send(CoreMsg::Push {
                 job: self.job,
                 chunk,
@@ -437,6 +653,7 @@ impl WorkerHandle {
                 pull,
                 tag,
             })
+            .map_err(|_| ())
             .expect("core thread gone");
     }
 
@@ -466,7 +683,7 @@ impl WorkerHandle {
                 "chunk byte length mismatch"
             );
         }
-        self.server.cores[self.core_of[ci]]
+        self.reqs[self.core_of[ci]]
             .send(CoreMsg::PushBytes {
                 job: self.job,
                 chunk,
@@ -477,18 +694,21 @@ impl WorkerHandle {
                 pull,
                 tag,
             })
+            .map_err(|_| ())
             .expect("core thread gone");
     }
 
     /// Block for the next per-chunk reply (one arrives for every chunk
-    /// pushed with `pull == true` once its round completes).
-    pub fn recv_reply(&self) -> Reply {
+    /// pushed with `pull == true` once its round completes). Rollback
+    /// notices are synthesized from the reply rings' epoch bulletin and
+    /// always outrank queued data (see `engine::ReplyRx`).
+    pub fn recv_reply(&mut self) -> Reply {
         self.rx.recv().expect("server dropped")
     }
 
     /// Non-blocking variant of [`WorkerHandle::recv_reply`].
-    pub fn try_recv_reply(&self) -> Option<Reply> {
-        self.rx.try_recv().ok()
+    pub fn try_recv_reply(&mut self) -> Option<Reply> {
+        self.rx.try_recv()
     }
 
     /// Fused push+pull (the paper's `PHub::PushPull`): push this worker's
@@ -507,7 +727,7 @@ impl WorkerHandle {
         loop {
             let tag = RoundTag::new(self.epoch, self.round);
             for (i, c) in self.table.chunks.iter().enumerate() {
-                self.server.cores[self.core_of[i]]
+                self.reqs[self.core_of[i]]
                     .send(CoreMsg::Push {
                         job: self.job,
                         chunk: i as u32,
@@ -517,6 +737,7 @@ impl WorkerHandle {
                         pull: true,
                         tag,
                     })
+                    .map_err(|_| ())
                     .expect("core thread gone");
             }
             match self.collect_model() {
@@ -556,12 +777,13 @@ impl WorkerHandle {
     /// and desync every later round's collect by one.
     pub fn pull(&mut self) -> Vec<f32> {
         for i in 0..self.table.chunks.len() {
-            self.server.cores[self.core_of[i]]
+            self.reqs[self.core_of[i]]
                 .send(CoreMsg::Pull {
                     job: self.job,
                     chunk: i as u32,
                     worker: self.worker,
                 })
+                .map_err(|_| ())
                 .expect("core thread gone");
         }
         self.staging.clear();
@@ -611,6 +833,9 @@ impl WorkerHandle {
                     epoch,
                     data,
                 } => {
+                    // (`data` is the refcount-shared broadcast buffer;
+                    // dropping it at the end of this arm releases this
+                    // worker's reference.)
                     debug_assert_eq!(job, self.job);
                     if epoch < self.epoch {
                         continue; // superseded by a rollback we already saw
@@ -860,6 +1085,45 @@ mod tests {
         });
 
         assert_eq!(ma, mb, "replayed round must be bit-identical to clean");
+        PHubServer::shutdown(server);
+    }
+
+    /// Dropped messages are observable through `PHubServer::metrics()`
+    /// instead of stderr: a push that violates the round protocol is
+    /// counted, costs only itself, and the job keeps training.
+    #[test]
+    fn dropped_messages_are_counted_not_printed() {
+        let server = PHubServer::start(ServerConfig { n_cores: 1 });
+        let job = server.init_job(table(8, 8), &vec![0.0; 8], Arc::new(Sgd { lr: 1.0 }), 1);
+        let mut h = server.worker(job, 0);
+        let g: Arc<[f32]> = vec![1.0f32; 8].into();
+        h.set_tag(0, 5); // run ahead of the barrier: a FutureRound violation
+        h.push_chunk(0, g.clone(), false);
+        h.set_tag(0, 0);
+        h.push_chunk(0, g, true); // same ring: processed after the violation
+        assert!(matches!(h.recv_reply(), Reply::Chunk { .. }));
+        assert_eq!(server.metrics().dropped_messages.get(), 1);
+        assert_eq!(server.metrics().dropped_quant_payloads.get(), 0);
+        drop(h);
+        PHubServer::shutdown(server);
+    }
+
+    /// Rollback control messages are counted per core.
+    #[test]
+    fn rollbacks_are_counted_per_core() {
+        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let job = server.init_job(table(16, 8), &vec![0.0; 16], Arc::new(Sgd { lr: 1.0 }), 2);
+        let mut h = server.worker(job, 0);
+        server.rollback_round(job, 1);
+        // Sync: the notice is delivered through the reply route, which
+        // proves both cores processed the RollbackRound.
+        assert!(matches!(h.recv_reply(), Reply::RolledBack { epoch: 1, .. }));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while server.metrics().rollbacks.get() < 2 {
+            assert!(std::time::Instant::now() < deadline, "second core never rolled back");
+            std::thread::yield_now();
+        }
+        drop(h);
         PHubServer::shutdown(server);
     }
 

@@ -28,21 +28,33 @@
 //!
 //! # Memory discipline
 //!
-//! The steady-state round allocates nothing per chunk on either side of
-//! the wire (the paper's bandwidth-bound pipeline; see `aggregation.rs`
-//! and `wire.rs` for the loop- and frame-level contracts):
+//! The steady-state round is **exact-zero**: no heap allocation and no
+//! mutex acquisition per chunk on either side of the wire (the paper's
+//! bandwidth-bound, share-nothing pipeline; `aggregation.rs`, `ring.rs`,
+//! and `wire.rs` hold the loop-, queue-, and frame-level contracts).
+//! Buffer ownership and copies per chunk per round:
 //!
-//! * **Leader receive**: each connection owns a recycling
-//!   [`super::pool::BytePool`]; `read_frame_into` decodes into a pooled
-//!   buffer, the buffer itself travels to the chunk's pinned core
+//! * **Leader receive** — 1 copy (the socket read). Each connection owns
+//!   a recycling [`super::pool::BytePool`]; `read_frame_into` decodes
+//!   into a pooled buffer, the buffer itself travels to the chunk's
+//!   pinned core over that worker's lock-free SPSC request ring
 //!   (`CoreMsg::PushBytes`), the core folds the wire bytes straight into
 //!   the accumulator (dense or 2-bit — no `bytes_to_f32s`, no
 //!   dequantize scratch), and the buffer returns to the pool on drop.
-//! * **Leader reply**: the engine hands each puller a pooled parameter
-//!   buffer; the connection serializes it into its reused `ready`
-//!   staging vector with `write_chunk_frame_f32s` (no `f32s_to_bytes`
-//!   vector) and the buffer recycles.
-//! * **Client**: dense rounds serialize frames straight from the
+//! * **Leader reply** — 1 copy *total*, not per puller. On completion
+//!   the core copies the fresh parameters once into a refcount-shared
+//!   pooled buffer (`SharedF32`) and every puller's connection gets a
+//!   refcount bump over its SPSC reply ring; each connection serializes
+//!   straight out of the shared buffer into its reused `ready` staging
+//!   vector with `write_chunk_frame_f32s` (no `f32s_to_bytes` vector),
+//!   and the last drop recycles buffer + refcount block together.
+//! * **Queues** — zero allocation, zero locks. The mpsc hop between
+//!   connection and core threads (a lock under contention plus a queue
+//!   block every ~31 sends) is gone; bounded rings apply backpressure
+//!   to exactly the one producer of a full ring. Rollback notices ride
+//!   the rings' monotone epoch bulletin, so recovery is never wedged
+//!   behind dead-round traffic.
+//! * **Client** — dense rounds serialize frames straight from the
 //!   caller's gradient; quantized rounds encode into per-chunk buffers
 //!   reused across rounds (`quantize_into`); `ModelChunk` payloads
 //!   decode into the round's model vector through a single reused
@@ -404,7 +416,7 @@ fn handle_worker(
         // threads, so workers on other connections proceed concurrently
         // (one service thread per worker, like one QP per
         // worker-interface pair).
-        serve_streamed(&mut reader, &mut writer, &handle, hello.job, slot, &mut wr)
+        serve_streamed(&mut reader, &mut writer, &mut handle, hello.job, slot, &mut wr)
     })();
 
     // Connection over (orderly Bye, disconnect, or protocol violation).
@@ -455,9 +467,10 @@ fn apply_reply(
             // dropped; the worker re-pushes and gets a fresh one.
             if wr.note_reply(epoch) {
                 let (lo, _) = handle.chunk_range(chunk as usize);
-                // Serialize straight from the pooled reply buffer into
-                // the reused staging vector; `data` drops right after
-                // and recycles to the engine's pool.
+                // Serialize straight out of the refcount-shared broadcast
+                // buffer (this connection holds one of the references);
+                // `data` drops right after, and the last puller's drop
+                // recycles the buffer to the engine's pool.
                 wire::write_chunk_frame_f32s(
                     ready,
                     Op::ModelChunk,
@@ -485,7 +498,7 @@ fn apply_reply(
 /// Apply everything the engine has already queued for this worker.
 /// Returns `true` if a rollback was among it.
 fn drain_replies(
-    handle: &WorkerHandle,
+    handle: &mut WorkerHandle,
     wr: &mut WorkerRound,
     wire_job: u32,
     slot: u32,
@@ -522,7 +535,7 @@ fn write_rollback_frame<W: Write>(
 fn serve_streamed<R: Read, W: Write>(
     reader: &mut R,
     writer: &mut W,
-    handle: &WorkerHandle,
+    handle: &mut WorkerHandle,
     wire_job: u32,
     slot: u32,
     wr: &mut WorkerRound,

@@ -58,17 +58,25 @@
 //!   allocation-bomb the receiver, and after one warm round the buffer
 //!   sits at its high-water capacity: zero allocations per frame.
 //! * **Transmit**: [`write_chunk_frame_f32s`] serializes a chunk frame
-//!   straight from an `f32` slice (the chunk slot's parameters or the
-//!   worker's gradient) through a small stack staging array — the
-//!   `f32s_to_bytes` intermediate vector is gone from the round path.
-//!   Quantized payloads are written from the client's cached round
-//!   buffers via [`write_chunk_frame_buffered`].
+//!   straight from an `f32` slice through a small stack staging array —
+//!   the `f32s_to_bytes` intermediate vector is gone from the round
+//!   path. On the leader that slice is the refcount-shared broadcast
+//!   buffer (`pool::SharedF32`): the core copies the post-optimize
+//!   parameters once, every puller's connection serializes out of the
+//!   same buffer, and the last drop recycles it. Quantized payloads are
+//!   written from the client's cached round buffers via
+//!   [`write_chunk_frame_buffered`].
 //!
-//! Copies per chunk per round before → after: leader receive went from 3
-//! payload copies and ~5 allocations (body `Vec`, payload re-slice,
-//! `bytes_to_f32s`, `Arc` gradient, reply `f32s_to_bytes`) to 1 copy
-//! (the socket read) and 0 steady-state allocations. [`read_frame`] /
-//! [`encode`] remain for rendezvous/control frames and tests.
+//! Copies per chunk per round, before → after this lineage of changes:
+//! leader receive went from 3 payload copies and ~5 allocations (body
+//! `Vec`, payload re-slice, `bytes_to_f32s`, `Arc` gradient, reply
+//! `f32s_to_bytes`) to 1 copy (the socket read) and 0 allocations; the
+//! reply leg went from 1 parameter copy *per puller* on the core to 1
+//! copy total, shared by refcount. With the queue hops on lock-free
+//! SPSC rings (`ring.rs`) the whole leader round is exact-zero: no heap
+//! allocation, no mutex acquisition, asserted with no exclusions by
+//! `rust/tests/alloc_discipline.rs`. [`read_frame`] / [`encode`] remain
+//! for rendezvous/control frames and tests.
 //!
 //! # The round epoch
 //!

@@ -25,6 +25,30 @@ impl Counter {
     }
 }
 
+/// Data-plane counters for the coordinator's core fabric — one instance
+/// per [`crate::coordinator::PHubServer`], shared by every core thread
+/// and read through `PHubServer::metrics()`.
+///
+/// These replace the old stderr reporting in the core loop: a dropped or
+/// invalid message is an operational signal (a buggy client, a torn
+/// frame, a replay race), and counters make it observable without
+/// scraping logs.
+#[derive(Debug, Default)]
+pub struct DataPlaneMetrics {
+    /// Messages a core dropped because the engine rejected them (unknown
+    /// job/chunk, duplicate push, future round, aggregation error). The
+    /// violator's round simply never completes; shared cores are never
+    /// harmed.
+    pub dropped_messages: Counter,
+    /// Quantized pushes dropped at the core for malformed `QuantGrad`
+    /// payloads before reaching the engine (the transport validates at
+    /// the edge, so a non-zero count means a bug or a torn message).
+    pub dropped_quant_payloads: Counter,
+    /// `RollbackRound` control messages processed by cores (mid-round
+    /// recovery events × cores).
+    pub rollbacks: Counter,
+}
+
 /// Power-of-two bucketed latency histogram (nanoseconds, 48 buckets:
 /// 1 ns .. ~78 h).
 #[derive(Debug)]

@@ -1,20 +1,23 @@
 //! Allocation discipline of the steady-state data plane (the tentpole's
 //! acceptance bar): after warm-up, the leader-shaped
-//! push → aggregate → fused-optimize → reply path performs **zero** heap
-//! allocations per chunk, dense and 2-bit alike, and the client's round
-//! encoding is likewise allocation-free.
+//! push → aggregate → fused-optimize → reply path performs **exactly
+//! zero** heap allocations per round — dense and 2-bit alike, multi-
+//! puller fan-out included — and the client's round encoding is likewise
+//! allocation-free. There are no exclusions left: the `std::sync::mpsc`
+//! hop whose amortized queue-block allocation this test used to carve
+//! out is gone, replaced by the bounded lock-free SPSC rings of
+//! `coordinator/ring.rs`, and the measured loop now drives the real
+//! fabric — frames enter through pooled `read_frame_into` buffers,
+//! travel conceptually as the core-side absorb, and every completion
+//! broadcasts one refcount-shared pooled buffer over real reply rings to
+//! three pulling workers, each serialized to wire form from the shared
+//! buffer.
 //!
-//! The test installs a counting global allocator and drives the exact
-//! per-chunk work a leader connection + core perform — pooled
-//! `read_frame_into`, `ShardEngine::push_src` on the wire bytes, and
-//! reply serialization from a pooled parameter buffer through the reused
-//! staging vector — synchronously on one thread. The one piece of the
-//! real deployment deliberately *outside* the measured region is the
-//! `std::sync::mpsc` hop between connection and core threads, whose
-//! internal queue allocates a block per ~31 messages; that cost is
-//! amortized, not per-chunk, and is documented in the ROADMAP as the
-//! remaining gap. Everything this crate controls is asserted to be
-//! allocation-free.
+//! The same loop is also mutex-free by construction: rings are
+//! Acquire/Release atomics, pools are single-taker Treiber stacks, and
+//! the engine itself holds no lock (see `ring.rs` / `pool.rs` for the
+//! verified contracts; this binary asserts the allocation half, which a
+//! counting global allocator can observe directly).
 //!
 //! Keep this binary to a single #[test]: the allocation counter is
 //! process-global, so a concurrently running test would break the exact
@@ -23,14 +26,15 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::Cursor;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use phub::coordinator::aggregation::GradSrc;
 use phub::coordinator::compress::{ChunkQuantizer, QuantView};
-use phub::coordinator::engine::{PushOutcome, RoundTag, ShardEngine};
+use phub::coordinator::engine::{
+    single_lane_fabrics, PushOutcome, Reply, ReplyRx, RoundTag, ShardEngine,
+};
 use phub::coordinator::optimizer::NesterovSgd;
-use phub::coordinator::pool::{BytePool, F32Pool, Pool};
+use phub::coordinator::pool::{BytePool, Pool};
 use phub::coordinator::wire::{self, Op};
 
 struct CountingAlloc;
@@ -115,22 +119,24 @@ fn encode_round(quant: bool) -> Vec<u8> {
 }
 
 /// One leader-shaped round over the pre-encoded frame stream: pooled
-/// frame reads, byte-level absorb into the engine, and — on each chunk
-/// completion — the reply leg (pooled parameter copy serialized into the
-/// reused staging vector). Exactly the per-chunk work of
-/// `transport::serve_streamed` + the core loop, minus the channel hop.
-#[allow(clippy::too_many_arguments)]
+/// frame reads, byte-level absorb into the engine with `pull = true`
+/// for **every** worker, and — on each chunk completion — the reply leg
+/// exactly as deployed: the engine broadcasts one refcount-shared
+/// parameter buffer over the three workers' SPSC reply rings, and each
+/// "connection" serializes its `ModelChunk` frame straight out of the
+/// shared buffer into its reused staging vector. Returns the number of
+/// chunk replies collected (must be `WORKERS * CHUNKS` per round).
 fn run_round(
     frames: &[u8],
     eng: &mut ShardEngine,
     pool: &Arc<BytePool>,
-    fpool: &Arc<F32Pool>,
-    ready: &mut Vec<u8>,
+    rxs: &mut [ReplyRx],
+    ready: &mut [Vec<u8>],
     round: u64,
 ) -> usize {
     let tag = RoundTag::new(0, round);
     let mut cur = Cursor::new(frames);
-    let mut completed = 0usize;
+    let mut replies = 0usize;
     for _ in 0..WORKERS * CHUNKS {
         let mut fb = pool.take();
         let (op, chunk, worker) = {
@@ -141,7 +147,7 @@ fn run_round(
         let bytes = &fb[wire::CHUNK_PREFIX_BYTES..];
         let outcome = match op {
             Op::PushChunk => eng
-                .push_src(JOB, chunk, worker, GradSrc::LeBytes(bytes), false, tag)
+                .push_src(JOB, chunk, worker, GradSrc::LeBytes(bytes), true, tag)
                 .unwrap(),
             Op::PushChunkQuant => {
                 let q = QuantView::parse(bytes).unwrap();
@@ -154,7 +160,7 @@ fn run_round(
                         len: q.len,
                         packed: q.packed,
                     },
-                    false,
+                    true,
                     tag,
                 )
                 .unwrap()
@@ -162,40 +168,47 @@ fn run_round(
             other => panic!("unexpected op {other:?}"),
         };
         if outcome == PushOutcome::Completed {
-            completed += 1;
-            // Reply leg: copy the fresh parameters into a pooled buffer
-            // and serialize the ModelChunk frame into the reused staging
-            // vector (what `apply_reply` does per puller).
-            let params = eng.chunk_params(JOB, chunk).unwrap();
-            let mut rb = fpool.take();
-            rb.extend_from_slice(params);
-            ready.clear();
-            wire::write_chunk_frame_f32s(
-                ready,
-                Op::ModelChunk,
-                JOB,
-                0,
-                chunk,
-                0,
-                chunk as u64 * CHUNK_ELEMS as u64,
-                &rb,
-            )
-            .unwrap();
+            // Drain the fan-out: every worker pulled, so every worker's
+            // reply ring now holds a refcount bump of the one shared
+            // buffer. Serialize each as its connection would.
+            for (w, rx) in rxs.iter_mut().enumerate() {
+                match rx.try_recv() {
+                    Some(Reply::Chunk {
+                        chunk, epoch, data, ..
+                    }) => {
+                        replies += 1;
+                        ready[w].clear();
+                        wire::write_chunk_frame_f32s(
+                            &mut ready[w],
+                            Op::ModelChunk,
+                            JOB,
+                            w as u32,
+                            chunk,
+                            epoch,
+                            chunk as u64 * CHUNK_ELEMS as u64,
+                            &data,
+                        )
+                        .unwrap();
+                        // `data` drops here: the last worker's drop
+                        // recycles the shared buffer to the engine pool.
+                    }
+                    other => panic!("expected a chunk reply, got {other:?}"),
+                }
+            }
         }
-        // `fb` and `rb` drop here: both recycle to their pools.
+        // `fb` drops here and recycles to the frame pool.
     }
-    completed
+    replies
 }
 
-fn fresh_engine() -> ShardEngine {
+fn fresh_engine() -> (ShardEngine, Vec<ReplyRx>) {
     let mut eng = ShardEngine::new();
     let chunks: Vec<(u32, Vec<f32>)> = (0..CHUNKS)
         .map(|c| (c as u32, vec![0.25f32; CHUNK_ELEMS]))
         .collect();
-    let (tx, _rx) = channel();
-    // Reply senders are required by the engine API; with pull=false in
-    // the driver they are never used, keeping the mpsc internals (whose
-    // block allocations are outside our control) out of the measurement.
+    // Real reply fabric, one single-core lane per worker — the rings the
+    // deployed server would use, consumed in this same thread.
+    let (txs, rxs) = single_lane_fabrics(JOB, WORKERS, 32);
     eng.init_job(
         JOB,
         chunks,
@@ -204,49 +217,49 @@ fn fresh_engine() -> ShardEngine {
             momentum: 0.9,
         }),
         WORKERS,
-        vec![tx; WORKERS],
+        txs,
     );
-    eng
+    (eng, rxs)
 }
 
 #[test]
 fn steady_state_data_plane_is_allocation_free() {
-    // ---- Phase 1: dense leader path (push → aggregate → reply). ----
+    // ---- Phase 1: dense leader path (push → aggregate → broadcast). ----
     let frames = encode_round(false);
-    let mut eng = fresh_engine();
+    let (mut eng, mut rxs) = fresh_engine();
     let pool: Arc<BytePool> = Pool::new(16);
-    let fpool: Arc<F32Pool> = Pool::new(16);
-    let mut ready: Vec<u8> = Vec::new();
+    let mut ready: Vec<Vec<u8>> = vec![Vec::new(); WORKERS];
     for r in 0..3 {
         assert_eq!(
-            run_round(&frames, &mut eng, &pool, &fpool, &mut ready, r),
-            CHUNKS,
-            "warm-up round {r} must complete every chunk"
+            run_round(&frames, &mut eng, &pool, &mut rxs, &mut ready, r),
+            WORKERS * CHUNKS,
+            "warm-up round {r} must deliver every worker every chunk"
         );
     }
     let before = allocs();
     for r in 3..19 {
-        run_round(&frames, &mut eng, &pool, &fpool, &mut ready, r);
+        run_round(&frames, &mut eng, &pool, &mut rxs, &mut ready, r);
     }
     let dense_delta = allocs() - before;
     assert_eq!(
         dense_delta, 0,
-        "dense steady-state rounds must not allocate (got {dense_delta} \
+        "dense steady-state rounds must not allocate at all — rings, \
+         shared reply broadcast, and pools included (got {dense_delta} \
          allocations over 16 rounds)"
     );
 
     // ---- Phase 2: 2-bit leader path (dequantize folded into absorb). ----
     let qframes = encode_round(true);
-    let mut qeng = fresh_engine();
+    let (mut qeng, mut qrxs) = fresh_engine();
     for r in 0..3 {
         assert_eq!(
-            run_round(&qframes, &mut qeng, &pool, &fpool, &mut ready, r),
-            CHUNKS
+            run_round(&qframes, &mut qeng, &pool, &mut qrxs, &mut ready, r),
+            WORKERS * CHUNKS
         );
     }
     let before = allocs();
     for r in 3..19 {
-        run_round(&qframes, &mut qeng, &pool, &fpool, &mut ready, r);
+        run_round(&qframes, &mut qeng, &pool, &mut qrxs, &mut ready, r);
     }
     let quant_delta = allocs() - before;
     assert_eq!(
@@ -308,5 +321,5 @@ fn steady_state_data_plane_is_allocation_free() {
     );
 
     // The pools actually recycled rather than growing without bound.
-    assert!(pool.free_count() <= 16 && fpool.free_count() <= 16);
+    assert!(pool.free_count() <= 16);
 }

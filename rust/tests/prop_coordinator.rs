@@ -546,7 +546,7 @@ fn prop_chunk_streaming_matches_monolithic() {
 /// Collect exactly one `epoch`-stamped reply per chunk for this worker,
 /// skipping anything left over from rolled-back rounds (stale chunk
 /// replies, rollback notices).
-fn collect_epoch(h: &WorkerHandle, epoch: u32) -> Vec<f32> {
+fn collect_epoch(h: &mut WorkerHandle, epoch: u32) -> Vec<f32> {
     let n_chunks = h.n_chunks();
     let mut model = vec![0.0f32; h.model_len()];
     let mut seen = vec![false; n_chunks];
@@ -639,7 +639,7 @@ fn prop_rollback_replay_bit_identical() {
                 push_bytes(h, c, &grads[w], RoundTag::new(1, 0));
             }
         }
-        let models_a: Vec<Vec<f32>> = ha.iter().map(|h| collect_epoch(h, 1)).collect();
+        let models_a: Vec<Vec<f32>> = ha.iter_mut().map(|h| collect_epoch(h, 1)).collect();
 
         // Job B: one clean worker-major round.
         let mut hb: Vec<_> = (0..n_workers).map(|w| server.worker(jb, w)).collect();
@@ -649,7 +649,7 @@ fn prop_rollback_replay_bit_identical() {
                 h.push_chunk(c as u32, grads[w][lo..hi].into(), true);
             }
         }
-        let models_b: Vec<Vec<f32>> = hb.iter().map(|h| collect_epoch(h, 0)).collect();
+        let models_b: Vec<Vec<f32>> = hb.iter_mut().map(|h| collect_epoch(h, 0)).collect();
 
         PHubServer::shutdown(server);
         for w in 0..n_workers {
@@ -743,7 +743,7 @@ fn prop_rollback_replay_quantized_error_feedback() {
                 }
             }
             let epoch_a = if round == 1 { 1 } else { 0 };
-            let ma: Vec<Vec<f32>> = ha.iter().map(|h| collect_epoch(h, epoch_a)).collect();
+            let ma: Vec<Vec<f32>> = ha.iter_mut().map(|h| collect_epoch(h, epoch_a)).collect();
             for h in ha.iter_mut() {
                 h.advance_round();
             }
@@ -754,7 +754,7 @@ fn prop_rollback_replay_quantized_error_feedback() {
                     h.push_chunk(c as u32, dq[w][c].clone().into(), true);
                 }
             }
-            let mb: Vec<Vec<f32>> = hb.iter().map(|h| collect_epoch(h, 0)).collect();
+            let mb: Vec<Vec<f32>> = hb.iter_mut().map(|h| collect_epoch(h, 0)).collect();
             for h in hb.iter_mut() {
                 h.advance_round();
             }
