@@ -1,0 +1,193 @@
+//! Flat vs two-level (leader-of-leaders) rounds/s (run via `cargo bench
+//! --bench hierarchy`).
+//!
+//! Drives the real in-process fabric both ways: a flat deployment puts
+//! all leaf workers on one leader; a two-level deployment puts `k`
+//! workers on each of `r` RackRelay servers whose uplink sums pump into
+//! one root (paper section 3.4, Figure 19). In-process there is no
+//! oversubscribed cross-rack core, so two-level measures pure *overhead*
+//! of the extra level — the paper's benefit model
+//! (`hierarchy::hierarchical_beneficial`) only favors it when the
+//! cross-rack bottleneck is thin, which shared memory is not. The bench
+//! therefore reports the overhead honestly and checks the cost model
+//! agrees that a fat-core deployment should not go hierarchical.
+//!
+//! Emits a single-line JSON summary (last stdout line) suitable for
+//! `BENCH_hierarchy.json` trajectory tracking.
+//!
+//! Results feed EXPERIMENTS.md section Perf.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::coordinator::chunk::KeyTable;
+use phub::coordinator::engine::Reply;
+use phub::coordinator::hierarchy::{hierarchical_beneficial, HierBandwidths};
+use phub::coordinator::optimizer::NesterovSgd;
+use phub::coordinator::pool::{BytePool, Pool};
+use phub::coordinator::server::{PHubServer, ServerConfig};
+
+const WORKERS_PER_RACK: usize = 2;
+const CHUNKS: usize = 16;
+const CHUNK_ELEMS: usize = 8192;
+const ELEMS: usize = CHUNKS * CHUNK_ELEMS;
+const ROUNDS: usize = 30;
+
+fn opt() -> Arc<NesterovSgd> {
+    Arc::new(NesterovSgd {
+        lr: 0.01,
+        momentum: 0.9,
+    })
+}
+
+fn grad_for(seat: usize) -> Vec<f32> {
+    (0..ELEMS)
+        .map(|i| ((i + 13 * seat) % 11) as f32 * 0.01)
+        .collect()
+}
+
+/// All `racks * k` leaves on one flat leader; returns rounds/s.
+fn bench_flat(racks: usize, k: usize) -> f64 {
+    let leaves = racks * k;
+    let server = PHubServer::start(ServerConfig { n_cores: 4 });
+    let init = vec![0.1f32; ELEMS];
+    let job = server.init_job(KeyTable::flat(ELEMS, CHUNK_ELEMS), &init, opt(), leaves);
+    let mut handles: Vec<_> = (0..leaves).map(|w| server.worker(job, w)).collect();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (w, h) in handles.iter_mut().enumerate() {
+            let g = grad_for(w);
+            s.spawn(move || {
+                for _ in 0..ROUNDS {
+                    h.push_pull(&g);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    PHubServer::shutdown(server);
+    ROUNDS as f64 / dt
+}
+
+/// `racks` RackRelay servers of `k` workers each, raw sums pumped into
+/// one root with per-rack weight `k`; returns rounds/s.
+fn bench_two_level(racks: usize, k: usize) -> f64 {
+    let table = || KeyTable::flat(ELEMS, CHUNK_ELEMS);
+    let init = vec![0.1f32; ELEMS];
+    let root = PHubServer::start(ServerConfig { n_cores: 2 });
+    let jr = root.init_job(table(), &init, opt(), racks);
+    for ri in 0..racks {
+        root.set_worker_weight(jr, ri as u32, k as u32);
+    }
+    let pool: Arc<BytePool> = Pool::new(CHUNKS);
+    let mut rack_srvs = Vec::new();
+    let mut pumps = Vec::new();
+    let mut leaf_handles = Vec::new();
+    for ri in 0..racks {
+        let srv = PHubServer::start(ServerConfig { n_cores: 2 });
+        let (job, mut up) = srv.init_relay_job(table(), &init, opt(), k);
+        for w in 0..k {
+            leaf_handles.push((ri * k + w, srv.worker(job, w)));
+        }
+        let mut root_h = root.worker(jr, ri);
+        let pool = pool.clone();
+        pumps.push(std::thread::spawn(move || {
+            for _ in 0..ROUNDS {
+                for _ in 0..CHUNKS {
+                    match up.recv_sum() {
+                        Some(Reply::Sum { chunk, data, .. }) => {
+                            root_h.push_chunk(chunk, data[..].into(), true);
+                        }
+                        other => panic!("pump expected Sum, got {other:?}"),
+                    }
+                }
+                for _ in 0..CHUNKS {
+                    match root_h.recv_reply() {
+                        Reply::Chunk { chunk, data, .. } => {
+                            let mut fb = pool.take();
+                            for x in &data[..] {
+                                fb.extend_from_slice(&x.to_le_bytes());
+                            }
+                            up.install_chunk_bytes(chunk, fb, 0);
+                        }
+                        other => panic!("pump expected Chunk, got {other:?}"),
+                    }
+                }
+                root_h.advance_round();
+            }
+        }));
+        rack_srvs.push(srv);
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (seat, h) in leaf_handles.iter_mut() {
+            let g = grad_for(*seat);
+            s.spawn(move || {
+                for _ in 0..ROUNDS {
+                    h.push_pull(&g);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    for p in pumps {
+        p.join().unwrap();
+    }
+    for srv in rack_srvs {
+        PHubServer::shutdown(srv);
+    }
+    PHubServer::shutdown(root);
+    ROUNDS as f64 / dt
+}
+
+fn main() {
+    println!(
+        "== hierarchy: {CHUNKS} x {CHUNK_ELEMS}-elem chunks ({} KB model), \
+         {WORKERS_PER_RACK} workers/rack, {ROUNDS} rounds ==",
+        ELEMS * 4 >> 10
+    );
+    // Shared memory is a fat core: the paper's benefit model must say
+    // "don't go hierarchical here" (it pays only behind a thin
+    // cross-rack bottleneck), so the measured two-level numbers below
+    // are the overhead of the extra level, not a contradiction.
+    let fat_core = HierBandwidths {
+        b_pbox: 12.5e9,
+        b_core: 1e12,
+        b_wkr: 12.5e9,
+    };
+    let mut results = Vec::new();
+    for racks in [2usize, 4] {
+        let _ = bench_flat(racks, WORKERS_PER_RACK); // warm-up
+        let flat = bench_flat(racks, WORKERS_PER_RACK);
+        let _ = bench_two_level(racks, WORKERS_PER_RACK); // warm-up
+        let two = bench_two_level(racks, WORKERS_PER_RACK);
+        let predicted = hierarchical_beneficial(fat_core, WORKERS_PER_RACK, racks);
+        println!(
+            "  {racks} racks x {WORKERS_PER_RACK}: flat {flat:>7.1} rounds/s, \
+             two-level {two:>7.1} rounds/s ({:.2}x, model predicts \
+             hierarchical beneficial on fat core: {predicted})",
+            two / flat
+        );
+        assert!(
+            !predicted,
+            "cost model must not favor hierarchy over a fat core"
+        );
+        results.push((racks, flat, two));
+    }
+    println!("hierarchy OK");
+    // Single-line JSON summary for BENCH_hierarchy.json (keep last on
+    // stdout).
+    println!(
+        "{{\"bench\":\"hierarchy\",\"workers_per_rack\":{WORKERS_PER_RACK},\
+         \"chunks\":{CHUNKS},\"chunk_elems\":{CHUNK_ELEMS},\"rounds\":{ROUNDS},\
+         \"flat2_rps\":{:.1},\"two_level2_rps\":{:.1},\
+         \"flat4_rps\":{:.1},\"two_level4_rps\":{:.1},\
+         \"overhead2\":{:.3},\"overhead4\":{:.3}}}",
+        results[0].1,
+        results[0].2,
+        results[1].1,
+        results[1].2,
+        results[0].1 / results[0].2,
+        results[1].1 / results[1].2
+    );
+}

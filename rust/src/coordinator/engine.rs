@@ -65,12 +65,41 @@
 //! the new epoch from a faster core) makes the shard apply the rollback
 //! itself from the push's epoch tag, so the message race can never drop
 //! a replayed gradient.
+//!
+//! # Node roles: Root vs RackRelay
+//!
+//! The chunk-complete transition is role-parameterized ([`NodeRole`]),
+//! splitting "local sum ready" from "parameters ready" so the same
+//! engine can sit at either level of the paper's hierarchy (§3.4,
+//! Fig. 19):
+//!
+//! * **Root** — today's single-rack behavior: the last arrival triggers
+//!   the fused mean+optimizer pass (dividing by the job's **total
+//!   worker weight**, not the direct pusher count — a relay pushing the
+//!   sum of `k` workers registers weight `k` via
+//!   [`ShardEngine::set_worker_weight`], so the root's mean is exact),
+//!   the round advances, and parameters broadcast to pullers. With all
+//!   weights at their default of 1 the divisor is bit-for-bit
+//!   `1/n_workers`, so flat deployments are unchanged.
+//! * **RackRelay** — the last *local* arrival closes only the
+//!   aggregation: the raw per-chunk **sum** (never divided, never
+//!   optimized) is copied once into a pooled buffer and sent as
+//!   [`Reply::Sum`] over the shard's uplink lane, the chunk enters an
+//!   `awaiting` state, and pull masks are held. When the parent's
+//!   parameters come back, [`ShardEngine::install_params_src`] writes
+//!   them into the slot and performs the deferred broadcast — the
+//!   "parameters ready" half. Replayed pushes of an awaiting chunk
+//!   defer their pull to that same install instead of answering with
+//!   stale parameters, so rack-local recovery composes with the
+//!   upstream exchange: a rack's epoch bump rewinds only its partial
+//!   chunks, replays re-complete them to bit-identical sums, and the
+//!   uplink forwards each chunk's sum exactly once per round.
 
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::Arc;
 
-use super::aggregation::{AggError, ChunkAggregator, GradSrc};
+use super::aggregation::{copy_dequant, copy_f32s_le, AggError, ChunkAggregator, GradSrc};
 use super::optimizer::Optimizer;
 use super::pool::{SharedF32, SharedF32Pool, SharedPool};
 use super::ring;
@@ -97,6 +126,22 @@ impl RoundTag {
     pub fn new(epoch: u32, round: u64) -> RoundTag {
         RoundTag { epoch, round }
     }
+}
+
+/// Which level of the hierarchy a job's aggregation node sits at — the
+/// parameter that splits the chunk-complete transition into "local sum
+/// ready" (RackRelay) vs "parameters ready" (Root). See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Top of the hierarchy: optimize exactly once per round, fan
+    /// parameters down. The flat single-rack leader is a Root with every
+    /// worker at weight 1.
+    Root,
+    /// Rack level: tall-aggregate the rack's workers, forward the raw
+    /// per-chunk sum upstream ([`Reply::Sum`]), and fan the parent's
+    /// returned parameters back down
+    /// ([`ShardEngine::install_params_src`]).
+    RackRelay,
 }
 
 /// A round-protocol violation detected by the engine.
@@ -178,6 +223,20 @@ pub enum Reply {
     /// bulletin ([`ring::Producer::post_epoch`]), so a full ring of
     /// dead-round replies can never wedge a recovery notice.
     RolledBack { job: JobId, epoch: u32 },
+    /// A RackRelay chunk's locally-complete raw gradient **sum** (no
+    /// divide, no optimizer step), bound for the relay's uplink thread
+    /// over the shard's uplink lane. `round` is the local round the sum
+    /// closes; `epoch` is the rack-local rollback generation at close
+    /// time (diagnostic — rack epochs are invisible upstream). `data` is
+    /// an exclusively-held pooled buffer that recycles when the uplink
+    /// drops it after encoding.
+    Sum {
+        job: JobId,
+        chunk: u32,
+        epoch: u32,
+        round: u64,
+        data: SharedF32,
+    },
 }
 
 /// The engine side of one worker's reply route: one SPSC producer per
@@ -344,6 +403,10 @@ struct ChunkSlot {
     /// Completed rounds of this chunk (the `round` half of its tag; the
     /// `epoch` half is job-wide and lives on the shard).
     round: u64,
+    /// RackRelay only: the local sum for round `round - 1` went upstream
+    /// and the parent's parameters have not come back yet. Pull masks
+    /// (including replayed pulls) are held until the install.
+    awaiting: bool,
 }
 
 impl ChunkSlot {
@@ -354,6 +417,7 @@ impl ChunkSlot {
             agg: ChunkAggregator::new(len, n_workers),
             params,
             round: 0,
+            awaiting: false,
         }
     }
 }
@@ -370,6 +434,18 @@ struct JobShard {
     /// Rollback generation; pushes tagged with an older epoch are stale.
     epoch: u32,
     n_workers: usize,
+    /// Which level of the hierarchy this node plays for the job.
+    role: NodeRole,
+    /// Downstream worker weights (how many leaf workers each direct
+    /// pusher represents; plain workers are 1, a relay is its rack
+    /// size). The Root's mean divides by the sum of these.
+    weights: Vec<u32>,
+    /// `1 / weights.sum()`, cached so the completion path stays a single
+    /// multiply. Bit-for-bit `1/n_workers` when all weights are 1.
+    inv_weight: f32,
+    /// RackRelay only: this core's lane of the uplink reply fabric, the
+    /// route [`Reply::Sum`] takes to the uplink thread.
+    uplink: Option<ReplyTx>,
 }
 
 /// Copy `params` once into a refcount-shared pooled buffer and send it
@@ -446,8 +522,10 @@ impl ShardEngine {
         }
     }
 
-    /// Install a job's shard: this core's chunks with their initial
-    /// parameters, the shared optimizer, and one reply channel per worker.
+    /// Install a job's shard as a [`NodeRole::Root`] (the flat
+    /// single-rack leader): this core's chunks with their initial
+    /// parameters, the shared optimizer, and one reply channel per
+    /// worker.
     pub fn init_job(
         &mut self,
         job: JobId,
@@ -456,6 +534,28 @@ impl ShardEngine {
         n_workers: usize,
         replies: Vec<ReplyTx>,
     ) {
+        self.init_job_with_role(job, chunks, opt, n_workers, replies, NodeRole::Root, None);
+    }
+
+    /// [`ShardEngine::init_job`] with an explicit [`NodeRole`]. A
+    /// `RackRelay` shard must be given `uplink` — this core's lane of
+    /// the uplink reply fabric — since that is where its chunk sums go.
+    /// Worker weights start at 1; the admission path raises a relay
+    /// connection's weight via [`ShardEngine::set_worker_weight`].
+    pub fn init_job_with_role(
+        &mut self,
+        job: JobId,
+        chunks: Vec<(u32, Vec<f32>)>,
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        replies: Vec<ReplyTx>,
+        role: NodeRole,
+        uplink: Option<ReplyTx>,
+    ) {
+        assert!(
+            role != NodeRole::RackRelay || uplink.is_some(),
+            "a RackRelay shard needs an uplink lane for its sums"
+        );
         let mut map = HashMap::new();
         for (id, params) in chunks {
             map.insert(id, ChunkSlot::new(params, opt.state_words(), n_workers));
@@ -469,8 +569,42 @@ impl ShardEngine {
                 pull_mask: HashMap::new(),
                 epoch: 0,
                 n_workers,
+                role,
+                weights: vec![1; n_workers],
+                inv_weight: 1.0 / n_workers as f32,
+                uplink,
             },
         );
+    }
+
+    /// Register how many leaf workers direct pusher `worker` represents
+    /// (a relay's rack size; plain workers stay at the default 1). The
+    /// Root's mean divides by the job's total weight, so with two
+    /// relays of weight `k` the divisor is `2k` — exactly the flat
+    /// deployment's `1/n` over the same leaf workers. Weights below 1
+    /// are clamped to 1. Idempotent per connection; a reconnecting
+    /// relay re-registers the same weight.
+    pub fn set_worker_weight(
+        &mut self,
+        job: JobId,
+        worker: u32,
+        weight: u32,
+    ) -> Result<(), EngineError> {
+        let shard = self.jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        let w = worker as usize;
+        if w >= shard.n_workers {
+            return Err(EngineError::Agg(AggError::WorkerOutOfRange {
+                worker: w,
+                n_workers: shard.n_workers,
+            }));
+        }
+        shard.weights[w] = weight.max(1);
+        // Sum in u64: 64 workers × u32 weights must not overflow on a
+        // hostile registration (the quotient is approximate in f32 for
+        // huge totals, which is fine — only its exactness for real
+        // power-of-two totals is load-bearing).
+        shard.inv_weight = 1.0 / shard.weights.iter().map(|&w| w as u64).sum::<u64>() as f32;
+        Ok(())
     }
 
     /// Borrow a chunk's current parameters (tests/diagnostics — the data
@@ -539,8 +673,18 @@ impl ShardEngine {
             .ok_or(EngineError::UnknownChunk { job, chunk })?;
         if tag.round < slot.round {
             // Rollback replay of a chunk that had already completed this
-            // round: its parameters already include every worker's
-            // gradient, so answer straight from the slot.
+            // round. On a Root (or an installed relay chunk) the slot's
+            // parameters already include every worker's gradient, so
+            // answer straight from the slot. On a relay chunk still
+            // awaiting the parent's parameters, answering now would hand
+            // out the *previous* round — hold the pull until
+            // `install_params_src` performs the deferred broadcast.
+            if slot.awaiting && tag.round + 1 == slot.round {
+                if pull {
+                    *shard.pull_mask.entry(chunk).or_insert(0) |= 1u64 << w;
+                }
+                return Ok(PushOutcome::Replayed);
+            }
             if pull {
                 broadcast_params(
                     pool,
@@ -567,24 +711,108 @@ impl ShardEngine {
         if !done {
             return Ok(PushOutcome::Absorbed);
         }
-        // Last worker arrived: fused mean+optimizer step on this same
-        // core (one pass over the accumulator), then broadcast to every
-        // worker that pulled.
+        // Last worker arrived — the role-parameterized transition.
         let ChunkSlot {
             params,
             state,
             agg,
             round,
+            awaiting,
         } = slot;
-        agg.take_mean_into_step(|sum, inv_n| {
-            shard
-                .opt
-                .step_scaled(&mut params[..], &mut state[..], sum, inv_n)
-        })?;
-        *round += 1;
-        let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
-        broadcast_params(pool, &shard.replies, mask, job, chunk, shard.epoch, params);
+        match shard.role {
+            NodeRole::Root => {
+                // Parameters ready: fused mean+optimizer step on this
+                // same core (one pass over the accumulator, dividing by
+                // the total worker weight), then broadcast to every
+                // worker that pulled.
+                let inv_w = shard.inv_weight;
+                agg.take_mean_into_step(|sum, _inv_n| {
+                    shard
+                        .opt
+                        .step_scaled(&mut params[..], &mut state[..], sum, inv_w)
+                })?;
+                *round += 1;
+                let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
+                broadcast_params(pool, &shard.replies, mask, job, chunk, shard.epoch, params);
+            }
+            NodeRole::RackRelay => {
+                // Local sum ready: copy the raw sum once into a pooled
+                // buffer and hand it to the uplink lane — no divide, no
+                // optimizer step, and the pull mask is held until the
+                // parent's parameters come back (install_params_src).
+                let uplink = shard
+                    .uplink
+                    .as_ref()
+                    .expect("RackRelay shard initialized without an uplink lane");
+                let epoch = shard.epoch;
+                agg.take_mean_into_step(|sum, _inv_n| {
+                    let mut buf = pool.take();
+                    buf.extend_from_slice(sum);
+                    let _ = uplink.send(Reply::Sum {
+                        job,
+                        chunk,
+                        epoch,
+                        round: *round,
+                        data: buf,
+                    });
+                })?;
+                *round += 1;
+                *awaiting = true;
+            }
+        }
         Ok(PushOutcome::Completed)
+    }
+
+    /// The "parameters ready" half of a RackRelay round: write the
+    /// parent's returned parameters for `chunk` into the slot (straight
+    /// from their wire form — no intermediate buffer) and perform the
+    /// broadcast deferred at sum time, stamped with the rack's *current*
+    /// epoch so workers that rolled back while the sum was upstream
+    /// still accept it. Returns `Ok(false)` if the chunk was not
+    /// awaiting parameters (a duplicate install after a parent-side
+    /// replay re-broadcast — the values are identical, the write is
+    /// skipped), `Ok(true)` when installed and broadcast.
+    pub fn install_params_src(
+        &mut self,
+        job: JobId,
+        chunk: u32,
+        src: GradSrc<'_>,
+    ) -> Result<bool, EngineError> {
+        let ShardEngine { jobs, pool } = self;
+        let shard = jobs.get_mut(&job).ok_or(EngineError::UnknownJob(job))?;
+        let slot = shard
+            .chunks
+            .get_mut(&chunk)
+            .ok_or(EngineError::UnknownChunk { job, chunk })?;
+        if !slot.awaiting {
+            return Ok(false);
+        }
+        let len = src.elems()?;
+        if len != slot.params.len() {
+            return Err(EngineError::Agg(AggError::LengthMismatch {
+                got: len,
+                want: slot.params.len(),
+            }));
+        }
+        match src {
+            GradSrc::F32s(p) => slot.params.copy_from_slice(p),
+            GradSrc::LeBytes(b) => copy_f32s_le(&mut slot.params, b),
+            GradSrc::Quant2Bit {
+                threshold, packed, ..
+            } => copy_dequant(&mut slot.params, threshold, packed),
+        }
+        slot.awaiting = false;
+        let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
+        broadcast_params(
+            pool,
+            &shard.replies,
+            mask,
+            job,
+            chunk,
+            shard.epoch,
+            &slot.params,
+        );
+        Ok(true)
     }
 
     /// Read-only pull of `chunk`'s current parameters for `worker`.
@@ -1004,6 +1232,146 @@ mod tests {
         assert_eq!(eng.pool.free_count(), 0, "still referenced");
         drop(datas);
         assert_eq!(eng.pool.free_count(), 1, "one buffer recycled, not three");
+    }
+
+    fn relay_with_job(
+        n_workers: usize,
+        chunks: Vec<(u32, Vec<f32>)>,
+    ) -> (ShardEngine, Vec<ReplyRx>, ReplyRx) {
+        let mut eng = ShardEngine::new();
+        let (txs, rxs) = single_lane_fabrics(1, n_workers, 64);
+        let (mut utx, urx) = reply_fabric(1, 1, 64);
+        eng.init_job_with_role(
+            1,
+            chunks,
+            Arc::new(Sgd { lr: 0.5 }),
+            n_workers,
+            txs,
+            NodeRole::RackRelay,
+            Some(utx.pop().expect("single uplink lane")),
+        );
+        (eng, rxs, urx)
+    }
+
+    /// A Root whose two direct pushers each carry weight 2 (two relays
+    /// of two workers) divides by 4, matching a flat 4-worker engine fed
+    /// the same leaf gradients bit-for-bit.
+    #[test]
+    fn weighted_root_mean_divides_by_total_weight() {
+        let leaf = [[1.0f32, -2.0], [0.5, 4.0], [2.5, 0.25], [-1.0, 8.0]];
+        // Flat reference: 4 workers, weights all 1.
+        let (mut flat, mut flat_rxs) = engine_with_job(4, vec![(0, vec![1.0, 1.0])], 0.5);
+        let t = RoundTag::new(0, 0);
+        for (w, g) in leaf.iter().enumerate() {
+            flat.push(1, 0, w as u32, g, w == 0, t).unwrap();
+        }
+        let flat_params = chunk_reply(flat_rxs[0].recv().unwrap()).2;
+
+        // Two-level root: 2 pushers (the relays), each weight 2, pushing
+        // their racks' sums in the same grouping two_level_reduce uses.
+        let (mut root, mut root_rxs) = engine_with_job(2, vec![(0, vec![1.0, 1.0])], 0.5);
+        root.set_worker_weight(1, 0, 2).unwrap();
+        root.set_worker_weight(1, 1, 2).unwrap();
+        let rack0 = [leaf[0][0] + leaf[1][0], leaf[0][1] + leaf[1][1]];
+        let rack1 = [leaf[2][0] + leaf[3][0], leaf[2][1] + leaf[3][1]];
+        root.push(1, 0, 0, &rack0, true, t).unwrap();
+        assert_eq!(
+            root.push(1, 0, 1, &rack1, false, t).unwrap(),
+            PushOutcome::Completed
+        );
+        let two_level = chunk_reply(root_rxs[0].recv().unwrap()).2;
+        // The leaf values are dyadic rationals, so both sum groupings
+        // are exact and the runs agree bit-for-bit.
+        assert_eq!(flat_params, two_level);
+    }
+
+    /// RackRelay completion forwards the raw local sum on the uplink
+    /// lane and holds every pull until the parent's parameters install.
+    #[test]
+    fn relay_forwards_sum_then_installs_params() {
+        let (mut eng, mut rxs, mut urx) = relay_with_job(2, vec![(0, vec![1.0, 1.0])]);
+        let t = RoundTag::new(0, 0);
+        eng.push(1, 0, 0, &[2.0, 2.0], true, t).unwrap();
+        assert_eq!(
+            eng.push(1, 0, 1, &[4.0, 4.0], true, t).unwrap(),
+            PushOutcome::Completed
+        );
+        // The uplink got the *sum* (no divide, no optimizer step)...
+        match urx.recv().unwrap() {
+            Reply::Sum {
+                chunk, round, data, ..
+            } => {
+                assert_eq!((chunk, round), (0, 0));
+                assert_eq!(data.to_vec(), vec![6.0, 6.0]);
+            }
+            other => panic!("expected a sum, got {other:?}"),
+        }
+        // ...and the pullers got nothing yet: parameters aren't ready.
+        assert!(rxs[0].try_recv().is_none());
+        assert!(rxs[1].try_recv().is_none());
+        assert_eq!(eng.chunk_params(1, 0), Some(&[1.0f32, 1.0][..]));
+
+        // The parent's parameters come back: deferred broadcast fires.
+        assert!(eng.install_params_src(1, 0, GradSrc::F32s(&[0.25, -0.5])).unwrap());
+        for rx in rxs.iter_mut() {
+            assert_eq!(chunk_reply(rx.recv().unwrap()).2, vec![0.25, -0.5]);
+        }
+        assert_eq!(eng.chunk_params(1, 0), Some(&[0.25f32, -0.5][..]));
+        // A duplicate install (parent-side replay re-broadcast) is a
+        // recognized no-op, not an error.
+        assert!(!eng.install_params_src(1, 0, GradSrc::F32s(&[0.25, -0.5])).unwrap());
+    }
+
+    /// Rack-local recovery composes with the upstream exchange: a
+    /// rollback while a chunk's sum is upstream rewinds only the partial
+    /// chunks, replays of the awaiting chunk defer their pulls (no
+    /// second sum goes up), and the eventual install reaches the
+    /// replayed pullers under the new epoch.
+    #[test]
+    fn relay_rollback_rewinds_only_partial_and_defers_replayed_pulls() {
+        let (mut eng, mut rxs, mut urx) =
+            relay_with_job(2, vec![(0, vec![1.0]), (1, vec![10.0])]);
+        let t0 = RoundTag::new(0, 0);
+        eng.push(1, 0, 0, &[2.0], true, t0).unwrap();
+        assert_eq!(eng.push(1, 0, 1, &[4.0], true, t0).unwrap(), PushOutcome::Completed);
+        assert!(matches!(urx.recv().unwrap(), Reply::Sum { chunk: 0, .. }));
+        eng.push(1, 1, 0, &[8.0], true, t0).unwrap(); // chunk 1 partial
+
+        // Worker 1 dies: only the partial chunk rewinds.
+        assert_eq!(eng.rollback(1, 1).unwrap(), 1);
+        for rx in rxs.iter_mut() {
+            assert!(matches!(rx.recv().unwrap(), Reply::RolledBack { epoch: 1, .. }));
+        }
+
+        // Replay at epoch 1: the awaiting chunk answers Replayed with
+        // its pull deferred (no stale params, no duplicate sum), the
+        // rewound chunk re-completes to a bit-identical sum.
+        let t1 = RoundTag::new(1, 0);
+        assert_eq!(eng.push(1, 0, 0, &[2.0], true, t1).unwrap(), PushOutcome::Replayed);
+        assert_eq!(eng.push(1, 0, 1, &[4.0], true, t1).unwrap(), PushOutcome::Replayed);
+        assert!(rxs[0].try_recv().is_none());
+        eng.push(1, 1, 0, &[8.0], true, t1).unwrap();
+        assert_eq!(eng.push(1, 1, 1, &[16.0], true, t1).unwrap(), PushOutcome::Completed);
+        match urx.recv().unwrap() {
+            Reply::Sum { chunk, data, .. } => {
+                assert_eq!(chunk, 1);
+                assert_eq!(data.to_vec(), vec![24.0]);
+            }
+            other => panic!("expected a sum, got {other:?}"),
+        }
+        assert!(urx.try_recv().is_none(), "exactly one sum per chunk per round");
+
+        // Installs release both chunks' pullers under epoch 1.
+        eng.install_params_src(1, 0, GradSrc::F32s(&[0.5])).unwrap();
+        eng.install_params_src(1, 1, GradSrc::F32s(&[7.0])).unwrap();
+        for rx in rxs.iter_mut() {
+            let (chunk, epoch, data) = chunk_reply(rx.recv().unwrap());
+            assert_eq!((chunk, epoch), (0, 1));
+            assert_eq!(data, vec![0.5]);
+            let (chunk, epoch, data) = chunk_reply(rx.recv().unwrap());
+            assert_eq!((chunk, epoch), (1, 1));
+            assert_eq!(data, vec![7.0]);
+        }
     }
 
     #[test]

@@ -26,6 +26,17 @@
 //!   mid-round recovery — a worker dying mid-round triggers a round
 //!   rollback and slot recycle instead of wedging its job.
 //!
+//! The engine itself is **role-parameterized** (paper §3.4, Fig. 19):
+//! the chunk-complete transition splits into "local sum ready" vs
+//! "parameters ready", so the same node runs as a `Root` (optimize
+//! exactly once, fan parameters down) or as a `RackRelay`
+//! (tall-aggregate the rack, stream raw per-chunk sums upstream over
+//! the same v2 chunk frames with a worker-count weight, and fan the
+//! root's returned parameters back down). See
+//! [`engine::NodeRole`] and `transport::RelayConfig`; recovery composes
+//! across levels because a rack's epoch bumps stay rack-internal — the
+//! relay replays byte-identical sums upstream from its round cache.
+//!
 //! Workers are threads (or PJRT-executing processes in `examples/`)
 //! exchanging real `f32` gradients; the aggregation math matches the L1
 //! Pallas kernel bit-for-bit up to float associativity, and pytest checks
@@ -62,6 +73,16 @@
 //!   chunk slots / connections and reused for the process lifetime;
 //!   the fused `take_mean_into_step` + `step_scaled` pass finishes a
 //!   round in one sweep over the accumulator.
+//! * **Uplink lane** (RackRelay only): the same ring-and-pool shape
+//!   pointed up. Each core's completed chunk sum is copied once into a
+//!   `SharedF32Pool` buffer and sent over a per-core SPSC sum ring to
+//!   the uplink thread, which copies it into its per-chunk replay cache
+//!   (reused `Vec<f32>`, also the rollback-replay source) and recycles
+//!   the pooled buffer; the parent's returned `ModelChunk` payload is
+//!   received into the uplink's own `BytePool` buffer and travels down
+//!   a per-core SPSC install ring to the chunk's core, which writes the
+//!   slot parameters and fires the deferred pull broadcast. No mutex,
+//!   no steady-state allocation on either direction.
 //!
 //! Per chunk per round the leader path is one copy in (socket →
 //! pooled buffer), one absorb fold, one fused optimize pass, one shared
@@ -88,12 +109,13 @@ pub mod wire;
 pub use aggregation::GradSrc;
 pub use chunk::{ChunkId, KeyTable};
 pub use engine::{
-    EngineError, PushOutcome, Reply, ReplyRx, ReplyTx, RoundTag, ShardEngine, WorkerRound,
+    EngineError, NodeRole, PushOutcome, Reply, ReplyRx, ReplyTx, RoundTag, ShardEngine,
+    WorkerRound,
 };
 pub use optimizer::{NesterovSgd, Optimizer, Sgd};
 pub use pool::{
     BytePool, F32Pool, Pool, Pooled, PooledBytes, PooledF32, SharedF32, SharedF32Pool, SharedPool,
     SharedPooled,
 };
-pub use server::{PHubServer, ServerConfig};
+pub use server::{PHubServer, RelayUplink, ServerConfig};
 pub use service::{ConnectionManager, ServiceHandle};

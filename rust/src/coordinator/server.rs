@@ -52,7 +52,7 @@
 //! by the AOT-compiled JAX model running under PJRT.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -61,7 +61,7 @@ use crate::metrics::DataPlaneMetrics;
 use super::aggregation::GradSrc;
 use super::chunk::KeyTable;
 use super::compress::QuantView;
-use super::engine::{ReplyRx, ReplyTx, RoundTag, ShardEngine};
+use super::engine::{NodeRole, ReplyRx, ReplyTx, RoundTag, ShardEngine};
 use super::mapping;
 use super::optimizer::Optimizer;
 use super::pool::PooledBytes;
@@ -98,13 +98,17 @@ const PORT_BATCH: usize = 64;
 
 enum CoreMsg {
     /// Register a job's chunks owned by this core: (chunk id, initial
-    /// params, optimizer, n_workers, reply-ring producers per worker).
+    /// params, optimizer, n_workers, reply-ring producers per worker),
+    /// plus the node role and — for a RackRelay — this core's lane of
+    /// the uplink sum fabric.
     InitJob {
         job: JobId,
         chunks: Vec<(u32, Vec<f32>)>,
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
         replies: Vec<ReplyTx>,
+        role: NodeRole,
+        uplink: Option<ReplyTx>,
     },
     /// Attach a new request port to this core's poll set. Always sent on
     /// the control ring *after* the owning job's `InitJob`, so FIFO order
@@ -141,6 +145,28 @@ enum CoreMsg {
     },
     /// Read-only pull of current chunk params.
     Pull { job: JobId, chunk: u32, worker: u32 },
+    /// Register how many leaf workers direct pusher `worker` represents
+    /// (a relay registering its rack size at admission; see
+    /// `ShardEngine::set_worker_weight`). Control-plane only. `done` is
+    /// bumped once applied so the frontend can wait for every core — a
+    /// weight must be in force before any push it covers can complete.
+    SetWeight {
+        job: JobId,
+        worker: u32,
+        weight: u32,
+        done: Arc<AtomicUsize>,
+    },
+    /// RackRelay downlink: the parent's returned parameters for one
+    /// chunk, as dense LE f32 bytes in a pooled frame buffer
+    /// (`data[off..]`). The core writes them into the slot and fires the
+    /// deferred pull broadcast; dropping `data` recycles the buffer to
+    /// the uplink's pool.
+    InstallParams {
+        job: JobId,
+        chunk: u32,
+        data: PooledBytes,
+        off: usize,
+    },
     /// Rewind the job's open round to recover from a mid-round worker
     /// death (see `ShardEngine::rollback`).
     RollbackRound { job: JobId, epoch: u32 },
@@ -162,8 +188,10 @@ fn apply_core_msg(
             opt,
             n_workers,
             replies,
+            role,
+            uplink,
         } => {
-            engine.init_job(job, chunks, opt, n_workers, replies);
+            engine.init_job_with_role(job, chunks, opt, n_workers, replies, role, uplink);
             Ok(())
         }
         CoreMsg::Connect { port } => return Some(port),
@@ -212,6 +240,25 @@ fn apply_core_msg(
             // recycles to its pool.
         }
         CoreMsg::Pull { job, chunk, worker } => engine.pull(job, chunk, worker),
+        CoreMsg::SetWeight {
+            job,
+            worker,
+            weight,
+            done,
+        } => {
+            let res = engine.set_worker_weight(job, worker, weight);
+            done.fetch_add(1, Ordering::Release);
+            res
+        }
+        CoreMsg::InstallParams {
+            job,
+            chunk,
+            data,
+            off,
+        } => engine
+            .install_params_src(job, chunk, GradSrc::LeBytes(&data[off..]))
+            .map(|_| ()),
+        // (`data` drops at the end of the arm: the buffer recycles.)
         CoreMsg::RollbackRound { job, epoch } => {
             metrics.rollbacks.inc();
             engine.rollback(job, epoch).map(|_| ())
@@ -389,6 +436,37 @@ impl PHubServer {
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
     ) -> JobId {
+        let (job, uplink) = self.init_job_inner(table, init_params, opt, n_workers, NodeRole::Root);
+        debug_assert!(uplink.is_none());
+        job
+    }
+
+    /// [`PHubServer::init_job`] for a [`NodeRole::RackRelay`] node: the
+    /// job's cores forward each chunk's locally-complete raw sum instead
+    /// of optimizing, and the returned [`RelayUplink`] is the (single)
+    /// uplink thread's end of that exchange — it receives the sums over
+    /// a lock-free per-core reply fabric and feeds the parent's returned
+    /// parameters back down with [`RelayUplink::install_chunk_bytes`].
+    pub fn init_relay_job(
+        self: &Arc<Self>,
+        table: KeyTable,
+        init_params: &[f32],
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+    ) -> (JobId, RelayUplink) {
+        let (job, uplink) =
+            self.init_job_inner(table, init_params, opt, n_workers, NodeRole::RackRelay);
+        (job, uplink.expect("relay init always builds an uplink"))
+    }
+
+    fn init_job_inner(
+        self: &Arc<Self>,
+        table: KeyTable,
+        init_params: &[f32],
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        role: NodeRole,
+    ) -> (JobId, Option<RelayUplink>) {
         assert_eq!(init_params.len(), table.total_elems);
         assert!((1..=super::aggregation::MAX_WORKERS).contains(&n_workers));
         let job = self.next_job.fetch_add(1, Ordering::SeqCst) as JobId;
@@ -430,6 +508,39 @@ impl PHubServer {
             }));
         }
 
+        // RackRelay only: one extra lock-free lane for the uplink thread
+        // — per-core sum rings (core → uplink, a reply fabric carrying
+        // `Reply::Sum`) and per-core install rings (uplink → core,
+        // carrying `InstallParams`), sized like a worker's lanes so the
+        // uplink steady path acquires no mutex and blocks only itself.
+        let mut uplink_sum_txs: Vec<Option<ReplyTx>> = (0..self.cores.len()).map(|_| None).collect();
+        let mut uplink = None;
+        let mut inst_ports: Option<Vec<ring::Consumer<CoreMsg>>> = None;
+        if role == NodeRole::RackRelay {
+            let sum_waiter = Arc::new(ring::Waiter::new());
+            let mut sum_rxs = Vec::with_capacity(self.cores.len());
+            let mut inst_txs = Vec::with_capacity(self.cores.len());
+            let mut inst_rxs = Vec::with_capacity(self.cores.len());
+            for (ci, core) in self.cores.iter().enumerate() {
+                let cap = 2 * chunks_on_core[ci] + RING_SLACK;
+                let (stx, srx) = ring::spsc_shared(cap, sum_waiter.clone());
+                uplink_sum_txs[ci] = Some(stx);
+                sum_rxs.push(srx);
+                let (itx, irx) = ring::spsc_shared(cap, core.waiter.clone());
+                inst_txs.push(itx);
+                inst_rxs.push(irx);
+            }
+            uplink = Some(RelayUplink {
+                _server: self.clone(),
+                job,
+                table: table.clone(),
+                core_of: core_of.clone(),
+                reqs: inst_txs,
+                rx: ReplyRx::new(job, sum_rxs, sum_waiter),
+            });
+            inst_ports = Some(inst_rxs);
+        }
+
         // Install the job on every core. Holding the control mutex across
         // InitJob + the Connects keeps them contiguous FIFO on the ring:
         // a core adopts a worker's request port only after installing the
@@ -465,6 +576,8 @@ impl PHubServer {
                 opt: opt.clone(),
                 n_workers,
                 replies: std::mem::take(&mut reply_cols[ci]),
+                role,
+                uplink: uplink_sum_txs[ci].take(),
             })
             .map_err(|_| ())
             .expect("core thread gone");
@@ -472,6 +585,13 @@ impl PHubServer {
                 ctrl.send(CoreMsg::Connect { port: rx })
                     .map_err(|_| ())
                     .expect("core thread gone");
+            }
+            if let Some(ports) = inst_ports.as_mut() {
+                ctrl.send(CoreMsg::Connect {
+                    port: ports.remove(0),
+                })
+                .map_err(|_| ())
+                .expect("core thread gone");
             }
         }
 
@@ -484,7 +604,28 @@ impl PHubServer {
                 pending,
             },
         );
-        job
+        (job, uplink)
+    }
+
+    /// Register how many leaf workers direct pusher `worker` of `job`
+    /// represents (a relay connection registering its rack size;
+    /// admission-time control plane). Broadcast to every core, then wait
+    /// until each has applied it: the weight must be in force before the
+    /// caller lets the pusher push, or a round completing in the gap
+    /// would divide by a stale total.
+    pub fn set_worker_weight(&self, job: JobId, worker: u32, weight: u32) {
+        let done = Arc::new(AtomicUsize::new(0));
+        for core in &self.cores {
+            core.send(CoreMsg::SetWeight {
+                job,
+                worker,
+                weight,
+                done: done.clone(),
+            });
+        }
+        while done.load(Ordering::Acquire) < self.cores.len() {
+            std::thread::yield_now();
+        }
     }
 
     /// Create the handle for worker `w` of `job` (the client side of
@@ -862,6 +1003,83 @@ impl WorkerHandle {
     }
 }
 
+/// The uplink thread's end of a RackRelay job's hierarchical exchange
+/// (built by [`PHubServer::init_relay_job`]):
+///
+/// * **up**: [`RelayUplink::recv_sum`] delivers each chunk's
+///   locally-complete raw sum ([`Reply::Sum`]) from its pinned core over
+///   a lock-free per-core reply fabric — exactly one per chunk per
+///   round, whatever rack-local recovery happened underneath;
+/// * **down**: [`RelayUplink::install_chunk_bytes`] hands the parent's
+///   returned parameters (still in the pooled frame buffer they were
+///   received into) to the chunk's core, which writes them into the
+///   slot and fires the pull broadcast deferred at sum time.
+///
+/// Both directions are SPSC rings: the uplink steady path acquires no
+/// mutex and allocates nothing once its pools are warm.
+pub struct RelayUplink {
+    /// Keeps the core threads alive for as long as this handle exists.
+    _server: Arc<PHubServer>,
+    job: JobId,
+    table: Arc<KeyTable>,
+    core_of: Vec<usize>,
+    /// One SPSC install-ring producer per core (uplink → core).
+    reqs: Vec<ring::Producer<CoreMsg>>,
+    /// The per-core sum rings, multiplexed behind one parker.
+    rx: ReplyRx,
+}
+
+impl RelayUplink {
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    pub fn key_table(&self) -> &KeyTable {
+        &self.table
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.table.chunks.len()
+    }
+
+    /// Element range `[lo, hi)` of chunk `i` in the flat model.
+    pub fn chunk_range(&self, i: usize) -> (usize, usize) {
+        let c = &self.table.chunks[i];
+        (c.offset, c.offset + c.len)
+    }
+
+    /// Block for the next locally-complete chunk sum. `None` means the
+    /// job was evicted (every core dropped its lane) — the uplink thread
+    /// should exit.
+    pub fn recv_sum(&mut self) -> Option<Reply> {
+        self.rx.recv()
+    }
+
+    /// Non-blocking variant of [`RelayUplink::recv_sum`].
+    pub fn try_recv_sum(&mut self) -> Option<Reply> {
+        self.rx.try_recv()
+    }
+
+    /// Feed the parent's returned parameters for `chunk` — dense LE f32
+    /// bytes at `data[off..]`, typically the `ModelChunk` frame payload
+    /// still in its pooled receive buffer — down to the chunk's pinned
+    /// core. The buffer recycles there after the core's single copy.
+    pub fn install_chunk_bytes(&self, chunk: u32, data: PooledBytes, off: usize) {
+        let ci = chunk as usize;
+        assert!(ci < self.table.chunks.len(), "chunk id out of range");
+        debug_assert_eq!(data.len() - off, self.table.chunks[ci].len * 4);
+        self.reqs[self.core_of[ci]]
+            .send(CoreMsg::InstallParams {
+                job: self.job,
+                chunk,
+                data,
+                off,
+            })
+            .map_err(|_| ())
+            .expect("core thread gone");
+    }
+}
+
 #[cfg(test)]
 #[allow(clippy::useless_vec)]
 mod tests {
@@ -1086,6 +1304,133 @@ mod tests {
 
         assert_eq!(ma, mb, "replayed round must be bit-identical to clean");
         PHubServer::shutdown(server);
+    }
+
+    /// Two-level in-process deployment (2 rack relays × 2 workers feeding
+    /// a weighted root) trains bit-identically to a flat 4-worker job on
+    /// the same gradients. Gradients, init, lr, and momentum are dyadic
+    /// rationals, so every sum and product is exact in f32 and the
+    /// different association orders — flat `((g0+g1)+g2)+g3` vs two-level
+    /// `(g0+g1)+(g2+g3)` — cannot hide behind rounding.
+    #[test]
+    fn two_level_relay_matches_flat_bitwise() {
+        use crate::coordinator::pool::{BytePool, Pool};
+
+        let n = 48usize;
+        let rounds = 3usize;
+        let init: Vec<f32> = (0..n).map(|i| (i % 8) as f32 * 0.25).collect();
+        let opt = || {
+            Arc::new(NesterovSgd {
+                lr: 0.25,
+                momentum: 0.5,
+            })
+        };
+        // Leaf gradient for global worker w (dyadic, round-dependent).
+        let grad = |w: usize, r: usize| -> Vec<f32> {
+            (0..n)
+                .map(|i| (w as f32 - 1.5) * 0.5 + (i % 16) as f32 * 0.125 + r as f32 * 0.25)
+                .collect()
+        };
+
+        // Flat reference: one root, 4 direct workers.
+        let flat = PHubServer::start(ServerConfig { n_cores: 2 });
+        let jf = flat.init_job(table(n, 16), &init, opt(), 4);
+        let flat_model = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..4)
+                .map(|w| {
+                    let mut h = flat.worker(jf, w);
+                    s.spawn(move || {
+                        let mut m = Vec::new();
+                        for r in 0..rounds {
+                            m = h.push_pull(&grad(w, r));
+                        }
+                        m
+                    })
+                })
+                .collect();
+            let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+            assert_eq!(models[0], models[1]);
+            models.into_iter().next().unwrap()
+        });
+        PHubServer::shutdown(flat);
+
+        // Two-level: root job with 2 weighted pushers (the relays), each
+        // relay a RackRelay job with 2 leaf workers. The pump closure is
+        // the uplink thread's job: forward each chunk sum to the root,
+        // install the root's replies back into the relay.
+        let root = PHubServer::start(ServerConfig { n_cores: 2 });
+        let jr = root.init_job(table(n, 16), &init, opt(), 2);
+        root.set_worker_weight(jr, 0, 2);
+        root.set_worker_weight(jr, 1, 2);
+        let racks: Vec<Arc<PHubServer>> = (0..2)
+            .map(|_| PHubServer::start(ServerConfig { n_cores: 2 }))
+            .collect();
+        let relay_jobs: Vec<(JobId, RelayUplink)> = racks
+            .iter()
+            .map(|s| s.init_relay_job(table(n, 16), &init, opt(), 2))
+            .collect();
+
+        let leaf_models = std::thread::scope(|s| {
+            let mut pumps = Vec::new();
+            let mut leaves = Vec::new();
+            for (rack, (job, up)) in relay_jobs.into_iter().enumerate() {
+                for lw in 0..2usize {
+                    let w = rack * 2 + lw; // global worker id → same grads
+                    let mut h = racks[rack].worker(job, lw);
+                    leaves.push(s.spawn(move || {
+                        let mut m = Vec::new();
+                        for r in 0..rounds {
+                            m = h.push_pull(&grad(w, r));
+                        }
+                        m
+                    }));
+                }
+                let mut root_h = root.worker(jr, rack);
+                let mut up = up;
+                pumps.push(s.spawn(move || {
+                    let pool: Arc<BytePool> = Pool::new(up.n_chunks());
+                    for _ in 0..rounds {
+                        for _ in 0..up.n_chunks() {
+                            match up.recv_sum().unwrap() {
+                                Reply::Sum { chunk, data, .. } => {
+                                    root_h.push_chunk(chunk, data[..].into(), true);
+                                }
+                                other => panic!("expected a sum, got {other:?}"),
+                            }
+                        }
+                        for _ in 0..up.n_chunks() {
+                            match root_h.recv_reply() {
+                                Reply::Chunk { chunk, data, .. } => {
+                                    let mut buf = pool.take();
+                                    for x in data.iter() {
+                                        buf.extend_from_slice(&x.to_le_bytes());
+                                    }
+                                    up.install_chunk_bytes(chunk, buf, 0);
+                                }
+                                other => panic!("expected params, got {other:?}"),
+                            }
+                        }
+                        root_h.advance_round();
+                    }
+                }));
+            }
+            let models: Vec<Vec<f32>> =
+                leaves.into_iter().map(|j| j.join().unwrap()).collect();
+            for p in pumps {
+                p.join().unwrap();
+            }
+            models
+        });
+        for m in &leaf_models {
+            assert_eq!(
+                m, &flat_model,
+                "two-level parameters must be bit-identical to flat"
+            );
+        }
+        for s in racks {
+            PHubServer::shutdown(s);
+        }
+        PHubServer::shutdown(root);
     }
 
     /// Dropped messages are observable through `PHubServer::metrics()`

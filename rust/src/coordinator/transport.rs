@@ -26,6 +26,31 @@
 //! [`super::engine::WorkerRound`]; the connection loop only parses
 //! frames, validates them against the key table, and moves bytes.
 //!
+//! # Hierarchical deployment (leader-of-leaders)
+//!
+//! The same leader binary plays either role of the paper's §3.4 / Fig.
+//! 19 hierarchy. [`TcpLeader::serve`] is a **Root**: aggregate, optimize
+//! exactly once, fan parameters down. [`TcpLeader::serve_relay`] is a
+//! **RackRelay**: its cores tall-aggregate the rack's workers as usual,
+//! but each chunk's completed *raw sum* is handed to a per-job uplink
+//! thread which streams it to the parent over the very same v2
+//! `PushChunk` frames a worker would send — admitting itself with an
+//! aggregation weight equal to its rack's worker count
+//! (`wire::push_weight`), so the root's mean divides by total *leaf*
+//! workers and a two-level run is bit-identical to a flat one. The
+//! parent's `ModelChunk` replies are fed back down to the cores, which
+//! install the parameters and release the rack's waiting pullers.
+//!
+//! Recovery composes per level. A leaf dying mid-round bumps only its
+//! rack's epoch: the rack rewinds its partial chunks and re-aggregates,
+//! still producing exactly one sum per chunk per round upstream — the
+//! parent never learns. A *relay* dying mid-round is, to the parent,
+//! just a worker dying mid-round: the parent rewinds, the relay
+//! reconnects and replays its round's sums byte-identically from its
+//! per-chunk cache (re-summing is not needed and the rack is not
+//! disturbed). The relay↔parent connection carries its own epoch,
+//! independent of every rack-internal epoch.
+//!
 //! # Memory discipline
 //!
 //! The steady-state round is **exact-zero**: no heap allocation and no
@@ -57,9 +82,22 @@
 //! * **Client** — dense rounds serialize frames straight from the
 //!   caller's gradient; quantized rounds encode into per-chunk buffers
 //!   reused across rounds (`quantize_into`); `ModelChunk` payloads
-//!   decode into the round's model vector through a single reused
-//!   receive buffer. The per-round model allocation is the API's return
-//!   value, not a per-chunk cost.
+//!   decode through a single reused receive buffer straight into the
+//!   caller-owned model buffer of [`TcpWorker::push_pull_into`] /
+//!   [`TcpWorker::push_pull_quant_into`] — zero allocations once warm.
+//!   (The `Vec`-returning `push_pull` variants are thin wrappers whose
+//!   one allocation is the returned model itself.)
+//! * **Relay uplink** — the same discipline pointed up. Each completed
+//!   chunk sum arrives from its core in a refcount-shared pooled buffer
+//!   over a lock-free ring, is copied once into the uplink's per-chunk
+//!   replay cache (a `Vec<f32>` reused every round — also the byte-
+//!   identical replay source when the parent rewinds), and serializes
+//!   upstream with `write_chunk_frame_f32s`; the parent's `ModelChunk`
+//!   payload lands in a buffer from the uplink's own `BytePool` and
+//!   travels *in that buffer* down a per-core install ring to the
+//!   chunk's core (`RelayUplink::install_chunk_bytes`), recycling after
+//!   the single copy into the slot. No mutex, no steady-state
+//!   allocation, either direction.
 //!
 //! # Robustness and mid-round recovery
 //!
@@ -94,7 +132,7 @@ use super::compress::{ChunkQuantizer, QuantView};
 use super::engine::{Reply, WorkerRound};
 use super::optimizer::NesterovSgd;
 use super::pool::{BytePool, Pool};
-use super::server::{JobId, PHubServer, ServerConfig, WorkerHandle};
+use super::server::{JobId, PHubServer, RelayUplink, ServerConfig, WorkerHandle};
 use super::wire::{self, Frame, Op};
 
 /// Most workers one job admits (see the u64 arrival bitmask in
@@ -202,6 +240,19 @@ struct JobEntry {
     parked: HashMap<u32, WorkerHandle>,
 }
 
+/// Hierarchy parameters of a [`TcpLeader::serve_relay`] leader: where
+/// its parent lives and how wide the cross-rack level is.
+#[derive(Debug, Clone)]
+pub struct RelayConfig {
+    /// Address of the parent leader (the root, or a higher-level relay).
+    pub parent: String,
+    /// Direct pushers the *parent* job admits — the number of racks at
+    /// this level. A relay cannot infer it from its own rack's spec
+    /// (`n_workers` there is the rack's worker count), so the operator
+    /// states it once per level.
+    pub racks: u32,
+}
+
 /// The TCP leader: accepts workers and serves exchanges.
 pub struct TcpLeader {
     server: Arc<PHubServer>,
@@ -209,9 +260,39 @@ pub struct TcpLeader {
 }
 
 impl TcpLeader {
-    /// Bind and start serving in background threads. `bind` may be
-    /// `"127.0.0.1:0"` to pick a free port (see `local_addr`).
+    /// Bind and start serving in background threads as a **Root** (the
+    /// flat deployment, and the top of a hierarchical one). `bind` may
+    /// be `"127.0.0.1:0"` to pick a free port (see `local_addr`).
     pub fn serve(bind: impl ToSocketAddrs, cfg: ServerConfig) -> Result<Arc<TcpLeader>> {
+        Self::serve_inner(bind, cfg, None)
+    }
+
+    /// Bind and start serving as a **RackRelay**: local workers are
+    /// admitted and tall-aggregated exactly as under [`TcpLeader::serve`],
+    /// but each job's per-chunk sums stream up to `relay.parent` (with an
+    /// aggregation weight of the rack's worker count) and the parameters
+    /// fan back down from there — the leader never runs the optimizer
+    /// itself. The uplink dials the parent lazily on each job's first
+    /// admission and redials on upstream failure, replaying the open
+    /// round's cached sums byte-identically.
+    pub fn serve_relay(
+        bind: impl ToSocketAddrs,
+        cfg: ServerConfig,
+        relay: RelayConfig,
+    ) -> Result<Arc<TcpLeader>> {
+        ensure!(
+            (1..=MAX_WORKERS_PER_JOB).contains(&relay.racks),
+            "racks {} not in 1..={MAX_WORKERS_PER_JOB}",
+            relay.racks
+        );
+        Self::serve_inner(bind, cfg, Some(Arc::new(relay)))
+    }
+
+    fn serve_inner(
+        bind: impl ToSocketAddrs,
+        cfg: ServerConfig,
+        relay: Option<Arc<RelayConfig>>,
+    ) -> Result<Arc<TcpLeader>> {
         let listener = TcpListener::bind(bind).context("bind leader socket")?;
         let local_addr = listener.local_addr()?;
         let server = PHubServer::start(cfg);
@@ -229,8 +310,9 @@ impl TcpLeader {
                         let Ok(stream) = stream else { break };
                         let server = server.clone();
                         let jobs = jobs.clone();
+                        let relay = relay.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_worker(stream, server, jobs);
+                            let _ = handle_worker(stream, server, jobs, relay);
                         });
                     }
                 })
@@ -265,6 +347,7 @@ fn admit(
     jobs: &Mutex<HashMap<u32, JobEntry>>,
     wire_job: u32,
     spec: JobSpec,
+    relay: Option<&Arc<RelayConfig>>,
 ) -> Result<(JobId, u32, WorkerHandle)> {
     loop {
         // Phase 1: admit into an existing entry under the lock.
@@ -280,15 +363,24 @@ fn admit(
         // Phase 2: first contact — build the job outside the lock, then
         // race to install it.
         let init = vec![0.0f32; spec.model_elems as usize];
-        let job = server.init_job(
-            spec.key_table(),
-            &init,
-            Arc::new(NesterovSgd {
-                lr: spec.lr,
-                momentum: spec.momentum,
-            }),
-            spec.n_workers as usize,
-        );
+        let opt = Arc::new(NesterovSgd {
+            lr: spec.lr,
+            momentum: spec.momentum,
+        });
+        // Role split: a relay leader's job forwards sums to an uplink
+        // lane instead of optimizing (the parent owns the optimizer; the
+        // hyperparameters still ride the spec upstream).
+        let (job, uplink) = match relay {
+            None => (
+                server.init_job(spec.key_table(), &init, opt, spec.n_workers as usize),
+                None,
+            ),
+            Some(_) => {
+                let (job, up) =
+                    server.init_relay_job(spec.key_table(), &init, opt, spec.n_workers as usize);
+                (job, Some(up))
+            }
+        };
         drop(init);
         {
             let mut map = jobs.lock().unwrap();
@@ -296,6 +388,7 @@ fn admit(
             // seat while we were allocating outside the lock.
             if map.len() >= MAX_JOBS && !map.contains_key(&wire_job) {
                 drop(map);
+                drop(uplink);
                 server.evict(job);
                 bail!("leader already hosts {MAX_JOBS} jobs");
             }
@@ -309,13 +402,27 @@ fn admit(
                         free_slots: Vec::new(),
                         parked: HashMap::new(),
                     });
-                    return admit_into(server, entry, wire_job, spec);
+                    let res = admit_into(server, entry, wire_job, spec);
+                    drop(map);
+                    // Won the install race: this job exists now, so start
+                    // its uplink pump (one thread per relay job for its
+                    // lifetime, like one QP per rack-interface pair).
+                    if let Some(up) = uplink {
+                        let rc = relay.expect("uplink implies relay config").clone();
+                        std::thread::Builder::new()
+                            .name(format!("phub-uplink-{wire_job}"))
+                            .spawn(move || run_uplink(up, rc, wire_job, spec))
+                            .context("spawn uplink thread")?;
+                    }
+                    return res;
                 }
                 std::collections::hash_map::Entry::Occupied(_) => {}
             }
         }
         // Lost the install race: discard our copy and retry phase 1
-        // against the winner's entry.
+        // against the winner's entry. (Dropping the loser's uplink lane
+        // before evicting keeps the eviction orderly.)
+        drop(uplink);
         server.evict(job);
     }
 }
@@ -361,6 +468,7 @@ fn handle_worker(
     stream: TcpStream,
     server: Arc<PHubServer>,
     jobs: Arc<Mutex<HashMap<u32, JobEntry>>>,
+    relay: Option<Arc<RelayConfig>>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -385,7 +493,14 @@ fn handle_worker(
         wire::PROTO_MAX
     );
 
-    let (job, slot, mut handle) = admit(&server, &jobs, hello.job, spec)?;
+    let (job, slot, mut handle) = admit(&server, &jobs, hello.job, spec, relay.as_ref())?;
+    // Register the pusher's aggregation weight (a downstream relay's
+    // rack size; plain workers default to 1) before Welcome releases its
+    // first push: a round must never complete against a stale divisor.
+    // Unconditional so a slot whose predecessor was weighted resets when
+    // an unweighted successor takes it.
+    let weight = wire::weight_at(&hello.payload, 32);
+    server.set_worker_weight(job, slot, weight);
     // A crashed predecessor on this slot may have left already-broadcast
     // replies or rollback notices in the handle's queue. Drain them
     // (best-effort — the epoch tag on every reply is the real guard).
@@ -655,6 +770,260 @@ fn serve_streamed<R: Read, W: Write>(
     }
 }
 
+/// Dial a leader and run the Hello/Welcome rendezvous — the shared
+/// client edge of both a leaf worker's connection and a relay's uplink
+/// (which additionally registers its aggregation `weight`; leaf workers
+/// pass 1 and send no trailer, keeping their Hello bytes unchanged).
+/// Returns `(reader, writer, slot, negotiated proto, epoch, rounds
+/// done)`.
+#[allow(clippy::type_complexity)]
+fn rendezvous(
+    addr: impl ToSocketAddrs,
+    job: u32,
+    spec: JobSpec,
+    proto: u32,
+    weight: u32,
+) -> Result<(
+    BufReader<TcpStream>,
+    BufWriter<TcpStream>,
+    u32,
+    u32,
+    u32,
+    u64,
+)> {
+    spec.validate()?;
+    ensure!(
+        proto >= wire::PROTO_MIN,
+        "wire protocol v{proto} was retired; use v{} \
+         (epoch-tagged chunk streaming) or newer",
+        wire::PROTO_MIN
+    );
+    let stream = TcpStream::connect(addr).context("connect to leader")?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut payload = spec.to_bytes();
+    wire::push_proto_version(&mut payload, proto.min(wire::PROTO_MAX));
+    if weight != 1 {
+        wire::push_weight(&mut payload, weight);
+    }
+    wire::write_frame(
+        &mut writer,
+        &Frame {
+            op: Op::Hello,
+            job,
+            worker: 0,
+            payload,
+        },
+    )?;
+    let welcome = wire::read_frame(&mut reader)?;
+    if welcome.op != Op::Welcome {
+        bail!("expected Welcome, got {:?}", welcome.op);
+    }
+    ensure!(welcome.payload.len() >= 20, "short Welcome payload");
+    let epoch = u32::from_le_bytes(welcome.payload[4..8].try_into().unwrap());
+    let rounds_done = u64::from_le_bytes(welcome.payload[8..16].try_into().unwrap());
+    let accepted = wire::proto_version_at(&welcome.payload, 16).min(proto);
+    Ok((reader, writer, welcome.worker, accepted, epoch, rounds_done))
+}
+
+/// The relay's uplink loop: forward each locally-complete chunk **sum**
+/// to the parent leader as an ordinary `PushChunk`, then install the
+/// returned `ModelChunk` parameters back into the rack's chunk slots
+/// (releasing the deferred worker pulls). One thread per relayed job.
+///
+/// The relay is just another client to its parent — same rendezvous,
+/// same frames, plus the aggregation-weight trailer so the root's mean
+/// divides by leaf workers, not direct pushers. Three invariants make
+/// the simple send-all-sums-then-read-all-models round shape safe:
+///
+/// * The engine emits **exactly one** `Sum` per chunk per local round,
+///   even across rack-internal rollbacks (completed chunks sit in the
+///   `awaiting` state, which rollbacks skip), and a worker cannot start
+///   round r+1 until every round-r install has fired its replies — so
+///   sums arrive strictly round-ordered and Phase A never sees a
+///   next-round sum early.
+/// * The parent buffers `ModelChunk` replies until our push phase is
+///   done, so writing all sums before reading cannot deadlock.
+/// * Every forwarded sum stays in a per-chunk replay cache until the
+///   round's models are all installed. A parent-side rollback (another
+///   rack died mid-round) or a reconnect replays the cached bytes
+///   verbatim under the new epoch; re-installs of chunks that already
+///   left `awaiting` are engine-side no-ops with byte-identical data.
+///
+/// Steady state allocates nothing and takes no mutex: sums serialize
+/// straight from the reused replay caches (`write_chunk_frame_f32s`),
+/// model payloads ride pooled receive buffers to the owning core, and
+/// the pooled sum buffers recycle on drop.
+///
+/// The parent link retries forever (50 ms backoff): a relay outliving
+/// its parent across a root restart is the intended recovery story, and
+/// the thread exits only when the local job is evicted (`recv_sum` →
+/// `None`) or the parent says `Bye`.
+fn run_uplink(mut up: RelayUplink, rc: Arc<RelayConfig>, wire_job: u32, spec: JobSpec) {
+    let n_chunks = up.n_chunks();
+    // Chunk → element range, copied out so the replay closure below
+    // doesn't hold a borrow of `up` across `recv_sum` calls.
+    let ranges: Vec<(usize, usize)> = (0..n_chunks).map(|ci| up.chunk_range(ci)).collect();
+    // Per-chunk replay caches, reused for the job lifetime.
+    let mut sums: Vec<Vec<f32>> = ranges.iter().map(|&(lo, hi)| vec![0.0f32; hi - lo]).collect();
+    // `sent[ci]`: chunk ci's sum for the open round was forwarded (and
+    // cached); `installed[ci]`: its returned parameters were installed.
+    let mut sent = vec![false; n_chunks];
+    let mut installed = vec![false; n_chunks];
+    // ModelChunk receive buffers recycle: socket → owning core (install
+    // reads the bytes in place) → dropped → back here.
+    let pool: Arc<BytePool> = Pool::new(n_chunks.max(8));
+    // The parent sees one pusher per rack with this rack's leaf count
+    // as its aggregation weight.
+    let up_spec = JobSpec {
+        n_workers: rc.racks,
+        ..spec
+    };
+    let weight = spec.n_workers;
+
+    'session: loop {
+        let (mut reader, mut writer, slot, _proto, mut epoch, _rounds) =
+            match rendezvous(&rc.parent[..], wire_job, up_spec, wire::PROTO_MAX, weight) {
+                Ok(x) => x,
+                Err(_) => {
+                    // Parent down or not up yet; the rack blocks on its
+                    // deferred pulls until the link comes back.
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    continue 'session;
+                }
+            };
+        // A reconnect means the parent saw us die mid-round and rolled
+        // our partial pushes back: replay the cached sums it lost.
+        let ranges = &ranges;
+        let replay_all = move |writer: &mut BufWriter<TcpStream>,
+                               sent: &[bool],
+                               sums: &[Vec<f32>],
+                               epoch: u32|
+         -> std::io::Result<()> {
+            for ci in 0..n_chunks {
+                if sent[ci] {
+                    wire::write_chunk_frame_f32s(
+                        writer,
+                        Op::PushChunk,
+                        wire_job,
+                        slot,
+                        ci as u32,
+                        epoch,
+                        ranges[ci].0 as u64,
+                        &sums[ci],
+                    )?;
+                }
+            }
+            writer.flush()
+        };
+        if replay_all(&mut writer, &sent, &sums, epoch).is_err() {
+            continue 'session;
+        }
+
+        loop {
+            // Phase A: forward this round's remaining sums upstream the
+            // moment each rack-local chunk completes.
+            let mut forwarded = sent.iter().filter(|&&s| s).count();
+            while forwarded < n_chunks {
+                let (ci, lo) = match up.recv_sum() {
+                    None => return, // job evicted; rack is shutting down
+                    Some(Reply::Sum { chunk, data, .. }) => {
+                        let ci = chunk as usize;
+                        debug_assert!(!sent[ci], "duplicate sum for chunk {ci}");
+                        sums[ci].copy_from_slice(&data[..]);
+                        // dropping `data` here recycles the pooled buffer
+                        (ci, ranges[ci].0)
+                    }
+                    Some(_) => continue, // rack-internal notice; not ours
+                };
+                sent[ci] = true;
+                forwarded += 1;
+                let io = wire::write_chunk_frame_f32s(
+                    &mut writer,
+                    Op::PushChunk,
+                    wire_job,
+                    slot,
+                    ci as u32,
+                    epoch,
+                    lo as u64,
+                    &sums[ci],
+                )
+                .and_then(|()| writer.flush());
+                if io.is_err() {
+                    continue 'session;
+                }
+            }
+
+            // Phase B: install the round's returned parameters. Each
+            // install releases that chunk's deferred rack pulls.
+            installed.fill(false);
+            let mut ngot = 0usize;
+            while ngot < n_chunks {
+                let mut fb = pool.take();
+                let (op, chunk, fepoch, off, plen) = {
+                    let view = match wire::read_frame_into(&mut reader, &mut fb) {
+                        Ok(v) => v,
+                        Err(_) => continue 'session,
+                    };
+                    match view.op {
+                        Op::ModelChunk => match wire::decode_chunk_payload(view.payload) {
+                            Ok((chunk, e, off, bytes)) => {
+                                (view.op, chunk, e, off, bytes.len())
+                            }
+                            Err(_) => continue 'session,
+                        },
+                        Op::RollbackRound => {
+                            if view.payload.len() < 4 {
+                                continue 'session;
+                            }
+                            let e = u32::from_le_bytes(view.payload[0..4].try_into().unwrap());
+                            (view.op, 0, e, 0, 0)
+                        }
+                        Op::Bye => return,
+                        _ => continue 'session,
+                    }
+                };
+                if op == Op::RollbackRound {
+                    if fepoch <= epoch {
+                        continue; // stale notice, already replayed
+                    }
+                    // Another rack died mid-round upstream: the parent
+                    // rewound the round. Replay every cached sum under
+                    // the new epoch; the parent will resend all chunks,
+                    // and re-installs of already-installed ones are
+                    // byte-identical no-ops.
+                    epoch = fepoch;
+                    if replay_all(&mut writer, &sent, &sums, epoch).is_err() {
+                        continue 'session;
+                    }
+                    installed.fill(false);
+                    ngot = 0;
+                    continue;
+                }
+                if fepoch < epoch {
+                    continue; // superseded by a rollback we saw
+                }
+                let ci = chunk as usize;
+                let valid = fepoch == epoch && ci < n_chunks && {
+                    let (lo, hi) = ranges[ci];
+                    off as usize == lo && plen == (hi - lo) * 4
+                };
+                if !valid {
+                    continue 'session; // parent spoke garbage; reconnect
+                }
+                if installed[ci] {
+                    continue; // duplicate after a replay race
+                }
+                up.install_chunk_bytes(chunk, fb, wire::CHUNK_PREFIX_BYTES);
+                installed[ci] = true;
+                ngot += 1;
+            }
+            sent.fill(false);
+        }
+    }
+}
+
 /// A remote worker's connection to a [`TcpLeader`].
 pub struct TcpWorker {
     reader: BufReader<TcpStream>,
@@ -688,6 +1057,9 @@ pub struct TcpWorker {
     /// Receive-payload buffer reused across frames (the client handles
     /// one frame at a time, so one buffer suffices — no pool needed).
     recv_buf: Vec<u8>,
+    /// Per-chunk arrival flags for the open round's `ModelChunk`s,
+    /// reused across rounds so the `_into` pull path allocates nothing.
+    recv_seen: Vec<bool>,
 }
 
 impl TcpWorker {
@@ -708,47 +1080,21 @@ impl TcpWorker {
         spec: JobSpec,
         proto: u32,
     ) -> Result<TcpWorker> {
-        spec.validate()?;
-        ensure!(
-            proto >= wire::PROTO_MIN,
-            "wire protocol v{proto} was retired; use v{} \
-             (epoch-tagged chunk streaming) or newer",
-            wire::PROTO_MIN
-        );
-        let stream = TcpStream::connect(addr).context("connect to leader")?;
-        stream.set_nodelay(true).ok();
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut writer = BufWriter::new(stream);
-        let mut payload = spec.to_bytes();
-        wire::push_proto_version(&mut payload, proto.min(wire::PROTO_MAX));
-        wire::write_frame(
-            &mut writer,
-            &Frame {
-                op: Op::Hello,
-                job,
-                worker: 0,
-                payload,
-            },
-        )?;
-        let welcome = wire::read_frame(&mut reader)?;
-        if welcome.op != Op::Welcome {
-            bail!("expected Welcome, got {:?}", welcome.op);
-        }
-        ensure!(welcome.payload.len() >= 20, "short Welcome payload");
-        let epoch = u32::from_le_bytes(welcome.payload[4..8].try_into().unwrap());
-        let rounds_done = u64::from_le_bytes(welcome.payload[8..16].try_into().unwrap());
+        let (reader, writer, slot, proto, epoch, rounds_done) =
+            rendezvous(addr, job, spec, proto, 1)?;
         Ok(TcpWorker {
             reader,
             writer,
             job,
-            slot: welcome.worker,
-            proto: wire::proto_version_at(&welcome.payload, 16).min(proto),
+            slot,
+            proto,
             epoch,
             rounds_done,
             table: spec.key_table(),
             chunk_quant: None,
             quant_round: Vec::new(),
             recv_buf: Vec::new(),
+            recv_seen: Vec::new(),
         })
     }
 
@@ -806,8 +1152,21 @@ impl TcpWorker {
         Ok(())
     }
 
-    /// Dense fused push+pull.
+    /// Dense fused push+pull. Thin wrapper over
+    /// [`TcpWorker::push_pull_into`]; the returned `Vec` is the round's
+    /// one allocation — steady-state training loops that care should own
+    /// the buffer and call the `_into` form.
     pub fn push_pull(&mut self, grad: &[f32]) -> Result<Vec<f32>> {
+        let mut model = vec![0.0f32; self.table.total_elems];
+        self.push_pull_into(grad, &mut model)?;
+        Ok(model)
+    }
+
+    /// Dense fused push+pull writing the round's parameters into a
+    /// caller-owned buffer (`model.len()` must equal the model size).
+    /// With the buffer reused across rounds the whole client round —
+    /// encode, push, decode — performs zero heap allocations once warm.
+    pub fn push_pull_into(&mut self, grad: &[f32], model: &mut [f32]) -> Result<()> {
         ensure!(
             grad.len() == self.table.total_elems,
             "gradient length {} != model {}",
@@ -815,7 +1174,7 @@ impl TcpWorker {
             self.table.total_elems
         );
         self.send_round(Some(grad))?;
-        self.read_model_chunks(Some(grad))
+        self.read_model_chunks_into(Some(grad), model)
     }
 
     /// 2-bit compressed push+pull with error feedback (~16x less gradient
@@ -824,6 +1183,20 @@ impl TcpWorker {
     /// quantized bytes, so the residuals advance exactly once per round no
     /// matter how often the round is rewound.
     pub fn push_pull_quant(&mut self, grad: &[f32], threshold: f32) -> Result<Vec<f32>> {
+        let mut model = vec![0.0f32; self.table.total_elems];
+        self.push_pull_quant_into(grad, threshold, &mut model)?;
+        Ok(model)
+    }
+
+    /// [`TcpWorker::push_pull_quant`] into a caller-owned model buffer —
+    /// the compressed counterpart of [`TcpWorker::push_pull_into`], with
+    /// the same zero-allocation steady state.
+    pub fn push_pull_quant_into(
+        &mut self,
+        grad: &[f32],
+        threshold: f32,
+        model: &mut [f32],
+    ) -> Result<()> {
         ensure!(
             grad.len() == self.table.total_elems,
             "gradient length {} != model {}",
@@ -848,21 +1221,31 @@ impl TcpWorker {
             );
         }
         self.send_round(None)?;
-        self.read_model_chunks(None)
+        self.read_model_chunks_into(None, model)
     }
 
-    /// Collect one `ModelChunk` frame per chunk (in completion order),
-    /// transparently replaying the round if the leader rewinds it
-    /// (`grad` re-encodes a dense replay; `None` replays the cached
-    /// quantized payloads). Frames decode through the reused receive
-    /// buffer and payloads land directly in the round's model vector —
-    /// the per-round allocation is the returned model itself, nothing
-    /// per chunk.
-    fn read_model_chunks(&mut self, grad: Option<&[f32]>) -> Result<Vec<f32>> {
+    /// Collect one `ModelChunk` frame per chunk (in completion order)
+    /// into the caller-owned `model`, transparently replaying the round
+    /// if the leader rewinds it (`grad` re-encodes a dense replay;
+    /// `None` replays the cached quantized payloads). Frames decode
+    /// through the reused receive buffer, arrival flags live in a
+    /// reused per-connection vector, and payloads land directly in
+    /// `model` — zero allocations per round once warm. (A replay
+    /// rewrites every chunk range, so partial results from the dead
+    /// round need no explicit reset.)
+    fn read_model_chunks_into(&mut self, grad: Option<&[f32]>, model: &mut [f32]) -> Result<()> {
         let n_chunks = self.table.chunks.len();
+        ensure!(
+            model.len() == self.table.total_elems,
+            "model buffer length {} != model {}",
+            model.len(),
+            self.table.total_elems
+        );
+        if self.recv_seen.len() != n_chunks {
+            self.recv_seen = vec![false; n_chunks];
+        }
         'round: loop {
-            let mut model = vec![0.0f32; self.table.total_elems];
-            let mut seen = vec![false; n_chunks];
+            self.recv_seen.fill(false);
             let mut got = 0usize;
             while got < n_chunks {
                 // Everything needed from the borrowed frame view is
@@ -886,7 +1269,7 @@ impl TcpWorker {
                             ensure!(ci < n_chunks, "model chunk id {ci} out of range");
                             let c = self.table.chunks[ci];
                             ensure!(off as usize == c.offset, "model chunk {ci} offset mismatch");
-                            ensure!(!seen[ci], "duplicate model chunk {ci}");
+                            ensure!(!self.recv_seen[ci], "duplicate model chunk {ci}");
                             ensure!(
                                 bytes.len() == c.len * 4,
                                 "model chunk {ci} payload {} bytes != {}",
@@ -897,7 +1280,7 @@ impl TcpWorker {
                                 &mut model[c.offset..c.offset + c.len],
                                 bytes,
                             )?;
-                            seen[ci] = true;
+                            self.recv_seen[ci] = true;
                             got += 1;
                             None
                         }
@@ -921,7 +1304,7 @@ impl TcpWorker {
                     continue 'round;
                 }
             }
-            return Ok(model);
+            return Ok(());
         }
     }
 

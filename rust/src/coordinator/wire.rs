@@ -22,7 +22,7 @@
 //!
 //! | op | name            | dir | payload |
 //! |----|-----------------|-----|---------|
-//! | 1  | `Hello`         | W→L | [`super::transport::JobSpec`] (28 B) + proposed protocol version u32 |
+//! | 1  | `Hello`         | W→L | [`super::transport::JobSpec`] (28 B) + proposed protocol version u32 + optional aggregation weight u32 |
 //! | 2  | `Welcome`       | L→W | worker slot u32 + round epoch u32 + rounds-done u64 + accepted protocol version u32 |
 //! | 3–5| *retired*       |     | v0 monolithic `PushPull`/`Model`/`PushPullQuant`; never reassigned |
 //! | 6  | `Bye`           | any | empty — orderly shutdown |
@@ -30,6 +30,16 @@
 //! | 8  | `ModelChunk`    | L→W | chunk header + chunk params LE f32s |
 //! | 9  | `PushChunkQuant`| W→L | chunk header + per-chunk `QuantGrad` |
 //! | 10 | `RollbackRound` | L→W | round epoch u32 — rewind + replay the open round |
+//!
+//! "W→L" reads "downstream peer → upstream peer": the hierarchical
+//! deployment (paper §3.4, Fig. 19) runs the *same* opcodes on the
+//! relay→root uplink, where the rack relay plays the worker role. The
+//! only uplink-specific bit is the optional `Hello` **weight trailer**
+//! ([`push_weight`] / [`weight_at`], u32 LE after the version trailer): a
+//! relay admits itself with weight = its rack's worker count, so the root
+//! divides its cross-rack sum by total leaf workers and the two-level
+//! mean is exactly the flat mean. A plain worker omits the trailer and
+//! defaults to weight 1 — flat deployments are byte-identical to v2.
 //!
 //! Chunk-carrying payloads start with a 16-byte chunk header
 //! ([`CHUNK_PREFIX_BYTES`]): `[chunk u32 LE][epoch u32 LE][elem offset
@@ -66,6 +76,14 @@
 //!   same buffer, and the last drop recycles it. Quantized payloads are
 //!   written from the client's cached round buffers via
 //!   [`write_chunk_frame_buffered`].
+//! * **Relay uplink** (hierarchical deployments): the rack relay's sum
+//!   frames serialize with the same [`write_chunk_frame_f32s`] straight
+//!   from the relay's per-chunk replay cache (reused `Vec<f32>`s the
+//!   engine's pooled `Reply::Sum` buffers are copied into once, then
+//!   recycled), and the root's returned `ModelChunk` payloads ride the
+//!   relay's pooled receive buffers all the way to the owning core's
+//!   parameter install — both directions allocation- and mutex-free
+//!   once warm, same as the leaf legs.
 //!
 //! Copies per chunk per round, before → after this lineage of changes:
 //! leader receive went from 3 payload copies and ~5 allocations (body
@@ -411,6 +429,24 @@ pub fn proto_version_at(payload: &[u8], at: usize) -> u32 {
     }
 }
 
+/// Append the aggregation-weight trailer to a `Hello` payload (after the
+/// version trailer). A rack relay admits itself upstream with weight =
+/// its rack's worker count, so the root's mean divides by total *leaf*
+/// workers and a two-level run reproduces the flat mean exactly.
+pub fn push_weight(payload: &mut Vec<u8>, weight: u32) {
+    payload.extend_from_slice(&weight.to_le_bytes());
+}
+
+/// Read the aggregation-weight trailer at `at..at+4`, defaulting to 1
+/// when absent — plain workers don't send it, and weight 1 is exactly
+/// the flat-deployment behavior.
+pub fn weight_at(payload: &[u8], at: usize) -> u32 {
+    match payload.get(at..at + 4) {
+        Some(b) => u32::from_le_bytes(b.try_into().unwrap()),
+        None => 1,
+    }
+}
+
 /// f32 slice -> raw little-endian bytes (allocating; tests/cold paths —
 /// the round path writes frames with [`write_chunk_frame_f32s`]).
 pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
@@ -660,6 +696,18 @@ mod tests {
         assert_eq!(proto_version_at(&p, 28), PROTO_MONOLITHIC);
         push_proto_version(&mut p, PROTO_EPOCH_TAGGED);
         assert_eq!(proto_version_at(&p, 28), PROTO_EPOCH_TAGGED);
+    }
+
+    #[test]
+    fn weight_trailer_defaults_to_one() {
+        let mut p = vec![0u8; 28];
+        push_proto_version(&mut p, PROTO_EPOCH_TAGGED);
+        // A plain worker's Hello stops here: weight defaults to 1.
+        assert_eq!(weight_at(&p, 32), 1);
+        // A relay appends its rack's worker count after the version.
+        push_weight(&mut p, 4);
+        assert_eq!(proto_version_at(&p, 28), PROTO_EPOCH_TAGGED);
+        assert_eq!(weight_at(&p, 32), 4);
     }
 
     #[test]

@@ -2,16 +2,21 @@
 //! acceptance bar): after warm-up, the leader-shaped
 //! push → aggregate → fused-optimize → reply path performs **exactly
 //! zero** heap allocations per round — dense and 2-bit alike, multi-
-//! puller fan-out included — and the client's round encoding is likewise
-//! allocation-free. There are no exclusions left: the `std::sync::mpsc`
-//! hop whose amortized queue-block allocation this test used to carve
-//! out is gone, replaced by the bounded lock-free SPSC rings of
-//! `coordinator/ring.rs`, and the measured loop now drives the real
-//! fabric — frames enter through pooled `read_frame_into` buffers,
-//! travel conceptually as the core-side absorb, and every completion
-//! broadcasts one refcount-shared pooled buffer over real reply rings to
-//! three pulling workers, each serialized to wire form from the shared
-//! buffer.
+//! puller fan-out included — and the client's round encoding *and*
+//! `_into`-style round decoding are likewise allocation-free. There are
+//! no exclusions left: the `std::sync::mpsc` hop whose amortized
+//! queue-block allocation this test used to carve out is gone, replaced
+//! by the bounded lock-free SPSC rings of `coordinator/ring.rs`, and the
+//! measured loop now drives the real fabric — frames enter through
+//! pooled `read_frame_into` buffers, travel conceptually as the
+//! core-side absorb, and every completion broadcasts one refcount-shared
+//! pooled buffer over real reply rings to three pulling workers, each
+//! serialized to wire form from the shared buffer. The RackRelay role's
+//! uplink leg is covered too: sums drain off the uplink lane into reused
+//! replay caches, serialize as upstream `PushChunk` frames, and the
+//! parent's returned parameters install through `install_params_src`
+//! straight from their wire bytes, firing the deferred pull broadcast —
+//! all at exact-zero allocations once warm.
 //!
 //! The same loop is also mutex-free by construction: rings are
 //! Acquire/Release atomics, pools are single-taker Treiber stacks, and
@@ -31,7 +36,7 @@ use std::sync::Arc;
 use phub::coordinator::aggregation::GradSrc;
 use phub::coordinator::compress::{ChunkQuantizer, QuantView};
 use phub::coordinator::engine::{
-    single_lane_fabrics, PushOutcome, Reply, ReplyRx, RoundTag, ShardEngine,
+    single_lane_fabrics, NodeRole, PushOutcome, Reply, ReplyRx, RoundTag, ShardEngine,
 };
 use phub::coordinator::optimizer::NesterovSgd;
 use phub::coordinator::pool::{BytePool, Pool};
@@ -222,6 +227,128 @@ fn fresh_engine() -> (ShardEngine, Vec<ReplyRx>) {
     (eng, rxs)
 }
 
+/// A RackRelay-shaped engine plus both ends of its fabric: worker reply
+/// lanes and the uplink sum lane.
+fn fresh_relay_engine() -> (ShardEngine, Vec<ReplyRx>, ReplyRx) {
+    let mut eng = ShardEngine::new();
+    let chunks: Vec<(u32, Vec<f32>)> = (0..CHUNKS)
+        .map(|c| (c as u32, vec![0.25f32; CHUNK_ELEMS]))
+        .collect();
+    let (txs, rxs) = single_lane_fabrics(JOB, WORKERS, 32);
+    let (mut utx, mut urx) = single_lane_fabrics(JOB, 1, 32);
+    eng.init_job_with_role(
+        JOB,
+        chunks,
+        Arc::new(NesterovSgd {
+            lr: 0.01,
+            momentum: 0.9,
+        }),
+        WORKERS,
+        txs,
+        NodeRole::RackRelay,
+        Some(utx.pop().expect("uplink lane")),
+    );
+    (eng, rxs, urx.pop().expect("uplink lane"))
+}
+
+/// One relay-shaped round: the downlink is the same pooled push path as
+/// [`run_round`], but completions emit a raw `Reply::Sum` on the uplink
+/// lane instead of optimizing — the uplink leg copies each sum into its
+/// reused replay cache and serializes the upstream `PushChunk` frame into
+/// a reused sink (exactly what `transport::run_uplink` does per chunk).
+/// Then the "parent's" `ModelChunk` payloads (built in a reused byte
+/// buffer) install through `install_params_src`, firing the deferred
+/// pull broadcast, which each connection serializes as usual. Returns
+/// the number of chunk replies delivered (must be `WORKERS * CHUNKS`).
+#[allow(clippy::too_many_arguments)]
+fn relay_round(
+    frames: &[u8],
+    eng: &mut ShardEngine,
+    pool: &Arc<BytePool>,
+    urx: &mut ReplyRx,
+    rxs: &mut [ReplyRx],
+    ready: &mut [Vec<u8>],
+    sum_cache: &mut [Vec<f32>],
+    upsink: &mut Vec<u8>,
+    model_bytes: &mut [u8],
+    round: u64,
+) -> usize {
+    let tag = RoundTag::new(0, round);
+    let mut cur = Cursor::new(frames);
+    upsink.clear();
+    for _ in 0..WORKERS * CHUNKS {
+        let mut fb = pool.take();
+        let (chunk, worker) = {
+            let v = wire::read_frame_into(&mut cur, &mut fb).unwrap();
+            let (chunk, _epoch, _off, _bytes) = wire::decode_chunk_payload(v.payload).unwrap();
+            assert_eq!(v.op, Op::PushChunk);
+            (chunk, v.worker)
+        };
+        let bytes = &fb[wire::CHUNK_PREFIX_BYTES..];
+        let outcome = eng
+            .push_src(JOB, chunk, worker, GradSrc::LeBytes(bytes), true, tag)
+            .unwrap();
+        if outcome == PushOutcome::Completed {
+            // "Local sum ready": drain the uplink lane and forward.
+            match urx.try_recv() {
+                Some(Reply::Sum { chunk, data, .. }) => {
+                    let ci = chunk as usize;
+                    sum_cache[ci].copy_from_slice(&data);
+                    // `data` drops here and recycles to the engine pool.
+                    wire::write_chunk_frame_f32s(
+                        upsink,
+                        Op::PushChunk,
+                        JOB,
+                        0,
+                        chunk,
+                        0,
+                        ci as u64 * CHUNK_ELEMS as u64,
+                        &sum_cache[ci],
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected an uplink sum, got {other:?}"),
+            }
+        }
+    }
+    // "Parameters ready": the parent's ModelChunk payloads come back (a
+    // round-trip of the sums here — the values are immaterial, the path
+    // is what's measured) and install straight from their wire bytes.
+    let mut replies = 0usize;
+    for c in 0..CHUNKS {
+        for (i, x) in sum_cache[c].iter().enumerate() {
+            model_bytes[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        let installed = eng
+            .install_params_src(JOB, c as u32, GradSrc::LeBytes(model_bytes))
+            .unwrap();
+        assert!(installed, "chunk {c} was not awaiting its install");
+        for (w, rx) in rxs.iter_mut().enumerate() {
+            match rx.try_recv() {
+                Some(Reply::Chunk {
+                    chunk, epoch, data, ..
+                }) => {
+                    replies += 1;
+                    ready[w].clear();
+                    wire::write_chunk_frame_f32s(
+                        &mut ready[w],
+                        Op::ModelChunk,
+                        JOB,
+                        w as u32,
+                        chunk,
+                        epoch,
+                        chunk as u64 * CHUNK_ELEMS as u64,
+                        &data,
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected a deferred chunk reply, got {other:?}"),
+            }
+        }
+    }
+    replies
+}
+
 #[test]
 fn steady_state_data_plane_is_allocation_free() {
     // ---- Phase 1: dense leader path (push → aggregate → broadcast). ----
@@ -318,6 +445,103 @@ fn steady_state_data_plane_is_allocation_free() {
     assert_eq!(
         client_delta, 0,
         "client round encoding must not allocate once warm (got {client_delta})"
+    );
+
+    // ---- Phase 4: relay uplink steady path (RackRelay role). ----
+    // Downlink pushes complete into raw sums on the uplink lane; the
+    // uplink leg caches + serializes them upstream, and the parent's
+    // returned parameters install back, releasing the deferred pulls.
+    let (mut reng, mut rrxs, mut urx) = fresh_relay_engine();
+    let mut sum_cache: Vec<Vec<f32>> = vec![vec![0.0f32; CHUNK_ELEMS]; CHUNKS];
+    let mut upsink: Vec<u8> = Vec::new();
+    let mut model_bytes: Vec<u8> = vec![0u8; CHUNK_ELEMS * 4];
+    for r in 0..3 {
+        assert_eq!(
+            relay_round(
+                &frames,
+                &mut reng,
+                &pool,
+                &mut urx,
+                &mut rrxs,
+                &mut ready,
+                &mut sum_cache,
+                &mut upsink,
+                &mut model_bytes,
+                r,
+            ),
+            WORKERS * CHUNKS,
+            "relay warm-up round {r} must deliver every worker every chunk"
+        );
+    }
+    let before = allocs();
+    for r in 3..19 {
+        relay_round(
+            &frames,
+            &mut reng,
+            &pool,
+            &mut urx,
+            &mut rrxs,
+            &mut ready,
+            &mut sum_cache,
+            &mut upsink,
+            &mut model_bytes,
+            r,
+        );
+    }
+    let relay_delta = allocs() - before;
+    assert_eq!(
+        relay_delta, 0,
+        "relay uplink steady-state rounds must not allocate — sum lane, \
+         replay cache, upstream encode, and install broadcast included \
+         (got {relay_delta} allocations over 16 rounds)"
+    );
+
+    // ---- Phase 5: client-side `_into` round decoding. ----
+    // The pull half of `push_pull_into`: ModelChunk frames decode through
+    // the reused receive buffer and land in a caller-owned model slice,
+    // arrival flags in a reused vector — nothing allocated per round.
+    let mut mframes: Vec<u8> = Vec::new();
+    for c in 0..CHUNKS {
+        wire::write_chunk_frame_f32s(
+            &mut mframes,
+            Op::ModelChunk,
+            JOB,
+            0,
+            c as u32,
+            0,
+            (c * CHUNK_ELEMS) as u64,
+            &grad[c * CHUNK_ELEMS..(c + 1) * CHUNK_ELEMS],
+        )
+        .unwrap();
+    }
+    let mut model = vec![0.0f32; CHUNKS * CHUNK_ELEMS];
+    let mut recv_seen = vec![false; CHUNKS];
+    let mut recv_buf: Vec<u8> = Vec::new();
+    let mut pull_round =
+        |model: &mut [f32], recv_seen: &mut [bool], recv_buf: &mut Vec<u8>| {
+            recv_seen.fill(false);
+            let mut cur = Cursor::new(&mframes[..]);
+            for _ in 0..CHUNKS {
+                let v = wire::read_frame_into(&mut cur, recv_buf).unwrap();
+                let (chunk, _e, off, bytes) = wire::decode_chunk_payload(v.payload).unwrap();
+                let ci = chunk as usize;
+                assert!(!recv_seen[ci], "duplicate model chunk {ci}");
+                recv_seen[ci] = true;
+                let lo = off as usize;
+                wire::copy_f32s_from_le(&mut model[lo..lo + CHUNK_ELEMS], bytes).unwrap();
+            }
+        };
+    for _ in 0..3 {
+        pull_round(&mut model, &mut recv_seen, &mut recv_buf);
+    }
+    let before = allocs();
+    for _ in 0..16 {
+        pull_round(&mut model, &mut recv_seen, &mut recv_buf);
+    }
+    let pull_delta = allocs() - before;
+    assert_eq!(
+        pull_delta, 0,
+        "into-style round decoding must not allocate once warm (got {pull_delta})"
     );
 
     // The pools actually recycled rather than growing without bound.

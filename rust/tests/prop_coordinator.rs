@@ -664,6 +664,204 @@ fn prop_rollback_replay_bit_identical() {
     });
 }
 
+/// Hierarchy equivalence (the leader-of-leaders correctness bar): for
+/// any rack count, workers-per-rack, geometry, and core counts, two
+/// aggregation levels — rack relays forwarding raw sums to a root whose
+/// mean is weighted by each relay's worker count — produce parameters
+/// **bit-identical** to a flat single-leader run over the same leaf
+/// gradients. Dense and quantized. Gradients are dyadic rationals
+/// (multiples of 1/8, bounded) and the hyperparameters powers of two,
+/// so every sum and optimizer product is exact in f32 under any
+/// association — the flat `((g0+g1)+g2)+g3` and the two-level
+/// `(g0+g1)+(g2+g3)` must therefore agree to the last bit.
+#[test]
+fn prop_two_level_bit_identical_to_flat() {
+    check("two level bit identical to flat", 10, |rng: &mut Rng| {
+        let racks = rng.usize_in(2, 4);
+        let k = rng.usize_in(1, 3); // workers per rack
+        let elems = rng.usize_in(1, 12) * 8;
+        let chunk = [4usize, 8, 16, 64][rng.usize_in(0, 4)].min(elems);
+        let rounds = rng.usize_in(1, 3);
+        let threshold = 0.0625f32; // dyadic, so dequantized sums stay exact
+        let leaves = racks * k;
+        let opt = NesterovSgd {
+            lr: 0.25,
+            momentum: 0.5,
+        };
+        let init: Vec<f32> = (0..elems).map(|i| (i % 8) as f32 * 0.25).collect();
+        let dyadic = |rng: &mut Rng| -> Vec<f32> {
+            (0..elems)
+                .map(|_| (rng.usize_in(0, 65) as f32 - 32.0) * 0.125)
+                .collect()
+        };
+        let grads: Vec<Vec<Vec<f32>>> = (0..rounds)
+            .map(|_| (0..leaves).map(|_| dyadic(rng)).collect())
+            .collect();
+        let table = || KeyTable::flat(elems, chunk);
+        let n_chunks = table().n_chunks();
+        let chunk_lens: Vec<usize> = {
+            let t = table();
+            (0..n_chunks)
+                .map(|c| {
+                    let ck = t.chunks[c];
+                    ck.len
+                })
+                .collect()
+        };
+        let ranges: Vec<(usize, usize)> = {
+            let t = table();
+            (0..n_chunks)
+                .map(|c| {
+                    let ck = t.chunks[c];
+                    (ck.offset, ck.offset + ck.len)
+                })
+                .collect()
+        };
+
+        for quant in [false, true] {
+            // Per-seat payload bytes, quantized exactly once per round so
+            // the flat job and the hierarchy consume identical bytes
+            // (and identical error-feedback residual evolution).
+            let mut banks: Vec<ChunkQuantizer> = (0..leaves)
+                .map(|_| ChunkQuantizer::new(&chunk_lens, threshold))
+                .collect();
+            let payloads: Vec<Vec<Vec<Vec<u8>>>> = (0..rounds)
+                .map(|r| {
+                    (0..leaves)
+                        .map(|s| {
+                            (0..n_chunks)
+                                .map(|c| {
+                                    let (lo, hi) = ranges[c];
+                                    let g = &grads[r][s][lo..hi];
+                                    if quant {
+                                        banks[s].quantize_chunk(c, g).to_bytes()
+                                    } else {
+                                        wire::f32s_to_bytes(g)
+                                    }
+                                })
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let pool: Arc<BytePool> = Pool::new(64);
+            let push = |h: &WorkerHandle, bytes: &[u8], c: usize, tag: RoundTag| {
+                let mut fb = pool.take();
+                fb.extend_from_slice(bytes);
+                h.push_chunk_bytes_tagged(c as u32, fb, 0, quant, true, tag);
+            };
+
+            // Flat reference: one leader, all leaves direct.
+            let flat_srv = PHubServer::start(ServerConfig {
+                n_cores: rng.usize_in(1, 4),
+            });
+            let jf = flat_srv.init_job(table(), &init, Arc::new(opt.clone()), leaves);
+            let mut hf: Vec<_> = (0..leaves).map(|s| flat_srv.worker(jf, s)).collect();
+            let mut flat_model = Vec::new();
+            for r in 0..rounds {
+                for (s, h) in hf.iter().enumerate() {
+                    for c in 0..n_chunks {
+                        push(h, &payloads[r][s][c], c, RoundTag::new(0, r as u64));
+                    }
+                }
+                let models: Vec<Vec<f32>> =
+                    hf.iter_mut().map(|h| collect_epoch(h, 0)).collect();
+                for h in hf.iter_mut() {
+                    h.advance_round();
+                }
+                flat_model = models.into_iter().next().unwrap();
+            }
+            PHubServer::shutdown(flat_srv);
+
+            // Two-level: one relay server per rack, raw sums pumped into
+            // a root whose per-rack weights are the rack sizes.
+            let root_srv = PHubServer::start(ServerConfig {
+                n_cores: rng.usize_in(1, 4),
+            });
+            let jr = root_srv.init_job(table(), &init, Arc::new(opt.clone()), racks);
+            for ri in 0..racks {
+                root_srv.set_worker_weight(jr, ri as u32, k as u32);
+            }
+            let mut rack_srvs = Vec::new();
+            let mut pumps = Vec::new();
+            let mut rack_handles: Vec<Vec<WorkerHandle>> = Vec::new();
+            for ri in 0..racks {
+                let srv = PHubServer::start(ServerConfig {
+                    n_cores: rng.usize_in(1, 4),
+                });
+                let (job, mut up) =
+                    srv.init_relay_job(table(), &init, Arc::new(opt.clone()), k);
+                rack_handles.push((0..k).map(|w| srv.worker(job, w)).collect());
+                let mut root_h = root_srv.worker(jr, ri);
+                let pool = pool.clone();
+                pumps.push(std::thread::spawn(move || {
+                    for _ in 0..rounds {
+                        for _ in 0..n_chunks {
+                            match up.recv_sum() {
+                                Some(Reply::Sum { chunk, data, .. }) => {
+                                    root_h.push_chunk(chunk, data[..].into(), true);
+                                }
+                                other => panic!("pump expected Sum, got {other:?}"),
+                            }
+                        }
+                        for _ in 0..n_chunks {
+                            match root_h.recv_reply() {
+                                Reply::Chunk { chunk, data, .. } => {
+                                    let mut fb = pool.take();
+                                    for x in &data[..] {
+                                        fb.extend_from_slice(&x.to_le_bytes());
+                                    }
+                                    up.install_chunk_bytes(chunk, fb, 0);
+                                }
+                                other => panic!("pump expected Chunk, got {other:?}"),
+                            }
+                        }
+                        root_h.advance_round();
+                    }
+                }));
+                rack_srvs.push(srv);
+            }
+            let mut hier_models = Vec::new();
+            for r in 0..rounds {
+                for (ri, hs) in rack_handles.iter().enumerate() {
+                    for (w, h) in hs.iter().enumerate() {
+                        let seat = ri * k + w;
+                        for c in 0..n_chunks {
+                            push(h, &payloads[r][seat][c], c, RoundTag::new(0, r as u64));
+                        }
+                    }
+                }
+                hier_models = rack_handles
+                    .iter_mut()
+                    .flat_map(|hs| hs.iter_mut().map(|h| collect_epoch(h, 0)))
+                    .collect::<Vec<_>>();
+                for hs in rack_handles.iter_mut() {
+                    for h in hs.iter_mut() {
+                        h.advance_round();
+                    }
+                }
+            }
+            for p in pumps {
+                p.join().unwrap();
+            }
+            for srv in rack_srvs {
+                PHubServer::shutdown(srv);
+            }
+            PHubServer::shutdown(root_srv);
+
+            for (i, m) in hier_models.iter().enumerate() {
+                if m != &flat_model {
+                    return Err(format!(
+                        "leaf {i}: two-level != flat (quant={quant} racks={racks} \
+                         k={k} elems={elems} chunk={chunk} rounds={rounds})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Quantized rollback equivalence: per-chunk error-feedback residuals
 /// live with the *worker*, and a replayed round re-applies the same
 /// dequantized bytes exactly once — so a run whose second round is

@@ -12,7 +12,7 @@ use std::net::TcpStream;
 
 use phub::coordinator::compress::ChunkQuantizer;
 use phub::coordinator::server::ServerConfig;
-use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::transport::{JobSpec, RelayConfig, TcpLeader, TcpWorker};
 use phub::coordinator::wire::{self, Frame, Op};
 
 fn spec(model: u64, chunk: u64, workers: u32) -> JobSpec {
@@ -432,5 +432,249 @@ fn quantized_worker_killed_mid_round_recovers_bit_identical() {
     assert_eq!(
         surv_model, clean_q,
         "recovered compressed run must be bit-identical to the clean run"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical (leader-of-leaders) deployments
+// ---------------------------------------------------------------------------
+
+/// A spec whose hyperparameters are powers of two: with dyadic gradients
+/// (multiples of 2^-k, bounded) every sum, mean, and optimizer product is
+/// exact in f32 under *any* association, so a flat 4-worker run and a
+/// 2-rack × 2-worker two-level run must agree bit-for-bit.
+fn dyadic_spec(model: u64, chunk: u64, workers: u32) -> JobSpec {
+    JobSpec {
+        model_elems: model,
+        chunk_elems: chunk,
+        n_workers: workers,
+        lr: 0.25,
+        momentum: 0.5,
+    }
+}
+
+/// Dyadic per-seat, per-round gradient: worker `w` of the *global* 4-seat
+/// layout (rack·2 + rack-local slot).
+fn dyadic_grad(n: usize, w: usize, round: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (w as f32 - 1.5) * 0.5 + (i % 16) as f32 * 0.125 + round as f32 * 0.25)
+        .collect()
+}
+
+/// Run `k` leaf workers against `addr`, gradients keyed by
+/// `base + leader-assigned slot` so racks map onto disjoint global seats.
+/// Returns the final model (asserting all `k` agree bitwise).
+fn run_leaves(
+    addr: std::net::SocketAddr,
+    job: u32,
+    s: JobSpec,
+    rounds: usize,
+    quant: Option<f32>,
+    base: usize,
+) -> Vec<f32> {
+    let n = s.model_elems as usize;
+    let joins: Vec<_> = (0..s.n_workers as usize)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut w = TcpWorker::connect(addr, job, s).unwrap();
+                let seat = base + w.slot as usize;
+                let mut model = Vec::new();
+                for r in 0..rounds {
+                    let g = dyadic_grad(n, seat, r);
+                    model = match quant {
+                        Some(t) => w.push_pull_quant(&g, t).unwrap(),
+                        None => w.push_pull(&g).unwrap(),
+                    };
+                }
+                w.bye();
+                model
+            })
+        })
+        .collect();
+    let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for m in &models[1..] {
+        assert_eq!(&models[0], m, "leaf workers agree bitwise");
+    }
+    models.into_iter().next().unwrap()
+}
+
+/// The hierarchy acceptance bar: 2 racks × 2 workers through two
+/// `serve_relay` leaders and one root produce the *same bits* as 4
+/// workers on a flat single leader — dense and quantized. The relays
+/// forward raw rack sums with an aggregation weight of 2, so the root's
+/// mean divides by 4 leaf workers exactly like the flat leader does.
+#[test]
+fn two_level_two_racks_bit_identical_to_flat() {
+    let n = 192u64;
+    let rounds = 3usize;
+    let rack_spec = dyadic_spec(n, 48, 2); // 4 chunks per rack job
+
+    for quant in [None, Some(0.0625f32)] {
+        let flat_leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+        let flat = run_leaves(
+            flat_leader.local_addr(),
+            300,
+            dyadic_spec(n, 48, 4),
+            rounds,
+            quant,
+            0,
+        );
+
+        let root = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+        let parent = root.local_addr().to_string();
+        let racks: Vec<_> = (0..2)
+            .map(|_| {
+                TcpLeader::serve_relay(
+                    "127.0.0.1:0",
+                    ServerConfig { n_cores: 2 },
+                    RelayConfig {
+                        parent: parent.clone(),
+                        racks: 2,
+                    },
+                )
+                .unwrap()
+            })
+            .collect();
+        // Both racks register the same wire job so their uplinks meet in
+        // one root job; leaf seats are rack·2 + rack-local slot.
+        let joins: Vec<_> = racks
+            .iter()
+            .enumerate()
+            .map(|(ri, rack)| {
+                let addr = rack.local_addr();
+                std::thread::spawn(move || run_leaves(addr, 300, rack_spec, rounds, quant, ri * 2))
+            })
+            .collect();
+        let rack_models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        for (ri, m) in rack_models.iter().enumerate() {
+            assert_eq!(
+                &flat, m,
+                "rack {ri} (quant={quant:?}): two-level must be bit-identical to flat"
+            );
+        }
+    }
+}
+
+/// Recovery composes across levels: a worker killed mid-round in rack A
+/// rewinds *only* rack A — rack B's workers never see an epoch bump and
+/// the root's round is never rolled back (rack A's uplink connection
+/// stays alive throughout). The recovered two-level run is still
+/// bit-identical to an uninterrupted flat run.
+#[test]
+fn worker_death_in_one_rack_rewinds_only_that_rack() {
+    let n = 192usize;
+    let rounds = 3usize;
+    let rack_spec = dyadic_spec(n as u64, 48, 2); // 4 chunks
+    let job = 310u32;
+
+    let root = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let parent = root.local_addr().to_string();
+    let mk_rack = |parent: &str| {
+        TcpLeader::serve_relay(
+            "127.0.0.1:0",
+            ServerConfig { n_cores: 2 },
+            RelayConfig {
+                parent: parent.to_string(),
+                racks: 2,
+            },
+        )
+        .unwrap()
+    };
+    let rack_a = mk_rack(&parent);
+    let rack_b = mk_rack(&parent);
+    let addr_a = rack_a.local_addr();
+    let addr_b = rack_b.local_addr();
+
+    // Rack A: victim takes slot 0 first, then the survivor (slot 1).
+    let mut victim = RawWorker::connect(addr_a, job, rack_spec);
+    assert_eq!(victim.slot, 0);
+    let survivor = std::thread::spawn(move || {
+        let mut w = TcpWorker::connect(addr_a, job, rack_spec).unwrap();
+        assert_eq!(w.slot, 1);
+        let mut model = Vec::new();
+        for r in 0..rounds {
+            model = w.push_pull(&dyadic_grad(n, 1, r)).unwrap();
+        }
+        let epoch = w.epoch();
+        w.bye();
+        (model, epoch)
+    });
+    // Rack B: two clean workers on global seats 2 and 3.
+    let rack_b_run = std::thread::spawn(move || {
+        let joins: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(addr_b, job, rack_spec).unwrap();
+                    let seat = 2 + w.slot as usize;
+                    let mut model = Vec::new();
+                    for r in 0..rounds {
+                        model = w.push_pull(&dyadic_grad(n, seat, r)).unwrap();
+                    }
+                    let epoch = w.epoch();
+                    w.bye();
+                    (model, epoch)
+                })
+            })
+            .collect();
+        let out: Vec<(Vec<f32>, u32)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(out[0].0, out[1].0, "rack B workers agree bitwise");
+        out.into_iter().next().unwrap()
+    });
+
+    // Victim: clean round 0, then die after 1 of 4 chunks of round 1.
+    victim.full_round(&dyadic_grad(n, 0, 0));
+    let g1 = dyadic_grad(n, 0, 1);
+    let (off, len) = victim.chunks[0];
+    victim.push_chunk_bytes(0, &wire::f32s_to_bytes(&g1[off..off + len]), Op::PushChunk);
+    drop(victim); // crash mid-round, rack A only
+
+    // Successor takes rack A's seat 0 in the bumped rack-local epoch.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut successor = loop {
+        match TcpWorker::connect(addr_a, job, rack_spec) {
+            Ok(w) => break w,
+            Err(_) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "dead worker's slot never recycled"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(successor.slot, 0, "successor takes the dead worker's seat");
+    assert_eq!(successor.epoch(), 1, "rack A's epoch was bumped");
+    assert_eq!(successor.rounds_done(), 1, "round 0 completed before the death");
+    let mut succ_model = Vec::new();
+    for r in successor.rounds_done() as usize..rounds {
+        succ_model = successor.push_pull(&dyadic_grad(n, 0, r)).unwrap();
+    }
+    let succ_epoch = successor.epoch();
+    successor.bye();
+
+    let (surv_model, surv_epoch) = survivor.join().unwrap();
+    let (rack_b_model, rack_b_epoch) = rack_b_run.join().unwrap();
+    assert_eq!(surv_model, succ_model, "rack A survivor and successor agree");
+    assert_eq!(succ_epoch, 1, "rack A finished in its bumped epoch");
+    assert_eq!(surv_epoch, 1, "rack A's survivor replayed into epoch 1");
+    assert_eq!(
+        rack_b_epoch, 0,
+        "rack B must never rewind for rack A's failure"
+    );
+    assert_eq!(surv_model, rack_b_model, "both racks converge to one model");
+
+    // Uninterrupted flat twin with the same per-seat gradients.
+    let flat_leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let flat = run_leaves(
+        flat_leader.local_addr(),
+        311,
+        dyadic_spec(n as u64, 48, 4),
+        rounds,
+        None,
+        0,
+    );
+    assert_eq!(
+        surv_model, flat,
+        "recovered two-level run must be bit-identical to the flat run"
     );
 }

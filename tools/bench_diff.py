@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Diff fresh bench JSON summaries against the committed baseline.
+
+Usage: bench_diff.py BENCH_baseline.json BENCH_<name>.json...
+
+Each bench binary emits a single-line JSON object (its last stdout line)
+with a "bench" name key; ``BENCH_baseline.json`` maps bench name -> that
+object as committed. The *schema* is the contract: a key missing from or
+added to a fresh summary fails the run (someone changed a bench without
+updating the baseline, silently breaking the perf trajectory), and string
+fields must match exactly. Numeric values only *warn* when they drift
+more than DRIFT_X from the baseline — shared CI runners are not a stable
+perf environment, so numbers inform rather than gate.
+"""
+
+import json
+import sys
+
+DRIFT_X = 3.0
+
+def fail(msg):
+    print(f"bench_diff: FAIL: {msg}", file=sys.stderr)
+    return 1
+
+def main(argv):
+    if len(argv) < 3:
+        return fail("usage: bench_diff.py <baseline.json> <fresh.json>...")
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    rc = 0
+    for path in argv[2:]:
+        with open(path) as f:
+            line = f.read().strip()
+        try:
+            fresh = json.loads(line)
+        except json.JSONDecodeError as e:
+            rc |= fail(f"{path} is not a JSON object ({e}); did the bench panic?")
+            continue
+        name = fresh.get("bench")
+        if name not in baseline:
+            rc |= fail(f"{path}: bench {name!r} has no baseline entry")
+            continue
+        # Underscore keys are baseline-side commentary, not schema.
+        base = {k: v for k, v in baseline[name].items() if not k.startswith("_")}
+        missing = sorted(set(base) - set(fresh))
+        extra = sorted(set(fresh) - set(base))
+        if missing or extra:
+            rc |= fail(
+                f"{path}: schema drift vs baseline[{name!r}] "
+                f"(missing: {missing}, extra: {extra}); "
+                f"update BENCH_baseline.json with the bench"
+            )
+            continue
+        for key, want in base.items():
+            got = fresh[key]
+            if isinstance(want, str):
+                if got != want:
+                    rc |= fail(f"{path}: {key} = {got!r}, baseline {want!r}")
+            elif isinstance(want, (int, float)) and want != 0:
+                ratio = got / want
+                if not (1.0 / DRIFT_X <= ratio <= DRIFT_X):
+                    print(
+                        f"bench_diff: warn: {name}.{key} = {got} is {ratio:.2f}x "
+                        f"baseline ({want})"
+                    )
+        print(f"bench_diff: {path}: schema OK vs baseline[{name!r}]")
+    return rc
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
