@@ -49,7 +49,7 @@ fn grad_for(seat: usize) -> Vec<f32> {
 /// All `racks * k` leaves on one flat leader; returns rounds/s.
 fn bench_flat(racks: usize, k: usize) -> f64 {
     let leaves = racks * k;
-    let server = PHubServer::start(ServerConfig { n_cores: 4 });
+    let server = PHubServer::start(ServerConfig::cores(4));
     let init = vec![0.1f32; ELEMS];
     let job = server.init_job(KeyTable::flat(ELEMS, CHUNK_ELEMS), &init, opt(), leaves);
     let mut handles: Vec<_> = (0..leaves).map(|w| server.worker(job, w)).collect();
@@ -74,7 +74,7 @@ fn bench_flat(racks: usize, k: usize) -> f64 {
 fn bench_two_level(racks: usize, k: usize) -> f64 {
     let table = || KeyTable::flat(ELEMS, CHUNK_ELEMS);
     let init = vec![0.1f32; ELEMS];
-    let root = PHubServer::start(ServerConfig { n_cores: 2 });
+    let root = PHubServer::start(ServerConfig::cores(2));
     let jr = root.init_job(table(), &init, opt(), racks);
     for ri in 0..racks {
         root.set_worker_weight(jr, ri as u32, k as u32);
@@ -84,7 +84,7 @@ fn bench_two_level(racks: usize, k: usize) -> f64 {
     let mut pumps = Vec::new();
     let mut leaf_handles = Vec::new();
     for ri in 0..racks {
-        let srv = PHubServer::start(ServerConfig { n_cores: 2 });
+        let srv = PHubServer::start(ServerConfig::cores(2));
         let (job, mut up) = srv.init_relay_job(table(), &init, opt(), k);
         for w in 0..k {
             leaf_handles.push((ri * k + w, srv.worker(job, w)));

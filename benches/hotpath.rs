@@ -119,7 +119,7 @@ fn server_scaling() {
     let elems = 8 << 20;
     let workers = 4;
     for cores in [1usize, 2, 4, 8] {
-        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let server = PHubServer::start(ServerConfig::cores(cores));
         let job = server.init_job(
             KeyTable::flat(elems, 8192),
             &vec![0.0f32; elems],
@@ -151,7 +151,7 @@ fn worker_scaling() {
     println!("\n== live exchange throughput vs workers (16 MB model, 4 cores) ==");
     let elems = 4 << 20;
     for workers in [1usize, 2, 4, 8] {
-        let server = PHubServer::start(ServerConfig { n_cores: 4 });
+        let server = PHubServer::start(ServerConfig::cores(4));
         let job = server.init_job(
             KeyTable::flat(elems, 8192),
             &vec![0.0f32; elems],

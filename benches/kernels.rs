@@ -1,0 +1,220 @@
+//! SIMD kernel-tier and placement microbench (run via `cargo bench
+//! --bench kernels`).
+//!
+//! Part one sweeps every kernel tier available on this host
+//! (scalar / SSE2 / AVX2) over the five data-plane hot loops of
+//! `coordinator::kernels` — LE-byte copy, LE-byte absorb fold, fused
+//! 2-bit dequant+absorb, fused mean+SGD, fused mean+Nesterov — and
+//! reports GB/s per (tier, kernel). The byte basis is the dense f32
+//! footprint (`elems * 4`) for every kernel, including the quantized
+//! fold whose *wire* traffic is 16x smaller: the number answers "how
+//! fast does this loop sweep the accumulator", which is the
+//! memory-bandwidth story of paper §4.3, and keeps tiers and kernels
+//! directly comparable.
+//!
+//! Part two runs the same in-process multi-core server round loop under
+//! both chunk→core placement modes (PHub key-affinity vs LPT
+//! interleave) and reports rounds/s for each. Placement changes
+//! locality only, never results (`server.rs` tests assert
+//! bit-identical training), so any gap here is pure cache behavior.
+//!
+//! Emits a single-line JSON summary (last stdout line) suitable for
+//! `BENCH_kernels.json` trajectory tracking. Tiers this host cannot run
+//! are reported as 0.0 rather than omitted so the JSON schema is
+//! identical on every machine (`tools/bench_diff.py` hard-fails on key
+//! drift but only warns on numeric drift).
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::coordinator::kernels::{self, KernelTier};
+use phub::coordinator::mapping::PlacementMode;
+use phub::coordinator::optimizer::NesterovSgd;
+use phub::coordinator::server::{PHubServer, ServerConfig};
+use phub::coordinator::KeyTable;
+use phub::prop::Rng;
+
+/// Elements per kernel invocation: 32 Ki f32 = 128 KiB, roughly the
+/// paper's chunk scale — large enough to amortize dispatch, small
+/// enough to stay cache-resident so the tiers differentiate on compute.
+const ELEMS: usize = 32 * 1024;
+const REPS: usize = 2000;
+const WARM_REPS: usize = 50;
+
+// Placement comparison: a model big enough that per-core extents span
+// many chunks (64 x 4096 f32 = 1 MiB model over 4 cores).
+const PLACE_CHUNKS: usize = 64;
+const PLACE_CHUNK_ELEMS: usize = 4096;
+const PLACE_CORES: usize = 4;
+const PLACE_WORKERS: usize = 2;
+const PLACE_WARM_ROUNDS: usize = 4;
+const PLACE_ROUNDS: usize = 40;
+
+const KERNELS: [&str; 5] = ["copy", "absorb", "dequant", "sgd", "nesterov"];
+/// Every tier the schema reports, available here or not.
+const TIERS: [KernelTier; 3] = [KernelTier::Scalar, KernelTier::Sse2, KernelTier::Avx2];
+
+/// Time `f` over the standard rep count and convert to GB/s on the
+/// dense-f32 byte basis.
+fn gbps<F: FnMut()>(mut f: F) -> f64 {
+    for _ in 0..WARM_REPS {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (ELEMS * 4 * REPS) as f64 / dt / 1e9
+}
+
+/// GB/s for the five kernels on one tier, in [`KERNELS`] order.
+fn bench_tier(tier: KernelTier, rng: &mut Rng) -> [f64; 5] {
+    let src = rng.vec_f32(ELEMS, 1.0);
+    let mut le_bytes = Vec::with_capacity(ELEMS * 4);
+    for v in &src {
+        le_bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    // 2-bit packed codes covering all four levels, incl. reserved 0b11.
+    let packed: Vec<u8> = (0..ELEMS.div_ceil(4))
+        .map(|_| (rng.next_u64() & 0xff) as u8)
+        .collect();
+    let mut dst = vec![0.0f32; ELEMS];
+    let mut acc = rng.vec_f32(ELEMS, 1.0);
+    let mut params = rng.vec_f32(ELEMS, 1.0);
+    let mut state = vec![0.0f32; ELEMS];
+
+    let copy = gbps(|| {
+        kernels::copy_f32s_le_tier(tier, &mut dst, &le_bytes);
+        black_box(&dst);
+    });
+    let absorb = gbps(|| {
+        kernels::add_assign_le_tier(tier, &mut acc, &le_bytes);
+        black_box(&acc);
+    });
+    let dequant = gbps(|| {
+        kernels::add_assign_dequant_tier(tier, &mut acc, 0.01, &packed);
+        black_box(&acc);
+    });
+    let sgd = gbps(|| {
+        kernels::sgd_step_scaled_tier(tier, &mut params, &src, 0.25, 0.01);
+        black_box(&params);
+    });
+    let nesterov = gbps(|| {
+        kernels::nesterov_step_scaled_tier(tier, &mut params, &mut state, &src, 0.25, 0.01, 0.9);
+        black_box(&params);
+    });
+    [copy, absorb, dequant, sgd, nesterov]
+}
+
+/// Rounds/s of the full in-process server loop under one placement
+/// mode: `PLACE_WORKERS` synchronous workers push-pulling the whole
+/// model each round over `PLACE_CORES` aggregation cores.
+fn bench_placement(mode: PlacementMode) -> f64 {
+    let n = PLACE_CHUNKS * PLACE_CHUNK_ELEMS;
+    let server = PHubServer::start(ServerConfig {
+        n_cores: PLACE_CORES,
+        placement: mode,
+    });
+    let init = vec![0.1f32; n];
+    let job = server.init_job(
+        KeyTable::flat(n, PLACE_CHUNK_ELEMS),
+        &init,
+        Arc::new(NesterovSgd {
+            lr: 0.01,
+            momentum: 0.9,
+        }),
+        PLACE_WORKERS,
+    );
+    let mut handles: Vec<_> = (0..PLACE_WORKERS).map(|w| server.worker(job, w)).collect();
+    let mut rng = Rng::new(23);
+    let grad = rng.vec_f32(n, 1.0);
+    let run_rounds = |handles: &mut Vec<_>, rounds: usize| {
+        std::thread::scope(|s| {
+            for h in handles.iter_mut() {
+                let grad = &grad;
+                s.spawn(move || {
+                    for _ in 0..rounds {
+                        black_box(h.push_pull(grad));
+                    }
+                });
+            }
+        });
+    };
+    run_rounds(&mut handles, PLACE_WARM_ROUNDS);
+    let t0 = Instant::now();
+    run_rounds(&mut handles, PLACE_ROUNDS);
+    let dt = t0.elapsed().as_secs_f64();
+    drop(handles);
+    PHubServer::shutdown(server);
+    PLACE_ROUNDS as f64 / dt
+}
+
+fn main() {
+    let active = kernels::active_tier();
+    println!(
+        "== kernels: {ELEMS} f32/call x {REPS} reps; active tier {} ==",
+        active.name()
+    );
+
+    let mut rng = Rng::new(17);
+    // (tier, per-kernel GB/s); unavailable tiers stay all-zero.
+    let mut results = [[0.0f64; 5]; 3];
+    for (ti, &tier) in TIERS.iter().enumerate() {
+        if !kernels::tier_available(tier) {
+            println!("  {:<8} unavailable on this host", tier.name());
+            continue;
+        }
+        results[ti] = bench_tier(tier, &mut rng);
+        let r = &results[ti];
+        println!(
+            "  {:<8} copy {:>6.2}  absorb {:>6.2}  dequant {:>6.2}  \
+             sgd {:>6.2}  nesterov {:>6.2}  GB/s",
+            tier.name(),
+            r[0],
+            r[1],
+            r[2],
+            r[3],
+            r[4]
+        );
+    }
+
+    println!(
+        "== placement: {PLACE_CHUNKS} x {PLACE_CHUNK_ELEMS}-elem chunks, \
+         {PLACE_CORES} cores, {PLACE_WORKERS} workers, {PLACE_ROUNDS} rounds =="
+    );
+    let interleave_rps = bench_placement(PlacementMode::Interleave);
+    let affine_rps = bench_placement(PlacementMode::Affine);
+    println!("  interleave {interleave_rps:>8.1} rounds/s");
+    println!(
+        "  affine     {affine_rps:>8.1} rounds/s  ({:+.1}%)",
+        (affine_rps / interleave_rps - 1.0) * 100.0
+    );
+    println!("kernels OK");
+
+    // Single-line JSON summary for BENCH_kernels.json trajectory
+    // tracking (keep last on stdout). All tier keys always present;
+    // active_tier_idx is numeric so a host without AVX2 drifts instead
+    // of hard-failing the schema gate.
+    let mut json = format!(
+        "{{\"bench\":\"kernels\",\"elems\":{ELEMS},\"reps\":{REPS},\
+         \"chunks\":{PLACE_CHUNKS},\"chunk_elems\":{PLACE_CHUNK_ELEMS},\
+         \"rounds\":{PLACE_ROUNDS},\"active_tier_idx\":{}",
+        active as u8
+    );
+    for (ti, &tier) in TIERS.iter().enumerate() {
+        for (ki, kernel) in KERNELS.iter().enumerate() {
+            json.push_str(&format!(
+                ",\"{}_{}_gbps\":{:.3}",
+                tier.name(),
+                kernel,
+                results[ti][ki]
+            ));
+        }
+    }
+    json.push_str(&format!(
+        ",\"interleave_rps\":{interleave_rps:.3},\"affine_rps\":{affine_rps:.3}}}"
+    ));
+    println!("{json}");
+}

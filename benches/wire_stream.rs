@@ -65,7 +65,7 @@ fn main() {
     for model_kb in [64usize, 1024, 4096, 16384] {
         let model = model_kb * 1024 / 4;
         let chunks = model.div_ceil(CHUNK_ELEMS);
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(4)).unwrap();
         let addr = leader.local_addr();
         let mono = bench_chunking(addr, job, model, model, workers, rounds);
         let streamed =

@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     let model = a.get_usize("model-kb", 1024) * 1024 / 4;
     let rounds = a.get_usize("rounds", 10);
 
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 })?;
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(4))?;
     let addr = leader.local_addr();
     println!(
         "leader on {addr}, {workers} workers, {} KB model",

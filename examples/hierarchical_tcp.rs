@@ -94,12 +94,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     // Two-level: one root, `racks` relays, `workers` leaves per relay.
-    let root = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 })?;
+    let root = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2))?;
     let relays: Vec<_> = (0..racks)
         .map(|_| {
             TcpLeader::serve_relay(
                 "127.0.0.1:0",
-                ServerConfig { n_cores: 2 },
+                ServerConfig::cores(2),
                 RelayConfig {
                     parent: root.local_addr().to_string(),
                     racks,
@@ -118,7 +118,7 @@ fn main() -> anyhow::Result<()> {
     let dt_hier = t0.elapsed().as_secs_f64();
 
     // Flat: same leaves, one leader, one level.
-    let flat = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 })?;
+    let flat = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2))?;
     let flat_spec = JobSpec {
         n_workers: racks * workers,
         ..spec

@@ -19,7 +19,7 @@ fn main() {
     const ROUNDS: usize = 10;
 
     // 1. Start a PHub instance with 4 aggregation cores.
-    let server = PHubServer::start(ServerConfig { n_cores: 4 });
+    let server = PHubServer::start(ServerConfig::cores(4));
     let cm = ConnectionManager::new(server.clone());
 
     // 2. Create + initialize the job namespace.

@@ -36,9 +36,17 @@
 //!   and `1/n` to the optimizer's single fused loop instead of
 //!   materializing the mean with a separate `scale` pass. Bit-identical
 //!   to the unfused `take_mean` → `step` sequence (property-tested).
-//! * The inner loops are lane-chunked (8 wide) so the autovectorizer can
-//!   lift them to SIMD; the environment has no intrinsics toolchain, so
-//!   explicit vector code is out of scope (see ROADMAP).
+//! * The wire-facing inner loops (byte fold, dequant fold, and the fused
+//!   optimizer passes) are explicit SIMD: this module's entry points
+//!   delegate to [`super::kernels`], which dispatches once-selected
+//!   AVX2/SSE2/scalar implementations, property-tested bit-identical to
+//!   each other. See the *kernel dispatch contract* table in
+//!   `kernels.rs` — nothing outside that module may call a raw vector
+//!   fn, and this module's delegating wrappers keep the wire-form
+//!   signatures (and `debug_assert!` length contracts) stable for
+//!   callers. The slice-form [`add_assign`]/[`scale`] below stay
+//!   lane-chunked in place: they are the in-process reference path, not
+//!   a wire hot loop.
 //!
 //! Copies per chunk per round (leader receive side), before → after this
 //! refactor: frame body `Vec` + payload re-slice `Vec` + `bytes_to_f32s`
@@ -85,101 +93,38 @@ pub fn scale(v: &mut [f32], k: f32) {
 
 /// `dst = le_bytes` reinterpreted as little-endian f32s (bit-exact; NaN
 /// payloads survive). `le_bytes.len()` must be `4 * dst.len()`.
+/// Dispatches to the active SIMD tier (see [`super::kernels`]).
 #[inline]
 pub fn copy_f32s_le(dst: &mut [f32], le_bytes: &[u8]) {
-    debug_assert_eq!(le_bytes.len(), dst.len() * 4);
-    let mut d = dst.chunks_exact_mut(LANES);
-    let mut s = le_bytes.chunks_exact(LANES * 4);
-    for (dd, ss) in (&mut d).zip(&mut s) {
-        for i in 0..LANES {
-            dd[i] = f32::from_le_bytes(ss[i * 4..i * 4 + 4].try_into().unwrap());
-        }
-    }
-    for (dd, ss) in d
-        .into_remainder()
-        .iter_mut()
-        .zip(s.remainder().chunks_exact(4))
-    {
-        *dd = f32::from_le_bytes(ss.try_into().unwrap());
-    }
+    super::kernels::copy_f32s_le(dst, le_bytes)
 }
 
 /// `acc += le_bytes` reinterpreted as little-endian f32s: the byte-level
 /// aggregation fold — decode and accumulate in one pass, no intermediate
 /// f32 vector. Bit-identical to `bytes_to_f32s` + [`add_assign`].
+/// Dispatches to the active SIMD tier (see [`super::kernels`]).
 #[inline]
 pub fn add_assign_le(acc: &mut [f32], le_bytes: &[u8]) {
-    debug_assert_eq!(le_bytes.len(), acc.len() * 4);
-    let mut a = acc.chunks_exact_mut(LANES);
-    let mut s = le_bytes.chunks_exact(LANES * 4);
-    for (aa, ss) in (&mut a).zip(&mut s) {
-        for i in 0..LANES {
-            aa[i] += f32::from_le_bytes(ss[i * 4..i * 4 + 4].try_into().unwrap());
-        }
-    }
-    for (aa, ss) in a
-        .into_remainder()
-        .iter_mut()
-        .zip(s.remainder().chunks_exact(4))
-    {
-        *aa += f32::from_le_bytes(ss.try_into().unwrap());
-    }
+    super::kernels::add_assign_le(acc, le_bytes)
 }
 
-/// Decode one 2-bit level (encoding 0b00 = 0, 0b01 = +t, 0b10 = -t).
-#[inline(always)]
-fn dequant_level(threshold: f32, code: u8) -> f32 {
-    match code & 0b11 {
-        0b01 => threshold,
-        0b10 => -threshold,
-        _ => 0.0,
-    }
-}
-
-/// `dst = dequantize(packed)`: 4 levels per byte, `packed.len()` must be
-/// `dst.len().div_ceil(4)`. The single home of the 2-bit decode mapping —
-/// `QuantGrad::dequantize` delegates here.
+/// `dst = dequantize(packed)`: 4 levels per byte (0b00 = 0, 0b01 = +t,
+/// 0b10 = -t), `packed.len()` must be `dst.len().div_ceil(4)`. The decode
+/// mapping lives in `kernels::scalar::dequant_level`;
+/// `QuantGrad::dequantize` delegates here. Dispatches to the active SIMD
+/// tier (see [`super::kernels`]).
 #[inline]
 pub fn copy_dequant(dst: &mut [f32], threshold: f32, packed: &[u8]) {
-    debug_assert_eq!(packed.len(), dst.len().div_ceil(4));
-    // Split at a lane boundary explicitly: the tail's packed bytes start
-    // at `main / 4` (exact, since `main` is a multiple of LANES).
-    let main = dst.len() / LANES * LANES;
-    let (dm, dr) = dst.split_at_mut(main);
-    for (dd, pp) in dm
-        .chunks_exact_mut(LANES)
-        .zip(packed[..main / 4].chunks_exact(LANES / 4))
-    {
-        for i in 0..LANES {
-            dd[i] = dequant_level(threshold, pp[i / 4] >> ((i % 4) * 2));
-        }
-    }
-    let pr = &packed[main / 4..];
-    for (i, x) in dr.iter_mut().enumerate() {
-        *x = dequant_level(threshold, pr[i / 4] >> ((i % 4) * 2));
-    }
+    super::kernels::copy_dequant(dst, threshold, packed)
 }
 
 /// `acc += dequantize(packed)`: dequantization folded into the
 /// accumulate — the 2-bit wire path never materializes a dense scratch
-/// vector. Bit-identical to `dequantize` + [`add_assign`].
+/// vector. Bit-identical to `dequantize` + [`add_assign`]. Dispatches to
+/// the active SIMD tier (see [`super::kernels`]).
 #[inline]
 pub fn add_assign_dequant(acc: &mut [f32], threshold: f32, packed: &[u8]) {
-    debug_assert_eq!(packed.len(), acc.len().div_ceil(4));
-    let main = acc.len() / LANES * LANES;
-    let (am, ar) = acc.split_at_mut(main);
-    for (aa, pp) in am
-        .chunks_exact_mut(LANES)
-        .zip(packed[..main / 4].chunks_exact(LANES / 4))
-    {
-        for i in 0..LANES {
-            aa[i] += dequant_level(threshold, pp[i / 4] >> ((i % 4) * 2));
-        }
-    }
-    let pr = &packed[main / 4..];
-    for (i, x) in ar.iter_mut().enumerate() {
-        *x += dequant_level(threshold, pr[i / 4] >> ((i % 4) * 2));
-    }
+    super::kernels::add_assign_dequant(acc, threshold, packed)
 }
 
 /// Most workers one aggregation round supports — the arrival bitmask is a

@@ -1,0 +1,972 @@
+//! Explicit SIMD aggregation/optimizer kernels with runtime dispatch
+//! (paper sections 4.2–4.3).
+//!
+//! PHub's data plane is memory-bandwidth-bound: once the round is
+//! allocation- and mutex-free (PRs 3–4), raw kernel throughput is the
+//! dominant cost of a leader round. The five hot loops — dense LE-byte
+//! absorb fold, copy-on-first-arrival, 2-bit dequantize+absorb fused,
+//! fused mean+SGD, fused mean+Nesterov — live here as explicit
+//! `core::arch::x86_64` implementations, selected once at startup:
+//!
+//! * **AVX2** (8 f32 lanes) when `is_x86_feature_detected!("avx2")`;
+//! * **SSE2** (4 f32 lanes), the x86_64 baseline — always available
+//!   there, so x86_64 never falls back to scalar unless asked to;
+//! * **scalar**, the previous lane-chunked autovectorizer-shaped code,
+//!   verbatim — the reference every vector path is property-tested
+//!   bit-identical to, and the only tier on non-x86_64 targets.
+//!
+//! The `PHUB_KERNELS` environment variable (`scalar` | `sse2` | `avx2`)
+//! overrides detection so both dispatch arms are testable anywhere; an
+//! unknown value or an unavailable tier falls back to detection. The
+//! selected tier is recorded in `DataPlaneMetrics::kernel_tier` by
+//! `PHubServer::start`.
+//!
+//! # Kernel dispatch contract
+//!
+//! | rule | why |
+//! |---|---|
+//! | Raw `unsafe` tier impls are module-private; only the dispatchers in this file call them | every call site must carry a CPU-feature proof, and the dispatchers are the single place that proof is established |
+//! | Hot paths call the safe top-level fns (`copy_f32s_le`, …), which branch on the cached [`active_tier`] | `resolve` only ever returns an available tier, so the `unsafe` call is sound by construction |
+//! | Tests/benches use the `*_tier` variants, which `assert!` availability first | lets both arms run in one process without mutating global state |
+//! | No alignment is assumed anywhere: all vector memory ops are unaligned (`loadu`/`storeu`) | wire payloads arrive at arbitrary offsets inside pooled frames |
+//! | Wire bytes are reinterpreted in place — x86_64 is little-endian, so a `loadu` of LE bytes *is* `f32::from_le_bytes`, bit for bit | NaN payloads and denormals must survive the decode untouched |
+//! | No FMA, ever, and vector operand order mirrors the scalar source text exactly | scalar Rust rounds `a * b + c` twice (no contraction), and x86's both-operands-NaN rule picks src1 — matching textual order makes NaN propagation identical |
+//! | Vector main loop + scalar tail, split at a lane multiple | the tail is the scalar reference itself, so remainders are trivially bit-identical |
+//! | Steady-state calls allocate nothing; the one-time `resolve` (env read) runs on first use | first use is warm-up in every driver, so `alloc_discipline.rs` holds with dispatch enabled |
+//!
+//! `aggregation.rs` (byte-fold entry points) and `optimizer.rs` (fused
+//! `step_scaled` for both built-ins) delegate their inner loops here;
+//! `aggregation::add_assign`/`scale` stay lane-chunked in place — the
+//! slice path is the in-process reference, not a wire hot loop.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Environment variable overriding kernel-tier detection
+/// (`scalar` | `sse2` | `avx2`, case-insensitive).
+pub const ENV_KERNELS: &str = "PHUB_KERNELS";
+
+/// Lane width of the scalar chunked loops (and the AVX2 vector width).
+/// Eight f32s = one 256-bit vector.
+const LANES: usize = 8;
+
+/// A SIMD implementation tier. Discriminants are stable and mirrored in
+/// `DataPlaneMetrics::kernel_tier`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelTier {
+    /// The lane-chunked reference loops (any target).
+    Scalar = 0,
+    /// 128-bit `core::arch::x86_64` paths (x86_64 baseline).
+    Sse2 = 1,
+    /// 256-bit paths; requires runtime AVX2 detection.
+    Avx2 = 2,
+}
+
+impl KernelTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Sse2 => "sse2",
+            KernelTier::Avx2 => "avx2",
+        }
+    }
+
+    /// Inverse of `tier as u8` (for metrics readers).
+    pub fn from_u8(v: u8) -> Option<KernelTier> {
+        match v {
+            0 => Some(KernelTier::Scalar),
+            1 => Some(KernelTier::Sse2),
+            2 => Some(KernelTier::Avx2),
+            _ => None,
+        }
+    }
+}
+
+/// Whether `tier`'s kernels can run on this machine.
+pub fn tier_available(tier: KernelTier) -> bool {
+    match tier {
+        KernelTier::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
+}
+
+/// Every tier runnable on this machine, scalar first (for tests and
+/// benches that sweep tiers; allocates, so not for the data plane).
+pub fn available_tiers() -> Vec<KernelTier> {
+    let mut v = vec![KernelTier::Scalar];
+    if tier_available(KernelTier::Sse2) {
+        v.push(KernelTier::Sse2);
+    }
+    if tier_available(KernelTier::Avx2) {
+        v.push(KernelTier::Avx2);
+    }
+    v
+}
+
+const TIER_UNRESOLVED: u8 = u8::MAX;
+static ACTIVE_TIER: AtomicU8 = AtomicU8::new(TIER_UNRESOLVED);
+
+/// The tier every hot-path kernel dispatches to, resolved once per
+/// process (env override, else best detected) and cached. The first call
+/// reads the environment (allocates); every later call is one relaxed
+/// atomic load — drivers hit it during warm-up, keeping steady-state
+/// rounds allocation-free.
+#[inline]
+pub fn active_tier() -> KernelTier {
+    match KernelTier::from_u8(ACTIVE_TIER.load(Ordering::Relaxed)) {
+        Some(t) => t,
+        None => {
+            // Benign race: concurrent first calls resolve to the same
+            // value and the store is idempotent.
+            let t = resolve(std::env::var(ENV_KERNELS).ok().as_deref());
+            ACTIVE_TIER.store(t as u8, Ordering::Relaxed);
+            t
+        }
+    }
+}
+
+/// Tier selection: an explicit, available override wins; anything else
+/// (unset, unknown word, tier this CPU lacks) falls back to the best
+/// detected tier.
+fn resolve(env: Option<&str>) -> KernelTier {
+    let best = if tier_available(KernelTier::Avx2) {
+        KernelTier::Avx2
+    } else if tier_available(KernelTier::Sse2) {
+        KernelTier::Sse2
+    } else {
+        KernelTier::Scalar
+    };
+    let req = match env.map(|v| v.to_ascii_lowercase()) {
+        Some(v) if v == "scalar" => Some(KernelTier::Scalar),
+        Some(v) if v == "sse2" => Some(KernelTier::Sse2),
+        Some(v) if v == "avx2" => Some(KernelTier::Avx2),
+        _ => None,
+    };
+    match req {
+        Some(t) if tier_available(t) => t,
+        _ => best,
+    }
+}
+
+#[track_caller]
+fn assert_available(tier: KernelTier) {
+    assert!(
+        tier_available(tier),
+        "kernel tier {:?} is not available on this CPU",
+        tier.name()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Safe entry points. The argless forms are the hot path (dispatch on the
+// cached active tier); the `_tier` forms are for tests and benches and
+// assert availability before descending into `unsafe`.
+// ---------------------------------------------------------------------
+
+/// `dst = le_bytes` reinterpreted as little-endian f32s (bit-exact; NaN
+/// payloads survive). `le_bytes.len()` must be `4 * dst.len()`.
+#[inline]
+pub fn copy_f32s_le(dst: &mut [f32], le_bytes: &[u8]) {
+    copy_f32s_le_dispatch(active_tier(), dst, le_bytes)
+}
+
+/// [`copy_f32s_le`] on an explicit tier (panics if unavailable).
+pub fn copy_f32s_le_tier(tier: KernelTier, dst: &mut [f32], le_bytes: &[u8]) {
+    assert_available(tier);
+    copy_f32s_le_dispatch(tier, dst, le_bytes)
+}
+
+/// `acc += le_bytes` reinterpreted as little-endian f32s: the byte-level
+/// aggregation fold — decode and accumulate in one pass.
+#[inline]
+pub fn add_assign_le(acc: &mut [f32], le_bytes: &[u8]) {
+    add_assign_le_dispatch(active_tier(), acc, le_bytes)
+}
+
+/// [`add_assign_le`] on an explicit tier (panics if unavailable).
+pub fn add_assign_le_tier(tier: KernelTier, acc: &mut [f32], le_bytes: &[u8]) {
+    assert_available(tier);
+    add_assign_le_dispatch(tier, acc, le_bytes)
+}
+
+/// `dst = dequantize(packed)`: 4 2-bit levels per byte (0b00 = 0,
+/// 0b01 = +t, 0b10 = −t). `packed.len()` must be `dst.len().div_ceil(4)`.
+#[inline]
+pub fn copy_dequant(dst: &mut [f32], threshold: f32, packed: &[u8]) {
+    copy_dequant_dispatch(active_tier(), dst, threshold, packed)
+}
+
+/// [`copy_dequant`] on an explicit tier (panics if unavailable).
+pub fn copy_dequant_tier(tier: KernelTier, dst: &mut [f32], threshold: f32, packed: &[u8]) {
+    assert_available(tier);
+    copy_dequant_dispatch(tier, dst, threshold, packed)
+}
+
+/// `acc += dequantize(packed)`: dequantization folded into the
+/// accumulate — the 2-bit wire path never materializes a dense vector.
+#[inline]
+pub fn add_assign_dequant(acc: &mut [f32], threshold: f32, packed: &[u8]) {
+    add_assign_dequant_dispatch(active_tier(), acc, threshold, packed)
+}
+
+/// [`add_assign_dequant`] on an explicit tier (panics if unavailable).
+pub fn add_assign_dequant_tier(tier: KernelTier, acc: &mut [f32], threshold: f32, packed: &[u8]) {
+    assert_available(tier);
+    add_assign_dequant_dispatch(tier, acc, threshold, packed)
+}
+
+/// Fused mean+SGD: `params[i] -= lr * (grad_sum[i] * inv_n)`, with the
+/// mean computed (and rounded) first, exactly like the unfused
+/// scale-then-step sequence.
+#[inline]
+pub fn sgd_step_scaled(params: &mut [f32], grad_sum: &[f32], inv_n: f32, lr: f32) {
+    sgd_dispatch(active_tier(), params, grad_sum, inv_n, lr)
+}
+
+/// [`sgd_step_scaled`] on an explicit tier (panics if unavailable).
+pub fn sgd_step_scaled_tier(
+    tier: KernelTier,
+    params: &mut [f32],
+    grad_sum: &[f32],
+    inv_n: f32,
+    lr: f32,
+) {
+    assert_available(tier);
+    sgd_dispatch(tier, params, grad_sum, inv_n, lr)
+}
+
+/// Fused mean+Nesterov (MXNet rule): per element,
+/// `g = sum * inv_n; m' = mu * m + g; p -= lr * (g + mu * m')`.
+#[inline]
+pub fn nesterov_step_scaled(
+    params: &mut [f32],
+    state: &mut [f32],
+    grad_sum: &[f32],
+    inv_n: f32,
+    lr: f32,
+    mu: f32,
+) {
+    nesterov_dispatch(active_tier(), params, state, grad_sum, inv_n, lr, mu)
+}
+
+/// [`nesterov_step_scaled`] on an explicit tier (panics if unavailable).
+pub fn nesterov_step_scaled_tier(
+    tier: KernelTier,
+    params: &mut [f32],
+    state: &mut [f32],
+    grad_sum: &[f32],
+    inv_n: f32,
+    lr: f32,
+    mu: f32,
+) {
+    assert_available(tier);
+    nesterov_dispatch(tier, params, state, grad_sum, inv_n, lr, mu)
+}
+
+// ---------------------------------------------------------------------
+// Dispatchers: the only call sites of the raw `unsafe` tier impls.
+// SAFETY (all six): the tier is available — either it came from
+// `resolve`, which only returns available tiers, or the public `_tier`
+// wrapper asserted `tier_available` — so the `#[target_feature]`
+// functions' CPU requirement holds.
+// ---------------------------------------------------------------------
+
+#[inline]
+fn copy_f32s_le_dispatch(tier: KernelTier, dst: &mut [f32], le_bytes: &[u8]) {
+    debug_assert_eq!(le_bytes.len(), dst.len() * 4);
+    match tier {
+        KernelTier::Scalar => scalar::copy_f32s_le(dst, le_bytes),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => unsafe { x86::copy_f32s_le_sse2(dst, le_bytes) },
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::copy_f32s_le_avx2(dst, le_bytes) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::copy_f32s_le(dst, le_bytes),
+    }
+}
+
+#[inline]
+fn add_assign_le_dispatch(tier: KernelTier, acc: &mut [f32], le_bytes: &[u8]) {
+    debug_assert_eq!(le_bytes.len(), acc.len() * 4);
+    match tier {
+        KernelTier::Scalar => scalar::add_assign_le(acc, le_bytes),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => unsafe { x86::add_assign_le_sse2(acc, le_bytes) },
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::add_assign_le_avx2(acc, le_bytes) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::add_assign_le(acc, le_bytes),
+    }
+}
+
+#[inline]
+fn copy_dequant_dispatch(tier: KernelTier, dst: &mut [f32], threshold: f32, packed: &[u8]) {
+    debug_assert_eq!(packed.len(), dst.len().div_ceil(4));
+    match tier {
+        KernelTier::Scalar => scalar::copy_dequant(dst, threshold, packed),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => unsafe { x86::copy_dequant_sse2(dst, threshold, packed) },
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::copy_dequant_avx2(dst, threshold, packed) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::copy_dequant(dst, threshold, packed),
+    }
+}
+
+#[inline]
+fn add_assign_dequant_dispatch(tier: KernelTier, acc: &mut [f32], threshold: f32, packed: &[u8]) {
+    debug_assert_eq!(packed.len(), acc.len().div_ceil(4));
+    match tier {
+        KernelTier::Scalar => scalar::add_assign_dequant(acc, threshold, packed),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => unsafe { x86::add_assign_dequant_sse2(acc, threshold, packed) },
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::add_assign_dequant_avx2(acc, threshold, packed) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::add_assign_dequant(acc, threshold, packed),
+    }
+}
+
+#[inline]
+fn sgd_dispatch(tier: KernelTier, params: &mut [f32], grad_sum: &[f32], inv_n: f32, lr: f32) {
+    debug_assert_eq!(params.len(), grad_sum.len());
+    match tier {
+        KernelTier::Scalar => scalar::sgd_step_scaled(params, grad_sum, inv_n, lr),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => unsafe { x86::sgd_step_scaled_sse2(params, grad_sum, inv_n, lr) },
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::sgd_step_scaled_avx2(params, grad_sum, inv_n, lr) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::sgd_step_scaled(params, grad_sum, inv_n, lr),
+    }
+}
+
+#[inline]
+fn nesterov_dispatch(
+    tier: KernelTier,
+    params: &mut [f32],
+    state: &mut [f32],
+    grad_sum: &[f32],
+    inv_n: f32,
+    lr: f32,
+    mu: f32,
+) {
+    debug_assert_eq!(params.len(), grad_sum.len());
+    debug_assert_eq!(state.len(), grad_sum.len());
+    match tier {
+        KernelTier::Scalar => scalar::nesterov_step_scaled(params, state, grad_sum, inv_n, lr, mu),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Sse2 => unsafe {
+            x86::nesterov_step_scaled_sse2(params, state, grad_sum, inv_n, lr, mu)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe {
+            x86::nesterov_step_scaled_avx2(params, state, grad_sum, inv_n, lr, mu)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::nesterov_step_scaled(params, state, grad_sum, inv_n, lr, mu),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference tier: the lane-chunked loops exactly as they stood in
+// aggregation.rs/optimizer.rs before this module existed. Every vector
+// path is property-tested bit-identical to these, and they double as the
+// tail code of the vector paths (so remainders are the reference by
+// construction).
+// ---------------------------------------------------------------------
+
+pub mod scalar {
+    use super::LANES;
+
+    /// Decode one 2-bit level (0b00 = 0, 0b01 = +t, 0b10 = −t). The
+    /// single home of the decode mapping — `QuantGrad::dequantize` and
+    /// every vector path implement exactly this table.
+    #[inline(always)]
+    pub fn dequant_level(threshold: f32, code: u8) -> f32 {
+        match code & 0b11 {
+            0b01 => threshold,
+            0b10 => -threshold,
+            _ => 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn copy_f32s_le(dst: &mut [f32], le_bytes: &[u8]) {
+        debug_assert_eq!(le_bytes.len(), dst.len() * 4);
+        let mut d = dst.chunks_exact_mut(LANES);
+        let mut s = le_bytes.chunks_exact(LANES * 4);
+        for (dd, ss) in (&mut d).zip(&mut s) {
+            for i in 0..LANES {
+                dd[i] = f32::from_le_bytes(ss[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+        }
+        for (dd, ss) in d
+            .into_remainder()
+            .iter_mut()
+            .zip(s.remainder().chunks_exact(4))
+        {
+            *dd = f32::from_le_bytes(ss.try_into().unwrap());
+        }
+    }
+
+    #[inline]
+    pub fn add_assign_le(acc: &mut [f32], le_bytes: &[u8]) {
+        debug_assert_eq!(le_bytes.len(), acc.len() * 4);
+        let mut a = acc.chunks_exact_mut(LANES);
+        let mut s = le_bytes.chunks_exact(LANES * 4);
+        for (aa, ss) in (&mut a).zip(&mut s) {
+            for i in 0..LANES {
+                aa[i] += f32::from_le_bytes(ss[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+        }
+        for (aa, ss) in a
+            .into_remainder()
+            .iter_mut()
+            .zip(s.remainder().chunks_exact(4))
+        {
+            *aa += f32::from_le_bytes(ss.try_into().unwrap());
+        }
+    }
+
+    #[inline]
+    pub fn copy_dequant(dst: &mut [f32], threshold: f32, packed: &[u8]) {
+        debug_assert_eq!(packed.len(), dst.len().div_ceil(4));
+        // Split at a lane boundary explicitly: the tail's packed bytes
+        // start at `main / 4` (exact, since `main` is a multiple of LANES).
+        let main = dst.len() / LANES * LANES;
+        let (dm, dr) = dst.split_at_mut(main);
+        for (dd, pp) in dm
+            .chunks_exact_mut(LANES)
+            .zip(packed[..main / 4].chunks_exact(LANES / 4))
+        {
+            for i in 0..LANES {
+                dd[i] = dequant_level(threshold, pp[i / 4] >> ((i % 4) * 2));
+            }
+        }
+        let pr = &packed[main / 4..];
+        for (i, x) in dr.iter_mut().enumerate() {
+            *x = dequant_level(threshold, pr[i / 4] >> ((i % 4) * 2));
+        }
+    }
+
+    #[inline]
+    pub fn add_assign_dequant(acc: &mut [f32], threshold: f32, packed: &[u8]) {
+        debug_assert_eq!(packed.len(), acc.len().div_ceil(4));
+        let main = acc.len() / LANES * LANES;
+        let (am, ar) = acc.split_at_mut(main);
+        for (aa, pp) in am
+            .chunks_exact_mut(LANES)
+            .zip(packed[..main / 4].chunks_exact(LANES / 4))
+        {
+            for i in 0..LANES {
+                aa[i] += dequant_level(threshold, pp[i / 4] >> ((i % 4) * 2));
+            }
+        }
+        let pr = &packed[main / 4..];
+        for (i, x) in ar.iter_mut().enumerate() {
+            *x += dequant_level(threshold, pr[i / 4] >> ((i % 4) * 2));
+        }
+    }
+
+    #[inline]
+    pub fn sgd_step_scaled(params: &mut [f32], grad_sum: &[f32], inv_n: f32, lr: f32) {
+        debug_assert_eq!(params.len(), grad_sum.len());
+        let mut p = params.chunks_exact_mut(LANES);
+        let mut s = grad_sum.chunks_exact(LANES);
+        for (pp, ss) in (&mut p).zip(&mut s) {
+            for i in 0..LANES {
+                let g = ss[i] * inv_n;
+                pp[i] -= lr * g;
+            }
+        }
+        for (pp, ss) in p.into_remainder().iter_mut().zip(s.remainder()) {
+            let g = ss * inv_n;
+            *pp -= lr * g;
+        }
+    }
+
+    #[inline]
+    pub fn nesterov_step_scaled(
+        params: &mut [f32],
+        state: &mut [f32],
+        grad_sum: &[f32],
+        inv_n: f32,
+        lr: f32,
+        mu: f32,
+    ) {
+        debug_assert_eq!(params.len(), grad_sum.len());
+        debug_assert_eq!(state.len(), grad_sum.len());
+        let mut p = params.chunks_exact_mut(LANES);
+        let mut st = state.chunks_exact_mut(LANES);
+        let mut s = grad_sum.chunks_exact(LANES);
+        for ((pp, mm), ss) in (&mut p).zip(&mut st).zip(&mut s) {
+            for i in 0..LANES {
+                let g = ss[i] * inv_n;
+                let m = mu * mm[i] + g;
+                mm[i] = m;
+                pp[i] -= lr * (g + mu * m);
+            }
+        }
+        for ((pp, mm), ss) in p
+            .into_remainder()
+            .iter_mut()
+            .zip(st.into_remainder().iter_mut())
+            .zip(s.remainder())
+        {
+            let g = ss * inv_n;
+            let m = mu * *mm + g;
+            *mm = m;
+            *pp -= lr * (g + mu * m);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 vector tiers.
+//
+// Bit-identity rules (see the module-level contract table):
+//  * unaligned loads/stores only — wire payloads have no alignment;
+//  * x86_64 is little-endian, so loading payload bytes as f32 lanes is
+//    exactly `f32::from_le_bytes`;
+//  * no FMA — scalar Rust rounds the multiply and the add separately;
+//  * vector operand order mirrors the scalar source text, so x86's
+//    src1-wins NaN selection behaves identically in both arms;
+//  * each kernel runs the vector loop over the largest lane-multiple
+//    prefix and delegates the remainder to the scalar tier.
+//
+// Dequantization never computes on the threshold: the ±t lanes are
+// selected with integer-compare masks AND'ed against broadcast `t`/`-t`
+// vectors, so arbitrary threshold bit patterns (NaN included) pass
+// through untouched, exactly like `scalar::dequant_level`.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::scalar;
+    use core::arch::x86_64::*;
+
+    // ---- SSE2 (4 lanes; x86_64 baseline) ----
+
+    /// # Safety
+    /// SSE2 is part of the x86_64 baseline; callers only need to be on
+    /// x86_64 (guaranteed by the enclosing `cfg`).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn copy_f32s_le_sse2(dst: &mut [f32], le_bytes: &[u8]) {
+        let main = dst.len() / 4 * 4;
+        let dp = dst.as_mut_ptr();
+        let sp = le_bytes.as_ptr();
+        let mut i = 0;
+        while i < main {
+            _mm_storeu_ps(dp.add(i), _mm_loadu_ps(sp.add(i * 4) as *const f32));
+            i += 4;
+        }
+        scalar::copy_f32s_le(&mut dst[main..], &le_bytes[main * 4..]);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_sse2`].
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn add_assign_le_sse2(acc: &mut [f32], le_bytes: &[u8]) {
+        let main = acc.len() / 4 * 4;
+        let ap = acc.as_mut_ptr();
+        let sp = le_bytes.as_ptr();
+        let mut i = 0;
+        while i < main {
+            let a = _mm_loadu_ps(ap.add(i));
+            let s = _mm_loadu_ps(sp.add(i * 4) as *const f32);
+            _mm_storeu_ps(ap.add(i), _mm_add_ps(a, s));
+            i += 4;
+        }
+        scalar::add_assign_le(&mut acc[main..], &le_bytes[main * 4..]);
+    }
+
+    /// Decode one packed byte (4 2-bit codes) into a 4-lane level vector.
+    /// SSE2 has no per-lane variable shift, so code extraction is scalar;
+    /// the lane selection is the same mask-and-broadcast scheme as AVX2.
+    ///
+    /// # Safety
+    /// As [`copy_f32s_le_sse2`].
+    #[target_feature(enable = "sse2")]
+    unsafe fn dequant4_sse2(byte: u8, pos: __m128, neg: __m128) -> __m128 {
+        let b = byte as i32;
+        let codes = _mm_setr_epi32(b & 3, (b >> 2) & 3, (b >> 4) & 3, (b >> 6) & 3);
+        let m1 = _mm_castsi128_ps(_mm_cmpeq_epi32(codes, _mm_set1_epi32(1)));
+        let m2 = _mm_castsi128_ps(_mm_cmpeq_epi32(codes, _mm_set1_epi32(2)));
+        _mm_or_ps(_mm_and_ps(m1, pos), _mm_and_ps(m2, neg))
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_sse2`].
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn copy_dequant_sse2(dst: &mut [f32], threshold: f32, packed: &[u8]) {
+        let main = dst.len() / 4 * 4;
+        let pos = _mm_set1_ps(threshold);
+        let neg = _mm_set1_ps(-threshold);
+        let dp = dst.as_mut_ptr();
+        let mut i = 0;
+        while i < main {
+            _mm_storeu_ps(dp.add(i), dequant4_sse2(packed[i / 4], pos, neg));
+            i += 4;
+        }
+        scalar::copy_dequant(&mut dst[main..], threshold, &packed[main / 4..]);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_sse2`].
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn add_assign_dequant_sse2(acc: &mut [f32], threshold: f32, packed: &[u8]) {
+        let main = acc.len() / 4 * 4;
+        let pos = _mm_set1_ps(threshold);
+        let neg = _mm_set1_ps(-threshold);
+        let ap = acc.as_mut_ptr();
+        let mut i = 0;
+        while i < main {
+            let a = _mm_loadu_ps(ap.add(i));
+            let d = dequant4_sse2(packed[i / 4], pos, neg);
+            _mm_storeu_ps(ap.add(i), _mm_add_ps(a, d));
+            i += 4;
+        }
+        scalar::add_assign_dequant(&mut acc[main..], threshold, &packed[main / 4..]);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_sse2`].
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn sgd_step_scaled_sse2(params: &mut [f32], grad_sum: &[f32], inv_n: f32, lr: f32) {
+        let main = params.len() / 4 * 4;
+        let inv = _mm_set1_ps(inv_n);
+        let lrv = _mm_set1_ps(lr);
+        let pp = params.as_mut_ptr();
+        let sp = grad_sum.as_ptr();
+        let mut i = 0;
+        while i < main {
+            let g = _mm_mul_ps(_mm_loadu_ps(sp.add(i)), inv);
+            let p = _mm_loadu_ps(pp.add(i));
+            _mm_storeu_ps(pp.add(i), _mm_sub_ps(p, _mm_mul_ps(lrv, g)));
+            i += 4;
+        }
+        scalar::sgd_step_scaled(&mut params[main..], &grad_sum[main..], inv_n, lr);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_sse2`].
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn nesterov_step_scaled_sse2(
+        params: &mut [f32],
+        state: &mut [f32],
+        grad_sum: &[f32],
+        inv_n: f32,
+        lr: f32,
+        mu: f32,
+    ) {
+        let main = params.len() / 4 * 4;
+        let inv = _mm_set1_ps(inv_n);
+        let lrv = _mm_set1_ps(lr);
+        let muv = _mm_set1_ps(mu);
+        let pp = params.as_mut_ptr();
+        let mp = state.as_mut_ptr();
+        let sp = grad_sum.as_ptr();
+        let mut i = 0;
+        while i < main {
+            let g = _mm_mul_ps(_mm_loadu_ps(sp.add(i)), inv);
+            let m = _mm_add_ps(_mm_mul_ps(muv, _mm_loadu_ps(mp.add(i))), g);
+            _mm_storeu_ps(mp.add(i), m);
+            let t = _mm_add_ps(g, _mm_mul_ps(muv, m));
+            let p = _mm_loadu_ps(pp.add(i));
+            _mm_storeu_ps(pp.add(i), _mm_sub_ps(p, _mm_mul_ps(lrv, t)));
+            i += 4;
+        }
+        scalar::nesterov_step_scaled(
+            &mut params[main..],
+            &mut state[main..],
+            &grad_sum[main..],
+            inv_n,
+            lr,
+            mu,
+        );
+    }
+
+    // ---- AVX2 (8 lanes; runtime-detected) ----
+
+    /// # Safety
+    /// Caller must have proven AVX2 support
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_f32s_le_avx2(dst: &mut [f32], le_bytes: &[u8]) {
+        let main = dst.len() / 8 * 8;
+        let dp = dst.as_mut_ptr();
+        let sp = le_bytes.as_ptr();
+        let mut i = 0;
+        while i < main {
+            _mm256_storeu_ps(dp.add(i), _mm256_loadu_ps(sp.add(i * 4) as *const f32));
+            i += 8;
+        }
+        scalar::copy_f32s_le(&mut dst[main..], &le_bytes[main * 4..]);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_le_avx2(acc: &mut [f32], le_bytes: &[u8]) {
+        let main = acc.len() / 8 * 8;
+        let ap = acc.as_mut_ptr();
+        let sp = le_bytes.as_ptr();
+        let mut i = 0;
+        while i < main {
+            let a = _mm256_loadu_ps(ap.add(i));
+            let s = _mm256_loadu_ps(sp.add(i * 4) as *const f32);
+            _mm256_storeu_ps(ap.add(i), _mm256_add_ps(a, s));
+            i += 8;
+        }
+        scalar::add_assign_le(&mut acc[main..], &le_bytes[main * 4..]);
+    }
+
+    /// Decode two packed bytes (8 2-bit codes) into an 8-lane level
+    /// vector: broadcast the 16 code bits, shift each lane by its own
+    /// offset (AVX2 variable shift), mask to 2 bits, then select ±t via
+    /// integer-compare masks.
+    ///
+    /// # Safety
+    /// As [`copy_f32s_le_avx2`].
+    #[target_feature(enable = "avx2")]
+    unsafe fn dequant8_avx2(lo: u8, hi: u8, pos: __m256, neg: __m256) -> __m256 {
+        let bits = u16::from_le_bytes([lo, hi]) as i32;
+        let shifts = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+        let codes = _mm256_and_si256(
+            _mm256_srlv_epi32(_mm256_set1_epi32(bits), shifts),
+            _mm256_set1_epi32(3),
+        );
+        let m1 = _mm256_castsi256_ps(_mm256_cmpeq_epi32(codes, _mm256_set1_epi32(1)));
+        let m2 = _mm256_castsi256_ps(_mm256_cmpeq_epi32(codes, _mm256_set1_epi32(2)));
+        _mm256_or_ps(_mm256_and_ps(m1, pos), _mm256_and_ps(m2, neg))
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_dequant_avx2(dst: &mut [f32], threshold: f32, packed: &[u8]) {
+        let main = dst.len() / 8 * 8;
+        let pos = _mm256_set1_ps(threshold);
+        let neg = _mm256_set1_ps(-threshold);
+        let dp = dst.as_mut_ptr();
+        let mut i = 0;
+        while i < main {
+            let d = dequant8_avx2(packed[i / 4], packed[i / 4 + 1], pos, neg);
+            _mm256_storeu_ps(dp.add(i), d);
+            i += 8;
+        }
+        scalar::copy_dequant(&mut dst[main..], threshold, &packed[main / 4..]);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_dequant_avx2(acc: &mut [f32], threshold: f32, packed: &[u8]) {
+        let main = acc.len() / 8 * 8;
+        let pos = _mm256_set1_ps(threshold);
+        let neg = _mm256_set1_ps(-threshold);
+        let ap = acc.as_mut_ptr();
+        let mut i = 0;
+        while i < main {
+            let a = _mm256_loadu_ps(ap.add(i));
+            let d = dequant8_avx2(packed[i / 4], packed[i / 4 + 1], pos, neg);
+            _mm256_storeu_ps(ap.add(i), _mm256_add_ps(a, d));
+            i += 8;
+        }
+        scalar::add_assign_dequant(&mut acc[main..], threshold, &packed[main / 4..]);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_step_scaled_avx2(params: &mut [f32], grad_sum: &[f32], inv_n: f32, lr: f32) {
+        let main = params.len() / 8 * 8;
+        let inv = _mm256_set1_ps(inv_n);
+        let lrv = _mm256_set1_ps(lr);
+        let pp = params.as_mut_ptr();
+        let sp = grad_sum.as_ptr();
+        let mut i = 0;
+        while i < main {
+            let g = _mm256_mul_ps(_mm256_loadu_ps(sp.add(i)), inv);
+            let p = _mm256_loadu_ps(pp.add(i));
+            _mm256_storeu_ps(pp.add(i), _mm256_sub_ps(p, _mm256_mul_ps(lrv, g)));
+            i += 8;
+        }
+        scalar::sgd_step_scaled(&mut params[main..], &grad_sum[main..], inv_n, lr);
+    }
+
+    /// # Safety
+    /// As [`copy_f32s_le_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nesterov_step_scaled_avx2(
+        params: &mut [f32],
+        state: &mut [f32],
+        grad_sum: &[f32],
+        inv_n: f32,
+        lr: f32,
+        mu: f32,
+    ) {
+        let main = params.len() / 8 * 8;
+        let inv = _mm256_set1_ps(inv_n);
+        let lrv = _mm256_set1_ps(lr);
+        let muv = _mm256_set1_ps(mu);
+        let pp = params.as_mut_ptr();
+        let mp = state.as_mut_ptr();
+        let sp = grad_sum.as_ptr();
+        let mut i = 0;
+        while i < main {
+            let g = _mm256_mul_ps(_mm256_loadu_ps(sp.add(i)), inv);
+            let m = _mm256_add_ps(_mm256_mul_ps(muv, _mm256_loadu_ps(mp.add(i))), g);
+            _mm256_storeu_ps(mp.add(i), m);
+            let t = _mm256_add_ps(g, _mm256_mul_ps(muv, m));
+            let p = _mm256_loadu_ps(pp.add(i));
+            _mm256_storeu_ps(pp.add(i), _mm256_sub_ps(p, _mm256_mul_ps(lrv, t)));
+            i += 8;
+        }
+        scalar::nesterov_step_scaled(
+            &mut params[main..],
+            &mut state[main..],
+            &grad_sum[main..],
+            inv_n,
+            lr,
+            mu,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_and_u8_roundtrip() {
+        for t in [KernelTier::Scalar, KernelTier::Sse2, KernelTier::Avx2] {
+            assert_eq!(KernelTier::from_u8(t as u8), Some(t));
+        }
+        assert_eq!(KernelTier::from_u8(3), None);
+        assert_eq!(KernelTier::from_u8(TIER_UNRESOLVED), None);
+        assert_eq!(KernelTier::Scalar.name(), "scalar");
+        assert_eq!(KernelTier::Sse2.name(), "sse2");
+        assert_eq!(KernelTier::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn resolve_honors_available_override_and_rejects_junk() {
+        // A requested-and-available tier wins.
+        assert_eq!(resolve(Some("scalar")), KernelTier::Scalar);
+        assert_eq!(resolve(Some("SCALAR")), KernelTier::Scalar);
+        for t in available_tiers() {
+            assert_eq!(resolve(Some(t.name())), t);
+        }
+        // Unset, unknown, or unavailable requests fall back to detection.
+        let best = resolve(None);
+        assert!(tier_available(best));
+        assert_eq!(resolve(Some("avx512")), best);
+        assert_eq!(resolve(Some("")), best);
+        if !tier_available(KernelTier::Avx2) {
+            assert_eq!(resolve(Some("avx2")), best);
+        }
+    }
+
+    #[test]
+    fn active_tier_is_cached_and_available() {
+        let t = active_tier();
+        assert!(tier_available(t));
+        assert_eq!(active_tier(), t);
+        assert_eq!(
+            KernelTier::from_u8(ACTIVE_TIER.load(Ordering::Relaxed)),
+            Some(t)
+        );
+    }
+
+    #[test]
+    fn scalar_tier_always_listed_first() {
+        let tiers = available_tiers();
+        assert_eq!(tiers[0], KernelTier::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        assert!(tiers.contains(&KernelTier::Sse2), "sse2 is x86_64 baseline");
+    }
+
+    /// Fixed-vector smoke test of every kernel on every available tier
+    /// (the exhaustive bit-pattern comparison lives in
+    /// `tests/prop_coordinator.rs`).
+    #[test]
+    fn all_tiers_agree_on_fixed_vectors() {
+        let n = 21; // exercises the 8-lane and 4-lane remainders
+        let src: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin() * 3.0).collect();
+        let bytes: Vec<u8> = src.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let packed: Vec<u8> = (0..n.div_ceil(4)).map(|i| (i as u8).wrapping_mul(0x39)).collect();
+        let base: Vec<f32> = (0..n).map(|i| i as f32 * 0.1 - 1.0).collect();
+        for tier in available_tiers() {
+            let mut want = vec![0.0f32; n];
+            copy_f32s_le_tier(KernelTier::Scalar, &mut want, &bytes);
+            let mut got = vec![0.0f32; n];
+            copy_f32s_le_tier(tier, &mut got, &bytes);
+            assert_eq!(want, got, "copy {tier:?}");
+
+            let mut want = base.clone();
+            add_assign_le_tier(KernelTier::Scalar, &mut want, &bytes);
+            let mut got = base.clone();
+            add_assign_le_tier(tier, &mut got, &bytes);
+            assert_eq!(want, got, "absorb {tier:?}");
+
+            let mut want = vec![0.0f32; n];
+            copy_dequant_tier(KernelTier::Scalar, &mut want, 0.5, &packed);
+            let mut got = vec![0.0f32; n];
+            copy_dequant_tier(tier, &mut got, 0.5, &packed);
+            assert_eq!(want, got, "dequant copy {tier:?}");
+
+            let mut want = base.clone();
+            add_assign_dequant_tier(KernelTier::Scalar, &mut want, 0.5, &packed);
+            let mut got = base.clone();
+            add_assign_dequant_tier(tier, &mut got, 0.5, &packed);
+            assert_eq!(want, got, "dequant absorb {tier:?}");
+
+            let mut want = base.clone();
+            sgd_step_scaled_tier(KernelTier::Scalar, &mut want, &src, 0.25, 0.1);
+            let mut got = base.clone();
+            sgd_step_scaled_tier(tier, &mut got, &src, 0.25, 0.1);
+            assert_eq!(want, got, "sgd {tier:?}");
+
+            let (mut wp, mut wm) = (base.clone(), src.clone());
+            nesterov_step_scaled_tier(KernelTier::Scalar, &mut wp, &mut wm, &src, 0.25, 0.1, 0.9);
+            let (mut gp, mut gm) = (base.clone(), src.clone());
+            nesterov_step_scaled_tier(tier, &mut gp, &mut gm, &src, 0.25, 0.1, 0.9);
+            assert_eq!(wp, gp, "nesterov params {tier:?}");
+            assert_eq!(wm, gm, "nesterov momentum {tier:?}");
+        }
+    }
+
+    /// The 2-bit decode mapping itself, per tier: each of the four codes
+    /// lands the right level, including the reserved 0b11 → 0.
+    #[test]
+    fn dequant_code_mapping_per_tier() {
+        let t = 0.75f32;
+        // Codes [1, 2, 0, 3, 1, 2, 0, 3, 1] over three packed bytes.
+        let packed = [0b11_00_10_01u8, 0b11_00_10_01, 0b01];
+        let want = [t, -t, 0.0, 0.0, t, -t, 0.0, 0.0, t];
+        for tier in available_tiers() {
+            let mut got = [0.0f32; 9];
+            copy_dequant_tier(tier, &mut got, t, &packed);
+            assert_eq!(got, want, "{tier:?}");
+        }
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn unavailable_tier_is_a_panic_not_ub() {
+        if !tier_available(KernelTier::Avx2) {
+            let r = std::panic::catch_unwind(|| {
+                let mut d = [0.0f32; 4];
+                copy_f32s_le_tier(KernelTier::Avx2, &mut d, &[0u8; 16]);
+            });
+            assert!(r.is_err());
+        }
+    }
+}

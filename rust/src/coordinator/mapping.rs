@@ -2,9 +2,28 @@
 //!
 //! PHub computes all placement at initialization time: keys are sharded
 //! across PS processes, and chunks are bound to a (queue pair, completion
-//! queue, core, NUMA domain) tuple that never changes during training. The
-//! balancer is LPT (longest-processing-time-first greedy), the classic
-//! 4/3-approximation for minimum-makespan partitioning the paper cites.
+//! queue, core, NUMA domain) tuple that never changes during training.
+//! Two chunk→core balancers live here:
+//!
+//! * [`lpt_partition`] — LPT (longest-processing-time-first greedy), the
+//!   classic 4/3-approximation for minimum-makespan partitioning the
+//!   paper cites. For the uniform chunks `KeyTable::flat` produces, LPT
+//!   degenerates to a round-robin scatter: neighboring chunks land on
+//!   different cores ([`PlacementMode::Interleave`]).
+//! * [`affine_partition`] — PHub's key-affinity scheme
+//!   ([`PlacementMode::Affine`], the default): each core owns one
+//!   *contiguous* run of chunks, i.e. one contiguous byte range of the
+//!   model ≈ `model_bytes / n_cores` wide. A core's accumulators,
+//!   parameters, and optimizer state then form a single contiguous
+//!   working set sized to its share of the last-level cache, instead of
+//!   being strided across the whole model; extent boundaries fall on
+//!   chunk boundaries, which are cache-line-aligned whenever the
+//!   chunking is a multiple of 16 f32s (every power-of-two
+//!   `chunk_elems`). The SPSC port fabric already delivers each frame
+//!   to the chunk's owning core directly (`core_of[chunk]` indexes the
+//!   per-(worker,core) request ring), so with affine placement a worker
+//!   connection's frames for one model region land on one core with no
+//!   cross-core handoff.
 
 /// Greedy LPT partition: assign each weighted item to the currently
 /// lightest bin, heaviest items first. Returns the bin index per item.
@@ -20,6 +39,91 @@ pub fn lpt_partition(weights: &[usize], n_bins: usize) -> Vec<usize> {
         let bin = (0..n_bins).min_by_key(|&b| (load[b], b)).unwrap();
         assign[i] = bin;
         load[bin] += weights[i];
+    }
+    assign
+}
+
+/// Environment variable overriding the default chunk→core placement
+/// (`affine` | `interleave`, case-insensitive).
+pub const ENV_PLACEMENT: &str = "PHUB_PLACEMENT";
+
+/// How `init_job` maps chunks onto aggregation cores. Discriminants are
+/// stable and mirrored in `DataPlaneMetrics::placement_mode`.
+///
+/// Either mode yields bit-identical training: a chunk is wholly owned by
+/// one core in both, so only locality changes (property-tested in
+/// `server.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PlacementMode {
+    /// [`lpt_partition`]: balanced scatter; neighboring chunks land on
+    /// different cores (the pre-affinity behavior).
+    Interleave = 0,
+    /// [`affine_partition`]: each core owns one contiguous byte range of
+    /// the model (PHub's key-affinity scheme; the default).
+    Affine = 1,
+}
+
+impl PlacementMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementMode::Interleave => "interleave",
+            PlacementMode::Affine => "affine",
+        }
+    }
+
+    /// Inverse of `mode as u8` (for metrics readers).
+    pub fn from_u8(v: u8) -> Option<PlacementMode> {
+        match v {
+            0 => Some(PlacementMode::Interleave),
+            1 => Some(PlacementMode::Affine),
+            _ => None,
+        }
+    }
+
+    /// The [`ENV_PLACEMENT`] override, or [`PlacementMode::Affine`] when
+    /// unset/unrecognized. Read once per `ServerConfig` construction
+    /// (init time), never on the data plane.
+    pub fn from_env() -> PlacementMode {
+        Self::parse_env(std::env::var(ENV_PLACEMENT).ok().as_deref())
+    }
+
+    fn parse_env(env: Option<&str>) -> PlacementMode {
+        match env.map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v == "interleave" => PlacementMode::Interleave,
+            Some(v) if v == "affine" => PlacementMode::Affine,
+            _ => PlacementMode::Affine,
+        }
+    }
+
+    /// Partition `weights` (chunk byte/element sizes) over `n_bins`
+    /// cores under this mode.
+    pub fn partition(self, weights: &[usize], n_bins: usize) -> Vec<usize> {
+        match self {
+            PlacementMode::Interleave => lpt_partition(weights, n_bins),
+            PlacementMode::Affine => affine_partition(weights, n_bins),
+        }
+    }
+}
+
+/// Contiguous-extent partition (PHub key affinity): assign each item to
+/// the bin its weight-midpoint falls into when the total weight is split
+/// into `n_bins` equal spans. Bin indices are non-decreasing over items,
+/// so every bin owns one contiguous extent, and each bin's load is
+/// within one item of the ideal `total / n_bins` share
+/// (load ≤ total/n_bins + max_weight; property-tested).
+pub fn affine_partition(weights: &[usize], n_bins: usize) -> Vec<usize> {
+    assert!(n_bins > 0);
+    let total: usize = weights.iter().sum();
+    if total == 0 {
+        return vec![0; weights.len()];
+    }
+    let mut assign = Vec::with_capacity(weights.len());
+    let mut before = 0usize;
+    for &w in weights {
+        let mid = before + w / 2;
+        assign.push((mid * n_bins / total).min(n_bins - 1));
+        before += w;
     }
     assign
 }
@@ -144,5 +248,78 @@ mod tests {
         assert_eq!(lpt_partition(&[5, 3], 1), vec![0, 0]);
         assert!(lpt_partition(&[], 4).is_empty());
         assert_eq!(makespan(&[], &[], 4), 0);
+        assert_eq!(affine_partition(&[5, 3], 1), vec![0, 0]);
+        assert!(affine_partition(&[], 4).is_empty());
+        assert_eq!(affine_partition(&[0, 0], 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn affine_uniform_chunks_split_evenly_and_contiguously() {
+        let w = vec![4096usize; 64];
+        let a = affine_partition(&w, 4);
+        // Non-decreasing (contiguous extents) and exactly 16 chunks each.
+        assert!(a.windows(2).all(|p| p[0] <= p[1]), "{a:?}");
+        for b in 0..4 {
+            assert_eq!(a.iter().filter(|&&x| x == b).count(), 16, "{a:?}");
+        }
+        // First and last chunks pin the extreme cores.
+        assert_eq!(a[0], 0);
+        assert_eq!(a[63], 3);
+    }
+
+    #[test]
+    fn affine_is_contiguous_and_balanced_for_ragged_weights() {
+        let w: Vec<usize> = (1..=47).map(|i| (i * 53) % 307 + 1).collect();
+        for bins in [1usize, 2, 3, 5, 8, 47, 64] {
+            let a = affine_partition(&w, bins);
+            assert!(a.iter().all(|&b| b < bins), "bins={bins} {a:?}");
+            assert!(a.windows(2).all(|p| p[0] <= p[1]), "bins={bins} {a:?}");
+            let total: usize = w.iter().sum();
+            let max_w = *w.iter().max().unwrap();
+            let ms = makespan(&w, &a, bins);
+            assert!(
+                ms <= total / bins + max_w,
+                "bins={bins} makespan {ms} vs share {} + max {max_w}",
+                total / bins
+            );
+        }
+    }
+
+    #[test]
+    fn affine_more_bins_than_items_uses_spread_bins() {
+        // 2 chunks over 8 bins: midpoints at 1/4 and 3/4 of the span.
+        assert_eq!(affine_partition(&[10, 10], 8), vec![2, 6]);
+    }
+
+    #[test]
+    fn placement_mode_env_parse_u8_roundtrip_and_partition() {
+        assert_eq!(PlacementMode::parse_env(None), PlacementMode::Affine);
+        assert_eq!(
+            PlacementMode::parse_env(Some("interleave")),
+            PlacementMode::Interleave
+        );
+        assert_eq!(
+            PlacementMode::parse_env(Some("AFFINE")),
+            PlacementMode::Affine
+        );
+        assert_eq!(
+            PlacementMode::parse_env(Some("modulo")),
+            PlacementMode::Affine
+        );
+        for m in [PlacementMode::Interleave, PlacementMode::Affine] {
+            assert_eq!(PlacementMode::from_u8(m as u8), Some(m));
+        }
+        assert_eq!(PlacementMode::from_u8(9), None);
+        assert_eq!(PlacementMode::Interleave.name(), "interleave");
+        assert_eq!(PlacementMode::Affine.name(), "affine");
+        let w = vec![8usize; 12];
+        assert_eq!(
+            PlacementMode::Affine.partition(&w, 3),
+            affine_partition(&w, 3)
+        );
+        assert_eq!(
+            PlacementMode::Interleave.partition(&w, 3),
+            lpt_partition(&w, 3)
+        );
     }
 }

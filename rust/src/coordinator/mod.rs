@@ -90,12 +90,31 @@
 //! heap allocations and mutex acquisitions, asserted with no exclusions
 //! by `rust/tests/alloc_discipline.rs` and measured by
 //! `benches/dataplane.rs` and `benches/ring.rs`.
+//!
+//! # Kernel dispatch and placement
+//!
+//! The absorb folds and fused optimizer passes execute as explicit SIMD
+//! in [`kernels`] (AVX2 / SSE2 / scalar, one tier selected per process —
+//! `PHUB_KERNELS` overrides detection), and chunk→core placement
+//! defaults to PHub's key-affinity scheme (contiguous per-core model
+//! extents — [`mapping::PlacementMode`], `PHUB_PLACEMENT` overrides).
+//! The contract, in addition to the ownership rules above:
+//!
+//! | rule | where enforced |
+//! |---|---|
+//! | Raw `unsafe` vector fns are private to `kernels`; everything else calls its safe dispatchers (directly or via the `aggregation`/`optimizer` wrappers) | `kernels.rs` visibility + the dispatchers' availability proof |
+//! | Every tier is bit-identical to scalar on arbitrary bit patterns (NaN/inf/denormals), dense, quantized, and both optimizers | `tests/prop_coordinator.rs` tier sweeps + `kernels.rs` unit tests, both arms in CI (forced-scalar lane) |
+//! | No alignment assumptions (unaligned vector memory ops only); wire bytes decode in place on little-endian x86_64 | `kernels.rs` contract table |
+//! | Tier resolution and placement both happen at init/warm-up; steady-state rounds stay exact-zero alloc/mutex | `alloc_discipline.rs`, `active_tier`'s cached atomic |
+//! | The selected tier and placement mode are observable | `DataPlaneMetrics::{kernel_tier, placement_mode}`, set by `PHubServer::start` |
+//! | Placement changes locality only, never results: either mode gives bit-identical training | `server.rs` placement tests |
 
 pub mod aggregation;
 pub mod chunk;
 pub mod compress;
 pub mod engine;
 pub mod hierarchy;
+pub mod kernels;
 pub mod mapping;
 pub mod optimizer;
 pub mod pool;
@@ -112,6 +131,8 @@ pub use engine::{
     EngineError, NodeRole, PushOutcome, Reply, ReplyRx, ReplyTx, RoundTag, ShardEngine,
     WorkerRound,
 };
+pub use kernels::KernelTier;
+pub use mapping::PlacementMode;
 pub use optimizer::{NesterovSgd, Optimizer, Sgd};
 pub use pool::{
     BytePool, F32Pool, Pool, Pooled, PooledBytes, PooledF32, SharedF32, SharedF32Pool, SharedPool,

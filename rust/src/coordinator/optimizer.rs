@@ -11,14 +11,17 @@
 //! it receives the raw gradient **sum** plus `1/n` and computes the mean
 //! inline, so finishing a round is one pass over the accumulator instead
 //! of a scale pass followed by an optimizer pass. Built-in impls override
-//! it with lane-chunked (8-wide) loops the autovectorizer can lift to
-//! SIMD; the default materializes the mean and delegates to `step`, so
-//! any external impl stays correct unchanged. `step_scaled` must be
-//! bit-identical to `scale(sum, 1/n)` followed by `step` — compute
-//! `g = sum[i] * inv_n` first (one f32 rounding, same as the unfused
-//! scale) and never reassociate it into the update arithmetic.
+//! it by delegating to the explicit SIMD kernels in [`super::kernels`]
+//! (AVX2/SSE2/scalar, selected once at startup, property-tested
+//! bit-identical across tiers); the default materializes the mean and
+//! delegates to `step`, so any external impl stays correct unchanged.
+//! `step_scaled` must be bit-identical to `scale(sum, 1/n)` followed by
+//! `step` — compute `g = sum[i] * inv_n` first (one f32 rounding, same
+//! as the unfused scale) and never reassociate it into the update
+//! arithmetic; the kernels preserve exactly this evaluation order.
 
-/// Lane width of the fused update loops (mirrors `aggregation::LANES`).
+/// Lane width of the unfused `step` loops (mirrors `aggregation::LANES`).
+/// The fused `step_scaled` hot paths dispatch through `kernels` instead.
 const LANES: usize = 8;
 
 /// A chunk-granular optimizer.
@@ -73,19 +76,7 @@ impl Optimizer for Sgd {
 
     fn step_scaled(&self, params: &mut [f32], _state: &mut [f32], grad_sum: &[f32], inv_n: f32) {
         debug_assert_eq!(params.len(), grad_sum.len());
-        let lr = self.lr;
-        let mut p = params.chunks_exact_mut(LANES);
-        let mut s = grad_sum.chunks_exact(LANES);
-        for (pp, ss) in (&mut p).zip(&mut s) {
-            for i in 0..LANES {
-                let g = ss[i] * inv_n;
-                pp[i] -= lr * g;
-            }
-        }
-        for (pp, ss) in p.into_remainder().iter_mut().zip(s.remainder()) {
-            let g = ss * inv_n;
-            *pp -= lr * g;
-        }
+        super::kernels::sgd_step_scaled(params, grad_sum, inv_n, self.lr);
     }
 
     fn name(&self) -> &'static str {
@@ -143,29 +134,14 @@ impl Optimizer for NesterovSgd {
     fn step_scaled(&self, params: &mut [f32], state: &mut [f32], grad_sum: &[f32], inv_n: f32) {
         debug_assert_eq!(params.len(), grad_sum.len());
         debug_assert_eq!(state.len(), grad_sum.len());
-        let (lr, mu) = (self.lr, self.momentum);
-        let mut p = params.chunks_exact_mut(LANES);
-        let mut st = state.chunks_exact_mut(LANES);
-        let mut s = grad_sum.chunks_exact(LANES);
-        for ((pp, mm), ss) in (&mut p).zip(&mut st).zip(&mut s) {
-            for i in 0..LANES {
-                let g = ss[i] * inv_n;
-                let m = mu * mm[i] + g;
-                mm[i] = m;
-                pp[i] -= lr * (g + mu * m);
-            }
-        }
-        for ((pp, mm), ss) in p
-            .into_remainder()
-            .iter_mut()
-            .zip(st.into_remainder().iter_mut())
-            .zip(s.remainder())
-        {
-            let g = ss * inv_n;
-            let m = mu * *mm + g;
-            *mm = m;
-            *pp -= lr * (g + mu * m);
-        }
+        super::kernels::nesterov_step_scaled(
+            params,
+            state,
+            grad_sum,
+            inv_n,
+            self.lr,
+            self.momentum,
+        );
     }
 
     fn name(&self) -> &'static str {

@@ -239,7 +239,7 @@ mod tests {
     use crate::coordinator::server::ServerConfig;
 
     fn setup() -> Arc<ConnectionManager> {
-        ConnectionManager::new(PHubServer::start(ServerConfig { n_cores: 2 }))
+        ConnectionManager::new(PHubServer::start(ServerConfig::cores(2)))
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub fn run_concurrent_jobs(
     rounds: usize,
 ) -> TenancyResult {
     assert!(jobs >= 1 && workers >= 1 && rounds >= 1);
-    let server = PHubServer::start(ServerConfig { n_cores });
+    let server = PHubServer::start(ServerConfig::cores(n_cores));
     let cm = ConnectionManager::new(server.clone());
 
     let mut handles_per_job = Vec::new();
@@ -112,7 +112,7 @@ mod tests {
     /// cores: rollback is per-job state, not per-core state.
     #[test]
     fn rollback_in_one_tenant_leaves_others_untouched() {
-        let server = PHubServer::start(ServerConfig { n_cores: 2 });
+        let server = PHubServer::start(ServerConfig::cores(2));
         let cm = ConnectionManager::new(server.clone());
         let opt = || {
             Arc::new(NesterovSgd {

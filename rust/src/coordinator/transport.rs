@@ -1386,7 +1386,7 @@ mod tests {
 
     #[test]
     fn two_workers_over_tcp_match_reference() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
         let addr = leader.local_addr();
         let n = 256usize;
         let s = spec(n as u64, 2);
@@ -1431,7 +1431,7 @@ mod tests {
     /// current-protocol tenants afterwards.
     #[test]
     fn retired_protocols_rejected_with_clear_error() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         for retired in [wire::PROTO_MONOLITHIC, wire::PROTO_CHUNK_STREAMED] {
             let err = match TcpWorker::connect_with_proto(addr, 5, spec(64, 1), retired) {
@@ -1456,7 +1456,7 @@ mod tests {
 
     #[test]
     fn quantized_path_tracks_dense_within_threshold() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         let n = 128usize;
         let rounds = 20usize;
@@ -1479,7 +1479,7 @@ mod tests {
 
     #[test]
     fn two_jobs_isolated_over_tcp() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         let mut wa = TcpWorker::connect(addr, 10, spec(64, 1)).unwrap();
         let mut wb = TcpWorker::connect(addr, 11, spec(64, 1)).unwrap();
@@ -1494,7 +1494,7 @@ mod tests {
         // Failure injection: a worker vanishes without Bye. The leader
         // must keep serving other jobs AND release the dead worker's slot
         // so the job can still reach N/N after a reconnect.
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         {
             let w = TcpWorker::connect(addr, 20, spec(64, 2)).unwrap();
@@ -1540,7 +1540,7 @@ mod tests {
 
     #[test]
     fn malformed_payload_drops_connection_not_leader() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         // Raw connection sending a garbage Hello payload.
         raw_hello_expect_drop(addr, 30, vec![1, 2, 3]); // too short for a JobSpec
@@ -1557,7 +1557,7 @@ mod tests {
     /// killing the leader for every subsequent tenant.
     #[test]
     fn hostile_hello_never_poisons_the_jobs_mutex() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         let hostile = [
             spec(64, 0),                      // zero workers
@@ -1591,7 +1591,7 @@ mod tests {
     /// down aggregation for every job on that core).
     #[test]
     fn duplicate_chunk_frame_drops_connection_not_cores() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         {
             let stream = TcpStream::connect(addr).unwrap();
@@ -1641,7 +1641,7 @@ mod tests {
     /// behavior: the slot was consumed forever and the job wedged.)
     #[test]
     fn mid_round_disconnect_rolls_back_and_recycles_the_slot() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         {
             let stream = TcpStream::connect(addr).unwrap();
@@ -1721,7 +1721,7 @@ mod tests {
     /// fresh job ids cannot mint unbounded server state.
     #[test]
     fn job_cap_rejects_excess_jobs() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         let mut keep = Vec::new();
         for j in 0..MAX_JOBS as u32 {
@@ -1738,7 +1738,7 @@ mod tests {
 
     #[test]
     fn oversubscribed_job_rejected() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 1 }).unwrap();
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         let _w0 = TcpWorker::connect(addr, 3, spec(64, 1)).unwrap();
         // Second worker for a 1-worker job: server drops the connection.

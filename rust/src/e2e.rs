@@ -85,7 +85,7 @@ pub fn train(
     anyhow::ensure!(init.len() == man.padded_size, "params_init length");
 
     // PS setup via the paper's service API.
-    let server = PHubServer::start(ServerConfig { n_cores: cores });
+    let server = PHubServer::start(ServerConfig::cores(cores));
     let cm = ConnectionManager::new(server.clone());
     let svc = cm.create_service("e2e", workers).expect("namespace");
     let keys: Vec<(String, usize)> = man.keys.iter().map(|(n, _, l)| (n.clone(), *l)).collect();

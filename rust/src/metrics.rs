@@ -1,7 +1,7 @@
 //! Lightweight metrics: counters and duration histograms for the live
 //! server, examples, and benches. Lock-free counters; fixed log2 buckets.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -21,6 +21,30 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A set-once configuration gauge: a small u8-encoded enum recorded at
+/// startup (e.g. which SIMD tier or placement mode a server selected) so
+/// operators and tests can assert which path actually ran. The encoding
+/// is defined by the writer — see
+/// `coordinator::kernels::KernelTier::from_u8` and
+/// `coordinator::mapping::PlacementMode::from_u8`; this module stays a
+/// plain u8 cell to avoid a metrics→coordinator dependency.
+#[derive(Debug, Default)]
+pub struct Setting(AtomicU8);
+
+impl Setting {
+    pub const fn new() -> Self {
+        Setting(AtomicU8::new(0))
+    }
+
+    pub fn set(&self, v: u8) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u8 {
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -47,6 +71,14 @@ pub struct DataPlaneMetrics {
     /// `RollbackRound` control messages processed by cores (mid-round
     /// recovery events × cores).
     pub rollbacks: Counter,
+    /// The SIMD kernel tier this server's cores dispatch to —
+    /// `coordinator::kernels::KernelTier as u8`
+    /// (0 scalar, 1 SSE2, 2 AVX2). Set once by `PHubServer::start`.
+    pub kernel_tier: Setting,
+    /// The chunk→core placement mode —
+    /// `coordinator::mapping::PlacementMode as u8`
+    /// (0 interleave, 1 affine). Set once by `PHubServer::start`.
+    pub placement_mode: Setting,
 }
 
 /// Power-of-two bucketed latency histogram (nanoseconds, 48 buckets:
@@ -125,6 +157,18 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn setting_basics() {
+        let s = Setting::new();
+        assert_eq!(s.get(), 0);
+        s.set(2);
+        assert_eq!(s.get(), 2);
+        s.set(1);
+        assert_eq!(s.get(), 1);
+        // Default matches new (DataPlaneMetrics derives Default).
+        assert_eq!(Setting::default().get(), 0);
     }
 
     #[test]

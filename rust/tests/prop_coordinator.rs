@@ -7,6 +7,7 @@ use phub::coordinator::aggregation::ChunkAggregator;
 use phub::coordinator::chunk::KeyTable;
 use phub::coordinator::compress::{ChunkQuantizer, QuantGrad};
 use phub::coordinator::engine::{Reply, RoundTag};
+use phub::coordinator::kernels;
 use phub::coordinator::mapping;
 use phub::coordinator::optimizer::{NesterovSgd, Optimizer, Sgd};
 use phub::coordinator::pool::{BytePool, Pool};
@@ -266,7 +267,7 @@ fn prop_server_matches_sequential() {
             .collect();
 
         // Server path.
-        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let server = PHubServer::start(ServerConfig::cores(cores));
         let opt = NesterovSgd { lr, momentum: mu };
         let job = server.init_job(
             KeyTable::flat(elems, chunk),
@@ -474,7 +475,7 @@ fn prop_chunk_streaming_matches_monolithic() {
         let n = rng.usize_in(4, 600);
         let chunk = rng.usize_in(1, n + 1);
         let cores = rng.usize_in(1, 5);
-        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let server = PHubServer::start(ServerConfig::cores(cores));
         let init = rng.vec_f32(n, 1.0);
         let opt = NesterovSgd {
             lr: 0.1,
@@ -591,7 +592,7 @@ fn prop_rollback_replay_bit_identical() {
         let elems = rng.usize_in(1, 30) * 8;
         let chunk = [4usize, 8, 16, 64][rng.usize_in(0, 4)].min(elems);
         let cores = rng.usize_in(1, 5);
-        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let server = PHubServer::start(ServerConfig::cores(cores));
         let init = rng.vec_f32(elems, 1.0);
         let opt = NesterovSgd {
             lr: 0.05 + rng.f64() as f32 * 0.2,
@@ -752,9 +753,7 @@ fn prop_two_level_bit_identical_to_flat() {
             };
 
             // Flat reference: one leader, all leaves direct.
-            let flat_srv = PHubServer::start(ServerConfig {
-                n_cores: rng.usize_in(1, 4),
-            });
+            let flat_srv = PHubServer::start(ServerConfig::cores(rng.usize_in(1, 4)));
             let jf = flat_srv.init_job(table(), &init, Arc::new(opt.clone()), leaves);
             let mut hf: Vec<_> = (0..leaves).map(|s| flat_srv.worker(jf, s)).collect();
             let mut flat_model = Vec::new();
@@ -775,9 +774,7 @@ fn prop_two_level_bit_identical_to_flat() {
 
             // Two-level: one relay server per rack, raw sums pumped into
             // a root whose per-rack weights are the rack sizes.
-            let root_srv = PHubServer::start(ServerConfig {
-                n_cores: rng.usize_in(1, 4),
-            });
+            let root_srv = PHubServer::start(ServerConfig::cores(rng.usize_in(1, 4)));
             let jr = root_srv.init_job(table(), &init, Arc::new(opt.clone()), racks);
             for ri in 0..racks {
                 root_srv.set_worker_weight(jr, ri as u32, k as u32);
@@ -786,9 +783,7 @@ fn prop_two_level_bit_identical_to_flat() {
             let mut pumps = Vec::new();
             let mut rack_handles: Vec<Vec<WorkerHandle>> = Vec::new();
             for ri in 0..racks {
-                let srv = PHubServer::start(ServerConfig {
-                    n_cores: rng.usize_in(1, 4),
-                });
+                let srv = PHubServer::start(ServerConfig::cores(rng.usize_in(1, 4)));
                 let (job, mut up) =
                     srv.init_relay_job(table(), &init, Arc::new(opt.clone()), k);
                 rack_handles.push((0..k).map(|w| srv.worker(job, w)).collect());
@@ -876,7 +871,7 @@ fn prop_rollback_replay_quantized_error_feedback() {
         let chunk = [4usize, 8, 32][rng.usize_in(0, 3)].min(elems);
         let cores = rng.usize_in(1, 4);
         let threshold = 0.02 + rng.f64() as f32 * 0.1;
-        let server = PHubServer::start(ServerConfig { n_cores: cores });
+        let server = PHubServer::start(ServerConfig::cores(cores));
         let init = rng.vec_f32(elems, 0.5);
         let opt = NesterovSgd {
             lr: 0.1,
@@ -965,6 +960,207 @@ fn prop_rollback_replay_quantized_error_feedback() {
             }
         }
         PHubServer::shutdown(server);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// SIMD kernel bit-identity (see kernels.rs's dispatch contract): every
+// available tier must match the scalar reference bit-for-bit on
+// *arbitrary* input bit patterns — NaN payloads, infinities, and
+// subnormals included — for the dense fold, the copy, the fused 2-bit
+// dequantize paths, and both fused optimizers. The CI matrix runs these
+// twice: once with native dispatch (AVX2 on hosted runners) and once
+// under PHUB_KERNELS=scalar, so both dispatch arms stay proven.
+// ---------------------------------------------------------------------
+
+/// `tier_result == scalar_result`, compared as bit vectors.
+fn bits_match(
+    name: &str,
+    tier: kernels::KernelTier,
+    want: &[f32],
+    got: &[f32],
+) -> Result<(), String> {
+    let w: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+    let g: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+    if w != g {
+        return Err(format!(
+            "{name} on {tier:?} diverged from scalar (len {})",
+            want.len()
+        ));
+    }
+    Ok(())
+}
+
+/// Dense kernels: copy-on-first-arrival and the LE-byte absorb fold.
+#[test]
+fn prop_simd_dense_kernels_bit_identical_to_scalar() {
+    use kernels::KernelTier;
+    let tiers = kernels::available_tiers();
+    check("simd dense kernels == scalar", 200, |rng: &mut Rng| {
+        // Lengths crossing both the 4-lane and 8-lane remainders.
+        let len = rng.usize_in(1, 120);
+        let bytes: Vec<u8> = (0..len * 4).map(|_| rng.next_u64() as u8).collect();
+        let acc0: Vec<f32> = (0..len).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        for &tier in &tiers {
+            let mut want = vec![0.0f32; len];
+            kernels::copy_f32s_le_tier(KernelTier::Scalar, &mut want, &bytes);
+            let mut got = vec![0.0f32; len];
+            kernels::copy_f32s_le_tier(tier, &mut got, &bytes);
+            bits_match("copy_f32s_le", tier, &want, &got)?;
+
+            let mut want = acc0.clone();
+            kernels::add_assign_le_tier(KernelTier::Scalar, &mut want, &bytes);
+            let mut got = acc0.clone();
+            kernels::add_assign_le_tier(tier, &mut got, &bytes);
+            bits_match("add_assign_le", tier, &want, &got)?;
+        }
+        Ok(())
+    });
+}
+
+/// Quantized kernels: fused dequantize-copy and dequantize-absorb, with
+/// arbitrary packed codes (invalid 0b11 included) and an arbitrary
+/// threshold *bit pattern* — the mask-select decode must pass NaN and
+/// negative-zero thresholds through untouched, exactly like the scalar
+/// match.
+#[test]
+fn prop_simd_quant_kernels_bit_identical_to_scalar() {
+    use kernels::KernelTier;
+    let tiers = kernels::available_tiers();
+    check("simd quant kernels == scalar", 200, |rng: &mut Rng| {
+        let len = rng.usize_in(1, 120);
+        let packed: Vec<u8> = (0..len.div_ceil(4)).map(|_| rng.next_u64() as u8).collect();
+        let threshold = f32::from_bits(rng.next_u64() as u32);
+        let acc0: Vec<f32> = (0..len).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        for &tier in &tiers {
+            let mut want = vec![0.0f32; len];
+            kernels::copy_dequant_tier(KernelTier::Scalar, &mut want, threshold, &packed);
+            let mut got = vec![0.0f32; len];
+            kernels::copy_dequant_tier(tier, &mut got, threshold, &packed);
+            bits_match("copy_dequant", tier, &want, &got)?;
+
+            let mut want = acc0.clone();
+            kernels::add_assign_dequant_tier(KernelTier::Scalar, &mut want, threshold, &packed);
+            let mut got = acc0.clone();
+            kernels::add_assign_dequant_tier(tier, &mut got, threshold, &packed);
+            bits_match("add_assign_dequant", tier, &want, &got)?;
+        }
+        Ok(())
+    });
+}
+
+/// Fused optimizer kernels: mean+SGD and mean+Nesterov, with arbitrary
+/// bit patterns for parameters, momentum state, and the gradient sum
+/// (finite hyperparameters, as real configs have).
+#[test]
+fn prop_simd_optimizer_kernels_bit_identical_to_scalar() {
+    use kernels::KernelTier;
+    let tiers = kernels::available_tiers();
+    check("simd optimizer kernels == scalar", 200, |rng: &mut Rng| {
+        let len = rng.usize_in(1, 120);
+        let raw = |rng: &mut Rng| -> Vec<f32> {
+            (0..len).map(|_| f32::from_bits(rng.next_u64() as u32)).collect()
+        };
+        let sum = raw(rng);
+        let params0 = raw(rng);
+        let state0 = raw(rng);
+        let inv_n = 1.0f32 / rng.usize_in(1, 64) as f32;
+        let lr = rng.f32_sym(2.0);
+        let mu = rng.f32_sym(1.0);
+        for &tier in &tiers {
+            let mut want = params0.clone();
+            kernels::sgd_step_scaled_tier(KernelTier::Scalar, &mut want, &sum, inv_n, lr);
+            let mut got = params0.clone();
+            kernels::sgd_step_scaled_tier(tier, &mut got, &sum, inv_n, lr);
+            bits_match("sgd_step_scaled", tier, &want, &got)?;
+
+            let (mut wp, mut wm) = (params0.clone(), state0.clone());
+            kernels::nesterov_step_scaled_tier(
+                KernelTier::Scalar,
+                &mut wp,
+                &mut wm,
+                &sum,
+                inv_n,
+                lr,
+                mu,
+            );
+            let (mut gp, mut gm) = (params0.clone(), state0.clone());
+            kernels::nesterov_step_scaled_tier(tier, &mut gp, &mut gm, &sum, inv_n, lr, mu);
+            bits_match("nesterov params", tier, &wp, &gp)?;
+            bits_match("nesterov momentum", tier, &wm, &gm)?;
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a full aggregation round (absorb folds + fused optimizer)
+/// through the *dispatched* path equals the forced-scalar tier composed
+/// by hand — the wrappers in aggregation.rs/optimizer.rs delegate to the
+/// same kernels the property tests above prove, so whatever tier the
+/// host machine selects, rounds are bit-identical to scalar.
+#[test]
+fn prop_dispatched_round_bit_identical_to_scalar_tier() {
+    use kernels::KernelTier;
+    check("dispatched round == scalar tier", 100, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 5);
+        let len = rng.usize_in(1, 80);
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..len * 4).map(|_| rng.next_u64() as u8).collect())
+            .collect();
+        let lr = 0.1f32;
+
+        // Dispatched path: ChunkAggregator + Sgd::step_scaled.
+        let mut agg = ChunkAggregator::new(len, n);
+        for (w, p) in payloads.iter().enumerate() {
+            agg.absorb_bytes(w, p).map_err(|e| e.to_string())?;
+        }
+        let mut params: Vec<f32> = (0..len).map(|i| i as f32 * 0.01).collect();
+        let opt = Sgd { lr };
+        agg.take_mean_into_step(|sum, inv| opt.step_scaled(&mut params, &mut [], sum, inv))
+            .map_err(|e| e.to_string())?;
+
+        // Forced-scalar reference, composed from the tier-explicit fns.
+        let mut acc = vec![0.0f32; len];
+        kernels::copy_f32s_le_tier(KernelTier::Scalar, &mut acc, &payloads[0]);
+        for p in &payloads[1..] {
+            kernels::add_assign_le_tier(KernelTier::Scalar, &mut acc, p);
+        }
+        let mut want: Vec<f32> = (0..len).map(|i| i as f32 * 0.01).collect();
+        kernels::sgd_step_scaled_tier(KernelTier::Scalar, &mut want, &acc, 1.0 / n as f32, lr);
+        bits_match("round", kernels::active_tier(), &want, &params)
+    });
+}
+
+/// Affine partition invariants, for arbitrary ragged chunk sizes: every
+/// chunk gets a valid core, extents are contiguous (assignment is
+/// non-decreasing), and no core's load exceeds its ideal share by more
+/// than one chunk.
+#[test]
+fn prop_affine_partition_contiguous_and_balanced() {
+    check("affine partition", 300, |rng: &mut Rng| {
+        let n = rng.usize_in(1, 250);
+        let cores = rng.usize_in(1, 24);
+        let lens = rng.weights(n, 8192);
+        let a = mapping::affine_partition(&lens, cores);
+        if a.len() != n {
+            return Err("assignment length".into());
+        }
+        if a.iter().any(|&c| c >= cores) {
+            return Err("core out of range".into());
+        }
+        if !a.windows(2).all(|p| p[0] <= p[1]) {
+            return Err(format!("extents not contiguous: {a:?}"));
+        }
+        let total: usize = lens.iter().sum();
+        let max_len = *lens.iter().max().unwrap();
+        let ms = mapping::makespan(&lens, &a, cores);
+        if ms > total / cores + max_len {
+            return Err(format!(
+                "makespan {ms} > share {} + max chunk {max_len}",
+                total / cores
+            ));
+        }
         Ok(())
     });
 }

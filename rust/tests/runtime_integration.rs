@@ -119,7 +119,7 @@ fn agg_opt_artifact_matches_live_server() {
     let kernel_mom = runtime::to_vec_f32(&out[1]).unwrap();
 
     // L3 server path.
-    let server = PHubServer::start(ServerConfig { n_cores: 3 });
+    let server = PHubServer::start(ServerConfig::cores(3));
     let job = server.init_job(
         KeyTable::flat(k, m.chunk_elems),
         &params,

@@ -73,7 +73,7 @@ fn run_two_workers(
 /// error feedback are both elementwise).
 #[test]
 fn chunk_geometry_does_not_change_the_bits() {
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 3 }).unwrap();
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(3)).unwrap();
     let addr = leader.local_addr();
     // 300 elems at chunk 64 -> 5 chunks including a ragged 44-elem tail.
     let ragged = spec(300, 64, 2);
@@ -92,7 +92,7 @@ fn chunk_geometry_does_not_change_the_bits() {
 /// small integers, so the f32 aggregation is exact in any order).
 #[test]
 fn four_workers_many_chunks_streamed_exact() {
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 4 }).unwrap();
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(4)).unwrap();
     let addr = leader.local_addr();
     let n = 1000usize;
     let rounds = 3usize;
@@ -131,7 +131,7 @@ fn four_workers_many_chunks_streamed_exact() {
 /// poisoned-lock DoS regression, exercised across a live job.
 #[test]
 fn hostile_hello_while_other_tenants_train() {
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
     let addr = leader.local_addr();
     // A healthy tenant in the middle of its run.
     let s_ok = spec(128, 64, 1);
@@ -270,7 +270,7 @@ impl RawWorker {
 /// was never interrupted.
 #[test]
 fn worker_killed_mid_round_successor_recovers_bit_identical() {
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
     let addr = leader.local_addr();
     let n = 256usize;
     let s = spec(n as u64, 64, 2); // 4 chunks
@@ -347,7 +347,7 @@ fn worker_killed_mid_round_successor_recovers_bit_identical() {
 /// End state must be bit-identical to an uninterrupted compressed run.
 #[test]
 fn quantized_worker_killed_mid_round_recovers_bit_identical() {
-    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
     let addr = leader.local_addr();
     let n = 128usize;
     let s = spec(n as u64, 64, 2); // 2 chunks
@@ -510,7 +510,7 @@ fn two_level_two_racks_bit_identical_to_flat() {
     let rack_spec = dyadic_spec(n, 48, 2); // 4 chunks per rack job
 
     for quant in [None, Some(0.0625f32)] {
-        let flat_leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+        let flat_leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
         let flat = run_leaves(
             flat_leader.local_addr(),
             300,
@@ -520,13 +520,13 @@ fn two_level_two_racks_bit_identical_to_flat() {
             0,
         );
 
-        let root = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+        let root = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
         let parent = root.local_addr().to_string();
         let racks: Vec<_> = (0..2)
             .map(|_| {
                 TcpLeader::serve_relay(
                     "127.0.0.1:0",
-                    ServerConfig { n_cores: 2 },
+                    ServerConfig::cores(2),
                     RelayConfig {
                         parent: parent.clone(),
                         racks: 2,
@@ -567,12 +567,12 @@ fn worker_death_in_one_rack_rewinds_only_that_rack() {
     let rack_spec = dyadic_spec(n as u64, 48, 2); // 4 chunks
     let job = 310u32;
 
-    let root = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let root = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
     let parent = root.local_addr().to_string();
     let mk_rack = |parent: &str| {
         TcpLeader::serve_relay(
             "127.0.0.1:0",
-            ServerConfig { n_cores: 2 },
+            ServerConfig::cores(2),
             RelayConfig {
                 parent: parent.to_string(),
                 racks: 2,
@@ -664,7 +664,7 @@ fn worker_death_in_one_rack_rewinds_only_that_rack() {
     assert_eq!(surv_model, rack_b_model, "both racks converge to one model");
 
     // Uninterrupted flat twin with the same per-seat gradients.
-    let flat_leader = TcpLeader::serve("127.0.0.1:0", ServerConfig { n_cores: 2 }).unwrap();
+    let flat_leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
     let flat = run_leaves(
         flat_leader.local_addr(),
         311,

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Tests for tools/bench_diff.py — the CI schema gate for bench JSON.
+
+bench_diff is the only thing standing between "someone reshaped a bench's
+JSON summary" and "the perf trajectory silently stops being comparable",
+so its contract is pinned here: schema drift (missing/extra keys, string
+mismatch, malformed JSON) fails the run; numeric drift beyond DRIFT_X
+only warns; ``_``-prefixed baseline keys are commentary, not schema.
+
+Runs under pytest (``pytest tools/test_bench_diff.py``) or standalone
+(``python3 tools/test_bench_diff.py``). Each case drives the real script
+through a subprocess, exactly as CI invokes it.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+BENCH_DIFF = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_diff.py")
+
+
+def run_diff(baseline, fresh_objects):
+    """Invoke bench_diff.py on a baseline dict and per-bench fresh JSON
+    strings; returns (returncode, stdout, stderr)."""
+    with tempfile.TemporaryDirectory() as td:
+        base_path = os.path.join(td, "BENCH_baseline.json")
+        with open(base_path, "w") as f:
+            json.dump(baseline, f)
+        fresh_paths = []
+        for i, obj in enumerate(fresh_objects):
+            p = os.path.join(td, f"BENCH_fresh{i}.json")
+            with open(p, "w") as f:
+                f.write(obj if isinstance(obj, str) else json.dumps(obj))
+            fresh_paths.append(p)
+        proc = subprocess.run(
+            [sys.executable, BENCH_DIFF, base_path] + fresh_paths,
+            capture_output=True,
+            text=True,
+        )
+        return proc.returncode, proc.stdout, proc.stderr
+
+
+BASELINE = {
+    "ring": {
+        "_comment": "underscore keys are commentary, never schema",
+        "bench": "ring",
+        "cap": 1024,
+        "ring_mops": 40.0,
+    }
+}
+
+
+def test_matching_schema_passes():
+    rc, out, err = run_diff(BASELINE, [{"bench": "ring", "cap": 1024, "ring_mops": 41.5}])
+    assert rc == 0, err
+    assert "schema OK" in out
+
+
+def test_missing_key_fails_as_schema_drift():
+    rc, _, err = run_diff(BASELINE, [{"bench": "ring", "cap": 1024}])
+    assert rc == 1
+    assert "schema drift" in err and "ring_mops" in err
+
+
+def test_new_key_fails_until_baseline_updated():
+    fresh = {"bench": "ring", "cap": 1024, "ring_mops": 40.0, "new_mops": 1.0}
+    rc, _, err = run_diff(BASELINE, [fresh])
+    assert rc == 1
+    assert "schema drift" in err and "new_mops" in err
+    # Adding the key to the baseline is exactly the documented fix.
+    widened = {"ring": dict(BASELINE["ring"], new_mops=1.0)}
+    rc, out, _ = run_diff(widened, [fresh])
+    assert rc == 0
+    assert "schema OK" in out
+
+
+def test_numeric_drift_warns_but_passes():
+    rc, out, _ = run_diff(BASELINE, [{"bench": "ring", "cap": 1024, "ring_mops": 400.0}])
+    assert rc == 0
+    assert "warn" in out and "10.00x" in out
+
+
+def test_zero_baseline_skips_ratio():
+    base = {"ring": {"bench": "ring", "zero_gbps": 0}}
+    rc, out, _ = run_diff(base, [{"bench": "ring", "zero_gbps": 12.0}])
+    assert rc == 0, "a 0 baseline (e.g. a tier the runner lacks) must not divide"
+    assert "warn" not in out
+
+
+def test_string_mismatch_fails():
+    base = {"ring": {"bench": "ring", "mode": "pooled"}}
+    rc, _, err = run_diff(base, [{"bench": "ring", "mode": "vec"}])
+    assert rc == 1
+    assert "'vec'" in err and "'pooled'" in err
+
+
+def test_unknown_bench_name_fails():
+    rc, _, err = run_diff(BASELINE, [{"bench": "nonesuch", "cap": 1}])
+    assert rc == 1
+    assert "no baseline entry" in err
+
+
+def test_malformed_json_fails_with_panic_hint():
+    rc, _, err = run_diff(BASELINE, ['thread panicked at "oops"'])
+    assert rc == 1
+    assert "did the bench panic?" in err
+
+
+def test_one_bad_file_fails_run_but_good_files_still_checked():
+    good = {"bench": "ring", "cap": 1024, "ring_mops": 40.0}
+    rc, out, err = run_diff(BASELINE, [{"bench": "ring", "cap": 1024}, good])
+    assert rc == 1
+    assert "schema drift" in err
+    assert "fresh1" in out and "schema OK" in out
+
+
+def main():
+    tests = [(n, f) for n, f in sorted(globals().items()) if n.startswith("test_")]
+    for name, fn in tests:
+        fn()
+        print(f"{name} OK")
+    print(f"test_bench_diff: {len(tests)} passed")
+
+
+if __name__ == "__main__":
+    main()
