@@ -1,0 +1,119 @@
+//! Recovery-overhead bench (run via `cargo bench --bench faults`).
+//!
+//! Measures end-to-end TCP training throughput with every worker
+//! connection tunnelled through a `coordinator::faults::FaultProxy`, at
+//! increasing per-frame fault rates. Rate 0 is the control (the proxy
+//! forwards verbatim, so the comparison isolates fault *recovery* cost,
+//! not proxy cost): the deltas price the epoch-bump/rollback/replay
+//! recovery path plus reconnect latency under injected kills, cuts,
+//! delays, and duplicates.
+//!
+//! Results feed EXPERIMENTS.md section Perf; the last stdout line is the
+//! JSON summary for BENCH_faults.json.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use phub::coordinator::faults::{FaultPlan, FaultProxy, FaultRates};
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+
+const MODEL_ELEMS: u64 = 1024;
+const CHUNK_ELEMS: u64 = 256;
+const N_CHUNKS: u64 = MODEL_ELEMS / CHUNK_ELEMS;
+const WORKERS: u32 = 2;
+const ROUNDS: usize = 40;
+
+fn spec() -> JobSpec {
+    JobSpec {
+        model_elems: MODEL_ELEMS,
+        chunk_elems: CHUNK_ELEMS,
+        n_workers: WORKERS,
+        lr: 0.01,
+        momentum: 0.9,
+    }
+}
+
+/// Drive one seat to `ROUNDS` completed rounds, reconnecting through a
+/// fresh proxy on every injected death (the production recovery path).
+fn drive_seat(leader: SocketAddr, rate: f32, seed: u64) {
+    let s = spec();
+    let n = s.model_elems as usize;
+    let rates = FaultRates::uniform(rate);
+    let mut model = vec![0.0f32; n];
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut attempt = 0u64;
+    loop {
+        assert!(Instant::now() < deadline, "faults bench wedged at rate {rate}");
+        attempt += 1;
+        let plan = FaultPlan::new(seed ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15), rates);
+        let Ok(proxy) = FaultProxy::spawn(leader, plan) else {
+            continue;
+        };
+        let mut w = match TcpWorker::connect(proxy.addr(), 1, s) {
+            Ok(w) => w,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+        };
+        let mut r = w.rounds_done() as usize;
+        let slot = w.slot as usize;
+        let mut died = false;
+        while r < ROUNDS {
+            let g: Vec<f32> = (0..n)
+                .map(|i| (slot as f32 - 0.5) * 0.3 + (r as f32 + 1.0) * 0.01 + i as f32 * 1e-4)
+                .collect();
+            match w.push_pull_into(&g, &mut model) {
+                Ok(()) => r += 1,
+                Err(_) => {
+                    died = true;
+                    break;
+                }
+            }
+        }
+        if !died {
+            w.bye();
+            return;
+        }
+    }
+}
+
+/// Rounds/s for one full 2-worker run at the given per-frame fault rate.
+fn run_at(rate: f32, seed: u64) -> f64 {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let addr = leader.local_addr();
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..WORKERS as u64)
+        .map(|i| {
+            let sub = seed ^ (i + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+            std::thread::spawn(move || drive_seat(addr, rate, sub))
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    ROUNDS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!(
+        "== faults bench: {N_CHUNKS} x {CHUNK_ELEMS}-elem chunks, {WORKERS} workers, \
+         {ROUNDS} rounds, proxied ==",
+    );
+    let _ = run_at(0.0, 11); // warm-up
+    let f0 = run_at(0.0, 11);
+    let f1 = run_at(0.01, 12);
+    let f5 = run_at(0.05, 13);
+    println!("  fault rate 0%  (control):  {f0:>9.1} rounds/s");
+    println!("  fault rate 1%:             {f1:>9.1} rounds/s ({:.2}x control)", f0 / f1);
+    println!("  fault rate 5%:             {f5:>9.1} rounds/s ({:.2}x control)", f0 / f5);
+    println!("faults bench OK");
+    // Single-line JSON summary for BENCH_faults.json (keep last on
+    // stdout).
+    println!(
+        "{{\"bench\":\"faults\",\"model_elems\":{MODEL_ELEMS},\"chunks\":{N_CHUNKS},\
+         \"workers\":{WORKERS},\"rounds\":{ROUNDS},\
+         \"rps_f0\":{f0:.1},\"rps_f1\":{f1:.1},\"rps_f5\":{f5:.1}}}"
+    );
+}

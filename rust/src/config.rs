@@ -201,6 +201,44 @@ impl ExchangeConfig {
     }
 }
 
+/// Deadline supervision for the live TCP connection plane (not a paper
+/// axis — operational robustness; see "Failure model & recovery
+/// contract" in `coordinator::transport`). One struct names every knob
+/// so `TcpLeader::serve_with` / client connects / the relay uplink all
+/// share a single policy value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineConfig {
+    /// Socket read/write timeout on client and uplink connections
+    /// (`None` = block forever). Fires as a typed
+    /// `wire::WireError::Timeout`.
+    pub io_timeout: Option<std::time::Duration>,
+    /// Leader-side per-connection read deadline. A worker that goes
+    /// silent mid-round for this long is declared dead and its round is
+    /// recovered via the normal epoch-bump/rollback/replay path. Idle
+    /// connections *between* rounds are exempt (a parked tenant is not
+    /// a stalled worker).
+    pub round_deadline: Option<std::time::Duration>,
+    /// First relay-uplink redial backoff; doubles per failed attempt.
+    pub redial_base: std::time::Duration,
+    /// Backoff ceiling for the uplink redial loop.
+    pub redial_cap: std::time::Duration,
+    /// Redial attempts before the uplink gives up and fails the job
+    /// with a typed error (0 = retry forever, the legacy behavior).
+    pub redial_attempts: u32,
+}
+
+impl Default for DeadlineConfig {
+    fn default() -> Self {
+        DeadlineConfig {
+            io_timeout: Some(std::time::Duration::from_secs(30)),
+            round_deadline: Some(std::time::Duration::from_secs(30)),
+            redial_base: std::time::Duration::from_millis(25),
+            redial_cap: std::time::Duration::from_millis(1600),
+            redial_attempts: 60,
+        }
+    }
+}
+
 /// A full cluster description for one training job.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -291,6 +329,20 @@ mod tests {
         assert_eq!(c.n_ps_processes(), 8);
         let c = c.with_ps(PsConfig::PBox);
         assert_eq!(c.n_ps_processes(), 1);
+    }
+
+    #[test]
+    fn deadline_defaults_are_bounded() {
+        let d = DeadlineConfig::default();
+        // Every supervision knob is finite by default: a dead parent or
+        // stalled worker cannot hang a job forever out of the box.
+        assert!(d.io_timeout.is_some());
+        assert!(d.round_deadline.is_some());
+        assert!(d.redial_attempts > 0);
+        assert!(d.redial_base <= d.redial_cap);
+        // Worst-case redial wall clock stays bounded: attempts × cap.
+        let worst = d.redial_cap * d.redial_attempts;
+        assert!(worst <= std::time::Duration::from_secs(120));
     }
 
     #[test]

@@ -101,6 +101,22 @@ impl Quantizer {
     pub fn residual_linf(&self) -> f32 {
         self.residual.iter().fold(0.0f32, |m, x| m.max(x.abs()))
     }
+
+    /// The carried error-feedback residual — what a worker checkpoints
+    /// through the leader at round boundaries so a successor can resume
+    /// bit-exact (see `transport.rs`, `ResidualSave`).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Overwrite the carried residual from a checkpoint. Lengths must
+    /// match; restoring `residual()` bytes reproduces the exact
+    /// quantizer state, so the next `quantize_into` is bit-identical to
+    /// the dead predecessor's would-have-been output.
+    pub fn restore_residual(&mut self, residual: &[f32]) {
+        assert_eq!(residual.len(), self.residual.len());
+        self.residual.copy_from_slice(residual);
+    }
 }
 
 /// Per-chunk compressor bank for the chunk-streamed wire protocol:
@@ -138,6 +154,21 @@ impl ChunkQuantizer {
     /// writing the wire bytes into a caller-reused buffer.
     pub fn quantize_chunk_into(&mut self, i: usize, grad: &[f32], out: &mut Vec<u8>) {
         self.quants[i].quantize_into(grad, out);
+    }
+
+    /// The shared threshold every chunk quantizes against.
+    pub fn threshold(&self) -> f32 {
+        self.quants[0].threshold
+    }
+
+    /// Chunk `i`'s carried residual (for round-boundary checkpointing).
+    pub fn residual_chunk(&self, i: usize) -> &[f32] {
+        self.quants[i].residual()
+    }
+
+    /// Restore chunk `i`'s residual from a checkpoint (length-checked).
+    pub fn restore_chunk_residual(&mut self, i: usize, residual: &[f32]) {
+        self.quants[i].restore_residual(residual);
     }
 }
 
@@ -320,6 +351,43 @@ mod tests {
             }
             assert_eq!(want, got, "round {round}");
         }
+    }
+
+    /// Checkpoint/restore: a fresh quantizer with the restored residual
+    /// continues bit-identically to the original — the exact property a
+    /// successor worker needs after restoring a `ResidualChunk`.
+    #[test]
+    fn restored_residual_resumes_bit_identical() {
+        let mut original = Quantizer::new(9, 0.35);
+        for round in 0..3 {
+            let g: Vec<f32> = (0..9)
+                .map(|i| ((i * 7 + round * 3) as f32 * 0.29).sin() * 0.8)
+                .collect();
+            original.quantize(&g);
+        }
+        // Checkpoint, then resurrect into a brand-new quantizer.
+        let ckpt: Vec<f32> = original.residual().to_vec();
+        let mut successor = Quantizer::new(9, 0.35);
+        successor.restore_residual(&ckpt);
+        for round in 3..6 {
+            let g: Vec<f32> = (0..9)
+                .map(|i| ((i * 7 + round * 3) as f32 * 0.29).sin() * 0.8)
+                .collect();
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            original.quantize_into(&g, &mut a);
+            successor.quantize_into(&g, &mut b);
+            assert_eq!(a, b, "round {round}");
+        }
+        // Per-chunk access mirrors the per-quantizer API.
+        let mut bank = ChunkQuantizer::new(&[4, 5], 0.35);
+        assert_eq!(bank.threshold(), 0.35);
+        bank.quantize_chunk(1, &[0.9, -0.9, 0.1, 0.2, -0.4]);
+        let r = bank.residual_chunk(1).to_vec();
+        let mut bank2 = ChunkQuantizer::new(&[4, 5], 0.35);
+        bank2.restore_chunk_residual(1, &r);
+        assert_eq!(bank.residual_chunk(1), bank2.residual_chunk(1));
+        assert_eq!(bank.residual_chunk(0), bank2.residual_chunk(0));
     }
 
     #[test]

@@ -66,6 +66,14 @@
 //! itself from the push's epoch tag, so the message race can never drop
 //! a replayed gradient.
 //!
+//! The same rollback machinery serves two triggers: a *detected* death
+//! (the worker's socket closes, mid-frame or between frames) and a
+//! *declared* one (the leader's round deadline fires on a worker that
+//! went silent mid-round — see `DeadlineConfig` and the failure-model
+//! contract in `super::transport`). Either way the engine only ever
+//! sees "this connection's round ended early"; the recovery path is
+//! identical and bit-exact.
+//!
 //! # Node roles: Root vs RackRelay
 //!
 //! The chunk-complete transition is role-parameterized ([`NodeRole`]),

@@ -1,0 +1,409 @@
+//! Deterministic, seeded fault injection for the TCP transport.
+//!
+//! The production connection plane is never modified for testing:
+//! faults are injected *under* it, by routing a worker's socket through
+//! a local [`FaultProxy`] whose upstream (worker → leader) leg passes
+//! every byte through a [`FaultStream`]. The stream reassembles wire
+//! frames from the byte stream (4-byte LE length prefix + body, exactly
+//! the `wire.rs` framing) and, per complete frame, consults a seeded
+//! [`FaultPlan`] for an action:
+//!
+//! - **Forward** — pass the frame through untouched (the common case);
+//! - **Delay** — sleep a few milliseconds, then forward (straggler);
+//! - **Duplicate** — forward the frame twice (replayed frame; the
+//!   leader must treat the second copy as a protocol violation and
+//!   drop the connection, which the recovery machinery then heals);
+//! - **Cut** — forward a strict byte prefix of the frame, then kill
+//!   the connection (torn / mid-frame write);
+//! - **Kill** — kill the connection without forwarding (clean death
+//!   between frames).
+//!
+//! Everything is driven by one [`XorShift64`] PRNG, so a `(seed,
+//! rates)` pair names a reproducible fault schedule: the chaos soak
+//! test replays the exact same schedule when a seed fails in CI.
+//!
+//! Faults are injected on the worker → leader direction only; the
+//! leader → worker leg is copied verbatim. Killing either leg tears
+//! down both, so from the worker's side every injected death looks
+//! like a real peer disconnect and exercises the production
+//! reconnect/rollback/replay path unmodified.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Minimal xorshift64* PRNG — deterministic, dependency-free, and good
+/// enough for fault scheduling (this is not a statistical application).
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // xorshift has a fixed point at zero; remap it.
+        let state = if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed };
+        Self { state }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa-ish bits; exact enough for rate thresholds.
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+}
+
+/// Per-frame fault probabilities. Each complete frame draws once; the
+/// first matching band (kill, cut, delay, dup, in that order) fires.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultRates {
+    pub kill: f32,
+    pub cut: f32,
+    pub delay: f32,
+    pub dup: f32,
+}
+
+impl FaultRates {
+    /// A single overall fault rate `p`, split across the four fault
+    /// kinds (40% kills, 30% cuts, 20% delays, 10% duplicates).
+    pub fn uniform(p: f32) -> Self {
+        Self {
+            kill: p * 0.4,
+            cut: p * 0.3,
+            delay: p * 0.2,
+            dup: p * 0.1,
+        }
+    }
+}
+
+/// What to do with one reassembled frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    Forward,
+    Delay(Duration),
+    Duplicate,
+    /// Forward `keep` bytes of the frame (a strict prefix), then die.
+    Cut {
+        keep: usize,
+    },
+    Kill,
+}
+
+/// A seeded schedule of fault actions: the same `(seed, rates)` pair
+/// always yields the same action sequence for the same frame sizes.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    rng: XorShift64,
+    rates: FaultRates,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rates: FaultRates) -> Self {
+        Self {
+            rng: XorShift64::new(seed),
+            rates,
+        }
+    }
+
+    /// Draw the action for the next complete frame of `frame_len`
+    /// bytes (length prefix included; always ≥ 5 on the real wire).
+    pub fn action_for_frame(&mut self, frame_len: usize) -> FaultAction {
+        let r = self.rng.next_f32();
+        let k = self.rates.kill;
+        let c = k + self.rates.cut;
+        let d = c + self.rates.delay;
+        let u = d + self.rates.dup;
+        if r < k {
+            FaultAction::Kill
+        } else if r < c && frame_len >= 2 {
+            // A strict non-empty prefix: 1 ..= frame_len - 1.
+            let keep = 1 + (self.rng.next_u64() as usize) % (frame_len - 1);
+            FaultAction::Cut { keep }
+        } else if r < d {
+            let ms = 1 + self.rng.next_u64() % 5;
+            FaultAction::Delay(Duration::from_millis(ms))
+        } else if r < u {
+            FaultAction::Duplicate
+        } else {
+            FaultAction::Forward
+        }
+    }
+}
+
+/// A `Write` adapter that reassembles wire frames from the byte stream
+/// and applies a [`FaultPlan`] action to each one before (maybe)
+/// forwarding it to the inner writer. Partial frames are buffered until
+/// complete, so the only way a torn frame reaches the wire is an
+/// explicit `Cut` — which is the point: torn writes are scheduled, not
+/// accidental.
+pub struct FaultStream<W: Write> {
+    inner: W,
+    plan: FaultPlan,
+    buf: Vec<u8>,
+    dead: bool,
+    injected: u64,
+}
+
+impl<W: Write> FaultStream<W> {
+    pub fn new(inner: W, plan: FaultPlan) -> Self {
+        Self {
+            inner,
+            plan,
+            buf: Vec::new(),
+            dead: false,
+            injected: 0,
+        }
+    }
+
+    /// Number of non-`Forward` actions applied so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    fn apply(&mut self, start: usize, end: usize) -> io::Result<()> {
+        let action = self.plan.action_for_frame(end - start);
+        let frame = &self.buf[start..end];
+        match action {
+            FaultAction::Forward => self.inner.write_all(frame),
+            FaultAction::Delay(d) => {
+                self.injected += 1;
+                std::thread::sleep(d);
+                self.inner.write_all(frame)
+            }
+            FaultAction::Duplicate => {
+                self.injected += 1;
+                self.inner.write_all(frame)?;
+                self.inner.write_all(frame)
+            }
+            FaultAction::Cut { keep } => {
+                self.injected += 1;
+                self.dead = true;
+                let keep = keep.min(frame.len() - 1);
+                self.inner.write_all(&frame[..keep])?;
+                self.inner.flush()?;
+                Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "fault injection: mid-frame cut",
+                ))
+            }
+            FaultAction::Kill => {
+                self.injected += 1;
+                self.dead = true;
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "fault injection: connection kill",
+                ))
+            }
+        }
+    }
+}
+
+impl<W: Write> Write for FaultStream<W> {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "fault injection: stream already killed",
+            ));
+        }
+        self.buf.extend_from_slice(data);
+        // Drain every complete frame currently buffered.
+        let mut start = 0usize;
+        while self.buf.len() - start >= 4 {
+            let body = u32::from_le_bytes([
+                self.buf[start],
+                self.buf[start + 1],
+                self.buf[start + 2],
+                self.buf[start + 3],
+            ]) as usize;
+            let total = 4 + body;
+            if self.buf.len() - start < total {
+                break;
+            }
+            if let Err(e) = self.apply(start, start + total) {
+                self.buf.clear();
+                return Err(e);
+            }
+            start += total;
+        }
+        self.buf.drain(..start);
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.dead {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "fault injection: stream already killed",
+            ));
+        }
+        self.inner.flush()
+    }
+}
+
+/// A one-connection TCP proxy that injects faults on the client →
+/// upstream direction. `spawn` binds an ephemeral localhost port and
+/// returns immediately; the first accepted connection is bridged to
+/// `upstream` with the client's bytes routed through a
+/// [`FaultStream`]. When either leg dies (injected or real), both
+/// sockets are shut down so the death is visible end to end.
+pub struct FaultProxy {
+    addr: SocketAddr,
+}
+
+impl FaultProxy {
+    pub fn spawn(upstream: SocketAddr, plan: FaultPlan) -> io::Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        std::thread::Builder::new()
+            .name("phub-fault-proxy".into())
+            .spawn(move || {
+                let Ok((client, _)) = listener.accept() else {
+                    return;
+                };
+                let Ok(server) = TcpStream::connect(upstream) else {
+                    let _ = client.shutdown(Shutdown::Both);
+                    return;
+                };
+                let _ = client.set_nodelay(true);
+                let _ = server.set_nodelay(true);
+                let (Ok(client_rd), Ok(server_rd)) = (client.try_clone(), server.try_clone())
+                else {
+                    return;
+                };
+                // Downstream leg: leader → worker, copied verbatim.
+                let down_client = client.try_clone();
+                std::thread::spawn(move || {
+                    let mut rd = server_rd;
+                    if let Ok(mut wr) = down_client {
+                        let _ = io::copy(&mut rd, &mut wr);
+                        let _ = wr.shutdown(Shutdown::Both);
+                    }
+                    let _ = rd.shutdown(Shutdown::Both);
+                });
+                // Upstream leg: worker → leader, through the fault plan.
+                let mut rd = client_rd;
+                let mut faulted = FaultStream::new(&server, plan);
+                let mut buf = [0u8; 4096];
+                loop {
+                    match rd.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            if faulted.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let _ = client.shutdown(Shutdown::Both);
+                let _ = server.shutdown(Shutdown::Both);
+            })?;
+        Ok(FaultProxy { addr })
+    }
+
+    /// The local address workers should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(body: &[u8]) -> Vec<u8> {
+        let mut f = (body.len() as u32).to_le_bytes().to_vec();
+        f.extend_from_slice(body);
+        f
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = FaultPlan::new(42, FaultRates::uniform(0.5));
+        let mut b = FaultPlan::new(42, FaultRates::uniform(0.5));
+        for len in [20usize, 48, 20, 300, 64, 20, 20, 48] {
+            assert_eq!(a.action_for_frame(len), b.action_for_frame(len));
+        }
+        let mut c = FaultPlan::new(43, FaultRates::uniform(0.5));
+        let divergent = (0..64).any(|_| a.action_for_frame(48) != c.action_for_frame(48));
+        assert!(divergent, "different seeds should diverge");
+    }
+
+    #[test]
+    fn zero_rate_forwards_everything_byte_identical() {
+        let mut out = Vec::new();
+        let mut s = FaultStream::new(&mut out, FaultPlan::new(7, FaultRates::default()));
+        let mut input = Vec::new();
+        for body in [&b"hello"[..], &[0u8; 32][..], &b"x"[..]] {
+            input.extend_from_slice(&frame(body));
+        }
+        // Dribble one byte at a time to exercise reassembly.
+        for b in &input {
+            s.write_all(std::slice::from_ref(b)).unwrap();
+        }
+        assert_eq!(s.injected(), 0);
+        drop(s);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn duplicate_forwards_two_copies() {
+        let mut out = Vec::new();
+        let rates = FaultRates {
+            dup: 1.0,
+            ..FaultRates::default()
+        };
+        let mut s = FaultStream::new(&mut out, FaultPlan::new(1, rates));
+        let f = frame(b"payload");
+        s.write_all(&f).unwrap();
+        assert_eq!(s.injected(), 1);
+        drop(s);
+        assert_eq!(out.len(), 2 * f.len());
+        assert_eq!(&out[..f.len()], &f[..]);
+        assert_eq!(&out[f.len()..], &f[..]);
+    }
+
+    #[test]
+    fn cut_forwards_a_strict_prefix_then_kills() {
+        let rates = FaultRates {
+            cut: 1.0,
+            ..FaultRates::default()
+        };
+        for seed in 1..32u64 {
+            let mut out = Vec::new();
+            let mut s = FaultStream::new(&mut out, FaultPlan::new(seed, rates));
+            let f = frame(&[0xABu8; 60]);
+            let err = s.write_all(&f).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+            // Once dead, every further write fails.
+            assert!(s.write_all(&f).is_err());
+            drop(s);
+            assert!(!out.is_empty(), "cut must forward at least one byte");
+            assert!(out.len() < f.len(), "cut must never forward a full frame");
+            assert_eq!(&out[..], &f[..out.len()]);
+        }
+    }
+
+    #[test]
+    fn kill_forwards_nothing() {
+        let rates = FaultRates {
+            kill: 1.0,
+            ..FaultRates::default()
+        };
+        let mut out = Vec::new();
+        let mut s = FaultStream::new(&mut out, FaultPlan::new(5, rates));
+        let err = s.write_all(&frame(b"doomed")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        drop(s);
+        assert!(out.is_empty());
+    }
+}

@@ -91,6 +91,32 @@
 //! by `rust/tests/alloc_discipline.rs` and measured by
 //! `benches/dataplane.rs` and `benches/ring.rs`.
 //!
+//! # Failure model & recovery contract
+//!
+//! The distributed plane assumes **crash-stop with rejoin**: a worker,
+//! relay, or parent may die at any byte boundary, and a successor may
+//! later claim the dead party's slot. The contract (stated in full in
+//! [`transport`]'s module docs):
+//!
+//! * **No silent hangs.** Every blocking edge is deadline-supervised
+//!   ([`crate::config::DeadlineConfig`]): socket I/O timeouts on the
+//!   client, a leader-side round deadline that converts a stalled
+//!   worker into the normal death-recovery path (idle parked tenants
+//!   exempt), and a capped-backoff uplink redial loop that gives up
+//!   with a typed [`transport::UplinkError`] instead of spinning
+//!   forever against a dead parent.
+//! * **Bit-exact resumption.** Mid-round deaths roll the round back
+//!   (epoch bump + byte-identical replay, see [`engine`]); quantized
+//!   workers additionally checkpoint their error-feedback residuals
+//!   through the leader at round boundaries (`ResidualSave` /
+//!   `ResidualChunk` in [`wire`]) so a successor resumes bit-exact
+//!   from *any* death round, not just round 0.
+//! * **Deterministic fault replay.** [`faults`] injects seeded
+//!   connection kills, mid-frame cuts, torn writes, delays, and
+//!   duplicate frames *under* the TCP stream, so every recovery path
+//!   above is exercised by reproducible chaos schedules
+//!   (`tests/chaos.rs`) without touching production code paths.
+//!
 //! # Kernel dispatch and placement
 //!
 //! The absorb folds and fused optimizer passes execute as explicit SIMD
@@ -113,6 +139,7 @@ pub mod aggregation;
 pub mod chunk;
 pub mod compress;
 pub mod engine;
+pub mod faults;
 pub mod hierarchy;
 pub mod kernels;
 pub mod mapping;

@@ -61,7 +61,7 @@ use crate::metrics::DataPlaneMetrics;
 use super::aggregation::GradSrc;
 use super::chunk::KeyTable;
 use super::compress::QuantView;
-use super::engine::{NodeRole, ReplyRx, ReplyTx, RoundTag, ShardEngine};
+use super::engine::{NodeRole, PushOutcome, ReplyRx, ReplyTx, RoundTag, ShardEngine};
 use super::mapping;
 use super::optimizer::Optimizer;
 use super::pool::PooledBytes;
@@ -190,6 +190,16 @@ enum CoreMsg {
     Evict { job: JobId },
 }
 
+/// Record recovery-path push outcomes: replayed and stale-epoch pushes
+/// are absorbed idempotently by design (the sender replays its whole
+/// round after a rollback), but an operator watching a chaotic fleet
+/// wants to see how much of the traffic is replay.
+fn note_push_outcome(out: PushOutcome, metrics: &DataPlaneMetrics) {
+    if matches!(out, PushOutcome::Replayed | PushOutcome::StaleEpoch) {
+        metrics.replayed_frames.inc();
+    }
+}
+
 /// Apply one message to this core's engine. Returns a new port to adopt
 /// when the message was `Connect`.
 fn apply_core_msg(
@@ -221,7 +231,7 @@ fn apply_core_msg(
             tag,
         } => engine
             .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
-            .map(|_| ()),
+            .map(|out| note_push_outcome(out, metrics)),
         CoreMsg::PushBytes {
             job,
             chunk,
@@ -251,7 +261,9 @@ fn apply_core_msg(
             } else {
                 GradSrc::LeBytes(bytes)
             };
-            engine.push_src(job, chunk, worker, src, pull, tag).map(|_| ())
+            engine
+                .push_src(job, chunk, worker, src, pull, tag)
+                .map(|out| note_push_outcome(out, metrics))
             // `data` drops at the end of this arm: the frame buffer
             // recycles to its pool.
         }
@@ -874,6 +886,15 @@ impl WorkerHandle {
     /// always outrank queued data (see `engine::ReplyRx`).
     pub fn recv_reply(&mut self) -> Reply {
         self.rx.recv().expect("server dropped")
+    }
+
+    /// Non-panicking variant of [`WorkerHandle::recv_reply`]: `None`
+    /// means the server side of the job is gone (evicted — e.g. a relay
+    /// uplink gave up on a dead parent and failed the job). Connection
+    /// threads use this so an evicted job surfaces as a typed error on
+    /// the worker's socket, never a thread panic.
+    pub fn recv_reply_opt(&mut self) -> Option<Reply> {
+        self.rx.recv()
     }
 
     /// Non-blocking variant of [`WorkerHandle::recv_reply`].

@@ -119,6 +119,51 @@
 //! successor's replay merges with the survivors' to finish the round with
 //! parameters bit-identical to an uninterrupted run. Stale in-flight
 //! frames from the dead connection are rejected by their epoch tag.
+//!
+//! # Failure model & recovery contract
+//!
+//! The connection plane assumes **crash-stop with rejoin**: a peer can
+//! die (process crash, cable pull, kernel OOM) at any byte boundary —
+//! including mid-frame — and may later be replaced by a successor; it
+//! never acts Byzantine beyond sending garbage (which the hostile-input
+//! validation above already converts into a connection-local typed
+//! error). On that model the plane guarantees:
+//!
+//! * **No silent hangs.** Every blocking edge is deadline-supervised
+//!   (see [`crate::config::DeadlineConfig`]). Client sockets carry
+//!   read/write timeouts surfacing as `wire::WireError::Timeout`; the
+//!   leader arms a per-connection round deadline that declares a worker
+//!   silent *mid-round* for too long dead — a *declared* death feeds the
+//!   exact same epoch-bump → `RollbackRound` → replay recovery as a
+//!   *detected* one (socket close), so supervision adds no new recovery
+//!   machinery. Idle tenants parked between rounds are exempt. The
+//!   relay uplink redials its parent under capped exponential backoff
+//!   with jitter and, after `redial_attempts` failures, gives up and
+//!   fails the job with a typed [`UplinkError`] instead of spinning
+//!   forever.
+//! * **Bit-exact resumption from any death round.** Dense state is
+//!   re-derivable (the model lives on the leader; a successor reads
+//!   `rounds_done` and continues). The one historically worker-private
+//!   piece of state — the 2-bit path's error-feedback residual — is
+//!   checkpointed through the leader every round (`ResidualSave`, one
+//!   frame per chunk riding immediately before the chunk's push) and
+//!   handed back at admission (`ResidualChunk` frames after `Welcome`),
+//!   so a successor's quantized stream continues bit-identically to an
+//!   unkilled worker. The checkpoint commits **atomically with round
+//!   completion**: the leader stages the frames per connection and
+//!   publishes them only at `complete_round`, and because every
+//!   residual precedes its push on the stream, a completed round
+//!   implies a complete checkpoint — a death at any byte boundary
+//!   leaves the store at the exact round `rounds_done` reports, never a
+//!   mix of two rounds. Committing is round-boundary work: the
+//!   steady-state per-chunk exchange stays exact-zero (no allocation,
+//!   no mutex).
+//! * **Deterministic fault replay.** The whole contract is exercised by
+//!   the seeded fault-injection layer in `super::faults` (kills,
+//!   mid-frame cuts, delays, duplicate replays, injected *under* the
+//!   protocol via a TCP proxy) — production paths run unmodified, and a
+//!   faulted run's final parameters are asserted bit-identical to an
+//!   unfaulted twin's (`tests/chaos.rs`).
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -130,10 +175,13 @@ use anyhow::{bail, ensure, Context, Result};
 use super::chunk::KeyTable;
 use super::compress::{ChunkQuantizer, QuantView};
 use super::engine::{Reply, WorkerRound};
+use super::faults::XorShift64;
 use super::optimizer::NesterovSgd;
 use super::pool::{BytePool, Pool};
 use super::server::{JobId, PHubServer, RelayUplink, ServerConfig, WorkerHandle};
 use super::wire::{self, Frame, Op};
+use crate::config::DeadlineConfig;
+use crate::metrics::DataPlaneMetrics;
 
 /// Most workers one job admits (see the u64 arrival bitmask in
 /// `aggregation.rs`, which owns the authoritative constant).
@@ -238,7 +286,41 @@ struct JobEntry {
     /// once, so the leader must keep it across connections). The handle's
     /// `(epoch, round)` tag records where the predecessor left off.
     parked: HashMap<u32, WorkerHandle>,
+    /// Per-slot quantizer residual checkpoints: the full `ResidualSave`
+    /// chunk payloads (chunk prefix + threshold + f32 residuals) from a
+    /// quantized worker's last *committed* round — staged per connection
+    /// and published by `commit_residuals` exactly when the round
+    /// completes, so the checkpoint here always matches the slot's
+    /// `rounds_done`. Keyed by slot, indexed by chunk. Admission
+    /// *clones* (never removes) a slot's checkpoint so a successor that
+    /// itself dies before completing a round still leaves the next
+    /// successor a restore point.
+    residuals: HashMap<u32, Vec<Vec<u8>>>,
 }
+
+/// Typed failure of the relay uplink's deadline supervision (see the
+/// failure-model contract in the module docs): raised when the redial
+/// budget of [`DeadlineConfig::redial_attempts`] is exhausted, at which
+/// point the job is evicted so every blocked exchange fails with an
+/// error instead of hanging on the dead parent forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UplinkError {
+    /// The parent leader stayed unreachable for the full redial budget.
+    ParentUnreachable { attempts: u32 },
+}
+
+impl std::fmt::Display for UplinkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UplinkError::ParentUnreachable { attempts } => write!(
+                f,
+                "relay uplink gave up after {attempts} failed rendezvous attempts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for UplinkError {}
 
 /// Hierarchy parameters of a [`TcpLeader::serve_relay`] leader: where
 /// its parent lives and how wide the cross-rack level is.
@@ -263,8 +345,21 @@ impl TcpLeader {
     /// Bind and start serving in background threads as a **Root** (the
     /// flat deployment, and the top of a hierarchical one). `bind` may
     /// be `"127.0.0.1:0"` to pick a free port (see `local_addr`).
+    /// Deadline supervision runs at [`DeadlineConfig::default`]; use
+    /// [`TcpLeader::serve_with`] to tune it.
     pub fn serve(bind: impl ToSocketAddrs, cfg: ServerConfig) -> Result<Arc<TcpLeader>> {
-        Self::serve_inner(bind, cfg, None)
+        Self::serve_inner(bind, cfg, None, DeadlineConfig::default())
+    }
+
+    /// [`TcpLeader::serve`] with explicit deadline supervision (round
+    /// deadlines for stalled workers; see the failure-model contract in
+    /// the module docs).
+    pub fn serve_with(
+        bind: impl ToSocketAddrs,
+        cfg: ServerConfig,
+        dl: DeadlineConfig,
+    ) -> Result<Arc<TcpLeader>> {
+        Self::serve_inner(bind, cfg, None, dl)
     }
 
     /// Bind and start serving as a **RackRelay**: local workers are
@@ -280,18 +375,31 @@ impl TcpLeader {
         cfg: ServerConfig,
         relay: RelayConfig,
     ) -> Result<Arc<TcpLeader>> {
+        Self::serve_relay_with(bind, cfg, relay, DeadlineConfig::default())
+    }
+
+    /// [`TcpLeader::serve_relay`] with explicit deadline supervision —
+    /// in particular the uplink's redial backoff and give-up budget
+    /// against a dead parent.
+    pub fn serve_relay_with(
+        bind: impl ToSocketAddrs,
+        cfg: ServerConfig,
+        relay: RelayConfig,
+        dl: DeadlineConfig,
+    ) -> Result<Arc<TcpLeader>> {
         ensure!(
             (1..=MAX_WORKERS_PER_JOB).contains(&relay.racks),
             "racks {} not in 1..={MAX_WORKERS_PER_JOB}",
             relay.racks
         );
-        Self::serve_inner(bind, cfg, Some(Arc::new(relay)))
+        Self::serve_inner(bind, cfg, Some(Arc::new(relay)), dl)
     }
 
     fn serve_inner(
         bind: impl ToSocketAddrs,
         cfg: ServerConfig,
         relay: Option<Arc<RelayConfig>>,
+        dl: DeadlineConfig,
     ) -> Result<Arc<TcpLeader>> {
         let listener = TcpListener::bind(bind).context("bind leader socket")?;
         let local_addr = listener.local_addr()?;
@@ -312,7 +420,7 @@ impl TcpLeader {
                         let jobs = jobs.clone();
                         let relay = relay.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_worker(stream, server, jobs, relay);
+                            let _ = handle_worker(stream, server, jobs, relay, dl);
                         });
                     }
                 })
@@ -344,11 +452,12 @@ impl TcpLeader {
 /// loser's freshly built job.
 fn admit(
     server: &Arc<PHubServer>,
-    jobs: &Mutex<HashMap<u32, JobEntry>>,
+    jobs: &Arc<Mutex<HashMap<u32, JobEntry>>>,
     wire_job: u32,
     spec: JobSpec,
     relay: Option<&Arc<RelayConfig>>,
-) -> Result<(JobId, u32, WorkerHandle)> {
+    dl: DeadlineConfig,
+) -> Result<(JobId, u32, WorkerHandle, Option<Vec<Vec<u8>>>)> {
     loop {
         // Phase 1: admit into an existing entry under the lock.
         {
@@ -401,17 +510,24 @@ fn admit(
                         next_slot: 0,
                         free_slots: Vec::new(),
                         parked: HashMap::new(),
+                        residuals: HashMap::new(),
                     });
                     let res = admit_into(server, entry, wire_job, spec);
                     drop(map);
                     // Won the install race: this job exists now, so start
                     // its uplink pump (one thread per relay job for its
-                    // lifetime, like one QP per rack-interface pair).
+                    // lifetime, like one QP per rack-interface pair). The
+                    // pump carries the server + jobs map so a give-up can
+                    // fail the job instead of leaking a zombie entry.
                     if let Some(up) = uplink {
                         let rc = relay.expect("uplink implies relay config").clone();
+                        let server = server.clone();
+                        let jobs = jobs.clone();
                         std::thread::Builder::new()
                             .name(format!("phub-uplink-{wire_job}"))
-                            .spawn(move || run_uplink(up, rc, wire_job, spec))
+                            .spawn(move || {
+                                let _ = run_uplink(up, rc, wire_job, spec, server, jobs, dl);
+                            })
                             .context("spawn uplink thread")?;
                     }
                     return res;
@@ -427,13 +543,15 @@ fn admit(
     }
 }
 
-/// Slot allocation half of admission (entry exists, lock held).
+/// Slot allocation half of admission (entry exists, lock held). Also
+/// hands back a *clone* of the slot's stored residual checkpoint, if
+/// any, for the connection to replay to the successor.
 fn admit_into(
     server: &Arc<PHubServer>,
     entry: &mut JobEntry,
     wire_job: u32,
     spec: JobSpec,
-) -> Result<(JobId, u32, WorkerHandle)> {
+) -> Result<(JobId, u32, WorkerHandle, Option<Vec<Vec<u8>>>)> {
     if entry.spec != spec {
         bail!("job {wire_job} spec mismatch");
     }
@@ -460,7 +578,8 @@ fn admit_into(
     // happened since the predecessor parked (its `round` stays — rounds
     // cannot advance while any slot is vacant).
     handle.set_tag(entry.epoch, handle.round());
-    Ok((entry.job, slot, handle))
+    let restored = entry.residuals.get(&slot).cloned();
+    Ok((entry.job, slot, handle, restored))
 }
 
 /// Per-connection worker service loop.
@@ -469,8 +588,16 @@ fn handle_worker(
     server: Arc<PHubServer>,
     jobs: Arc<Mutex<HashMap<u32, JobEntry>>>,
     relay: Option<Arc<RelayConfig>>,
+    dl: DeadlineConfig,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Arm the round deadline: a read that stalls this long is either an
+    // idle parked tenant (serve_streamed keeps waiting) or a dead worker
+    // mid-round (declared dead → rollback recovery). Writes get the same
+    // bound so a worker that stops draining its socket cannot wedge this
+    // connection thread forever.
+    stream.set_read_timeout(dl.round_deadline).ok();
+    stream.set_write_timeout(dl.round_deadline).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
 
@@ -493,7 +620,8 @@ fn handle_worker(
         wire::PROTO_MAX
     );
 
-    let (job, slot, mut handle) = admit(&server, &jobs, hello.job, spec, relay.as_ref())?;
+    let (job, slot, mut handle, restored) =
+        admit(&server, &jobs, hello.job, spec, relay.as_ref(), dl)?;
     // Register the pusher's aggregation weight (a downstream relay's
     // rack size; plain workers default to 1) before Welcome releases its
     // first push: a round must never complete against a stale divisor.
@@ -518,6 +646,13 @@ fn handle_worker(
         payload.extend_from_slice(&wr.epoch().to_le_bytes());
         payload.extend_from_slice(&wr.round().to_le_bytes());
         wire::push_proto_version(&mut payload, proto);
+        // Residual-restore trailer: how many `ResidualChunk` frames
+        // follow the Welcome (a successor inheriting a quantized
+        // predecessor's checkpoint; 0 for everyone else — old clients
+        // ignore the trailer, old leaders simply omit it).
+        let checkpoint: &[Vec<u8>] = restored.as_deref().unwrap_or(&[]);
+        let n_restore = checkpoint.iter().filter(|c| !c.is_empty()).count() as u32;
+        payload.extend_from_slice(&n_restore.to_le_bytes());
         wire::write_frame(
             &mut writer,
             &Frame {
@@ -527,11 +662,34 @@ fn handle_worker(
                 payload,
             },
         )?;
+        if n_restore > 0 {
+            for chunk_payload in checkpoint.iter().filter(|c| !c.is_empty()) {
+                wire::write_frame(
+                    &mut writer,
+                    &Frame {
+                        op: Op::ResidualChunk,
+                        job: hello.job,
+                        worker: slot,
+                        payload: chunk_payload.clone(),
+                    },
+                )?;
+            }
+            server.metrics().residual_restores.inc();
+        }
         // Exchange loop. The chunk fan-out/fan-in runs on the core
         // threads, so workers on other connections proceed concurrently
         // (one service thread per worker, like one QP per
         // worker-interface pair).
-        serve_streamed(&mut reader, &mut writer, &mut handle, hello.job, slot, &mut wr)
+        serve_streamed(
+            &mut reader,
+            &mut writer,
+            &mut handle,
+            hello.job,
+            slot,
+            &mut wr,
+            server.metrics(),
+            &jobs,
+        )
     })();
 
     // Connection over (orderly Bye, disconnect, or protocol violation).
@@ -644,9 +802,29 @@ fn write_rollback_frame<W: Write>(
     )
 }
 
+/// Byte-counting shim over the connection reader: distinguishes a read
+/// deadline that fired on an *idle* connection (zero bytes of the next
+/// frame had arrived — a parked tenant, keep waiting) from one that
+/// fired *mid-frame* (the peer stalled with a frame torn on the wire —
+/// unrecoverable for this connection, declare it dead). Stack-only; the
+/// steady-state read path is unchanged.
+struct CountingReader<'a, R: Read> {
+    inner: &'a mut R,
+    consumed: usize,
+}
+
+impl<R: Read> Read for CountingReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.consumed += n;
+        Ok(n)
+    }
+}
+
 /// The connection loop: route each incoming chunk frame straight to its
 /// pinned core and return `ModelChunk` frames per chunk as rounds
 /// complete server-side. All round-state decisions are delegated to `wr`.
+#[allow(clippy::too_many_arguments)]
 fn serve_streamed<R: Read, W: Write>(
     reader: &mut R,
     writer: &mut W,
@@ -654,6 +832,8 @@ fn serve_streamed<R: Read, W: Write>(
     wire_job: u32,
     slot: u32,
     wr: &mut WorkerRound,
+    metrics: &DataPlaneMetrics,
+    jobs: &Mutex<HashMap<u32, JobEntry>>,
 ) -> Result<()> {
     let n_chunks = handle.n_chunks();
     // Frame buffers recycle through this pool: connection thread →
@@ -667,19 +847,61 @@ fn serve_streamed<R: Read, W: Write>(
     // writing into a worker that is still sending could deadlock both
     // sides on full socket buffers.
     let mut ready: Vec<u8> = Vec::new();
+    // Staged residual checkpoint for the open round (quantized workers
+    // only; buffers reuse across rounds). `ResidualSave` frames land
+    // here and are committed to the job only at `complete_round`, so a
+    // connection dying at any byte boundary leaves the stored
+    // checkpoint at an exact round boundary matching the slot's
+    // `rounds_done` — never a mix of two rounds.
+    let mut pending_residuals: Vec<Vec<u8>> = vec![Vec::new(); n_chunks];
     loop {
         let mut fb = pool.take();
         // Decode the frame into the pooled buffer; keep only scalars from
         // the borrowed view so the buffer itself can travel to the core.
         let (op, chunk, epoch, off, grad_len) = {
-            let view = match wire::read_frame_into(reader, &mut fb) {
+            let mut cr = CountingReader {
+                inner: reader,
+                consumed: 0,
+            };
+            let view = match wire::read_frame_into(&mut cr, &mut fb) {
                 Ok(v) => v,
-                Err(_) => return Ok(()), // disconnect = Bye
+                Err(e) => {
+                    if wire::is_timeout(&e) {
+                        if !wr.mid_round() && cr.consumed == 0 {
+                            // Idle tenant between rounds: a parked
+                            // worker is not a stalled worker. Keep
+                            // waiting (the buffer recycles).
+                            continue;
+                        }
+                        // Round deadline fired mid-round (or mid-frame):
+                        // declare this worker dead. Returning Ok routes
+                        // through the parking block, whose `mid_round`
+                        // check runs the exact same epoch-bump/rollback
+                        // recovery as a detected socket death. A torn
+                        // frame with no open round just ends the
+                        // connection (the stream cannot be resynced).
+                        metrics.timeouts.inc();
+                        metrics.deadline_trips.inc();
+                        return Ok(());
+                    }
+                    return Ok(()); // disconnect = Bye
+                }
             };
             match view.op {
                 Op::PushChunk | Op::PushChunkQuant => {
                     let (chunk, epoch, off, bytes) = wire::decode_chunk_payload(view.payload)?;
                     (view.op, chunk, epoch, off, bytes.len())
+                }
+                Op::ResidualSave => {
+                    // Residual checkpoint from a quantized worker:
+                    // validated here, staged in the connection, and
+                    // committed when the round completes (never touches
+                    // the engine or the cores). Replays overwrite with
+                    // byte-identical values, so staging is idempotent.
+                    let ci = validate_residual_save(view.payload, handle, n_chunks)?;
+                    pending_residuals[ci].clear();
+                    pending_residuals[ci].extend_from_slice(view.payload);
+                    continue;
                 }
                 Op::Bye => return Ok(()),
                 other => bail!("unexpected opcode {other:?} in a chunk-streamed session"),
@@ -694,6 +916,7 @@ fn serve_streamed<R: Read, W: Write>(
             // Stale in-flight push from before a rollback: rejected by
             // tag; the worker replays once it sees the RollbackRound
             // frame. (The buffer recycles on this `continue`.)
+            metrics.replayed_frames.inc();
             continue;
         }
         ensure!(
@@ -755,7 +978,16 @@ fn serve_streamed<R: Read, W: Write>(
             ready.clear();
             let mut rolled = false;
             while !rolled && wr.outstanding() > 0 {
-                let r = handle.recv_reply();
+                // `None` means the engine side of the job is gone —
+                // evicted mid-exchange (an uplink that exhausted its
+                // redial budget, or a shutdown). Fail the connection
+                // with an error rather than panicking or hanging.
+                let Some(r) = handle.recv_reply_opt() else {
+                    bail!(
+                        "job {wire_job} evicted mid-exchange \
+                         (uplink gave up or leader shut down)"
+                    );
+                };
                 rolled = apply_reply(r, wr, handle, wire_job, slot, &mut ready)?;
                 writer.write_all(&ready)?;
                 writer.flush()?;
@@ -765,9 +997,75 @@ fn serve_streamed<R: Read, W: Write>(
                 write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
             } else {
                 wr.complete_round();
+                commit_residuals(jobs, wire_job, slot, &mut pending_residuals, metrics);
             }
         }
     }
+}
+
+/// Validate one `ResidualSave` chunk payload (shape and placement)
+/// without touching any shared state, returning its chunk index. The
+/// caller stages the full payload in the connection's pending
+/// checkpoint; [`commit_residuals`] publishes it to the job only when
+/// the round completes.
+fn validate_residual_save(payload: &[u8], handle: &WorkerHandle, n_chunks: usize) -> Result<usize> {
+    let (chunk, _epoch, off, bytes) = wire::decode_chunk_payload(payload)?;
+    let ci = chunk as usize;
+    ensure!(ci < n_chunks, "residual chunk id {ci} out of range");
+    let (lo, hi) = handle.chunk_range(ci);
+    ensure!(
+        off as usize == lo,
+        "residual chunk {ci} offset {off} != expected {lo}"
+    );
+    let (_threshold, raw) = wire::split_residual_payload(bytes)?;
+    ensure!(
+        raw.len() == (hi - lo) * 4,
+        "residual chunk {ci} payload {} bytes != expected {}",
+        raw.len(),
+        (hi - lo) * 4
+    );
+    Ok(ci)
+}
+
+/// Publish the connection's staged residual checkpoint into the job's
+/// per-slot store — called at the exact round boundary, so what a
+/// successor restores always corresponds to the `rounds_done` it is
+/// told at Welcome. The full chunk payloads are stored verbatim so the
+/// restore path replays them byte-identical. Round-boundary work: one
+/// lock acquisition per completed quantized round, never on the
+/// per-chunk exchange path (a dense worker's staging stays empty and
+/// skips the lock entirely).
+fn commit_residuals(
+    jobs: &Mutex<HashMap<u32, JobEntry>>,
+    wire_job: u32,
+    slot: u32,
+    pending: &mut [Vec<u8>],
+    metrics: &DataPlaneMetrics,
+) {
+    if pending.iter().all(|p| p.is_empty()) {
+        return;
+    }
+    let n_chunks = pending.len();
+    let mut committed = 0u64;
+    {
+        let mut map = jobs.lock().unwrap();
+        if let Some(entry) = map.get_mut(&wire_job) {
+            let per = entry
+                .residuals
+                .entry(slot)
+                .or_insert_with(|| vec![Vec::new(); n_chunks]);
+            for (ci, p) in pending.iter_mut().enumerate() {
+                if p.is_empty() {
+                    continue;
+                }
+                per[ci].clear();
+                per[ci].extend_from_slice(p);
+                p.clear();
+                committed += 1;
+            }
+        }
+    }
+    metrics.residual_saves.add(committed);
 }
 
 /// Dial a leader and run the Hello/Welcome rendezvous — the shared
@@ -775,7 +1073,12 @@ fn serve_streamed<R: Read, W: Write>(
 /// (which additionally registers its aggregation `weight`; leaf workers
 /// pass 1 and send no trailer, keeping their Hello bytes unchanged).
 /// Returns `(reader, writer, slot, negotiated proto, epoch, rounds
-/// done)`.
+/// done, residual checkpoint payloads)`.
+///
+/// `io_timeout` arms socket read/write deadlines for the whole client
+/// session (`None` = block forever, the legacy behavior); a fired
+/// deadline surfaces as a typed [`wire::WireError::Timeout`] in the
+/// error chain rather than a hang.
 #[allow(clippy::type_complexity)]
 fn rendezvous(
     addr: impl ToSocketAddrs,
@@ -783,6 +1086,7 @@ fn rendezvous(
     spec: JobSpec,
     proto: u32,
     weight: u32,
+    io_timeout: Option<std::time::Duration>,
 ) -> Result<(
     BufReader<TcpStream>,
     BufWriter<TcpStream>,
@@ -790,6 +1094,7 @@ fn rendezvous(
     u32,
     u32,
     u64,
+    Vec<Vec<u8>>,
 )> {
     spec.validate()?;
     ensure!(
@@ -800,6 +1105,8 @@ fn rendezvous(
     );
     let stream = TcpStream::connect(addr).context("connect to leader")?;
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(io_timeout).ok();
+    stream.set_write_timeout(io_timeout).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut payload = spec.to_bytes();
@@ -815,8 +1122,12 @@ fn rendezvous(
             worker: 0,
             payload,
         },
-    )?;
-    let welcome = wire::read_frame(&mut reader)?;
+    )
+    .map_err(typed_io)
+    .context("send Hello")?;
+    let welcome = wire::read_frame(&mut reader)
+        .map_err(typed_io)
+        .context("read Welcome")?;
     if welcome.op != Op::Welcome {
         bail!("expected Welcome, got {:?}", welcome.op);
     }
@@ -824,7 +1135,49 @@ fn rendezvous(
     let epoch = u32::from_le_bytes(welcome.payload[4..8].try_into().unwrap());
     let rounds_done = u64::from_le_bytes(welcome.payload[8..16].try_into().unwrap());
     let accepted = wire::proto_version_at(&welcome.payload, 16).min(proto);
-    Ok((reader, writer, welcome.worker, accepted, epoch, rounds_done))
+    // Residual-restore trailer (absent on pre-checkpoint leaders): the
+    // count of ResidualChunk frames that follow the Welcome, each
+    // carrying one chunk's checkpointed error-feedback residual for a
+    // successor to resume from.
+    let n_restore = match welcome.payload.get(20..24) {
+        Some(b) => u32::from_le_bytes(b.try_into().unwrap()) as usize,
+        None => 0,
+    };
+    ensure!(
+        n_restore as u64 <= spec.model_elems,
+        "Welcome claims {n_restore} residual chunks for a \
+         {}-element model",
+        spec.model_elems
+    );
+    let mut residuals = Vec::with_capacity(n_restore);
+    for _ in 0..n_restore {
+        let f = wire::read_frame(&mut reader)
+            .map_err(typed_io)
+            .context("read ResidualChunk")?;
+        ensure!(
+            f.op == Op::ResidualChunk,
+            "expected ResidualChunk, got {:?}",
+            f.op
+        );
+        residuals.push(f.payload);
+    }
+    Ok((
+        reader,
+        writer,
+        welcome.worker,
+        accepted,
+        epoch,
+        rounds_done,
+        residuals,
+    ))
+}
+
+/// Lift a client-edge I/O failure into the typed taxonomy of
+/// [`wire::WireError`] — a fired socket deadline becomes
+/// `WireError::Timeout` in the error chain (downcastable), a peer close
+/// becomes `Disconnected`, a mid-frame EOF stays `Torn`.
+fn typed_io(e: std::io::Error) -> anyhow::Error {
+    anyhow::Error::from(wire::WireError::classify(&e)).context(e)
 }
 
 /// The relay's uplink loop: forward each locally-complete chunk **sum**
@@ -856,11 +1209,24 @@ fn rendezvous(
 /// model payloads ride pooled receive buffers to the owning core, and
 /// the pooled sum buffers recycle on drop.
 ///
-/// The parent link retries forever (50 ms backoff): a relay outliving
-/// its parent across a root restart is the intended recovery story, and
-/// the thread exits only when the local job is evicted (`recv_sum` →
+/// The parent link redials under capped exponential backoff with
+/// jitter ([`DeadlineConfig::redial_base`] doubling up to `redial_cap`;
+/// a relay outliving its parent across a root restart is the intended
+/// recovery story) — but no longer forever: after `redial_attempts`
+/// consecutive failures the uplink **gives up**, evicts the job (every
+/// blocked worker exchange fails with a typed error instead of hanging
+/// on deferred pulls), and returns [`UplinkError::ParentUnreachable`].
+/// The thread also exits when the local job is evicted (`recv_sum` →
 /// `None`) or the parent says `Bye`.
-fn run_uplink(mut up: RelayUplink, rc: Arc<RelayConfig>, wire_job: u32, spec: JobSpec) {
+fn run_uplink(
+    mut up: RelayUplink,
+    rc: Arc<RelayConfig>,
+    wire_job: u32,
+    spec: JobSpec,
+    server: Arc<PHubServer>,
+    jobs: Arc<Mutex<HashMap<u32, JobEntry>>>,
+    dl: DeadlineConfig,
+) -> Result<(), UplinkError> {
     let n_chunks = up.n_chunks();
     // Chunk → element range, copied out so the replay closure below
     // doesn't hold a borrow of `up` across `recv_sum` calls.
@@ -881,15 +1247,48 @@ fn run_uplink(mut up: RelayUplink, rc: Arc<RelayConfig>, wire_job: u32, spec: Jo
         ..spec
     };
     let weight = spec.n_workers;
+    // Deterministic jitter source, seeded per job so a fleet of relays
+    // redialing a restarted root doesn't thundering-herd in lockstep.
+    let mut jitter = XorShift64::new(0x9E37_79B9_7F4A_7C15 ^ wire_job as u64);
+    let mut attempts: u32 = 0;
 
     'session: loop {
-        let (mut reader, mut writer, slot, _proto, mut epoch, _rounds) =
-            match rendezvous(&rc.parent[..], wire_job, up_spec, wire::PROTO_MAX, weight) {
-                Ok(x) => x,
+        let (mut reader, mut writer, slot, _proto, mut epoch, _rounds, _residuals) =
+            match rendezvous(
+                &rc.parent[..],
+                wire_job,
+                up_spec,
+                wire::PROTO_MAX,
+                weight,
+                dl.io_timeout,
+            ) {
+                Ok(x) => {
+                    attempts = 0;
+                    x
+                }
                 Err(_) => {
                     // Parent down or not up yet; the rack blocks on its
-                    // deferred pulls until the link comes back.
-                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    // deferred pulls until the link comes back — or
+                    // until the redial budget runs out.
+                    server.metrics().redials.inc();
+                    attempts += 1;
+                    if dl.redial_attempts > 0 && attempts >= dl.redial_attempts {
+                        // Give up: fail the job so every blocked worker
+                        // gets an error instead of hanging forever. The
+                        // transport entry goes first (jobs → server.jobs
+                        // is the crate-wide lock order), guarded against
+                        // a racing re-creation under the same wire id.
+                        server.metrics().uplink_giveups.inc();
+                        let mut map = jobs.lock().unwrap();
+                        let ours = map.get(&wire_job).map(|e| e.job) == Some(up.job());
+                        if ours {
+                            map.remove(&wire_job);
+                        }
+                        drop(map);
+                        server.evict(up.job());
+                        return Err(UplinkError::ParentUnreachable { attempts });
+                    }
+                    std::thread::sleep(backoff_delay(&dl, attempts, &mut jitter));
                     continue 'session;
                 }
             };
@@ -927,7 +1326,7 @@ fn run_uplink(mut up: RelayUplink, rc: Arc<RelayConfig>, wire_job: u32, spec: Jo
             let mut forwarded = sent.iter().filter(|&&s| s).count();
             while forwarded < n_chunks {
                 let (ci, lo) = match up.recv_sum() {
-                    None => return, // job evicted; rack is shutting down
+                    None => return Ok(()), // job evicted; rack is shutting down
                     Some(Reply::Sum { chunk, data, .. }) => {
                         let ci = chunk as usize;
                         debug_assert!(!sent[ci], "duplicate sum for chunk {ci}");
@@ -980,7 +1379,7 @@ fn run_uplink(mut up: RelayUplink, rc: Arc<RelayConfig>, wire_job: u32, spec: Jo
                             let e = u32::from_le_bytes(view.payload[0..4].try_into().unwrap());
                             (view.op, 0, e, 0, 0)
                         }
-                        Op::Bye => return,
+                        Op::Bye => return Ok(()),
                         _ => continue 'session,
                     }
                 };
@@ -1024,6 +1423,25 @@ fn run_uplink(mut up: RelayUplink, rc: Arc<RelayConfig>, wire_job: u32, spec: Jo
     }
 }
 
+/// Exponential backoff with half-jitter for the uplink redial loop:
+/// `base * 2^(attempt-1)` clamped to `cap`, then jittered uniformly
+/// into `[d/2, d]` so simultaneously-orphaned relays spread their
+/// redials instead of hammering a restarting root in lockstep.
+fn backoff_delay(
+    dl: &DeadlineConfig,
+    attempt: u32,
+    rng: &mut XorShift64,
+) -> std::time::Duration {
+    let exp = attempt.saturating_sub(1).min(20);
+    let d = dl
+        .redial_base
+        .saturating_mul(1u32 << exp)
+        .min(dl.redial_cap);
+    let nanos = d.as_nanos() as u64;
+    let half = nanos / 2;
+    std::time::Duration::from_nanos(half + rng.next_u64() % (half.max(1) + 1))
+}
+
 /// A remote worker's connection to a [`TcpLeader`].
 pub struct TcpWorker {
     reader: BufReader<TcpStream>,
@@ -1060,6 +1478,12 @@ pub struct TcpWorker {
     /// Per-chunk arrival flags for the open round's `ModelChunk`s,
     /// reused across rounds so the `_into` pull path allocates nothing.
     recv_seen: Vec<bool>,
+    /// Residual checkpoint payloads handed down at admission (a
+    /// successor resuming a dead quantized worker's seat; empty
+    /// otherwise). Consumed by the first quantized round, which installs
+    /// them into the fresh quantizer so the compressed stream continues
+    /// bit-identically to the predecessor's.
+    restored: Vec<Vec<u8>>,
 }
 
 impl TcpWorker {
@@ -1080,8 +1504,22 @@ impl TcpWorker {
         spec: JobSpec,
         proto: u32,
     ) -> Result<TcpWorker> {
-        let (reader, writer, slot, proto, epoch, rounds_done) =
-            rendezvous(addr, job, spec, proto, 1)?;
+        Self::connect_with_opts(addr, job, spec, proto, DeadlineConfig::default().io_timeout)
+    }
+
+    /// [`TcpWorker::connect_with_proto`] with an explicit socket
+    /// read/write deadline (`None` = block forever). A fired deadline
+    /// surfaces as a typed [`wire::WireError::Timeout`] in the error
+    /// chain instead of hanging the training loop.
+    pub fn connect_with_opts(
+        addr: impl ToSocketAddrs,
+        job: u32,
+        spec: JobSpec,
+        proto: u32,
+        io_timeout: Option<std::time::Duration>,
+    ) -> Result<TcpWorker> {
+        let (reader, writer, slot, proto, epoch, rounds_done, restored) =
+            rendezvous(addr, job, spec, proto, 1, io_timeout)?;
         Ok(TcpWorker {
             reader,
             writer,
@@ -1095,6 +1533,7 @@ impl TcpWorker {
             quant_round: Vec::new(),
             recv_buf: Vec::new(),
             recv_seen: Vec::new(),
+            restored,
         })
     }
 
@@ -1123,6 +1562,16 @@ impl TcpWorker {
     /// vector); `None` sends the cached quantized payloads. Also how a
     /// round is *replayed* after `RollbackRound`: identical bytes, new
     /// epoch.
+    ///
+    /// On the compressed path each chunk's `ResidualSave` checkpoint
+    /// frame rides immediately *before* its push, so by the time the
+    /// leader has absorbed every push of round `r` it necessarily holds
+    /// the complete post-round-`r` residual checkpoint in its staging
+    /// area — committing it at round completion. A death at any byte
+    /// boundary therefore leaves the stored checkpoint at an exact
+    /// round boundary matching `rounds_done`, never a mix of rounds
+    /// (replays resend byte-identical residuals, so the staging is
+    /// idempotent).
     fn send_round(&mut self, grad: Option<&[f32]>) -> Result<()> {
         for (i, c) in self.table.chunks.iter().enumerate() {
             match grad {
@@ -1136,19 +1585,33 @@ impl TcpWorker {
                     c.offset as u64,
                     &g[c.offset..c.offset + c.len],
                 )?,
-                None => wire::write_chunk_frame_buffered(
-                    &mut self.writer,
-                    Op::PushChunkQuant,
-                    self.job,
-                    self.slot,
-                    i as u32,
-                    self.epoch,
-                    c.offset as u64,
-                    &self.quant_round[i],
-                )?,
+                None => {
+                    let cq = self.chunk_quant.as_ref().unwrap();
+                    wire::write_residual_frame(
+                        &mut self.writer,
+                        Op::ResidualSave,
+                        self.job,
+                        self.slot,
+                        i as u32,
+                        self.epoch,
+                        c.offset as u64,
+                        cq.threshold(),
+                        cq.residual_chunk(i),
+                    )?;
+                    wire::write_chunk_frame_buffered(
+                        &mut self.writer,
+                        Op::PushChunkQuant,
+                        self.job,
+                        self.slot,
+                        i as u32,
+                        self.epoch,
+                        c.offset as u64,
+                        &self.quant_round[i],
+                    )?;
+                }
             }
         }
-        self.writer.flush()?;
+        self.writer.flush().map_err(typed_io)?;
         Ok(())
     }
 
@@ -1206,6 +1669,11 @@ impl TcpWorker {
         if self.chunk_quant.is_none() {
             let lens: Vec<usize> = self.table.chunks.iter().map(|c| c.len).collect();
             self.chunk_quant = Some(ChunkQuantizer::new(&lens, threshold));
+            // A successor's first quantized round: install the dead
+            // predecessor's checkpointed residuals before quantizing
+            // anything, so the compressed stream (and therefore the
+            // whole training trajectory) continues bit-identically.
+            self.restore_residuals(threshold)?;
         }
         if self.quant_round.len() != self.table.chunks.len() {
             self.quant_round = vec![Vec::new(); self.table.chunks.len()];
@@ -1220,8 +1688,47 @@ impl TcpWorker {
                 &mut self.quant_round[i],
             );
         }
+        // `send_round` interleaves each chunk's post-round residual
+        // checkpoint with its push (see its docs), so the leader commits
+        // the checkpoint exactly when this round completes — no separate
+        // checkpoint leg a death could tear off.
         self.send_round(None)?;
         self.read_model_chunks_into(None, model)
+    }
+
+    /// Install residual checkpoints handed down at admission into the
+    /// freshly built quantizer (no-op for a fresh seat).
+    fn restore_residuals(&mut self, threshold: f32) -> Result<()> {
+        let n_chunks = self.table.chunks.len();
+        let cq = self.chunk_quant.as_mut().unwrap();
+        let mut scratch: Vec<f32> = Vec::new();
+        for payload in self.restored.drain(..) {
+            let (chunk, _epoch, off, bytes) = wire::decode_chunk_payload(&payload)?;
+            let ci = chunk as usize;
+            ensure!(ci < n_chunks, "restored residual chunk {ci} out of range");
+            let c = self.table.chunks[ci];
+            ensure!(
+                off as usize == c.offset,
+                "restored residual chunk {ci} offset mismatch"
+            );
+            let (t, raw) = wire::split_residual_payload(bytes)?;
+            ensure!(
+                t.to_bits() == threshold.to_bits(),
+                "restored residual threshold {t} != requested {threshold} \
+                 (a successor must quantize with its predecessor's \
+                 threshold to resume bit-exact)"
+            );
+            ensure!(
+                raw.len() == c.len * 4,
+                "restored residual chunk {ci} payload {} bytes != {}",
+                raw.len(),
+                c.len * 4
+            );
+            scratch.resize(c.len, 0.0);
+            wire::copy_f32s_from_le(&mut scratch[..c.len], raw)?;
+            cq.restore_chunk_residual(ci, &scratch[..c.len]);
+        }
+        Ok(())
     }
 
     /// Collect one `ModelChunk` frame per chunk (in completion order)
@@ -1252,7 +1759,8 @@ impl TcpWorker {
                 // extracted inside this block — replaying a rollback
                 // needs `&mut self` again afterwards.
                 let rolled_to = {
-                    let f = wire::read_frame_into(&mut self.reader, &mut self.recv_buf)?;
+                    let f = wire::read_frame_into(&mut self.reader, &mut self.recv_buf)
+                        .map_err(typed_io)?;
                     match f.op {
                         Op::ModelChunk => {
                             let (chunk, epoch, off, bytes) =
@@ -1382,6 +1890,38 @@ mod tests {
         s = spec(4096, 1);
         s.lr = f32::NAN;
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn backoff_is_capped_jittered_and_deterministic() {
+        let dl = DeadlineConfig {
+            redial_base: std::time::Duration::from_millis(10),
+            redial_cap: std::time::Duration::from_millis(80),
+            ..DeadlineConfig::default()
+        };
+        let mut rng = XorShift64::new(42);
+        for attempt in 1..=10u32 {
+            let d = backoff_delay(&dl, attempt, &mut rng);
+            let exp = attempt.saturating_sub(1).min(20);
+            let nominal = dl
+                .redial_base
+                .saturating_mul(1u32 << exp)
+                .min(dl.redial_cap);
+            // Half-jitter window: [nominal/2, nominal], never above cap.
+            assert!(
+                d >= nominal / 2 && d <= nominal,
+                "attempt {attempt}: {d:?} outside [{:?}, {nominal:?}]",
+                nominal / 2
+            );
+            assert!(d <= dl.redial_cap);
+        }
+        // Same seed, same schedule — the determinism the chaos soak
+        // relies on for reproducible fault timelines.
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        let da: Vec<_> = (1..=6).map(|i| backoff_delay(&dl, i, &mut a)).collect();
+        let db: Vec<_> = (1..=6).map(|i| backoff_delay(&dl, i, &mut b)).collect();
+        assert_eq!(da, db);
     }
 
     #[test]

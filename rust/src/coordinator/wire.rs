@@ -30,6 +30,8 @@
 //! | 8  | `ModelChunk`    | L→W | chunk header + chunk params LE f32s |
 //! | 9  | `PushChunkQuant`| W→L | chunk header + per-chunk `QuantGrad` |
 //! | 10 | `RollbackRound` | L→W | round epoch u32 — rewind + replay the open round |
+//! | 11 | `ResidualSave`  | W→L | chunk header + threshold f32 + residual LE f32s — checkpoint one chunk's error-feedback residual |
+//! | 12 | `ResidualChunk` | L→W | same layout — restore a checkpointed residual to a successor at admission |
 //!
 //! "W→L" reads "downstream peer → upstream peer": the hierarchical
 //! deployment (paper §3.4, Fig. 19) runs the *same* opcodes on the
@@ -186,6 +188,14 @@ pub enum Op {
     /// Server -> worker: the open round was rewound (payload: new round
     /// epoch u32); re-send the round's chunk frames under that epoch.
     RollbackRound = 10,
+    /// Worker -> server: checkpoint one chunk's quantizer error-feedback
+    /// residual at a round boundary (payload: chunk header + threshold
+    /// f32 + residual LE f32s). The leader stores the bytes per slot so
+    /// a successor resumes bit-exact from *any* death round.
+    ResidualSave = 11,
+    /// Server -> worker: restore a checkpointed residual to a successor
+    /// at admission (same payload layout as `ResidualSave`).
+    ResidualChunk = 12,
 }
 
 impl Op {
@@ -198,9 +208,76 @@ impl Op {
             8 => Op::ModelChunk,
             9 => Op::PushChunkQuant,
             10 => Op::RollbackRound,
+            11 => Op::ResidualSave,
+            12 => Op::ResidualChunk,
             _ => return None,
         })
     }
+}
+
+/// Typed classification of connection-plane I/O failures, embedded as
+/// the inner error of the `std::io::Error`s this module returns so
+/// callers can branch on failure shape without string matching:
+/// `WireError::classify(&err)` recovers it from any I/O error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// A read or write deadline fired (`WouldBlock` / `TimedOut`).
+    Timeout,
+    /// The peer went away cleanly at a frame boundary (0 bytes of the
+    /// next frame had arrived).
+    Disconnected,
+    /// The stream ended mid-frame: a torn length prefix, header, or
+    /// payload. Carries which part was cut short.
+    Torn(&'static str),
+    /// The bytes arrived but violate the protocol (bad opcode, absurd
+    /// length, short chunk payload).
+    Protocol(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Timeout => write!(f, "wire timeout: deadline fired"),
+            WireError::Disconnected => write!(f, "peer disconnected at frame boundary"),
+            WireError::Torn(what) => write!(f, "torn frame: truncated {what}"),
+            WireError::Protocol(what) => write!(f, "protocol violation: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl WireError {
+    fn io(self, kind: std::io::ErrorKind) -> std::io::Error {
+        std::io::Error::new(kind, self)
+    }
+
+    /// Recover the typed classification from any I/O error: the embedded
+    /// [`WireError`] when this module produced it, otherwise inferred
+    /// from the error kind (timeouts from the socket layer arrive as
+    /// `WouldBlock`/`TimedOut` without an inner payload).
+    pub fn classify(e: &std::io::Error) -> WireError {
+        if is_timeout(e) {
+            return WireError::Timeout;
+        }
+        if let Some(inner) = e.get_ref().and_then(|i| i.downcast_ref::<WireError>()) {
+            return *inner;
+        }
+        match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => WireError::Torn("stream"),
+            _ => WireError::Disconnected,
+        }
+    }
+}
+
+/// True when an I/O error is a socket deadline firing. Platforms
+/// disagree on the kind (`WouldBlock` on Unix, `TimedOut` elsewhere),
+/// so both are accepted.
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
 }
 
 /// A decoded frame (owning form — rendezvous/control paths and tests;
@@ -266,40 +343,62 @@ pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
 /// received (`read_to_end`) rather than being pre-allocated from the
 /// prefix — a peer that *claims* a huge frame without sending it cannot
 /// make the receiver allocate it (no allocation-bomb `Hello`s).
+///
+/// Torn-input contract: EOF at any byte offset returns a clean typed
+/// error immediately — never a hang, never a panic. The inner error is a
+/// [`WireError`] distinguishing a clean frame-boundary disconnect (0
+/// bytes of the next frame arrived → [`WireError::Disconnected`]) from a
+/// mid-frame cut ([`WireError::Torn`], naming the truncated part), so a
+/// supervisor can tell "peer left" from "peer died mid-write".
 pub fn read_frame_into<'a>(
     r: &mut impl Read,
     payload: &'a mut Vec<u8>,
 ) -> std::io::Result<FrameView<'a>> {
+    // The length prefix is read with a manual loop so 0 bytes (clean
+    // boundary disconnect) and 1–3 bytes (torn prefix) classify
+    // differently; `read_exact` collapses both into one error.
     let mut len4 = [0u8; 4];
-    r.read_exact(&mut len4)?;
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    WireError::Disconnected.io(std::io::ErrorKind::UnexpectedEof)
+                } else {
+                    WireError::Torn("length prefix").io(std::io::ErrorKind::UnexpectedEof)
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
     let body_len = u32::from_le_bytes(len4) as usize;
     if body_len < HEADER_BYTES - 4 {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "frame too short",
-        ));
+        return Err(WireError::Protocol("frame too short").io(std::io::ErrorKind::InvalidData));
     }
     if body_len > MAX_FRAME_BYTES {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "frame exceeds MAX_FRAME_BYTES",
-        ));
+        return Err(
+            WireError::Protocol("frame exceeds MAX_FRAME_BYTES").io(std::io::ErrorKind::InvalidData)
+        );
     }
     let mut head = [0u8; HEADER_BYTES - 4];
-    r.read_exact(&mut head)?;
-    let op = Op::from_u8(head[0]).ok_or_else(|| {
-        std::io::Error::new(std::io::ErrorKind::InvalidData, "bad opcode")
-    })?;
+    r.read_exact(&mut head)
+        .map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                WireError::Torn("frame header").io(std::io::ErrorKind::UnexpectedEof)
+            }
+            _ => e,
+        })?;
+    let op = Op::from_u8(head[0])
+        .ok_or_else(|| WireError::Protocol("bad opcode").io(std::io::ErrorKind::InvalidData))?;
     let job = u32::from_le_bytes(head[4..8].try_into().unwrap());
     let worker = u32::from_le_bytes(head[8..12].try_into().unwrap());
     let want = body_len - (HEADER_BYTES - 4);
     payload.clear();
     let got = r.take(want as u64).read_to_end(payload)?;
     if got != want {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::UnexpectedEof,
-            "truncated frame",
-        ));
+        return Err(WireError::Torn("frame payload").io(std::io::ErrorKind::UnexpectedEof));
     }
     Ok(FrameView {
         op,
@@ -387,6 +486,55 @@ pub fn write_chunk_frame_f32s(
         w.write_all(&stage[..n])?;
     }
     Ok(())
+}
+
+/// Write a residual-checkpoint frame (`ResidualSave` / `ResidualChunk`):
+/// a chunk frame whose payload is `[threshold f32][residual LE f32s]`.
+/// Same stack-staged serialization as [`write_chunk_frame_f32s`] — the
+/// per-round-boundary checkpoint leg stays allocation-free. No flush.
+#[allow(clippy::too_many_arguments)]
+pub fn write_residual_frame(
+    w: &mut impl Write,
+    op: Op,
+    job: u32,
+    worker: u32,
+    chunk: u32,
+    epoch: u32,
+    elem_offset: u64,
+    threshold: f32,
+    residual: &[f32],
+) -> std::io::Result<()> {
+    let body_len = HEADER_BYTES - 4 + CHUNK_PREFIX_BYTES + 4 + residual.len() * 4;
+    w.write_all(&(body_len as u32).to_le_bytes())?;
+    w.write_all(&[op as u8, 0, 0, 0])?;
+    w.write_all(&job.to_le_bytes())?;
+    w.write_all(&worker.to_le_bytes())?;
+    w.write_all(&chunk.to_le_bytes())?;
+    w.write_all(&epoch.to_le_bytes())?;
+    w.write_all(&elem_offset.to_le_bytes())?;
+    w.write_all(&threshold.to_le_bytes())?;
+    const GROUP: usize = 64;
+    let mut stage = [0u8; GROUP * 4];
+    for group in residual.chunks(GROUP) {
+        let mut n = 0;
+        for x in group {
+            stage[n..n + 4].copy_from_slice(&x.to_le_bytes());
+            n += 4;
+        }
+        w.write_all(&stage[..n])?;
+    }
+    Ok(())
+}
+
+/// Split a residual payload (the bytes after the chunk prefix) into
+/// `(threshold, residual LE f32 bytes)`. The f32 bytes must be
+/// 4-aligned; decode them with [`copy_f32s_from_le`] / [`bytes_to_f32s`].
+pub fn split_residual_payload(bytes: &[u8]) -> std::io::Result<(f32, &[u8])> {
+    if bytes.len() < 4 || (bytes.len() - 4) % 4 != 0 {
+        return Err(WireError::Protocol("bad residual payload").io(std::io::ErrorKind::InvalidData));
+    }
+    let threshold = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    Ok((threshold, &bytes[4..]))
 }
 
 /// Build a chunk-carrying payload:
@@ -716,5 +864,93 @@ mod tests {
         assert!(PROTO_MONOLITHIC < PROTO_MIN);
         assert!(PROTO_CHUNK_STREAMED < PROTO_MIN);
         assert!(PROTO_MIN <= PROTO_MAX);
+    }
+
+    /// Feed every strict byte-prefix of a real chunk frame: each one
+    /// must return a clean typed error — never hang, never panic — and
+    /// the classification must name what was cut (nothing at all =
+    /// `Disconnected`; inside the prefix/header/payload = `Torn`).
+    #[test]
+    fn truncation_at_every_offset_classifies_cleanly() {
+        let bytes = encode(&Frame {
+            op: Op::PushChunk,
+            job: 3,
+            worker: 1,
+            payload: encode_chunk_payload(0, 2, 0, &f32s_to_bytes(&[1.0, 2.0, 3.0])),
+        });
+        assert!(bytes.len() > HEADER_BYTES + CHUNK_PREFIX_BYTES);
+        for cut in 0..bytes.len() {
+            let mut cursor = std::io::Cursor::new(&bytes[..cut]);
+            let mut buf = Vec::new();
+            let err = read_frame_into(&mut cursor, &mut buf).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut {cut}");
+            let want = match cut {
+                0 => WireError::Disconnected,
+                1..=3 => WireError::Torn("length prefix"),
+                4..=15 => WireError::Torn("frame header"),
+                _ => WireError::Torn("frame payload"),
+            };
+            assert_eq!(WireError::classify(&err), want, "cut {cut}");
+        }
+        // The full frame still decodes.
+        let mut cursor = std::io::Cursor::new(&bytes[..]);
+        let mut buf = Vec::new();
+        assert!(read_frame_into(&mut cursor, &mut buf).is_ok());
+    }
+
+    #[test]
+    fn protocol_violations_classify_as_protocol() {
+        let mut bytes = encode(&Frame {
+            op: Op::Bye,
+            job: 1,
+            worker: 0,
+            payload: vec![],
+        });
+        bytes[4] = 99; // clobber opcode
+        let mut cursor = std::io::Cursor::new(bytes);
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(WireError::classify(&err), WireError::Protocol("bad opcode"));
+        let timeout = std::io::Error::new(std::io::ErrorKind::WouldBlock, "deadline");
+        assert!(is_timeout(&timeout));
+        assert_eq!(WireError::classify(&timeout), WireError::Timeout);
+    }
+
+    #[test]
+    fn residual_opcodes_roundtrip_and_stay_clear_of_retired_range() {
+        for op in [Op::ResidualSave, Op::ResidualChunk] {
+            assert_eq!(Op::from_u8(op as u8), Some(op));
+            assert!((op as u8) > 10, "3–5 stay retired; new opcodes go above");
+        }
+        assert_eq!(Op::ResidualSave as u8, 11);
+        assert_eq!(Op::ResidualChunk as u8, 12);
+    }
+
+    #[test]
+    fn residual_frame_roundtrips_threshold_and_values() {
+        let residual = [0.5f32, -0.25, 0.0, 7.75, -1.5];
+        let mut wire_bytes = Vec::new();
+        write_residual_frame(
+            &mut wire_bytes,
+            Op::ResidualSave,
+            3,
+            1,
+            2,
+            9,
+            128,
+            0.125,
+            &residual,
+        )
+        .unwrap();
+        let mut cursor = std::io::Cursor::new(wire_bytes);
+        let f = read_frame(&mut cursor).unwrap();
+        assert_eq!(f.op, Op::ResidualSave);
+        let (chunk, epoch, off, bytes) = decode_chunk_payload(&f.payload).unwrap();
+        assert_eq!((chunk, epoch, off), (2, 9, 128));
+        let (threshold, raw) = split_residual_payload(bytes).unwrap();
+        assert_eq!(threshold.to_bits(), 0.125f32.to_bits());
+        assert_eq!(bytes_to_f32s(raw).unwrap(), residual);
+        // Misaligned or headerless payloads are rejected, not panicked on.
+        assert!(split_residual_payload(&[0u8; 3]).is_err());
+        assert!(split_residual_payload(&[0u8; 7]).is_err());
     }
 }

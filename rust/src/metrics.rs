@@ -71,6 +71,30 @@ pub struct DataPlaneMetrics {
     /// `RollbackRound` control messages processed by cores (mid-round
     /// recovery events × cores).
     pub rollbacks: Counter,
+    /// Read/write deadlines that fired on a connection (leader round
+    /// deadline or a peer's socket timeout surfaced to us).
+    pub timeouts: Counter,
+    /// Relay uplink reconnection attempts after a failed rendezvous
+    /// with the parent (each backoff-then-retry counts once).
+    pub redials: Counter,
+    /// Relay uplinks that exhausted their redial budget and failed the
+    /// job with a typed error instead of spinning forever.
+    pub uplink_giveups: Counter,
+    /// Stalled-worker round deadlines that converted a silent mid-round
+    /// stall into the epoch-bump/rollback/replay recovery path.
+    pub deadline_trips: Counter,
+    /// Frames recognized as replays/duplicates of already-absorbed
+    /// pushes (stale-epoch drops at the connection, replayed or
+    /// stale-tagged pushes at the engine) and discarded idempotently.
+    pub replayed_frames: Counter,
+    /// Quantizer error-feedback residual checkpoint chunks *committed*
+    /// at round completion (`ResidualSave` frames staged during the
+    /// round and published at its boundary), one count per chunk.
+    pub residual_saves: Counter,
+    /// Successor connections that were handed a stored residual
+    /// checkpoint at admission (`ResidualChunk` restore, one per
+    /// restored connection).
+    pub residual_restores: Counter,
     /// The SIMD kernel tier this server's cores dispatch to —
     /// `coordinator::kernels::KernelTier as u8`
     /// (0 scalar, 1 SSE2, 2 AVX2). Set once by `PHubServer::start`.

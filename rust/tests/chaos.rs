@@ -1,0 +1,311 @@
+//! Chaos soak over the TCP transport: a seeded, randomized fault
+//! schedule (connection kills, mid-frame cuts, delays, duplicate frames
+//! — see `coordinator::faults`) injected *under* every worker connection
+//! must leave training **bit-identical** to an unfaulted twin, for
+//! dense, quantized, and two-level deployments.
+//!
+//! Drivers react to injected failures exactly like production workers:
+//! reconnect through a fresh proxy and resume from `rounds_done()`; the
+//! leader's epoch-bump/rollback/replay recovery and the quantizers'
+//! residual checkpoints (`ResidualSave` / `ResidualChunk`) do the rest.
+//! Because a fault can tear the *final* model read, each faulted run
+//! ends with an unfaulted **verification round** driven by fresh
+//! successor connections — which doubles as the restore proof: for
+//! quantized jobs the verification workers resume purely from
+//! leader-held residual checkpoints, so their output bits match the
+//! twin's only if the checkpoint equals the twin's in-memory
+//! error-feedback state.
+//!
+//! `PHUB_FAULT_SEED=<u64>` pins the run to one seed (the CI chaos lane
+//! runs a seed matrix); unset, a small built-in seed list runs.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use phub::coordinator::faults::{FaultPlan, FaultProxy, FaultRates};
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::transport::{JobSpec, RelayConfig, TcpLeader, TcpWorker};
+
+/// Training rounds driven under fault injection; round `ROUNDS` is the
+/// unfaulted verification round.
+const ROUNDS: usize = 5;
+/// Overall per-frame fault probability (split 40/30/20/10 across
+/// kill/cut/delay/duplicate by [`FaultRates::uniform`]).
+const RATE: f32 = 0.06;
+/// Quantization threshold for the quantized topology.
+const THRESHOLD: f32 = 0.05;
+
+fn spec(model: u64, chunk: u64, workers: u32) -> JobSpec {
+    JobSpec {
+        model_elems: model,
+        chunk_elems: chunk,
+        n_workers: workers,
+        lr: 0.25,
+        momentum: 0.9,
+    }
+}
+
+/// Deterministic per-seat, per-round gradient. Mixes components above
+/// and below [`THRESHOLD`] so quantization always leaves nonzero
+/// error-feedback residuals for the checkpoint path to carry.
+fn grad(n: usize, seat: usize, round: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (seat as f32 - 0.5) * 0.7 + (round as f32 + 1.0) * 0.11 + (i % 13) as f32 * 0.009)
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn seeds() -> Vec<u64> {
+    match std::env::var("PHUB_FAULT_SEED") {
+        Ok(v) => vec![v.trim().parse().expect("PHUB_FAULT_SEED must be a u64")],
+        Err(_) => vec![1, 7, 1337],
+    }
+}
+
+/// Drive one worker seat to [`ROUNDS`] completed rounds against
+/// `leader`, with every connection tunnelled through a fresh
+/// single-connection [`FaultProxy`]. Each (re)connection attempt draws a
+/// sub-seeded schedule, so the whole run is a function of `seed` plus
+/// recovery-race timing — and the bit-identity assertion must hold for
+/// *any* interleaving. Gradients are keyed by the leader-assigned slot
+/// (`grad_base + slot`) so seats feed identical data no matter which
+/// connection currently holds them.
+fn chaos_seat(
+    leader: SocketAddr,
+    job: u32,
+    s: JobSpec,
+    quant: Option<f32>,
+    grad_base: usize,
+    seed: u64,
+) {
+    let n = s.model_elems as usize;
+    let mut scratch = vec![0.0f32; n];
+    let rates = FaultRates::uniform(RATE);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut attempt = 0u64;
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "chaos seat wedged: job {job} seed {seed} never reached {ROUNDS} rounds"
+        );
+        attempt += 1;
+        let plan = FaultPlan::new(seed ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15), rates);
+        let Ok(proxy) = FaultProxy::spawn(leader, plan) else {
+            continue;
+        };
+        // A kill can land on the Hello frame itself, failing the
+        // rendezvous; that is just another death to retry.
+        let mut w = match TcpWorker::connect(proxy.addr(), job, s) {
+            Ok(w) => w,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+        };
+        let mut r = w.rounds_done() as usize;
+        let slot = w.slot as usize;
+        let mut died = false;
+        while r < ROUNDS {
+            let g = grad(n, grad_base + slot, r);
+            let res = match quant {
+                Some(t) => w.push_pull_quant_into(&g, t, &mut scratch),
+                None => w.push_pull_into(&g, &mut scratch),
+            };
+            match res {
+                Ok(()) => r += 1,
+                Err(_) => {
+                    died = true;
+                    break;
+                }
+            }
+        }
+        if !died {
+            // Covers both a clean finish and a reconnect that found the
+            // predecessor already done (`rounds_done() == ROUNDS`).
+            w.bye();
+            return;
+        }
+        // Injected death: drop the connection (the leader parks the
+        // seat and rolls the round back) and rejoin as a successor.
+    }
+}
+
+/// Claim a seat after the chaos phase and run one unfaulted
+/// verification round. Connecting can race the leader still parking a
+/// dead predecessor's connection, so retry briefly.
+fn verify_seat(
+    leader: SocketAddr,
+    job: u32,
+    s: JobSpec,
+    quant: Option<f32>,
+    grad_base: usize,
+) -> Vec<f32> {
+    let n = s.model_elems as usize;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut w = loop {
+        match TcpWorker::connect(leader, job, s) {
+            Ok(w) => break w,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "verification connect failed: {e:#}");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    };
+    assert_eq!(w.rounds_done(), ROUNDS as u64, "chaos phase left the seat at the wrong round");
+    let g = grad(n, grad_base + w.slot as usize, ROUNDS);
+    let mut model = vec![0.0f32; n];
+    match quant {
+        Some(t) => w.push_pull_quant_into(&g, t, &mut model).unwrap(),
+        None => w.push_pull_into(&g, &mut model).unwrap(),
+    }
+    w.bye();
+    model
+}
+
+/// One unfaulted worker: `ROUNDS + 1` rounds (training plus the
+/// verification round), same gradient schedule as the faulted run.
+fn clean_worker(
+    leader: SocketAddr,
+    job: u32,
+    s: JobSpec,
+    quant: Option<f32>,
+    grad_base: usize,
+) -> Vec<f32> {
+    let n = s.model_elems as usize;
+    let mut w = TcpWorker::connect(leader, job, s).unwrap();
+    let slot = w.slot as usize;
+    let mut model = vec![0.0f32; n];
+    for r in 0..=ROUNDS {
+        let g = grad(n, grad_base + slot, r);
+        match quant {
+            Some(t) => w.push_pull_quant_into(&g, t, &mut model).unwrap(),
+            None => w.push_pull_into(&g, &mut model).unwrap(),
+        }
+    }
+    w.bye();
+    model
+}
+
+/// Faulted flat run (2 seats through proxies, then 2 verification
+/// successors) vs an unfaulted twin on a fresh leader. Returns the two
+/// final models for the caller's bit-compare.
+fn flat_run(seed: u64, quant: Option<f32>) -> (Vec<f32>, Vec<f32>) {
+    let s = spec(192, 48, 2);
+    let faulted = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let addr = faulted.local_addr();
+    let drivers: Vec<_> = (0..2u64)
+        .map(|i| {
+            let sub = seed ^ (i + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+            std::thread::spawn(move || chaos_seat(addr, 900, s, quant, 0, sub))
+        })
+        .collect();
+    for d in drivers {
+        d.join().unwrap();
+    }
+    let verifiers: Vec<_> = (0..2)
+        .map(|_| std::thread::spawn(move || verify_seat(addr, 900, s, quant, 0)))
+        .collect();
+    let models: Vec<Vec<f32>> = verifiers.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(bits(&models[0]), bits(&models[1]), "verification seats disagree");
+
+    if quant.is_some() {
+        // The verification successors resumed purely from leader-held
+        // checkpoints — make sure that path actually ran.
+        let m = faulted.server().metrics();
+        assert!(m.residual_saves.get() > 0, "quantized soak committed no checkpoints");
+        assert!(m.residual_restores.get() >= 2, "verification seats were not restored");
+    }
+
+    let clean = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let clean_addr = clean.local_addr();
+    let twins: Vec<_> = (0..2)
+        .map(|_| std::thread::spawn(move || clean_worker(clean_addr, 901, s, quant, 0)))
+        .collect();
+    let twin_models: Vec<Vec<f32>> = twins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(bits(&twin_models[0]), bits(&twin_models[1]), "clean twin seats disagree");
+
+    (models.into_iter().next().unwrap(), twin_models.into_iter().next().unwrap())
+}
+
+/// Faulted two-level run: a root, two rack relays, and four leaf seats
+/// (two per rack) driven through proxies — faults land on the leaf
+/// connections, so every rack-internal epoch bump must stay invisible
+/// upstream. The unfaulted twin runs on a fresh root + relays.
+fn two_level_run(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let s = spec(192, 48, 2);
+
+    let serve_tree = || {
+        let root = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+        let racks: Vec<_> = (0..2)
+            .map(|_| {
+                TcpLeader::serve_relay(
+                    "127.0.0.1:0",
+                    ServerConfig::cores(2),
+                    RelayConfig { parent: root.local_addr().to_string(), racks: 2 },
+                )
+                .unwrap()
+            })
+            .collect();
+        (root, racks)
+    };
+
+    let (_root, racks) = serve_tree();
+    let drivers: Vec<_> = (0..4u64)
+        .map(|j| {
+            let rack = (j / 2) as usize;
+            let addr = racks[rack].local_addr();
+            let sub = seed ^ (j + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+            std::thread::spawn(move || chaos_seat(addr, 910, s, None, rack * 2, sub))
+        })
+        .collect();
+    for d in drivers {
+        d.join().unwrap();
+    }
+    let verifiers: Vec<_> = (0..4usize)
+        .map(|j| {
+            let rack = j / 2;
+            let addr = racks[rack].local_addr();
+            std::thread::spawn(move || verify_seat(addr, 910, s, None, rack * 2))
+        })
+        .collect();
+    let models: Vec<Vec<f32>> = verifiers.into_iter().map(|j| j.join().unwrap()).collect();
+    for m in &models[1..] {
+        assert_eq!(bits(&models[0]), bits(m), "two-level verification seats disagree");
+    }
+
+    let (_clean_root, clean_racks) = serve_tree();
+    let twins: Vec<_> = (0..4usize)
+        .map(|j| {
+            let rack = j / 2;
+            let addr = clean_racks[rack].local_addr();
+            std::thread::spawn(move || clean_worker(addr, 911, s, None, rack * 2))
+        })
+        .collect();
+    let twin_models: Vec<Vec<f32>> = twins.into_iter().map(|j| j.join().unwrap()).collect();
+    for m in &twin_models[1..] {
+        assert_eq!(bits(&twin_models[0]), bits(m), "two-level clean twin seats disagree");
+    }
+
+    (models.into_iter().next().unwrap(), twin_models.into_iter().next().unwrap())
+}
+
+/// The soak property: for every seed, a run laced with injected kills,
+/// cuts, delays, and duplicates converges to exactly the bits of a run
+/// that never saw a fault — dense flat, quantized flat (including
+/// checkpoint restore of successor quantizer state), and two-level.
+#[test]
+fn prop_chaos_schedule_bit_identical() {
+    for seed in seeds() {
+        let (faulted, clean) = flat_run(seed, None);
+        assert_eq!(bits(&faulted), bits(&clean), "dense flat diverged under fault seed {seed}");
+
+        let (faulted, clean) = flat_run(seed.wrapping_add(101), Some(THRESHOLD));
+        assert_eq!(bits(&faulted), bits(&clean), "quantized diverged under fault seed {seed}");
+
+        let (faulted, clean) = two_level_run(seed.wrapping_add(202));
+        assert_eq!(bits(&faulted), bits(&clean), "two-level diverged under fault seed {seed}");
+    }
+}

@@ -10,6 +10,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 
+use phub::config::DeadlineConfig;
 use phub::coordinator::compress::ChunkQuantizer;
 use phub::coordinator::server::ServerConfig;
 use phub::coordinator::transport::{JobSpec, RelayConfig, TcpLeader, TcpWorker};
@@ -676,5 +677,356 @@ fn worker_death_in_one_rack_rewinds_only_that_rack() {
     assert_eq!(
         surv_model, flat,
         "recovered two-level run must be bit-identical to the flat run"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Deadline supervision & residual checkpointing (the failure-model
+// contract in `coordinator::transport`)
+// ---------------------------------------------------------------------------
+
+/// A worker that dies *mid-frame* — half a `PushChunk` frame on the
+/// wire, then the socket closes — exercises the torn-read hardening:
+/// `read_frame_into` fails with a clean typed error at the truncation
+/// point, the leader treats the connection as dead, and the job
+/// finishes bit-identical. The torn frame never reached the engine, so
+/// no rollback is needed: the successor resumes in epoch 0.
+#[test]
+fn mid_frame_death_recovers_bit_identical() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let addr = leader.local_addr();
+    let n = 256usize;
+    let s = spec(n as u64, 64, 2); // 4 chunks
+    let rounds = 3usize;
+    let job = 220u32;
+
+    let mut victim = RawWorker::connect(addr, job, s);
+    assert_eq!(victim.slot, 0);
+    let survivor = std::thread::spawn(move || {
+        let mut w = TcpWorker::connect(addr, job, s).unwrap();
+        assert_eq!(w.slot, 1);
+        let mut model = Vec::new();
+        for r in 0..rounds {
+            model = w.push_pull(&grad(n, 1, r)).unwrap();
+        }
+        w.bye();
+        model
+    });
+
+    // Clean round 0, then round 1 dies halfway through chunk 0's frame.
+    victim.full_round(&grad(n, 0, 0));
+    let g1 = grad(n, 0, 1);
+    let (off, len) = victim.chunks[0];
+    let mut frame = Vec::new();
+    wire::write_chunk_frame_buffered(
+        &mut frame,
+        Op::PushChunk,
+        job,
+        victim.slot,
+        0,
+        victim.epoch,
+        off as u64,
+        &wire::f32s_to_bytes(&g1[off..off + len]),
+    )
+    .unwrap();
+    victim.writer.write_all(&frame[..frame.len() / 2]).unwrap();
+    victim.writer.flush().unwrap();
+    drop(victim); // the frame's second half never arrives
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut successor = loop {
+        match TcpWorker::connect(addr, job, s) {
+            Ok(w) => break w,
+            Err(_) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "dead worker's slot never recycled"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(successor.slot, 0, "successor takes the dead worker's seat");
+    assert_eq!(
+        successor.epoch(),
+        0,
+        "a frame torn before the engine saw it needs no rollback"
+    );
+    assert_eq!(successor.rounds_done(), 1);
+    let mut succ_model = Vec::new();
+    for r in successor.rounds_done() as usize..rounds {
+        succ_model = successor.push_pull(&grad(n, 0, r)).unwrap();
+    }
+    successor.bye();
+    let surv_model = survivor.join().unwrap();
+    assert_eq!(surv_model, succ_model, "survivor and successor agree");
+
+    let clean = run_two_workers(addr, 221, s, rounds, None);
+    assert_eq!(
+        surv_model, clean,
+        "mid-frame death must recover bit-identical to the clean run"
+    );
+}
+
+/// A worker that goes silent *mid-round* with its socket still open used
+/// to wedge the job forever — no disconnect, no progress. The leader's
+/// round deadline now declares it dead, feeds the exact same
+/// epoch-bump/rollback/replay recovery as a detected socket death, and
+/// records the trip in the fault counters.
+#[test]
+fn stalled_worker_trips_round_deadline_and_recovers() {
+    let dl = DeadlineConfig {
+        round_deadline: Some(std::time::Duration::from_millis(150)),
+        ..DeadlineConfig::default()
+    };
+    let leader = TcpLeader::serve_with("127.0.0.1:0", ServerConfig::cores(2), dl).unwrap();
+    let addr = leader.local_addr();
+    let n = 256usize;
+    let s = spec(n as u64, 64, 2); // 4 chunks
+    let rounds = 3usize;
+    let job = 230u32;
+
+    let mut victim = RawWorker::connect(addr, job, s);
+    assert_eq!(victim.slot, 0);
+    let survivor = std::thread::spawn(move || {
+        let mut w = TcpWorker::connect(addr, job, s).unwrap();
+        assert_eq!(w.slot, 1);
+        let mut model = Vec::new();
+        for r in 0..rounds {
+            model = w.push_pull(&grad(n, 1, r)).unwrap();
+        }
+        w.bye();
+        model
+    });
+
+    // Clean round 0, one chunk of round 1 — and then: silence. The
+    // socket stays open; the worker just stops sending.
+    victim.full_round(&grad(n, 0, 0));
+    let g1 = grad(n, 0, 1);
+    let (off, len) = victim.chunks[0];
+    victim.push_chunk_bytes(0, &wire::f32s_to_bytes(&g1[off..off + len]), Op::PushChunk);
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut successor = loop {
+        match TcpWorker::connect(addr, job, s) {
+            Ok(w) => break w,
+            Err(_) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "stalled worker's slot never recycled: round deadline never fired"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(successor.slot, 0, "successor takes the stalled worker's seat");
+    assert_eq!(successor.epoch(), 1, "the stall was declared a death: epoch bumped");
+    assert_eq!(successor.rounds_done(), 1);
+    let mut succ_model = Vec::new();
+    for r in successor.rounds_done() as usize..rounds {
+        succ_model = successor.push_pull(&grad(n, 0, r)).unwrap();
+    }
+    successor.bye();
+    let surv_model = survivor.join().unwrap();
+    assert_eq!(surv_model, succ_model, "survivor and successor agree");
+
+    // Satellite: the fault counters are observable at the server level
+    // and moved under the injected stall.
+    let m = leader.server().metrics();
+    assert!(m.deadline_trips.get() >= 1, "round deadline trip was counted");
+    assert!(m.timeouts.get() >= 1, "the fired deadline was counted");
+    drop(victim); // outlived the whole recovery: a stall, not a disconnect
+
+    let clean = run_two_workers(addr, 231, s, rounds, None);
+    assert_eq!(
+        surv_model, clean,
+        "deadline-recovered run must be bit-identical to the clean run"
+    );
+}
+
+/// A relay whose parent is permanently dead no longer redials forever:
+/// the uplink's capped exponential backoff exhausts its attempt budget,
+/// gives up with a typed `UplinkError`, and evicts the job — so every
+/// worker blocked on the exchange fails with an error instead of
+/// hanging. The redial and give-up counters record the whole episode.
+#[test]
+fn dead_parent_uplink_gives_up_and_fails_the_job() {
+    // A parent address that is *guaranteed* dead: bind, take the port,
+    // drop the listener.
+    let dead = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let parent = dead.local_addr().unwrap().to_string();
+    drop(dead);
+
+    let dl = DeadlineConfig {
+        redial_base: std::time::Duration::from_millis(1),
+        redial_cap: std::time::Duration::from_millis(8),
+        redial_attempts: 3,
+        ..DeadlineConfig::default()
+    };
+    let rack = TcpLeader::serve_relay_with(
+        "127.0.0.1:0",
+        ServerConfig::cores(2),
+        RelayConfig { parent, racks: 1 },
+        dl,
+    )
+    .unwrap();
+    let s = spec(128, 64, 1);
+    let mut w = TcpWorker::connect(rack.local_addr(), 400, s).unwrap();
+    // The push can never complete (sums have nowhere to go); once the
+    // uplink gives up and evicts the job, the blocked exchange must
+    // surface an error rather than wait forever.
+    let err = w.push_pull(&vec![1.0; 128]);
+    assert!(err.is_err(), "exchange against a dead parent must fail, not hang");
+
+    let m = rack.server().metrics();
+    assert!(m.uplink_giveups.get() >= 1, "the give-up was counted");
+    assert!(
+        m.redials.get() >= dl.redial_attempts as u64,
+        "every failed rendezvous attempt was counted"
+    );
+}
+
+/// The residual-checkpoint acceptance bar (the ROADMAP's last recovery
+/// gap): a *quantized* worker killed at round 2 — after its
+/// error-feedback residuals have drifted well away from zero — is
+/// replaced by a successor that restores the checkpoint the victim
+/// saved through the leader at the round-1 boundary, and the finished
+/// run is bit-identical to one that was never interrupted. Before
+/// residual checkpointing this could not hold for any death at
+/// round ≥ 1: a successor's fresh residuals diverge from the victim's
+/// in their first re-quantization.
+#[test]
+fn quantized_victim_at_round_two_successor_restores_checkpoint() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let addr = leader.local_addr();
+    let n = 128usize;
+    let s = spec(n as u64, 64, 2); // 2 chunks
+    let rounds = 4usize;
+    let t = 0.05f32;
+    let job = 240u32;
+    // Sub-threshold gradients: progress exists only through error
+    // feedback, so a successor starting from fresh residuals would
+    // produce visibly different bits.
+    let qgrad = move |slot: usize, r: usize| -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                0.6 * t * (1.0 + 0.1 * slot as f32) + 0.001 * (i % 7) as f32 + 0.002 * r as f32
+            })
+            .collect()
+    };
+
+    let mut victim = RawWorker::connect(addr, job, s);
+    assert_eq!(victim.slot, 0);
+    let survivor = std::thread::spawn(move || {
+        let mut w = TcpWorker::connect(addr, job, s).unwrap();
+        assert_eq!(w.slot, 1);
+        let mut model = Vec::new();
+        for r in 0..rounds {
+            model = w.push_pull_quant(&qgrad(1, r), t).unwrap();
+        }
+        w.bye();
+        model
+    });
+
+    // Victim: two full quantized rounds, speaking the production wire
+    // order — each chunk's post-round residual checkpoint immediately
+    // before its push, so the leader commits the full checkpoint at
+    // each round boundary.
+    let lens: Vec<usize> = victim.chunks.iter().map(|&(_, l)| l).collect();
+    let mut vq = ChunkQuantizer::new(&lens, t);
+    let push_quant_chunk = |v: &mut RawWorker, vq: &mut ChunkQuantizer, c: usize, r: usize| {
+        let g = qgrad(0, r);
+        let (off, len) = v.chunks[c];
+        let bytes = vq.quantize_chunk(c, &g[off..off + len]).to_bytes();
+        wire::write_residual_frame(
+            &mut v.writer,
+            Op::ResidualSave,
+            job,
+            v.slot,
+            c as u32,
+            v.epoch,
+            off as u64,
+            t,
+            vq.residual_chunk(c),
+        )
+        .unwrap();
+        v.push_chunk_bytes(c, &bytes, Op::PushChunkQuant);
+    };
+    for r in 0..2 {
+        for c in 0..victim.chunks.len() {
+            push_quant_chunk(&mut victim, &mut vq, c, r);
+        }
+        let mut got = 0;
+        while got < victim.chunks.len() {
+            let f = wire::read_frame(&mut victim.reader).unwrap();
+            assert_eq!(f.op, Op::ModelChunk);
+            got += 1;
+        }
+    }
+    // Round 2: one chunk (checkpoint staged but never committed — the
+    // round doesn't complete), then death. The successor must resume
+    // from the *committed* round-1 checkpoint, not fresh residuals and
+    // not the torn round-2 staging.
+    push_quant_chunk(&mut victim, &mut vq, 0, 2);
+    drop(victim);
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut successor = loop {
+        match TcpWorker::connect(addr, job, s) {
+            Ok(w) => break w,
+            Err(_) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "dead worker's slot never recycled"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(successor.slot, 0, "successor takes the dead worker's seat");
+    assert_eq!(successor.epoch(), 1, "mid-round-2 death bumped the epoch");
+    assert_eq!(successor.rounds_done(), 2, "rounds 0-1 completed before the death");
+    let mut succ_model = Vec::new();
+    for r in successor.rounds_done() as usize..rounds {
+        succ_model = successor.push_pull_quant(&qgrad(0, r), t).unwrap();
+    }
+    successor.bye();
+    let surv_model = survivor.join().unwrap();
+    assert_eq!(surv_model, succ_model, "survivor and successor agree");
+
+    let m = leader.server().metrics();
+    assert!(
+        m.residual_saves.get() >= 4,
+        "the victim's 2 rounds x 2 chunks of checkpoints were stored"
+    );
+    assert!(
+        m.residual_restores.get() >= 1,
+        "the successor was handed the stored checkpoint"
+    );
+
+    // Uninterrupted compressed twin with the same per-seat gradients.
+    let clean_q = {
+        let job = 242u32;
+        let joins: Vec<_> = (0..2usize)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(addr, job, s).unwrap();
+                    let slot = w.slot as usize;
+                    let mut model = Vec::new();
+                    for r in 0..rounds {
+                        model = w.push_pull_quant(&qgrad(slot, r), t).unwrap();
+                    }
+                    w.bye();
+                    model
+                })
+            })
+            .collect();
+        let models: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(models[0], models[1]);
+        models.into_iter().next().unwrap()
+    };
+    assert_eq!(
+        surv_model, clean_q,
+        "checkpoint-restored run must be bit-identical to the clean run"
     );
 }
