@@ -1,0 +1,131 @@
+//! Observability-overhead bench (run via `cargo bench --bench trace`).
+//!
+//! Prices the flight recorder (ISSUE 9) on the end-to-end TCP training
+//! path: rounds/s with tracing disabled, enabled (the default build and
+//! runtime state), and enabled while a scraper thread hammers the
+//! status endpoint's `/metrics` and `/trace` routes. The recorder's
+//! contract is that recording is seqlock writes into preallocated slots
+//! and scrapes never touch a data-plane lock, so "on" should sit within
+//! a few percent of "off" and scraping should not collapse throughput.
+//!
+//! Results feed EXPERIMENTS.md section Perf; the last stdout line is the
+//! JSON summary for BENCH_trace.json.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::status::StatusServer;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+
+const MODEL_ELEMS: u64 = 32 * 1024;
+const CHUNK_ELEMS: u64 = 8 * 1024;
+const N_CHUNKS: u64 = MODEL_ELEMS / CHUNK_ELEMS;
+const WORKERS: u32 = 2;
+const ROUNDS: usize = 300;
+
+fn spec() -> JobSpec {
+    JobSpec {
+        model_elems: MODEL_ELEMS,
+        chunk_elems: CHUNK_ELEMS,
+        n_workers: WORKERS,
+        lr: 0.01,
+        momentum: 0.9,
+    }
+}
+
+/// One blocking GET, body discarded — the scraper only exists to put
+/// snapshot/seqlock read pressure on the recorder while training runs.
+fn http_get(addr: SocketAddr, path: &str) {
+    let Ok(mut s) = TcpStream::connect(addr) else {
+        return;
+    };
+    if write!(s, "GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n").is_err() {
+        return;
+    }
+    let _ = s.flush();
+    let mut sink = Vec::new();
+    let _ = s.read_to_end(&mut sink);
+}
+
+/// Rounds/s for one full 2-worker run with the recorder toggled as
+/// given, optionally with a live scraper thread on the status endpoint.
+fn run(trace_on: bool, scrape: bool) -> f64 {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    leader.server().set_tracing(trace_on);
+    let status = scrape.then(|| StatusServer::bind("127.0.0.1:0", leader.metrics_arc()).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = status.as_ref().map(|st| {
+        let addr = st.local_addr();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                http_get(addr, "/metrics");
+                http_get(addr, "/trace");
+                scrapes += 1;
+            }
+            scrapes
+        })
+    });
+
+    let addr = leader.local_addr();
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let s = spec();
+                let n = s.model_elems as usize;
+                let mut w = TcpWorker::connect(addr, 1, s).unwrap();
+                let grad = vec![0.25f32; n];
+                let mut model = vec![0.0f32; n];
+                for _ in 0..ROUNDS {
+                    w.push_pull_into(&grad, &mut model).unwrap();
+                }
+                w.bye();
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let rps = ROUNDS as f64 / t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Release);
+    if let Some(t) = scraper {
+        let scrapes = t.join().unwrap();
+        assert!(scrapes > 0, "scraper never completed a request");
+    }
+    if let Some(st) = status {
+        st.shutdown();
+    }
+    leader.server().set_tracing(true); // restore the process default
+    rps
+}
+
+fn main() {
+    println!(
+        "== trace bench: {N_CHUNKS} x {CHUNK_ELEMS}-elem chunks, {WORKERS} workers, \
+         {ROUNDS} rounds ==",
+    );
+    let _ = run(true, false); // warm-up
+    let rps_off = run(false, false);
+    let rps_on = run(true, false);
+    let rps_scraped = run(true, true);
+    let on_overhead_pct = (rps_off - rps_on) / rps_off * 100.0;
+    println!("  tracing off:           {rps_off:>9.1} rounds/s");
+    println!("  tracing on:            {rps_on:>9.1} rounds/s ({on_overhead_pct:+.2}% vs off)");
+    println!("  tracing on + scraper:  {rps_scraped:>9.1} rounds/s");
+    println!("trace bench OK");
+    // Single-line JSON summary for BENCH_trace.json (keep last on
+    // stdout).
+    println!(
+        "{{\"bench\":\"trace\",\"model_elems\":{MODEL_ELEMS},\"chunks\":{N_CHUNKS},\
+         \"workers\":{WORKERS},\"rounds\":{ROUNDS},\"rps_off\":{rps_off:.1},\
+         \"rps_on\":{rps_on:.1},\"rps_scraped\":{rps_scraped:.1},\
+         \"on_overhead_pct\":{on_overhead_pct:.2}}}"
+    );
+}

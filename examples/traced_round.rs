@@ -1,0 +1,101 @@
+//! Flight-recorder walkthrough: train a few rounds over TCP with the
+//! recorder on, dump the captured spans as chrome://tracing JSON, and
+//! print a per-stage time breakdown of where a round actually goes —
+//! the paper's §4.1-style decomposition (network / aggregation /
+//! optimization / sync) measured on this implementation's own stage
+//! boundaries instead of estimated.
+//!
+//! Open the JSON in `chrome://tracing` or https://ui.perfetto.dev to
+//! see frame reads, absorbs, fused optimize passes, reply encodes and
+//! socket writes laid out per thread on one timeline.
+//!
+//! Run: `cargo run --release --example traced_round -- \
+//!        [--workers 2] [--rounds 20] [--out trace.json]`
+
+use std::collections::BTreeMap;
+
+use phub::cli::Args;
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::trace;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::from_env();
+    let workers = a.get_usize("workers", 2) as u32;
+    let model = a.get_usize("model-kb", 256) * 1024 / 4;
+    let rounds = a.get_usize("rounds", 20);
+    let out = a.get_or("out", "trace.json").to_string();
+
+    if !trace::enabled() {
+        println!("note: recorder disabled (built without the `trace` feature?)");
+    }
+
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2))?;
+    let addr = leader.local_addr();
+    let spec = JobSpec {
+        model_elems: model as u64,
+        chunk_elems: 8192,
+        n_workers: workers,
+        lr: 0.1,
+        momentum: 0.9,
+    };
+    println!(
+        "leader on {addr}, {workers} workers, {} KB model, {rounds} rounds",
+        model * 4 / 1024
+    );
+
+    let t0 = std::time::Instant::now();
+    let joins: Vec<_> = (0..workers)
+        .map(|w| {
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut worker = TcpWorker::connect(addr, 1, spec)?;
+                let grad: Vec<f32> =
+                    (0..model).map(|i| ((i + w as usize) % 7) as f32 * 0.1).collect();
+                let mut m = vec![0.0f32; model];
+                for _ in 0..rounds {
+                    worker.push_pull_into(&grad, &mut m)?;
+                }
+                worker.bye();
+                Ok(())
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap()?;
+    }
+    let wall = t0.elapsed();
+
+    // Dump everything the per-thread rings still hold, then break the
+    // span time down by stage.
+    let events = trace::snapshot();
+    std::fs::write(&out, trace::chrome_trace_json(&events))?;
+    println!("{} events -> {out} (open in chrome://tracing)", events.len());
+
+    let mut by_stage: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    for ev in &events {
+        let e = by_stage.entry(ev.stage.name()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += ev.dur_ns;
+    }
+    let total_ns: u64 = by_stage.values().map(|&(_, ns)| ns).sum();
+    println!(
+        "\n  {:<16} {:>8} {:>12} {:>10} {:>7}",
+        "stage", "events", "total µs", "mean µs", "share"
+    );
+    for (name, (n, ns)) in &by_stage {
+        println!(
+            "  {name:<16} {n:>8} {:>12.1} {:>10.2} {:>6.1}%",
+            *ns as f64 / 1e3,
+            *ns as f64 / 1e3 / *n as f64,
+            *ns as f64 / total_ns.max(1) as f64 * 100.0
+        );
+    }
+    println!(
+        "\n  {rounds} rounds in {:.2}s ({:.1} rounds/s); recorded span time {:.1} ms",
+        wall.as_secs_f64(),
+        rounds as f64 / wall.as_secs_f64(),
+        total_ns as f64 / 1e6
+    );
+    println!("traced_round OK");
+    Ok(())
+}

@@ -712,7 +712,9 @@ impl ShardEngine {
                 open: slot.round,
             });
         }
+        let t_absorb = crate::trace::start();
         let done = slot.agg.absorb_src(w, src)?;
+        crate::trace::span(crate::trace::Stage::Absorb, job, chunk, worker, t_absorb);
         if pull {
             *shard.pull_mask.entry(chunk).or_insert(0) |= 1u64 << w;
         }
@@ -734,11 +736,13 @@ impl ShardEngine {
                 // the total worker weight), then broadcast to every
                 // worker that pulled.
                 let inv_w = shard.inv_weight;
+                let t_opt = crate::trace::start();
                 agg.take_mean_into_step(|sum, _inv_n| {
                     shard
                         .opt
                         .step_scaled(&mut params[..], &mut state[..], sum, inv_w)
                 })?;
+                crate::trace::span(crate::trace::Stage::Optimize, job, chunk, worker, t_opt);
                 *round += 1;
                 let mask = shard.pull_mask.remove(&chunk).unwrap_or(0);
                 broadcast_params(pool, &shard.replies, mask, job, chunk, shard.epoch, params);
@@ -882,11 +886,12 @@ impl ShardEngine {
 /// dead-round traffic (or whose seat is parked awaiting a successor)
 /// still learns the new epoch immediately — recovery can never deadlock
 /// behind the very round it is rewinding.
-fn rollback_shard(shard: &mut JobShard, _job: JobId, epoch: u32) -> usize {
+fn rollback_shard(shard: &mut JobShard, job: JobId, epoch: u32) -> usize {
     if epoch <= shard.epoch {
         return 0;
     }
     shard.epoch = epoch;
+    crate::trace::instant(crate::trace::Stage::Rollback, job, 0, 0);
     let mut rewound = 0usize;
     for slot in shard.chunks.values_mut() {
         if slot.agg.rollback() != 0 {

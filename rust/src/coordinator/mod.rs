@@ -134,6 +134,38 @@
 //! | Tier resolution and placement both happen at init/warm-up; steady-state rounds stay exact-zero alloc/mutex | `alloc_discipline.rs`, `active_tier`'s cached atomic |
 //! | The selected tier and placement mode are observable | `DataPlaneMetrics::{kernel_tier, placement_mode}`, set by `PHubServer::start` |
 //! | Placement changes locality only, never results: either mode gives bit-identical training | `server.rs` placement tests |
+//!
+//! # Observability contract
+//!
+//! The coordinator measures itself the way the paper measured MXNet —
+//! per stage, per tenant — without giving up the exact-zero discipline
+//! above. Three surfaces, by cost:
+//!
+//! * **Flight recorder** ([`crate::trace`], `trace` cargo feature,
+//!   default on): per-thread fixed-capacity ring buffers of timestamped
+//!   span events at the existing stage boundaries of a round — frame
+//!   read, ring enqueue/dequeue, absorb, fused mean+optimize, reply
+//!   encode, socket write — plus recovery instants (rollback, deadline
+//!   trip, residual commit). Recording is seqlock-write + relaxed
+//!   atomics into preallocated slots: no allocation, no mutex, no
+//!   blocking, so `alloc_discipline.rs` passes with tracing compiled in
+//!   and enabled (the one-time ring allocation rides the documented
+//!   warm-up window). Toggle at runtime with `PHubServer::set_tracing`;
+//!   compile out entirely with `--no-default-features`.
+//! * **Counters and per-job attribution** ([`crate::metrics`]): global
+//!   [`crate::metrics::DataPlaneMetrics`] (drops split by reject
+//!   reason, rollbacks, timeouts, replays, residual traffic) plus a
+//!   per-job registry (rounds, push/pull bytes, round-latency
+//!   histogram, drop/replay/rollback attribution). Hot paths pay one
+//!   relaxed atomic add per event through a pre-resolved
+//!   `Arc<JobMetrics>`; the registry lock is control-plane/error-path
+//!   only.
+//! * **Export plane** ([`status`]): a dependency-free HTTP endpoint on
+//!   a side thread — `/metrics` (Prometheus text), `/jobs` (per-tenant
+//!   JSON), `/trace` (chrome://tracing JSON, tenant-scoped by service
+//!   nonce when bound with auth). Scrapes read snapshots and
+//!   seqlock-guarded slots; they never block a core thread or touch a
+//!   data-plane lock.
 
 pub mod aggregation;
 pub mod chunk;
@@ -148,6 +180,7 @@ pub mod pool;
 pub mod ring;
 pub mod server;
 pub mod service;
+pub mod status;
 pub mod tenancy;
 pub mod transport;
 pub mod wire;
@@ -167,3 +200,4 @@ pub use pool::{
 };
 pub use server::{PHubServer, RelayUplink, ServerConfig};
 pub use service::{ConnectionManager, ServiceHandle};
+pub use status::{JobAuth, StatusServer};

@@ -56,12 +56,12 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::metrics::DataPlaneMetrics;
+use crate::metrics::{DataPlaneMetrics, JobMetrics};
 
 use super::aggregation::GradSrc;
 use super::chunk::KeyTable;
 use super::compress::QuantView;
-use super::engine::{NodeRole, PushOutcome, ReplyRx, ReplyTx, RoundTag, ShardEngine};
+use super::engine::{EngineError, NodeRole, PushOutcome, ReplyRx, ReplyTx, RoundTag, ShardEngine};
 use super::mapping;
 use super::optimizer::Optimizer;
 use super::pool::PooledBytes;
@@ -194,9 +194,14 @@ enum CoreMsg {
 /// are absorbed idempotently by design (the sender replays its whole
 /// round after a rollback), but an operator watching a chaotic fleet
 /// wants to see how much of the traffic is replay.
-fn note_push_outcome(out: PushOutcome, metrics: &DataPlaneMetrics) {
+fn note_push_outcome(out: PushOutcome, job: JobId, metrics: &DataPlaneMetrics) {
     if matches!(out, PushOutcome::Replayed | PushOutcome::StaleEpoch) {
         metrics.replayed_frames.inc();
+        // Recovery traffic only, never the steady state — the registry's
+        // control-plane lock is acceptable here.
+        if let Some(jm) = metrics.per_job.get(job) {
+            jm.replays.inc();
+        }
     }
 }
 
@@ -207,6 +212,19 @@ fn apply_core_msg(
     msg: CoreMsg,
     metrics: &DataPlaneMetrics,
 ) -> Option<ring::Consumer<CoreMsg>> {
+    // Job id for drop attribution below (`Connect` carries none; 0 is
+    // never a live job — allocation starts at 1).
+    let msg_job = match &msg {
+        CoreMsg::InitJob { job, .. }
+        | CoreMsg::Push { job, .. }
+        | CoreMsg::PushBytes { job, .. }
+        | CoreMsg::Pull { job, .. }
+        | CoreMsg::SetWeight { job, .. }
+        | CoreMsg::InstallParams { job, .. }
+        | CoreMsg::RollbackRound { job, .. }
+        | CoreMsg::Evict { job } => *job,
+        CoreMsg::Connect { .. } => 0,
+    };
     let res = match msg {
         CoreMsg::InitJob {
             job,
@@ -229,9 +247,12 @@ fn apply_core_msg(
             range,
             pull,
             tag,
-        } => engine
-            .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
-            .map(|out| note_push_outcome(out, metrics)),
+        } => {
+            crate::trace::instant(crate::trace::Stage::RingDequeue, job, chunk, worker);
+            engine
+                .push(job, chunk, worker, &data[range.0..range.1], pull, tag)
+                .map(|out| note_push_outcome(out, job, metrics))
+        }
         CoreMsg::PushBytes {
             job,
             chunk,
@@ -242,6 +263,7 @@ fn apply_core_msg(
             pull,
             tag,
         } => {
+            crate::trace::instant(crate::trace::Stage::RingDequeue, job, chunk, worker);
             let bytes = &data[grad_off..];
             let src = if quant {
                 match QuantView::parse(bytes) {
@@ -263,7 +285,7 @@ fn apply_core_msg(
             };
             engine
                 .push_src(job, chunk, worker, src, pull, tag)
-                .map(|out| note_push_outcome(out, metrics))
+                .map(|out| note_push_outcome(out, job, metrics))
             // `data` drops at the end of this arm: the frame buffer
             // recycles to its pool.
         }
@@ -289,6 +311,10 @@ fn apply_core_msg(
         // (`data` drops at the end of the arm: the buffer recycles.)
         CoreMsg::RollbackRound { job, epoch } => {
             metrics.rollbacks.inc();
+            // Control plane: the registry lock is fine here.
+            if let Some(jm) = metrics.per_job.get(job) {
+                jm.rollbacks.inc();
+            }
             engine.rollback(job, epoch).map(|_| ())
         }
         CoreMsg::Evict { job } => {
@@ -299,9 +325,22 @@ fn apply_core_msg(
     // A protocol violation must never kill a shared core thread: the
     // transports reject violations at the connection edge, so anything
     // that still reaches here is dropped (the violator's round simply
-    // never completes) and counted where an operator can see it.
-    if res.is_err() {
+    // never completes) and counted where an operator can see it —
+    // both in the aggregate and split by reject reason, plus against
+    // the offending job's own metric set (error path: the registry's
+    // control-plane lock is acceptable).
+    if let Err(e) = &res {
         metrics.dropped_messages.inc();
+        match e {
+            EngineError::UnknownJob(_) => metrics.drop_unknown_job.inc(),
+            EngineError::UnknownChunk { .. } => metrics.drop_unknown_chunk.inc(),
+            EngineError::DuplicateChunk { .. } => metrics.drop_duplicate.inc(),
+            EngineError::FutureRound { .. } => metrics.drop_future_round.inc(),
+            EngineError::Agg(_) => metrics.drop_agg.inc(),
+        }
+        if let Some(jm) = metrics.per_job.get(msg_job) {
+            jm.drops.inc();
+        }
     }
     None
 }
@@ -450,6 +489,21 @@ impl PHubServer {
         &self.metrics
     }
 
+    /// Shared handle on the same counters — what a
+    /// [`super::status::StatusServer`] serves.
+    pub fn metrics_arc(&self) -> Arc<DataPlaneMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Turn the flight recorder on or off (see [`crate::trace`]). The
+    /// recorder's rings are process-wide, so this is the operator-facing
+    /// switch exposed on the server rather than per-server state; with
+    /// it off, `trace::start()` returns 0 and every hook is a single
+    /// relaxed load.
+    pub fn set_tracing(&self, on: bool) {
+        crate::trace::set_enabled(on);
+    }
+
     /// Register a job: allocate chunk→core mapping, install initial model
     /// state on the core threads (the `PHub::InitService` step), and
     /// build each worker slot's fabric (request ring + reply ring per
@@ -507,6 +561,9 @@ impl PHubServer {
         assert_eq!(init_params.len(), table.total_elems);
         assert!((1..=super::aggregation::MAX_WORKERS).contains(&n_workers));
         let job = self.next_job.fetch_add(1, Ordering::SeqCst) as JobId;
+        // Admission-time: create the job's attribution counters before
+        // any traffic can reference them.
+        self.metrics.per_job.register(job);
         let table = Arc::new(table);
 
         // Chunk → core under the configured placement: affine gives each
@@ -689,6 +746,7 @@ impl PHubServer {
             staging: Vec::new(),
             epoch: 0,
             round: 0,
+            jm: self.metrics.per_job.register(job),
         }
     }
 
@@ -706,6 +764,7 @@ impl PHubServer {
     /// Remove a job's state from all cores.
     pub fn evict(&self, job: JobId) {
         self.jobs.lock().unwrap().remove(&job);
+        self.metrics.per_job.remove(job);
         for core in &self.cores {
             core.send(CoreMsg::Evict { job });
         }
@@ -759,11 +818,26 @@ pub struct WorkerHandle {
     staging: Vec<f32>,
     epoch: u32,
     round: u64,
+    /// This job's attribution counters, resolved once at handle creation
+    /// so the data path never touches the registry lock.
+    jm: Arc<JobMetrics>,
 }
 
 impl WorkerHandle {
     pub fn model_len(&self) -> usize {
         self.table.total_elems
+    }
+
+    /// Job this handle pushes into.
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    /// This job's attribution counters (pre-resolved; incrementing them
+    /// is a relaxed atomic add, registry-lock free). The TCP transport
+    /// meters its wire traffic through this.
+    pub fn job_metrics(&self) -> &Arc<JobMetrics> {
+        &self.jm
     }
 
     pub fn key_table(&self) -> &KeyTable {
@@ -865,6 +939,9 @@ impl WorkerHandle {
                 "chunk byte length mismatch"
             );
         }
+        // The span covers the SPSC send, so backpressure from a full
+        // ring (a genuinely slow core) shows up as enqueue time.
+        let t_enq = crate::trace::start();
         self.reqs[self.core_of[ci]]
             .send(CoreMsg::PushBytes {
                 job: self.job,
@@ -878,6 +955,7 @@ impl WorkerHandle {
             })
             .map_err(|_| ())
             .expect("core thread gone");
+        crate::trace::span(crate::trace::Stage::RingEnqueue, self.job, chunk, self.worker, t_enq);
     }
 
     /// Block for the next per-chunk reply (one arrives for every chunk
@@ -911,6 +989,8 @@ impl WorkerHandle {
     /// epoch — the caller just sees the completed round.
     pub fn push_pull(&mut self, grad: &[f32]) -> Vec<f32> {
         assert_eq!(grad.len(), self.table.total_elems, "gradient length");
+        let t0 = std::time::Instant::now();
+        self.jm.push_bytes.add(grad.len() as u64 * 4);
         // One registration-style copy into a shared buffer (the "NIC DMA"),
         // then chunks are pushed zero-copy: cores read their ranges
         // directly (section 3.2.1 "Minimal Copy" / 3.2.4 disassembly).
@@ -934,6 +1014,9 @@ impl WorkerHandle {
             match self.collect_model() {
                 Collected::Done(m) => {
                     self.round += 1;
+                    self.jm.rounds_completed.inc();
+                    self.jm.pull_bytes.add(m.len() as u64 * 4);
+                    self.jm.round_latency.record(t0.elapsed());
                     return m;
                 }
                 Collected::Rolled(epoch) => {
@@ -1005,6 +1088,7 @@ impl WorkerHandle {
                 }
             }
         }
+        self.jm.pull_bytes.add(self.staging.len() as u64 * 4);
         std::mem::take(&mut self.staging)
     }
 

@@ -229,6 +229,27 @@ impl ConnectionManager {
     pub fn n_services(&self) -> usize {
         self.services.lock().unwrap().len()
     }
+
+    /// The engine-side job id of an initialized namespace — how an
+    /// embedder maps a `ServiceHandle` to the id the status plane's
+    /// `/trace?job=` route and the per-job metrics use.
+    pub fn service_job(&self, namespace: &str) -> Option<JobId> {
+        self.services.lock().unwrap().get(namespace)?.job
+    }
+}
+
+/// The status plane's tenant check, backed by the same per-service
+/// nonce minted at `create_service`: `nonce` authorizes `job` exactly
+/// when some initialized service maps to that job and holds that nonce.
+/// Job A's nonce can never read job B's trace.
+impl super::status::JobAuth for ConnectionManager {
+    fn check(&self, job: JobId, nonce: u64) -> bool {
+        self.services
+            .lock()
+            .unwrap()
+            .values()
+            .any(|st| st.job == Some(job) && st.nonce == nonce)
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +383,30 @@ mod tests {
         assert_eq!(m0, m1);
         // p -= 0.5 * mean(1, 3) = -1, not tainted by the 9s.
         assert!(m0.iter().all(|&x| (x + 1.0).abs() < 1e-6), "{:?}", &m0[..2]);
+    }
+
+    /// The status plane's tenant check: a namespace's nonce authorizes
+    /// exactly its own job — never a sibling's.
+    #[test]
+    fn job_auth_scopes_nonce_to_own_job() {
+        use crate::coordinator::status::JobAuth as _;
+        let cm = setup();
+        let ha = cm.create_service("a", 1).unwrap();
+        let hb = cm.create_service("b", 1).unwrap();
+        let sgd = || Arc::new(Sgd { lr: 0.1 });
+        cm.init_service(&ha, KeyTable::flat(8, 8), &vec![0.0; 8], sgd())
+            .unwrap();
+        cm.init_service(&hb, KeyTable::flat(8, 8), &vec![0.0; 8], sgd())
+            .unwrap();
+        let ja = cm.service_job("a").unwrap();
+        let jb = cm.service_job("b").unwrap();
+        assert_ne!(ja, jb);
+        assert!(cm.check(ja, ha.nonce));
+        assert!(cm.check(jb, hb.nonce));
+        assert!(!cm.check(jb, ha.nonce), "job A's nonce must not read job B");
+        assert!(!cm.check(ja, hb.nonce));
+        assert!(!cm.check(ja, ha.nonce ^ 1));
+        assert_eq!(cm.service_job("missing"), None);
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! The live status/export plane: a dependency-free blocking HTTP
+//! endpoint on a side thread, serving the observability layer's three
+//! read paths (see the "Observability contract" in [`super`] and
+//! [`crate::metrics`]):
+//!
+//! * **`/metrics`** — Prometheus text exposition (hand-rolled; format
+//!   version 0.0.4): every global [`crate::metrics::DataPlaneMetrics`]
+//!   counter as `phub_<name>_total`, the kernel-tier/placement settings
+//!   as gauges, and each job's attribution set as `phub_job_*` series
+//!   labeled `{job="<id>"}` including round-latency quantile series.
+//! * **`/jobs`** — per-tenant JSON snapshot (one object per registered
+//!   job: rounds, bytes, drops/replays/rollbacks, latency summary).
+//! * **`/trace`** — the flight recorder ([`crate::trace`]) drained as
+//!   chrome://tracing "trace event" JSON: load the response in
+//!   `chrome://tracing` / Perfetto and a captured round renders as the
+//!   paper's per-stage timeline figure.
+//!
+//! # Cost model
+//!
+//! Scrapes read relaxed-atomic snapshots and seqlock-guarded trace
+//! slots; they take the metrics registry's control-plane lock briefly
+//! but never block a core thread, park a ring, or allocate on any
+//! data-plane thread. The HTTP server itself is deliberately primitive:
+//! one blocking accept loop on a named side thread, one request per
+//! connection, bounded header reads, `Connection: close`. Operators
+//! point `curl` or a Prometheus scraper at it; it is not a general web
+//! server.
+//!
+//! # Tenant isolation
+//!
+//! Without auth ([`StatusServer::bind`]) every route serves everything
+//! — the single-operator deployment. With auth
+//! ([`StatusServer::bind_with_auth`]), `/trace` requires
+//! `?job=<id>&nonce=<hex>` and serves only that job's events after the
+//! [`JobAuth`] check passes (the TCP control plane's
+//! [`super::service::ConnectionManager`] implements it with the same
+//! per-service nonce it issues at `create_service`): job A's nonce
+//! cannot read job B's trace. `/metrics` and `/jobs` stay open — they
+//! are aggregate operator surfaces, like every Prometheus endpoint.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::{DataPlaneMetrics, JobMetricsSnapshot, MetricsSnapshot};
+
+/// Authorization hook for the tenant-scoped `/trace` route: whether
+/// `nonce` (issued to the tenant at service creation) authorizes
+/// reading `job`'s data. Implemented by
+/// [`super::service::ConnectionManager`].
+pub trait JobAuth: Send + Sync {
+    fn check(&self, job: u32, nonce: u64) -> bool;
+}
+
+/// Per-connection read deadline: a stalled scraper may cost the status
+/// thread this long, never forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Request head cap (request line + headers). Anything longer is not a
+/// scrape; the connection is dropped.
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// The status endpoint: owns the listener's accept thread. Dropping the
+/// handle stops the thread (idempotent, bounded by one in-flight
+/// request).
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind and serve `metrics` with no tenant auth: every route,
+    /// including `/trace`, serves the full view. `bind` may be
+    /// `"127.0.0.1:0"` to pick a free port (see
+    /// [`StatusServer::local_addr`]).
+    pub fn bind(
+        bind: impl ToSocketAddrs,
+        metrics: Arc<DataPlaneMetrics>,
+    ) -> std::io::Result<StatusServer> {
+        StatusServer::bind_inner(bind, metrics, None)
+    }
+
+    /// [`StatusServer::bind`] with tenant isolation on `/trace`: the
+    /// route requires `?job=<id>&nonce=<hex>`, rejects a failed
+    /// [`JobAuth::check`] with 403, and filters the dump to that job.
+    pub fn bind_with_auth(
+        bind: impl ToSocketAddrs,
+        metrics: Arc<DataPlaneMetrics>,
+        auth: Arc<dyn JobAuth>,
+    ) -> std::io::Result<StatusServer> {
+        StatusServer::bind_inner(bind, metrics, Some(auth))
+    }
+
+    fn bind_inner(
+        bind: impl ToSocketAddrs,
+        metrics: Arc<DataPlaneMetrics>,
+        auth: Option<Arc<dyn JobAuth>>,
+    ) -> std::io::Result<StatusServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("phub-status".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let Ok(mut s) = stream else { continue };
+                        let _ = serve_one(&mut s, &metrics, auth.as_deref());
+                    }
+                })?
+        };
+        Ok(StatusServer {
+            addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (resolves a `:0` bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept thread and wait for it. Also runs on drop.
+    pub fn shutdown(mut self) {
+        self.stop_thread();
+    }
+
+    fn stop_thread(&mut self) {
+        let Some(thread) = self.thread.take() else {
+            return;
+        };
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept with a throwaway connection; the loop sees
+        // the flag before serving it.
+        let _ = TcpStream::connect(self.addr);
+        let _ = thread.join();
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.stop_thread();
+    }
+}
+
+/// Serve one request on `s`: bounded head read, route, respond, close.
+fn serve_one(
+    s: &mut TcpStream,
+    metrics: &DataPlaneMetrics,
+    auth: Option<&dyn JobAuth>,
+) -> std::io::Result<()> {
+    s.set_read_timeout(Some(READ_TIMEOUT))?;
+    s.set_write_timeout(Some(READ_TIMEOUT))?;
+    let head = read_head(s)?;
+    let Some(target) = request_target(&head) else {
+        return respond(s, 400, "text/plain; charset=utf-8", "bad request\n");
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/metrics" => {
+            let body = render_prometheus(&metrics.snapshot());
+            respond(s, 200, "text/plain; version=0.0.4; charset=utf-8", &body)
+        }
+        "/jobs" => {
+            let body = render_jobs_json(&metrics.snapshot());
+            respond(s, 200, "application/json", &body)
+        }
+        "/trace" => {
+            let job = query_param(query, "job").and_then(|v| v.parse::<u32>().ok());
+            match auth {
+                Some(auth) => {
+                    // Tenant-scoped: both credentials present and valid,
+                    // or nothing is served.
+                    let nonce = query_param(query, "nonce")
+                        .and_then(|v| u64::from_str_radix(v, 16).ok());
+                    let (Some(job), Some(nonce)) = (job, nonce) else {
+                        return respond(
+                            s,
+                            403,
+                            "text/plain; charset=utf-8",
+                            "trace requires ?job=<id>&nonce=<hex>\n",
+                        );
+                    };
+                    if !auth.check(job, nonce) {
+                        return respond(s, 403, "text/plain; charset=utf-8", "bad nonce\n");
+                    }
+                    let events = crate::trace::snapshot_filtered(Some(job));
+                    respond(s, 200, "application/json", &crate::trace::chrome_trace_json(&events))
+                }
+                None => {
+                    let events = crate::trace::snapshot_filtered(job);
+                    respond(s, 200, "application/json", &crate::trace::chrome_trace_json(&events))
+                }
+            }
+        }
+        _ => respond(s, 404, "text/plain; charset=utf-8", "not found\n"),
+    }
+}
+
+/// Read the request head (request line + headers) up to the blank line,
+/// bounded by [`MAX_HEAD_BYTES`].
+fn read_head(s: &mut TcpStream) -> std::io::Result<String> {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while head.len() < MAX_HEAD_BYTES {
+        match s.read(&mut byte) {
+            Ok(0) => break,
+            Ok(_) => {
+                head.push(byte[0]);
+                if head.ends_with(b"\r\n\r\n") || head.ends_with(b"\n\n") {
+                    break;
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(String::from_utf8_lossy(&head).into_owned())
+}
+
+/// The request target of a `GET <target> HTTP/1.x` request line.
+fn request_target(head: &str) -> Option<&str> {
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    if parts.next()? != "GET" {
+        return None;
+    }
+    parts.next()
+}
+
+/// The value of `key` in an `a=1&b=2` query string.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
+
+fn respond(s: &mut TcpStream, code: u16, content_type: &str, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        403 => "Forbidden",
+        _ => "Not Found",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    s.write_all(head.as_bytes())?;
+    s.write_all(body.as_bytes())?;
+    s.flush()
+}
+
+/// Prometheus text exposition of a snapshot (format 0.0.4).
+fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (name, value) in snap.counters() {
+        let _ = writeln!(out, "# TYPE phub_{name}_total counter");
+        let _ = writeln!(out, "phub_{name}_total {value}");
+    }
+    let _ = writeln!(out, "# TYPE phub_kernel_tier gauge");
+    let _ = writeln!(out, "phub_kernel_tier {}", snap.kernel_tier);
+    let _ = writeln!(out, "# TYPE phub_placement_mode gauge");
+    let _ = writeln!(out, "phub_placement_mode {}", snap.placement_mode);
+    for j in &snap.jobs {
+        let job = j.job;
+        let _ = writeln!(
+            out,
+            "phub_job_rounds_completed_total{{job=\"{job}\"}} {}",
+            j.rounds_completed
+        );
+        let _ = writeln!(out, "phub_job_push_bytes_total{{job=\"{job}\"}} {}", j.push_bytes);
+        let _ = writeln!(out, "phub_job_pull_bytes_total{{job=\"{job}\"}} {}", j.pull_bytes);
+        let _ = writeln!(out, "phub_job_drops_total{{job=\"{job}\"}} {}", j.drops);
+        let _ = writeln!(out, "phub_job_replays_total{{job=\"{job}\"}} {}", j.replays);
+        let _ = writeln!(out, "phub_job_rollbacks_total{{job=\"{job}\"}} {}", j.rollbacks);
+        let h = &j.round_latency;
+        for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+            let _ = writeln!(
+                out,
+                "phub_job_round_latency_ns{{job=\"{job}\",quantile=\"{label}\"}} {}",
+                h.quantile_ns(q)
+            );
+        }
+        let _ = writeln!(out, "phub_job_round_latency_ns_sum{{job=\"{job}\"}} {}", h.sum_ns);
+        let _ = writeln!(out, "phub_job_round_latency_ns_count{{job=\"{job}\"}} {}", h.count);
+    }
+    out
+}
+
+/// JSON snapshot of the per-job sets (hand-rolled; parseable by
+/// [`crate::jsonlite`]).
+fn render_jobs_json(snap: &MetricsSnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\"jobs\":[");
+    for (i, j) in snap.jobs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        append_job_json(&mut out, j);
+    }
+    let _ = write!(
+        out,
+        "],\"kernel_tier\":{},\"placement_mode\":{}}}",
+        snap.kernel_tier, snap.placement_mode
+    );
+    out
+}
+
+fn append_job_json(out: &mut String, j: &JobMetricsSnapshot) {
+    use std::fmt::Write as _;
+    let h = &j.round_latency;
+    let _ = write!(
+        out,
+        "{{\"job\":{},\"rounds_completed\":{},\"push_bytes\":{},\"pull_bytes\":{},\
+         \"drops\":{},\"replays\":{},\"rollbacks\":{},\"round_latency\":{{\
+         \"count\":{},\"mean_ns\":{:.3},\"p50_ns\":{},\"p90_ns\":{},\"p99_ns\":{}}}}}",
+        j.job,
+        j.rounds_completed,
+        j.push_bytes,
+        j.pull_bytes,
+        j.drops,
+        j.replays,
+        j.rollbacks,
+        h.count,
+        h.mean_ns(),
+        h.quantile_ns(0.5),
+        h.quantile_ns(0.9),
+        h.quantile_ns(0.99),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let m = DataPlaneMetrics::default();
+        m.dropped_messages.inc();
+        m.drop_future_round.inc();
+        let jm = m.per_job.register(3);
+        jm.rounds_completed.add(4);
+        jm.push_bytes.add(1024);
+        jm.pull_bytes.add(2048);
+        jm.round_latency.record_ns(1_000_000);
+        m.snapshot()
+    }
+
+    #[test]
+    fn prometheus_rendering_is_line_oriented_and_complete() {
+        let text = render_prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE phub_dropped_messages_total counter"));
+        assert!(text.contains("phub_dropped_messages_total 1"));
+        assert!(text.contains("phub_drop_future_round_total 1"));
+        assert!(text.contains("phub_job_rounds_completed_total{job=\"3\"} 4"));
+        assert!(text.contains("phub_job_round_latency_ns{job=\"3\",quantile=\"0.5\"}"));
+        assert!(text.contains("phub_job_round_latency_ns_count{job=\"3\"} 1"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().unwrap();
+            assert!(name.starts_with("phub_"), "{line}");
+            assert!(parts.next().unwrap().parse::<f64>().is_ok(), "{line}");
+            assert!(parts.next().is_none(), "{line}");
+        }
+    }
+
+    #[test]
+    fn jobs_json_parses_with_jsonlite() {
+        let body = render_jobs_json(&sample_snapshot());
+        let v = crate::jsonlite::parse(&body).expect("valid json");
+        let jobs = v.get("jobs").expect("jobs").as_arr().expect("array");
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].get("job").unwrap().as_usize(), Some(3));
+        assert_eq!(jobs[0].get("rounds_completed").unwrap().as_usize(), Some(4));
+        let lat = jobs[0].get("round_latency").expect("latency");
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(1));
+        assert!(lat.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn empty_registry_renders_empty_but_valid() {
+        let m = DataPlaneMetrics::default();
+        let body = render_jobs_json(&m.snapshot());
+        let v = crate::jsonlite::parse(&body).expect("valid json");
+        assert_eq!(v.get("jobs").unwrap().as_arr().unwrap().len(), 0);
+        let text = render_prometheus(&m.snapshot());
+        assert!(text.contains("phub_dropped_messages_total 0"));
+    }
+
+    #[test]
+    fn query_params_and_request_targets_parse() {
+        assert_eq!(query_param("job=3&nonce=ff", "job"), Some("3"));
+        assert_eq!(query_param("job=3&nonce=ff", "nonce"), Some("ff"));
+        assert_eq!(query_param("job=3", "nonce"), None);
+        assert_eq!(query_param("", "job"), None);
+        assert_eq!(
+            request_target("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"),
+            Some("/metrics")
+        );
+        assert_eq!(request_target("POST /metrics HTTP/1.1\r\n\r\n"), None);
+        assert_eq!(request_target(""), None);
+    }
+}

@@ -10,6 +10,8 @@
 
 use std::sync::Arc;
 
+use crate::metrics::JobMetricsSnapshot;
+
 use super::chunk::KeyTable;
 use super::optimizer::NesterovSgd;
 use super::server::{PHubServer, ServerConfig};
@@ -22,6 +24,10 @@ pub struct TenancyResult {
     pub rounds: usize,
     /// Per-job exchange rounds per second (length = jobs).
     pub per_job_rate: Vec<f64>,
+    /// The server's per-tenant attribution at shutdown, ordered by job
+    /// id (what the status plane's `/jobs` route serves live; length =
+    /// jobs). Rounds are worker-rounds: `workers × rounds` each here.
+    pub per_job_metrics: Vec<JobMetricsSnapshot>,
 }
 
 impl TenancyResult {
@@ -94,11 +100,14 @@ pub fn run_concurrent_jobs(
         }
     });
 
+    // Snapshot attribution before shutdown drops the registry.
+    let per_job_metrics = server.metrics().per_job.snapshot();
     PHubServer::shutdown(server);
     TenancyResult {
         jobs,
         rounds,
         per_job_rate,
+        per_job_metrics,
     }
 }
 
@@ -154,6 +163,31 @@ mod tests {
         let r = run_concurrent_jobs(2, 3, 2, 4096, 1024, 5);
         assert_eq!(r.per_job_rate.len(), 3);
         assert!(r.per_job_rate.iter().all(|&x| x > 0.0));
+    }
+
+    /// Per-tenant attribution: each job's metric set counts exactly its
+    /// own traffic — `workers × rounds` worker-rounds, the matching
+    /// push/pull byte volume, a populated latency histogram, and zero
+    /// drops/replays/rollbacks on a clean run.
+    #[test]
+    fn per_job_attribution_is_exact_and_isolated() {
+        let (jobs, workers, elems, rounds) = (3usize, 2usize, 4096usize, 4usize);
+        let r = run_concurrent_jobs(2, jobs, workers, elems, 1024, rounds);
+        assert_eq!(r.per_job_metrics.len(), jobs);
+        let expect_rounds = (workers * rounds) as u64;
+        for (i, jm) in r.per_job_metrics.iter().enumerate() {
+            assert_eq!(jm.rounds_completed, expect_rounds, "job {i}");
+            assert_eq!(jm.push_bytes, expect_rounds * elems as u64 * 4, "job {i}");
+            assert_eq!(jm.pull_bytes, expect_rounds * elems as u64 * 4, "job {i}");
+            assert_eq!(jm.round_latency.count, expect_rounds, "job {i}");
+            assert!(jm.round_latency.mean_ns() > 0.0, "job {i}");
+            assert_eq!(jm.drops, 0, "job {i}");
+            assert_eq!(jm.replays, 0, "job {i}");
+            assert_eq!(jm.rollbacks, 0, "job {i}");
+        }
+        // Distinct jobs, sorted ids: the snapshot attributes per tenant,
+        // not per server.
+        assert!(r.per_job_metrics.windows(2).all(|p| p[0].job < p[1].job));
     }
 
     #[test]

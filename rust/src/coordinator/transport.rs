@@ -436,6 +436,12 @@ impl TcpLeader {
     pub fn server(&self) -> &Arc<PHubServer> {
         &self.server
     }
+
+    /// Shared handle on this leader's data-plane counters — what a
+    /// [`super::status::StatusServer`] serves over HTTP.
+    pub fn metrics_arc(&self) -> Arc<DataPlaneMetrics> {
+        self.server.metrics_arc()
+    }
 }
 
 /// Admit one connection: create the job on first contact, allocate or
@@ -744,6 +750,7 @@ fn apply_reply(
                 // buffer (this connection holds one of the references);
                 // `data` drops right after, and the last puller's drop
                 // recycles the buffer to the engine's pool.
+                let t_enc = crate::trace::start();
                 wire::write_chunk_frame_f32s(
                     ready,
                     Op::ModelChunk,
@@ -754,6 +761,13 @@ fn apply_reply(
                     lo as u64,
                     &data,
                 )?;
+                crate::trace::span(
+                    crate::trace::Stage::ReplyEncode,
+                    handle.job(),
+                    chunk,
+                    slot,
+                    t_enc,
+                );
             }
             Ok(false)
         }
@@ -854,8 +868,15 @@ fn serve_streamed<R: Read, W: Write>(
     // checkpoint at an exact round boundary matching the slot's
     // `rounds_done` — never a mix of two rounds.
     let mut pending_residuals: Vec<Vec<u8>> = vec![Vec::new(); n_chunks];
+    // Pre-resolved attribution counters: the frame path pays relaxed
+    // atomic adds only, never the registry lock.
+    let jm = handle.job_metrics().clone();
+    // Wall-clock anchor of the open round's first push, feeding the
+    // per-job round-latency histogram (includes any replay).
+    let mut round_start = std::time::Instant::now();
     loop {
         let mut fb = pool.take();
+        let t_read = crate::trace::start();
         // Decode the frame into the pooled buffer; keep only scalars from
         // the borrowed view so the buffer itself can travel to the core.
         let (op, chunk, epoch, off, grad_len) = {
@@ -882,6 +903,12 @@ fn serve_streamed<R: Read, W: Write>(
                         // connection (the stream cannot be resynced).
                         metrics.timeouts.inc();
                         metrics.deadline_trips.inc();
+                        crate::trace::instant(
+                            crate::trace::Stage::DeadlineTrip,
+                            handle.job(),
+                            0,
+                            slot,
+                        );
                         return Ok(());
                     }
                     return Ok(()); // disconnect = Bye
@@ -907,6 +934,8 @@ fn serve_streamed<R: Read, W: Write>(
                 other => bail!("unexpected opcode {other:?} in a chunk-streamed session"),
             }
         };
+        crate::trace::span(crate::trace::Stage::FrameRead, handle.job(), chunk, slot, t_read);
+        jm.push_bytes.add(grad_len as u64);
         // Apply queued engine notifications first: a rollback that
         // already happened decides how this frame is judged.
         if drain_replies(handle, wr, wire_job, slot, &mut ready)? {
@@ -917,6 +946,7 @@ fn serve_streamed<R: Read, W: Write>(
             // tag; the worker replays once it sees the RollbackRound
             // frame. (The buffer recycles on this `continue`.)
             metrics.replayed_frames.inc();
+            jm.replays.inc();
             continue;
         }
         ensure!(
@@ -953,6 +983,9 @@ fn serve_streamed<R: Read, W: Write>(
         }
         // A duplicate violates the round protocol; the typed error
         // costs this connection, never a shared core.
+        if !wr.mid_round() {
+            round_start = std::time::Instant::now();
+        }
         wr.begin_push(chunk)?;
         handle.push_chunk_bytes_tagged(
             chunk,
@@ -973,8 +1006,11 @@ fn serve_streamed<R: Read, W: Write>(
             // Round fully received; the worker is now draining its
             // socket. Send everything already finished, then stream
             // each remaining chunk the moment it completes.
+            jm.pull_bytes.add(ready.len() as u64);
+            let t_wr = crate::trace::start();
             writer.write_all(&ready)?;
             writer.flush()?;
+            crate::trace::span(crate::trace::Stage::SocketWrite, handle.job(), 0, slot, t_wr);
             ready.clear();
             let mut rolled = false;
             while !rolled && wr.outstanding() > 0 {
@@ -989,15 +1025,27 @@ fn serve_streamed<R: Read, W: Write>(
                     );
                 };
                 rolled = apply_reply(r, wr, handle, wire_job, slot, &mut ready)?;
+                jm.pull_bytes.add(ready.len() as u64);
+                let t_wr = crate::trace::start();
                 writer.write_all(&ready)?;
                 writer.flush()?;
+                crate::trace::span(crate::trace::Stage::SocketWrite, handle.job(), 0, slot, t_wr);
                 ready.clear();
             }
             if rolled {
                 write_rollback_frame(writer, wire_job, slot, wr.epoch())?;
             } else {
                 wr.complete_round();
-                commit_residuals(jobs, wire_job, slot, &mut pending_residuals, metrics);
+                jm.rounds_completed.inc();
+                jm.round_latency.record(round_start.elapsed());
+                commit_residuals(
+                    handle.job(),
+                    jobs,
+                    wire_job,
+                    slot,
+                    &mut pending_residuals,
+                    metrics,
+                );
             }
         }
     }
@@ -1036,6 +1084,7 @@ fn validate_residual_save(payload: &[u8], handle: &WorkerHandle, n_chunks: usize
 /// per-chunk exchange path (a dense worker's staging stays empty and
 /// skips the lock entirely).
 fn commit_residuals(
+    job: JobId,
     jobs: &Mutex<HashMap<u32, JobEntry>>,
     wire_job: u32,
     slot: u32,
@@ -1066,6 +1115,9 @@ fn commit_residuals(
         }
     }
     metrics.residual_saves.add(committed);
+    if committed > 0 {
+        crate::trace::instant(crate::trace::Stage::ResidualCommit, job, 0, slot);
+    }
 }
 
 /// Dial a leader and run the Hello/Welcome rendezvous — the shared

@@ -31,3 +31,4 @@ pub mod metrics;
 pub mod prop;
 pub mod runtime;
 pub mod sim;
+pub mod trace;

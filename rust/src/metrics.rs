@@ -1,7 +1,34 @@
 //! Lightweight metrics: counters and duration histograms for the live
 //! server, examples, and benches. Lock-free counters; fixed log2 buckets.
+//!
+//! # Observability contract
+//!
+//! Three layers, each priced for where it sits (the full map, including
+//! the flight recorder and the HTTP export plane, is in
+//! `coordinator/mod.rs`):
+//!
+//! * **Global counters** ([`DataPlaneMetrics`]) — one relaxed atomic
+//!   increment per event, recorded from core threads and connection
+//!   threads. Safe on the exact-zero hot path.
+//! * **Per-job attribution** ([`JobMetrics`] via [`JobRegistry`]) — the
+//!   same relaxed increments against a job's own metric set. Hot paths
+//!   hold a pre-resolved `Arc<JobMetrics>` (cached at admission /
+//!   handle creation), so the steady state never takes the registry
+//!   lock; the lock is touched only at job init/evict, on error paths
+//!   (drops, replays), and by scrapes.
+//! * **Snapshots** ([`MetricsSnapshot`], [`HistogramSnapshot`]) — a
+//!   point-in-time read of every counter (relaxed loads; each value is
+//!   individually atomic, cross-counter skew is bounded by in-flight
+//!   increments). This is the only read path the HTTP status endpoint
+//!   uses, so scraping can never perturb a round beyond cache traffic.
+//!
+//! This module stays dependency-free (no metrics→coordinator edge): the
+//! mapping from engine errors to the per-reason drop counters lives at
+//! the recording site in `coordinator/server.rs`.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -62,8 +89,22 @@ pub struct DataPlaneMetrics {
     /// Messages a core dropped because the engine rejected them (unknown
     /// job/chunk, duplicate push, future round, aggregation error). The
     /// violator's round simply never completes; shared cores are never
-    /// harmed.
+    /// harmed. This is the aggregate; the `drop_*` counters below split
+    /// it by reject reason so a soak can assert *which* drops happened.
     pub dropped_messages: Counter,
+    /// Engine rejects split by reason (each increments alongside
+    /// `dropped_messages`): the push named a job this core has no shard
+    /// for.
+    pub drop_unknown_job: Counter,
+    /// The push named a chunk the job does not place on this core.
+    pub drop_unknown_chunk: Counter,
+    /// The worker double-pushed a chunk within one round.
+    pub drop_duplicate: Counter,
+    /// The push was tagged for a round its chunk has not opened yet.
+    pub drop_future_round: Counter,
+    /// An aggregation-level violation (worker out of range, bad payload
+    /// length, malformed quantized bytes, ...).
+    pub drop_agg: Counter,
     /// Quantized pushes dropped at the core for malformed `QuantGrad`
     /// payloads before reaching the engine (the transport validates at
     /// the edge, so a non-zero count means a bug or a torn message).
@@ -103,6 +144,181 @@ pub struct DataPlaneMetrics {
     /// `coordinator::mapping::PlacementMode as u8`
     /// (0 interleave, 1 affine). Set once by `PHubServer::start`.
     pub placement_mode: Setting,
+    /// Per-job (per-tenant) metric sets, registered at job init and
+    /// dropped at eviction. See the lock discipline on [`JobRegistry`].
+    pub per_job: JobRegistry,
+}
+
+impl DataPlaneMetrics {
+    /// Point-in-time snapshot of every counter, including the per-job
+    /// sets. Relaxed loads: each value is individually exact,
+    /// cross-counter skew is bounded by increments in flight during the
+    /// read. This is the status endpoint's only read path.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            dropped_messages: self.dropped_messages.get(),
+            drop_unknown_job: self.drop_unknown_job.get(),
+            drop_unknown_chunk: self.drop_unknown_chunk.get(),
+            drop_duplicate: self.drop_duplicate.get(),
+            drop_future_round: self.drop_future_round.get(),
+            drop_agg: self.drop_agg.get(),
+            dropped_quant_payloads: self.dropped_quant_payloads.get(),
+            rollbacks: self.rollbacks.get(),
+            timeouts: self.timeouts.get(),
+            redials: self.redials.get(),
+            uplink_giveups: self.uplink_giveups.get(),
+            deadline_trips: self.deadline_trips.get(),
+            replayed_frames: self.replayed_frames.get(),
+            residual_saves: self.residual_saves.get(),
+            residual_restores: self.residual_restores.get(),
+            kernel_tier: self.kernel_tier.get(),
+            placement_mode: self.placement_mode.get(),
+            jobs: self.per_job.snapshot(),
+        }
+    }
+}
+
+/// One job's (tenant's) metric set. Hot-path increments are the same
+/// relaxed atomics as the global counters; holders cache the
+/// `Arc<JobMetrics>` at admission so no lookup happens per round.
+#[derive(Debug, Default)]
+pub struct JobMetrics {
+    /// Worker-rounds completed: one count per (worker, round) pair that
+    /// ran to completion (a job with `w` workers advances this by `w`
+    /// per global round).
+    pub rounds_completed: Counter,
+    /// Gradient payload bytes received from this job's workers.
+    pub push_bytes: Counter,
+    /// Parameter reply bytes written back to this job's workers.
+    pub pull_bytes: Counter,
+    /// Wall time from a worker's first push of a round to that round's
+    /// completion (includes replay time after a mid-round rollback).
+    pub round_latency: Histogram,
+    /// Engine rejects attributed to this job (see the global `drop_*`
+    /// split for reasons).
+    pub drops: Counter,
+    /// Replayed/stale frames attributed to this job.
+    pub replays: Counter,
+    /// Rollback events attributed to this job (per core that applied
+    /// one).
+    pub rollbacks: Counter,
+}
+
+impl JobMetrics {
+    fn snapshot(&self, job: u32) -> JobMetricsSnapshot {
+        JobMetricsSnapshot {
+            job,
+            rounds_completed: self.rounds_completed.get(),
+            push_bytes: self.push_bytes.get(),
+            pull_bytes: self.pull_bytes.get(),
+            drops: self.drops.get(),
+            replays: self.replays.get(),
+            rollbacks: self.rollbacks.get(),
+            round_latency: self.round_latency.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time copy of one job's [`JobMetrics`].
+#[derive(Debug, Clone)]
+pub struct JobMetricsSnapshot {
+    pub job: u32,
+    pub rounds_completed: u64,
+    pub push_bytes: u64,
+    pub pull_bytes: u64,
+    pub drops: u64,
+    pub replays: u64,
+    pub rollbacks: u64,
+    pub round_latency: HistogramSnapshot,
+}
+
+/// Registry of per-job metric sets.
+///
+/// Lock discipline: the interior mutex is a control-plane lock — taken
+/// at job registration/eviction, by snapshots/scrapes, and on error
+/// paths that need a job lookup (drops, replays — both off the
+/// steady-state round). The exact-zero hot path never calls into this
+/// type; it increments through an `Arc<JobMetrics>` resolved once at
+/// admission.
+#[derive(Debug, Default)]
+pub struct JobRegistry {
+    jobs: Mutex<HashMap<u32, Arc<JobMetrics>>>,
+}
+
+impl JobRegistry {
+    /// Get-or-create the metric set for `job`.
+    pub fn register(&self, job: u32) -> Arc<JobMetrics> {
+        let mut map = self.jobs.lock().expect("job metrics lock");
+        map.entry(job).or_default().clone()
+    }
+
+    /// The metric set for `job`, if registered.
+    pub fn get(&self, job: u32) -> Option<Arc<JobMetrics>> {
+        self.jobs.lock().expect("job metrics lock").get(&job).cloned()
+    }
+
+    /// Drop `job`'s metric set (eviction; scrape history goes with it).
+    pub fn remove(&self, job: u32) {
+        self.jobs.lock().expect("job metrics lock").remove(&job);
+    }
+
+    /// Snapshot every registered job, ordered by job id.
+    pub fn snapshot(&self) -> Vec<JobMetricsSnapshot> {
+        let map = self.jobs.lock().expect("job metrics lock");
+        let mut out: Vec<JobMetricsSnapshot> =
+            map.iter().map(|(job, m)| m.snapshot(*job)).collect();
+        drop(map);
+        out.sort_by_key(|s| s.job);
+        out
+    }
+}
+
+/// Point-in-time copy of a [`DataPlaneMetrics`] (global counters +
+/// per-job sets). Built by [`DataPlaneMetrics::snapshot`].
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub dropped_messages: u64,
+    pub drop_unknown_job: u64,
+    pub drop_unknown_chunk: u64,
+    pub drop_duplicate: u64,
+    pub drop_future_round: u64,
+    pub drop_agg: u64,
+    pub dropped_quant_payloads: u64,
+    pub rollbacks: u64,
+    pub timeouts: u64,
+    pub redials: u64,
+    pub uplink_giveups: u64,
+    pub deadline_trips: u64,
+    pub replayed_frames: u64,
+    pub residual_saves: u64,
+    pub residual_restores: u64,
+    pub kernel_tier: u8,
+    pub placement_mode: u8,
+    pub jobs: Vec<JobMetricsSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// The global counters as (name, value) pairs — the iteration order
+    /// the Prometheus exposition uses.
+    pub fn counters(&self) -> [(&'static str, u64); 15] {
+        [
+            ("dropped_messages", self.dropped_messages),
+            ("drop_unknown_job", self.drop_unknown_job),
+            ("drop_unknown_chunk", self.drop_unknown_chunk),
+            ("drop_duplicate", self.drop_duplicate),
+            ("drop_future_round", self.drop_future_round),
+            ("drop_agg", self.drop_agg),
+            ("dropped_quant_payloads", self.dropped_quant_payloads),
+            ("rollbacks", self.rollbacks),
+            ("timeouts", self.timeouts),
+            ("redials", self.redials),
+            ("uplink_giveups", self.uplink_giveups),
+            ("deadline_trips", self.deadline_trips),
+            ("replayed_frames", self.replayed_frames),
+            ("residual_saves", self.residual_saves),
+            ("residual_restores", self.residual_restores),
+        ]
+    }
 }
 
 /// Power-of-two bucketed latency histogram (nanoseconds, 48 buckets:
@@ -145,24 +361,75 @@ impl Histogram {
     }
 
     pub fn mean_ns(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        self.snapshot().mean_ns()
     }
 
     /// Approximate quantile from bucket boundaries (upper bound of the
     /// bucket containing the q-th sample).
     pub fn quantile_ns(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
+        self.snapshot().quantile_ns(q)
+    }
+
+    /// Lock-free point-in-time copy: relaxed loads of every bucket.
+    /// Records racing the snapshot land wholly in this copy or the
+    /// next; a bucket is never torn (each cell is an atomic), though a
+    /// racing record may momentarily show in `buckets` before `count`
+    /// or vice versa — merge math stays exact either way.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`], mergeable across instances
+/// (e.g. per-core histograms folded into one job view).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; 48],
+    pub sum_ns: u64,
+    pub count: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            buckets: [0; 48],
+            sum_ns: 0,
+            count: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Fold `other` into `self` (bucket-wise addition; exact).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.sum_ns += other.sum_ns;
+        self.count += other.count;
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
             return 0;
         }
-        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let target = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
         let mut seen = 0;
         for (b, c) in self.buckets.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
+            seen += c;
             if seen >= target {
                 return 1u64 << (b + 1);
             }
@@ -223,5 +490,122 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.mean_ns(), 0.0);
         assert_eq!(h.quantile_ns(0.9), 0);
+        assert_eq!(h.snapshot(), HistogramSnapshot::default());
+    }
+
+    /// Exact bucket-edge placement: bucket `b` holds `[2^b, 2^(b+1))`,
+    /// so `2^k` lands in bucket `k` and `2^k - 1` in bucket `k - 1`;
+    /// 0/1 clamp into bucket 0 and everything at or above `2^47`
+    /// (`u64::MAX` included) collapses into bucket 47.
+    #[test]
+    fn histogram_bucket_edges_exact() {
+        let h = Histogram::new();
+        h.record_ns(0); // clamped to 1
+        h.record_ns(1);
+        assert_eq!(h.snapshot().buckets[0], 2);
+        for k in 1..48usize {
+            let h = Histogram::new();
+            h.record_ns(1u64 << k);
+            h.record_ns((1u64 << k) - 1);
+            let s = h.snapshot();
+            assert_eq!(s.buckets[k], 1, "2^{k} must land in bucket {k}");
+            assert_eq!(s.buckets[k - 1], 1, "2^{k}-1 must land in bucket {}", k - 1);
+            assert_eq!(s.count, 2);
+        }
+        let h = Histogram::new();
+        h.record_ns(1u64 << 47);
+        h.record_ns(1u64 << 63);
+        h.record_ns(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.buckets[47], 3);
+        assert_eq!(s.quantile_ns(1.0), 1u64 << 48);
+    }
+
+    #[test]
+    fn histogram_snapshot_merge_is_exact() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for ns in [1u64, 100, 10_000] {
+            a.record_ns(ns);
+        }
+        for ns in [1_000_000u64, 50_000_000] {
+            b.record_ns(ns);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.count, 5);
+        assert_eq!(merged.sum_ns, 1 + 100 + 10_000 + 1_000_000 + 50_000_000);
+        assert_eq!(merged.buckets.iter().sum::<u64>(), 5);
+        // Merging an empty snapshot is the identity.
+        let before = merged.clone();
+        merged.merge(&HistogramSnapshot::default());
+        assert_eq!(merged, before);
+        assert!(merged.quantile_ns(0.2) <= merged.quantile_ns(0.99));
+    }
+
+    #[test]
+    fn histogram_concurrent_records_all_land() {
+        let h = Arc::new(Histogram::new());
+        let workers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record_ns(t * 10_000 + i + 1);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 40_000);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 40_000);
+        assert!(s.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn job_registry_register_get_remove() {
+        let reg = JobRegistry::default();
+        let a = reg.register(7);
+        let again = reg.register(7);
+        assert!(Arc::ptr_eq(&a, &again), "register is get-or-create");
+        a.rounds_completed.add(3);
+        a.push_bytes.add(1024);
+        a.round_latency.record_ns(500);
+        reg.register(3).drops.inc();
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].job, 3, "snapshot ordered by job id");
+        assert_eq!(snap[0].drops, 1);
+        assert_eq!(snap[1].job, 7);
+        assert_eq!(snap[1].rounds_completed, 3);
+        assert_eq!(snap[1].push_bytes, 1024);
+        assert_eq!(snap[1].round_latency.count, 1);
+        reg.remove(7);
+        assert!(reg.get(7).is_none());
+        assert_eq!(reg.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn data_plane_snapshot_carries_reason_split_and_jobs() {
+        let m = DataPlaneMetrics::default();
+        m.dropped_messages.inc();
+        m.drop_future_round.inc();
+        m.per_job.register(1).replays.add(2);
+        let s = m.snapshot();
+        assert_eq!(s.dropped_messages, 1);
+        assert_eq!(s.drop_future_round, 1);
+        assert_eq!(s.drop_unknown_job, 0);
+        assert_eq!(s.jobs.len(), 1);
+        assert_eq!(s.jobs[0].replays, 2);
+        let names: Vec<&str> = s.counters().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"drop_duplicate"));
+        assert_eq!(
+            s.counters().iter().map(|(_, v)| v).sum::<u64>(),
+            2,
+            "dropped_messages + drop_future_round"
+        );
     }
 }

@@ -1,0 +1,583 @@
+//! Flight recorder: zero-alloc per-stage round tracing.
+//!
+//! PHub's design came from stage-by-stage measurement (the paper's §2
+//! characterization splits a round into network, copy, aggregation, and
+//! optimization time before proposing a fix for each). This module gives
+//! the reproduction the same instrument: every thread that touches a
+//! round records timestamped span events into its own fixed-capacity
+//! ring buffer at the existing stage boundaries — frame read, ring
+//! enqueue/dequeue, absorb, fused mean+optimize, reply encode, socket
+//! write — plus recovery events (rollback, deadline trip, residual
+//! commit). A drained recording renders directly as a chrome://tracing
+//! timeline ([`chrome_trace_json`]), reproducing the paper's per-stage
+//! breakdown from live rounds.
+//!
+//! # Recording cost and the exact-zero invariant
+//!
+//! The recorder is on the hottest paths in the tree, so it obeys the same
+//! discipline they do (`rust/tests/alloc_discipline.rs` runs with tracing
+//! compiled in *and* enabled):
+//!
+//! * **Preallocated slots.** Each recording thread owns one
+//!   [`TraceRing`] of [`RING_CAPACITY`] fixed slots, allocated once the
+//!   first time the thread records (warm-up, like the kernel-tier
+//!   resolve) and never resized. New events overwrite the oldest.
+//! * **Atomics only.** A record is one monotonic-clock read plus a
+//!   handful of relaxed atomic stores under a per-slot seqlock stamp
+//!   (odd = write in progress); readers validate the stamp and retry, so
+//!   a concurrent scrape can never observe a torn event and never makes
+//!   a writer wait. No mutex, no CAS loop, no allocation.
+//! * **Branch-out when off.** The per-server runtime toggle
+//!   ([`set_enabled`]) reduces every hook to one relaxed load and a
+//!   branch; compiling without the `trace` cargo feature (on by
+//!   default) reduces them to nothing.
+//!
+//! The thread table holds up to [`MAX_RINGS`] rings for the life of the
+//! process; threads beyond that record nothing (recording is
+//! best-effort diagnostics, never load-bearing). Ring indices double as
+//! chrome-tracing `tid`s.
+
+use std::fmt;
+
+/// A round stage (or recovery event) a span is attributed to. The
+/// numbering is part of the recorded event, not a wire format — it may
+/// be extended but existing values should keep their meaning within a
+/// release.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Leader: blocking read of one wire frame off a worker socket
+    /// (includes the wait for the worker — inter-round idle shows up
+    /// here, which is exactly the "network + straggler wait" band of
+    /// the paper's breakdown).
+    FrameRead = 0,
+    /// Producer side of a (worker, core) request ring: enqueue of one
+    /// push message (includes backpressure wait on a full ring).
+    RingEnqueue = 1,
+    /// Core side: a push message left its request ring (instant).
+    RingDequeue = 2,
+    /// Engine: tall-aggregation absorb of one gradient chunk.
+    Absorb = 3,
+    /// Engine: the fused mean+optimizer pass on a chunk's last arrival.
+    Optimize = 4,
+    /// Leader: serializing one reply chunk into the connection's
+    /// staging buffer.
+    ReplyEncode = 5,
+    /// Leader: writing + flushing the staged replies to the socket.
+    SocketWrite = 6,
+    /// Recovery: a shard applied an epoch rollback (instant).
+    Rollback = 7,
+    /// Recovery: a round deadline declared a stalled worker dead
+    /// (instant).
+    DeadlineTrip = 8,
+    /// Recovery: staged residual checkpoints committed at a round
+    /// boundary (instant).
+    ResidualCommit = 9,
+}
+
+/// Every stage, for iteration (breakdown tables, tests).
+pub const ALL_STAGES: [Stage; 10] = [
+    Stage::FrameRead,
+    Stage::RingEnqueue,
+    Stage::RingDequeue,
+    Stage::Absorb,
+    Stage::Optimize,
+    Stage::ReplyEncode,
+    Stage::SocketWrite,
+    Stage::Rollback,
+    Stage::DeadlineTrip,
+    Stage::ResidualCommit,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::FrameRead => "frame_read",
+            Stage::RingEnqueue => "ring_enqueue",
+            Stage::RingDequeue => "ring_dequeue",
+            Stage::Absorb => "absorb",
+            Stage::Optimize => "optimize",
+            Stage::ReplyEncode => "reply_encode",
+            Stage::SocketWrite => "socket_write",
+            Stage::Rollback => "rollback",
+            Stage::DeadlineTrip => "deadline_trip",
+            Stage::ResidualCommit => "residual_commit",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        ALL_STAGES.get(v as usize).copied()
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One recorded span, as read back by a scrape. `ts_ns` is nanoseconds
+/// since the process's first recorded event; `dur_ns` is 0 for instant
+/// events; `tid` is the recording thread's ring index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub stage: Stage,
+    pub job: u32,
+    pub chunk: u32,
+    pub worker: u32,
+    pub tid: u32,
+}
+
+/// Render events as chrome://tracing "trace event format" JSON (complete
+/// duration events, microsecond timestamps). Load the output in
+/// `chrome://tracing` or Perfetto to see the per-stage round timeline.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"phub\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+             \"pid\":1,\"tid\":{},\"args\":{{\"job\":{},\"chunk\":{},\"worker\":{}}}}}",
+            e.stage.name(),
+            e.ts_ns as f64 / 1000.0,
+            e.dur_ns as f64 / 1000.0,
+            e.tid,
+            e.job,
+            e.chunk,
+            e.worker,
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Slots per thread ring. At ~10 events per chunk round a 4-chunk job
+/// keeps its last ~100 rounds in flight-recorder range.
+pub const RING_CAPACITY: usize = 4096;
+
+/// Threads the process-wide ring table can hold; later threads record
+/// nothing (best-effort).
+pub const MAX_RINGS: usize = 64;
+
+#[cfg(feature = "trace")]
+mod imp {
+    use super::{Stage, TraceEvent, MAX_RINGS, RING_CAPACITY};
+    use std::cell::Cell;
+    use std::ptr;
+    use std::sync::atomic::{
+        fence, AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+    use std::sync::OnceLock;
+    use std::time::Instant;
+
+    /// One event slot. Every field is a relaxed atomic under the `seq`
+    /// stamp (crossbeam-style seqlock: odd while a write is in
+    /// progress), so readers can snapshot concurrently without ever
+    /// observing a torn event and without making the writer wait.
+    #[derive(Default)]
+    struct Slot {
+        seq: AtomicU32,
+        stage: AtomicU32,
+        job: AtomicU32,
+        chunk: AtomicU32,
+        worker: AtomicU32,
+        ts_ns: AtomicU64,
+        dur_ns: AtomicU64,
+    }
+
+    /// A fixed-capacity single-writer/multi-reader event ring. The
+    /// global table owns one per recording thread; standalone instances
+    /// exist only in tests.
+    pub struct TraceRing {
+        slots: Box<[Slot]>,
+        /// Monotone count of events ever written; the write cursor is
+        /// `head % capacity`. Advanced *after* the slot write completes
+        /// so readers only walk fully-written indices.
+        head: AtomicU64,
+    }
+
+    impl TraceRing {
+        pub fn with_capacity(cap: usize) -> TraceRing {
+            let slots: Vec<Slot> = (0..cap.max(1)).map(|_| Slot::default()).collect();
+            TraceRing {
+                slots: slots.into_boxed_slice(),
+                head: AtomicU64::new(0),
+            }
+        }
+
+        /// Record one event, overwriting the oldest when full. Single
+        /// writer: only the owning thread calls this.
+        pub fn record(
+            &self,
+            stage: Stage,
+            job: u32,
+            chunk: u32,
+            worker: u32,
+            ts_ns: u64,
+            dur_ns: u64,
+        ) {
+            let h = self.head.load(Ordering::Relaxed);
+            let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+            let s = slot.seq.load(Ordering::Relaxed);
+            slot.seq.store(s.wrapping_add(1), Ordering::Relaxed); // odd: in progress
+            fence(Ordering::Release);
+            slot.stage.store(stage as u32, Ordering::Relaxed);
+            slot.job.store(job, Ordering::Relaxed);
+            slot.chunk.store(chunk, Ordering::Relaxed);
+            slot.worker.store(worker, Ordering::Relaxed);
+            slot.ts_ns.store(ts_ns, Ordering::Relaxed);
+            slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+            slot.seq.store(s.wrapping_add(2), Ordering::Release);
+            self.head.store(h + 1, Ordering::Release);
+        }
+
+        /// Number of events ever recorded (not capped at capacity).
+        pub fn recorded(&self) -> u64 {
+            self.head.load(Ordering::Acquire)
+        }
+
+        /// Append the ring's current events (oldest retained first) to
+        /// `out`, optionally filtered to one job. Slots a writer is
+        /// overwriting mid-read are retried a few times and then
+        /// skipped — a scrape never yields a torn event and never
+        /// blocks the writer.
+        pub fn snapshot_into(&self, tid: u32, job_filter: Option<u32>, out: &mut Vec<TraceEvent>) {
+            let head = self.head.load(Ordering::Acquire);
+            let cap = self.slots.len() as u64;
+            let start = head.saturating_sub(cap);
+            for i in start..head {
+                let slot = &self.slots[(i % cap) as usize];
+                for _attempt in 0..4 {
+                    let s1 = slot.seq.load(Ordering::Acquire);
+                    if s1 & 1 == 1 {
+                        std::hint::spin_loop();
+                        continue; // write in progress
+                    }
+                    let ev = TraceEvent {
+                        ts_ns: slot.ts_ns.load(Ordering::Relaxed),
+                        dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+                        stage: match Stage::from_u8(slot.stage.load(Ordering::Relaxed) as u8) {
+                            Some(s) => s,
+                            None => break,
+                        },
+                        job: slot.job.load(Ordering::Relaxed),
+                        chunk: slot.chunk.load(Ordering::Relaxed),
+                        worker: slot.worker.load(Ordering::Relaxed),
+                        tid,
+                    };
+                    fence(Ordering::Acquire);
+                    if slot.seq.load(Ordering::Relaxed) != s1 {
+                        continue; // overwritten mid-read; retry
+                    }
+                    if job_filter.is_none_or(|j| j == ev.job) {
+                        out.push(ev);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Runtime toggle (process-wide; `PHubServer::set_tracing` flips it).
+    static ENABLED: AtomicBool = AtomicBool::new(true);
+    /// Next free index in the ring table.
+    static NEXT_RING: AtomicUsize = AtomicUsize::new(0);
+    /// The process-wide ring table: one lazily-allocated ring per
+    /// recording thread, alive for the life of the process so scrapes
+    /// can read rings of exited threads.
+    static RINGS: [AtomicPtr<TraceRing>; MAX_RINGS] =
+        [const { AtomicPtr::new(ptr::null_mut()) }; MAX_RINGS];
+
+    thread_local! {
+        /// This thread's ring-table index: -1 unclaimed, -2 table full.
+        static MY_RING: Cell<isize> = const { Cell::new(-1) };
+    }
+
+    /// Nanoseconds since the first call (the process trace epoch).
+    /// Always at least 1, so a 0 span-start can mean "tracing was off".
+    fn now_ns() -> u64 {
+        static BASE: OnceLock<Instant> = OnceLock::new();
+        (BASE.get_or_init(Instant::now).elapsed().as_nanos() as u64).max(1)
+    }
+
+    /// The calling thread's ring, claiming a table slot (and allocating
+    /// the ring — the one warm-up-time allocation) on first use.
+    fn my_ring() -> Option<&'static TraceRing> {
+        MY_RING.with(|cell| {
+            let i = cell.get();
+            if i >= 0 {
+                // SAFETY: a claimed index always holds a ring pointer that
+                // lives for the rest of the process.
+                return Some(unsafe { &*RINGS[i as usize].load(Ordering::Relaxed) });
+            }
+            if i == -2 {
+                return None;
+            }
+            let idx = NEXT_RING.fetch_add(1, Ordering::Relaxed);
+            if idx >= MAX_RINGS {
+                cell.set(-2);
+                return None;
+            }
+            let ring = Box::into_raw(Box::new(TraceRing::with_capacity(RING_CAPACITY)));
+            RINGS[idx].store(ring, Ordering::Release);
+            cell.set(idx as isize);
+            // SAFETY: just stored; intentionally process-lifetime.
+            Some(unsafe { &*ring })
+        })
+    }
+
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn start() -> u64 {
+        if enabled() {
+            now_ns()
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    pub fn span(stage: Stage, job: u32, chunk: u32, worker: u32, start_ns: u64) {
+        if start_ns == 0 || !enabled() {
+            return;
+        }
+        let now = now_ns();
+        if let Some(ring) = my_ring() {
+            ring.record(stage, job, chunk, worker, start_ns, now.saturating_sub(start_ns));
+        }
+    }
+
+    #[inline]
+    pub fn instant(stage: Stage, job: u32, chunk: u32, worker: u32) {
+        if !enabled() {
+            return;
+        }
+        let now = now_ns();
+        if let Some(ring) = my_ring() {
+            ring.record(stage, job, chunk, worker, now, 0);
+        }
+    }
+
+    /// Snapshot every thread ring, optionally filtered to one job.
+    /// Events are grouped by ring (thread), oldest-first within each.
+    pub fn snapshot_filtered(job: Option<u32>) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        let n = NEXT_RING.load(Ordering::Acquire).min(MAX_RINGS);
+        for (tid, cell) in RINGS.iter().enumerate().take(n) {
+            let p = cell.load(Ordering::Acquire);
+            if p.is_null() {
+                continue; // claimed but not yet published
+            }
+            // SAFETY: published ring pointers live for the process.
+            unsafe { &*p }.snapshot_into(tid as u32, job, &mut out);
+        }
+        out
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::sync::Arc;
+
+        #[test]
+        fn wraparound_evicts_oldest_never_tears() {
+            let ring = TraceRing::with_capacity(8);
+            for i in 0..20u64 {
+                ring.record(Stage::Absorb, i as u32, i as u32, i as u32, i + 1, i);
+            }
+            assert_eq!(ring.recorded(), 20);
+            let mut out = Vec::new();
+            ring.snapshot_into(0, None, &mut out);
+            // Exactly the 8 newest events, oldest retained first.
+            assert_eq!(out.len(), 8);
+            for (k, ev) in out.iter().enumerate() {
+                let i = 12 + k as u64;
+                assert_eq!(ev.ts_ns, i + 1);
+                assert_eq!(ev.dur_ns, i);
+                assert_eq!(ev.job as u64, i);
+                assert_eq!(ev.chunk as u64, i);
+                assert_eq!(ev.worker as u64, i);
+            }
+        }
+
+        #[test]
+        fn job_filter_selects_only_that_job() {
+            let ring = TraceRing::with_capacity(16);
+            for i in 0..10u32 {
+                ring.record(Stage::FrameRead, i % 2, i, 0, 1 + i as u64, 1);
+            }
+            let mut out = Vec::new();
+            ring.snapshot_into(0, Some(1), &mut out);
+            assert_eq!(out.len(), 5);
+            assert!(out.iter().all(|e| e.job == 1));
+        }
+
+        /// Concurrent scrapes of a live writer never observe a torn
+        /// event: every field of every yielded event belongs to the
+        /// same write (the writer keeps job == chunk == worker and
+        /// dur == ts - 1 as the consistency witness).
+        #[test]
+        fn concurrent_snapshot_is_never_torn() {
+            let ring = Arc::new(TraceRing::with_capacity(4));
+            let w = {
+                let ring = ring.clone();
+                std::thread::spawn(move || {
+                    for i in 1..=20_000u64 {
+                        let v = (i % 1000) as u32;
+                        ring.record(Stage::Optimize, v, v, v, i, i - 1);
+                    }
+                })
+            };
+            let mut seen = 0usize;
+            let mut out = Vec::new();
+            while !w.is_finished() {
+                out.clear();
+                ring.snapshot_into(0, None, &mut out);
+                for ev in &out {
+                    assert_eq!(ev.job, ev.chunk, "torn event: {ev:?}");
+                    assert_eq!(ev.job, ev.worker, "torn event: {ev:?}");
+                    assert_eq!(ev.dur_ns, ev.ts_ns - 1, "torn event: {ev:?}");
+                    seen += 1;
+                }
+            }
+            w.join().unwrap();
+            out.clear();
+            ring.snapshot_into(0, None, &mut out);
+            assert_eq!(out.len(), 4, "full ring snapshots at capacity");
+            assert!(seen > 0 || out.len() == 4);
+        }
+
+        #[test]
+        fn global_record_and_snapshot_round_trip() {
+            // Best-effort: the table may already be full from other
+            // tests' threads, in which case span() is a silent no-op.
+            set_enabled(true);
+            let t = start();
+            assert!(t > 0);
+            span(Stage::ReplyEncode, 7_000_001, 3, 2, t);
+            let got = snapshot_filtered(Some(7_000_001));
+            if my_ring().is_some() {
+                assert_eq!(got.len(), 1);
+                assert_eq!(got[0].stage, Stage::ReplyEncode);
+                assert_eq!((got[0].chunk, got[0].worker), (3, 2));
+            }
+            // Disabled: start() hands out 0 and span() drops it.
+            set_enabled(false);
+            assert_eq!(start(), 0);
+            span(Stage::ReplyEncode, 7_000_001, 4, 2, t);
+            let after = snapshot_filtered(Some(7_000_001));
+            assert_eq!(after.len(), got.len());
+            set_enabled(true);
+        }
+    }
+}
+
+#[cfg(feature = "trace")]
+pub use imp::{enabled, instant, set_enabled, snapshot_filtered, span, start, TraceRing};
+
+/// Snapshot every thread ring (all jobs).
+#[cfg(feature = "trace")]
+pub fn snapshot() -> Vec<TraceEvent> {
+    imp::snapshot_filtered(None)
+}
+
+// ---- `trace` feature disabled: every hook compiles to nothing. ----
+
+#[cfg(not(feature = "trace"))]
+pub fn set_enabled(_on: bool) {}
+
+#[cfg(not(feature = "trace"))]
+#[inline]
+pub fn enabled() -> bool {
+    false
+}
+
+#[cfg(not(feature = "trace"))]
+#[inline]
+pub fn start() -> u64 {
+    0
+}
+
+#[cfg(not(feature = "trace"))]
+#[inline]
+pub fn span(_stage: Stage, _job: u32, _chunk: u32, _worker: u32, _start_ns: u64) {}
+
+#[cfg(not(feature = "trace"))]
+#[inline]
+pub fn instant(_stage: Stage, _job: u32, _chunk: u32, _worker: u32) {}
+
+#[cfg(not(feature = "trace"))]
+pub fn snapshot_filtered(_job: Option<u32>) -> Vec<TraceEvent> {
+    Vec::new()
+}
+
+#[cfg(not(feature = "trace"))]
+pub fn snapshot() -> Vec<TraceEvent> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod format_tests {
+    use super::*;
+
+    #[test]
+    fn chrome_json_is_well_formed() {
+        let events = [
+            TraceEvent {
+                ts_ns: 1500,
+                dur_ns: 250,
+                stage: Stage::Absorb,
+                job: 1,
+                chunk: 2,
+                worker: 0,
+                tid: 3,
+            },
+            TraceEvent {
+                ts_ns: 2000,
+                dur_ns: 0,
+                stage: Stage::Rollback,
+                job: 1,
+                chunk: 0,
+                worker: 0,
+                tid: 3,
+            },
+        ];
+        let json = chrome_trace_json(&events);
+        let parsed = crate::jsonlite::parse(&json).expect("valid JSON");
+        let evs = parsed
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(evs.len(), 2);
+        assert_eq!(
+            evs[0].get("name").and_then(|v| v.as_str()),
+            Some("absorb")
+        );
+        assert_eq!(evs[0].get("ts").and_then(|v| v.as_f64()), Some(1.5));
+        assert!(chrome_trace_json(&[]).contains("\"traceEvents\":[]"));
+    }
+
+    #[test]
+    fn stage_names_round_trip() {
+        for (i, s) in ALL_STAGES.iter().enumerate() {
+            assert_eq!(Stage::from_u8(i as u8), Some(*s));
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u8(200), None);
+    }
+}

@@ -1,0 +1,227 @@
+//! End-to-end exercise of the status/export plane (ISSUE 9): a live TCP
+//! leader with two workers training while `/metrics`, `/jobs`, and
+//! `/trace` are scraped over real HTTP — counters and latency must
+//! move mid-training, every body must be well-formed (Prometheus text /
+//! JSON / chrome-tracing JSON), and with auth bound, one tenant's nonce
+//! must never read another tenant's trace.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phub::coordinator::chunk::KeyTable;
+use phub::coordinator::optimizer::Sgd;
+use phub::coordinator::service::ConnectionManager;
+use phub::coordinator::status::{JobAuth, StatusServer};
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::{PHubServer, ServerConfig};
+use phub::jsonlite;
+
+/// Minimal scrape client: one GET, read to EOF (the server sends
+/// `Connection: close`), return (status code, body).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect status endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8(raw).expect("utf-8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    let code: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    (code, body.to_string())
+}
+
+/// `rounds_completed` of the first job in a `/jobs` body.
+fn scraped_rounds(body: &str) -> u64 {
+    let v = jsonlite::parse(body).expect("valid /jobs json");
+    let jobs = v.get("jobs").expect("jobs key").as_arr().expect("array");
+    if jobs.is_empty() {
+        return 0;
+    }
+    jobs[0]
+        .get("rounds_completed")
+        .expect("rounds_completed")
+        .as_usize()
+        .expect("numeric") as u64
+}
+
+/// Two TCP workers train while the endpoint is scraped: `/metrics` and
+/// `/jobs` are well-formed and their counters/latency move between
+/// scrapes taken mid-training; `/trace` returns chrome-tracing JSON.
+#[test]
+fn scraping_a_live_leader_observes_training() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).expect("leader");
+    let status = StatusServer::bind("127.0.0.1:0", leader.metrics_arc()).expect("status");
+    let addr = status.local_addr();
+    let spec = JobSpec {
+        model_elems: 4096,
+        chunk_elems: 1024,
+        n_workers: 2,
+        lr: 0.1,
+        momentum: 0.9,
+    };
+
+    // Workers push rounds until the scraper has seen what it needs. The
+    // stop decision is barrier-synchronized: rounds are synchronous, so
+    // if one worker exited while its peer had begun the next round, the
+    // peer would block in `push_pull` forever. The barrier leader
+    // samples the flag once per round and both workers act on that one
+    // sample, so both always push the same number of rounds.
+    let stop = Arc::new(AtomicBool::new(false));
+    let quit = Arc::new(AtomicBool::new(false));
+    let barrier = Arc::new(std::sync::Barrier::new(2));
+    let leader_addr = leader.local_addr();
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = stop.clone();
+            let quit = quit.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut w = TcpWorker::connect(leader_addr, 7, spec).expect("worker connect");
+                let grad = vec![0.25f32; 4096];
+                let mut rounds = 0u64;
+                loop {
+                    w.push_pull(&grad).expect("push_pull");
+                    rounds += 1;
+                    if barrier.wait().is_leader() {
+                        quit.store(stop.load(Ordering::Acquire), Ordering::Release);
+                    }
+                    barrier.wait();
+                    if quit.load(Ordering::Acquire) {
+                        break;
+                    }
+                }
+                rounds
+            })
+        })
+        .collect();
+
+    // Mid-training: wait for attribution to appear, then for it to move.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let first = loop {
+        let (code, body) = http_get(addr, "/jobs");
+        assert_eq!(code, 200);
+        let r = scraped_rounds(&body);
+        if r > 0 {
+            break r;
+        }
+        assert!(Instant::now() < deadline, "no rounds attributed in 30s");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let second = loop {
+        let (code, body) = http_get(addr, "/jobs");
+        assert_eq!(code, 200);
+        let r = scraped_rounds(&body);
+        if r > first {
+            break r;
+        }
+        assert!(Instant::now() < deadline, "rounds stopped moving mid-training");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(second > first, "counters must move between scrapes");
+
+    // /jobs: latency histogram populated, byte counters attributed.
+    let (_, body) = http_get(addr, "/jobs");
+    let v = jsonlite::parse(&body).expect("valid /jobs json");
+    let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+    assert_eq!(jobs.len(), 1, "one tenant registered");
+    let lat = jobs[0].get("round_latency").expect("latency summary");
+    assert!(lat.get("count").unwrap().as_usize().unwrap() > 0);
+    assert!(lat.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+    assert!(jobs[0].get("push_bytes").unwrap().as_usize().unwrap() > 0);
+    assert!(jobs[0].get("pull_bytes").unwrap().as_usize().unwrap() > 0);
+
+    // /metrics: Prometheus text, line-oriented, with the per-job series.
+    let (code, body) = http_get(addr, "/metrics");
+    assert_eq!(code, 200);
+    assert!(body.contains("phub_dropped_messages_total"));
+    assert!(body.contains("phub_job_rounds_completed_total{job="));
+    assert!(body.contains("phub_job_round_latency_ns_count{job="));
+    for line in body.lines().filter(|l| !l.starts_with('#')) {
+        let mut parts = line.split_whitespace();
+        assert!(parts.next().unwrap().starts_with("phub_"), "{line}");
+        assert!(parts.next().unwrap().parse::<f64>().is_ok(), "{line}");
+    }
+
+    // /trace (no auth bound): chrome-tracing JSON with a traceEvents
+    // array; with the recorder compiled in (the default), a training
+    // leader has recorded per-stage spans by now.
+    let (code, body) = http_get(addr, "/trace");
+    assert_eq!(code, 200);
+    let v = jsonlite::parse(&body).expect("valid chrome trace json");
+    let events = v.get("traceEvents").expect("traceEvents").as_arr().unwrap();
+    #[cfg(feature = "trace")]
+    assert!(!events.is_empty(), "recorder enabled but no events captured");
+    for ev in events {
+        assert!(ev.get("name").unwrap().as_str().is_some());
+        assert!(ev.get("ts").unwrap().as_f64().is_some());
+    }
+
+    // Unknown routes are 404, never a hang or a panic.
+    assert_eq!(http_get(addr, "/nope").0, 404);
+
+    stop.store(true, Ordering::Release);
+    for w in workers {
+        assert!(w.join().expect("worker thread") >= 1);
+    }
+    status.shutdown();
+}
+
+/// With auth bound, `/trace` is tenant-scoped by service nonce: job A's
+/// nonce reads only job A's events and can never read job B's trace.
+#[test]
+fn trace_endpoint_enforces_tenant_isolation() {
+    let server = PHubServer::start(ServerConfig::cores(2));
+    let cm = ConnectionManager::new(server.clone());
+    let ha = cm.create_service("tenant-a", 1).unwrap();
+    let hb = cm.create_service("tenant-b", 1).unwrap();
+    let sgd = || Arc::new(Sgd { lr: 0.1 });
+    cm.init_service(&ha, KeyTable::flat(256, 64), &[0.0; 256], sgd())
+        .unwrap();
+    cm.init_service(&hb, KeyTable::flat(256, 64), &[0.0; 256], sgd())
+        .unwrap();
+    let ja = cm.service_job("tenant-a").unwrap();
+    let jb = cm.service_job("tenant-b").unwrap();
+
+    // A round each, so the recorder holds events for both jobs.
+    let mut wa = cm.connect_service(&ha, 0).unwrap();
+    let mut wb = cm.connect_service(&hb, 0).unwrap();
+    let _ = wa.push_pull(&[1.0; 256]);
+    let _ = wb.push_pull(&[2.0; 256]);
+
+    let auth: Arc<dyn JobAuth> = cm.clone();
+    let status =
+        StatusServer::bind_with_auth("127.0.0.1:0", server.metrics_arc(), auth).expect("status");
+    let addr = status.local_addr();
+
+    // The right nonce reads its own job — and only its own events.
+    let (code, body) = http_get(addr, &format!("/trace?job={ja}&nonce={:x}", ha.nonce));
+    assert_eq!(code, 200);
+    let v = jsonlite::parse(&body).expect("valid chrome trace json");
+    for ev in v.get("traceEvents").unwrap().as_arr().unwrap() {
+        let job = ev.get("args").unwrap().get("job").unwrap().as_usize().unwrap();
+        assert_eq!(job as u32, ja, "foreign job leaked into a scoped trace");
+    }
+
+    // Job A's nonce cannot read job B's trace; nor can garbage, nor can
+    // a credential-less request.
+    assert_eq!(http_get(addr, &format!("/trace?job={jb}&nonce={:x}", ha.nonce)).0, 403);
+    assert_eq!(http_get(addr, &format!("/trace?job={ja}&nonce={:x}", hb.nonce)).0, 403);
+    assert_eq!(http_get(addr, &format!("/trace?job={ja}&nonce=deadbeef")).0, 403);
+    assert_eq!(http_get(addr, "/trace").0, 403);
+
+    // Aggregate operator surfaces stay open under auth.
+    assert_eq!(http_get(addr, "/metrics").0, 200);
+    assert_eq!(http_get(addr, "/jobs").0, 200);
+
+    status.shutdown();
+    PHubServer::shutdown(server);
+}
