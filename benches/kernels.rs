@@ -114,8 +114,8 @@ fn bench_tier(tier: KernelTier, rng: &mut Rng) -> [f64; 5] {
 fn bench_placement(mode: PlacementMode) -> f64 {
     let n = PLACE_CHUNKS * PLACE_CHUNK_ELEMS;
     let server = PHubServer::start(ServerConfig {
-        n_cores: PLACE_CORES,
         placement: mode,
+        ..ServerConfig::cores(PLACE_CORES)
     });
     let init = vec![0.1f32; n];
     let job = server.init_job(

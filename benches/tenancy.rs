@@ -1,0 +1,149 @@
+//! Tenancy fairness bench (run via `cargo bench --bench tenancy`): what
+//! weighted-fair core scheduling buys a small tenant sharing a leader
+//! with a flooding neighbor.
+//!
+//! Three arms, all measuring the same 1-worker victim job through the
+//! in-process multi-core server (no TCP, so the number isolates the
+//! core scheduler, not socket noise):
+//!
+//! * **solo** — the victim alone on the leader: the no-contention
+//!   ceiling.
+//! * **off**  — [`QuotaConfig::fair_sched`] disabled (legacy greedy
+//!   per-port sweep) while [`FLOOD_JOBS`] single-worker tenants hammer
+//!   models [`FLOOD_ELEMS`]`/`[`VICTIM_ELEMS`]`x` larger as fast as
+//!   they can.
+//! * **on**   — the same contention under deficit-round-robin with the
+//!   victim weighted [`VICTIM_WEIGHT`]`:1`.
+//!
+//! Reported per arm: victim rounds/s and client-observed p99 round
+//! latency. The fairness story is `on` holding closer to `solo` than
+//! `off` does — but that is a *trajectory* observation, not a gate
+//! (shared CI runners are noisy; `tools/bench_diff.py` only warns on
+//! numeric drift).
+//!
+//! Emits a single-line JSON summary (last stdout line) suitable for
+//! `BENCH_tenancy.json` trajectory tracking.
+
+use std::hint::black_box;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use phub::config::QuotaConfig;
+use phub::coordinator::optimizer::NesterovSgd;
+use phub::coordinator::server::{PHubServer, ServerConfig};
+use phub::coordinator::KeyTable;
+
+const CORES: usize = 2;
+const VICTIM_ELEMS: usize = 8 * 1024;
+/// Each flooder round sweeps 16x the victim's model.
+const FLOOD_ELEMS: usize = 128 * 1024;
+const CHUNK_ELEMS: usize = 2 * 1024;
+const FLOOD_JOBS: usize = 2;
+const VICTIM_WEIGHT: u32 = 8;
+const WARM_ROUNDS: usize = 10;
+const ROUNDS: usize = 200;
+
+fn opt() -> Arc<NesterovSgd> {
+    Arc::new(NesterovSgd {
+        lr: 0.01,
+        momentum: 0.9,
+    })
+}
+
+/// Victim (rounds/s, p99 ms) under one arm's configuration.
+fn run_arm(fair: bool, flood: bool) -> (f64, f64) {
+    let quota = QuotaConfig {
+        fair_sched: fair,
+        ..QuotaConfig::default()
+    };
+    let server = PHubServer::start(ServerConfig::cores(CORES).with_quota(quota));
+
+    let init = vec![0.1f32; VICTIM_ELEMS];
+    let victim_job = server.init_job_weighted(
+        KeyTable::flat(VICTIM_ELEMS, CHUNK_ELEMS),
+        &init,
+        opt(),
+        1,
+        VICTIM_WEIGHT,
+    );
+    let mut victim = server.worker(victim_job, 0);
+
+    // Flooders: single-worker jobs at weight 1, each free-running until
+    // told to stop (single-worker so stopping needs no peer barrier).
+    let stop = Arc::new(AtomicBool::new(false));
+    let flooders: Vec<_> = (0..if flood { FLOOD_JOBS } else { 0 })
+        .map(|_| {
+            let flood_init = vec![0.1f32; FLOOD_ELEMS];
+            let job = server.init_job_weighted(
+                KeyTable::flat(FLOOD_ELEMS, CHUNK_ELEMS),
+                &flood_init,
+                opt(),
+                1,
+                1,
+            );
+            let mut h = server.worker(job, 0);
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let grad = vec![0.25f32; FLOOD_ELEMS];
+                while !stop.load(Ordering::Relaxed) {
+                    black_box(h.push_pull(&grad));
+                }
+            })
+        })
+        .collect();
+
+    let grad = vec![0.5f32; VICTIM_ELEMS];
+    for _ in 0..WARM_ROUNDS {
+        black_box(victim.push_pull(&grad));
+    }
+    let mut lat_ms = Vec::with_capacity(ROUNDS);
+    let t0 = Instant::now();
+    for _ in 0..ROUNDS {
+        let r0 = Instant::now();
+        black_box(victim.push_pull(&grad));
+        lat_ms.push(r0.elapsed().as_secs_f64() * 1e3);
+    }
+    let rps = ROUNDS as f64 / t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Relaxed);
+    for f in flooders {
+        f.join().unwrap();
+    }
+    drop(victim);
+    PHubServer::shutdown(server);
+
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let p99 = lat_ms[((ROUNDS as f64 * 0.99).ceil() as usize - 1).min(ROUNDS - 1)];
+    (rps, p99)
+}
+
+fn main() {
+    println!(
+        "== tenancy: {VICTIM_ELEMS}-elem victim (weight {VICTIM_WEIGHT}) vs \
+         {FLOOD_JOBS} x {FLOOD_ELEMS}-elem flooders, {CORES} cores, {ROUNDS} rounds =="
+    );
+    let (solo_rps, solo_p99) = run_arm(true, false);
+    println!("  solo      {solo_rps:>9.1} rounds/s  p99 {solo_p99:>7.3} ms");
+    let (off_rps, off_p99) = run_arm(false, true);
+    println!("  fair off  {off_rps:>9.1} rounds/s  p99 {off_p99:>7.3} ms");
+    let (on_rps, on_p99) = run_arm(true, true);
+    println!(
+        "  fair on   {on_rps:>9.1} rounds/s  p99 {on_p99:>7.3} ms  \
+         (keeps {:.0}% of solo vs {:.0}% with fairness off)",
+        100.0 * on_rps / solo_rps,
+        100.0 * off_rps / solo_rps
+    );
+    println!("tenancy OK");
+
+    // Single-line JSON summary for BENCH_tenancy.json trajectory
+    // tracking (keep last on stdout).
+    println!(
+        "{{\"bench\":\"tenancy\",\"cores\":{CORES},\"victim_elems\":{VICTIM_ELEMS},\
+         \"flood_elems\":{FLOOD_ELEMS},\"chunk_elems\":{CHUNK_ELEMS},\
+         \"flood_jobs\":{FLOOD_JOBS},\"victim_weight\":{VICTIM_WEIGHT},\
+         \"rounds\":{ROUNDS},\"solo_rps\":{solo_rps:.3},\"solo_p99_ms\":{solo_p99:.4},\
+         \"off_rps\":{off_rps:.3},\"off_p99_ms\":{off_p99:.4},\
+         \"on_rps\":{on_rps:.3},\"on_p99_ms\":{on_p99:.4}}}"
+    );
+}

@@ -1,51 +1,164 @@
-//! Multi-tenant PHub (paper section 4.8, Figure 18): several independent
-//! training jobs share one PHub instance under isolated namespaces; this
-//! example measures per-job throughput as the tenant count grows — for
-//! real, on the live threaded server.
+//! Tenant guardrails on a live multi-tenant leader: admission control
+//! with typed retriable refusals, weighted-fair scheduling shares,
+//! idle eviction with parameter handoff, and bit-exact readmission —
+//! narrated through the same `/jobs` status route an operator would
+//! watch (see "Tenant guardrails" in `coordinator::transport`).
 //!
-//! Run: `cargo run --release --example multi_tenant -- [--model-kb 512]`
+//! The script: a leader capped at **two** concurrent jobs hosts tenants
+//! A (weight 4) and B (weight 1). Tenant C's `Hello` is then *refused*
+//! — a typed `Refused` frame with a reason and a retry-after hint, not
+//! a hang — and C polls with `connect_with_backoff`. When B goes idle,
+//! the janitor evicts it (staging params + optimizer state + round
+//! positions as a handoff), which frees the seat C's next retry takes.
+//! B later returns, readmits from the handoff (handoff readmission is
+//! exempt from the job cap — eviction parked B's claim, it didn't
+//! revoke it), resumes at its old round counter, and its next round is
+//! bit-identical to a twin that was never evicted.
+//!
+//! Run: `cargo run --release --example multi_tenant`
 
-use phub::cli::Args;
-use phub::coordinator::tenancy;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use phub::config::QuotaConfig;
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::status::StatusServer;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::Refusal;
+
+const ROUNDS: usize = 3;
+
+fn spec(model: u64) -> JobSpec {
+    JobSpec {
+        model_elems: model,
+        chunk_elems: 512,
+        n_workers: 1,
+        lr: 0.05,
+        momentum: 0.9,
+    }
+}
+
+/// Deterministic per-round gradient, so B's resumed schedule can be
+/// replayed bit-for-bit on the never-evicted twin leader.
+fn grad(n: usize, r: usize) -> Vec<f32> {
+    (0..n).map(|i| 0.1 * (r as f32 + 1.0) + (i % 7) as f32 * 0.01).collect()
+}
+
+/// Raw HTTP GET against the status endpoint — exactly what an operator
+/// (or a Prometheus scraper) does; no client library involved.
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("status connect");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: phub\r\nConnection: close\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).unwrap();
+    match body.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => body,
+    }
+}
 
 fn main() {
-    let a = Args::from_env();
-    let model_elems = a.get_usize("model-kb", 512) * 1024 / 4;
-    let chunk = 8 * 1024; // 32 KB chunks
-    let workers = a.get_usize("workers", 2);
-    let rounds = a.get_usize("rounds", 20);
-    let cores = a.get_usize("cores", 4);
+    let quota = QuotaConfig {
+        max_jobs: 2,
+        idle_evict_after: Some(Duration::from_millis(200)),
+        weights: vec![(1, 4), (2, 1), (3, 1)],
+        retry_after: Duration::from_millis(100),
+        ..QuotaConfig::default()
+    };
+    let leader =
+        TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2).with_quota(quota)).unwrap();
+    let addr = leader.local_addr();
+    let status = StatusServer::bind("127.0.0.1:0", leader.metrics_arc()).unwrap();
+    let status_addr = status.local_addr();
+    let jobs_view = |when: &str| {
+        println!("--- /jobs {when}:\n    {}\n", http_get(status_addr, "/jobs"));
+    };
+    println!(
+        "=== guardrailed leader on {addr}: max_jobs=2, idle_evict=200ms, \
+         weights A:4 B:1 C:1 ===\n"
+    );
 
-    println!(
-        "=== multi-tenant PHub: {} KB model, {} workers/job, {} cores ===\n",
-        model_elems * 4 / 1024,
-        workers,
-        cores
-    );
-    println!(
-        "{:>5} {:>16} {:>14} {:>18}",
-        "jobs", "per-job exch/s", "fair share", "efficiency (xJ)"
-    );
-    let mut base = 0.0;
-    for jobs in [1usize, 2, 4, 8] {
-        let r = tenancy::run_concurrent_jobs(cores, jobs, workers, model_elems, chunk, rounds);
-        let rate = r.mean_rate();
-        if jobs == 1 {
-            base = rate;
-        }
-        // J jobs timeshare this host's cores: fair share is 1/J of the
-        // solo rate; "efficiency" isolates PHub-induced interference from
-        // the unavoidable timeshare (the quantity Figure 18 reports).
-        println!(
-            "{:>5} {:>16.2} {:>13.0}% {:>17.0}%",
-            jobs,
-            rate,
-            100.0 * rate / base,
-            100.0 * rate * jobs as f64 / base
-        );
+    // A twin leader runs tenant B's exact schedule with no eviction —
+    // the bit-identity reference for the readmission at the end.
+    let twin = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let mut twin_b = TcpWorker::connect(twin.local_addr(), 2, spec(2048)).unwrap();
+
+    // Step 1: tenants A and B fill the leader and train.
+    let mut a = TcpWorker::connect(addr, 1, spec(4096)).unwrap();
+    let mut b = TcpWorker::connect(addr, 2, spec(2048)).unwrap();
+    let mut model_a = vec![0.0f32; 4096];
+    let mut model_b = vec![0.0f32; 2048];
+    let mut twin_model = vec![0.0f32; 2048];
+    for r in 0..ROUNDS {
+        a.push_pull_into(&grad(4096, r), &mut model_a).unwrap();
+        b.push_pull_into(&grad(2048, r), &mut model_b).unwrap();
+        twin_b.push_pull_into(&grad(2048, r), &mut twin_model).unwrap();
     }
+    println!("[1] tenants A and B admitted, {ROUNDS} rounds each (leader full at max_jobs=2)");
+    jobs_view("with A and B live");
+
+    // Step 2: tenant C is over the job cap — refused, typed, retriable.
+    let err = TcpWorker::connect(addr, 3, spec(1024)).unwrap_err();
+    let refusal = err.downcast_ref::<Refusal>().expect("typed refusal");
     println!(
-        "\n(compare Figure 18: per-job efficiency stays within ~5% for\n \
-         compute-bound models; exchange-bound models degrade more)"
+        "[2] tenant C refused: {refusal} (reason {:?}, retry-after {:?} — \
+         a wire frame, not a dropped socket)",
+        refusal.reason, refusal.retry_after
     );
+
+    // Step 3: C keeps retrying on the hinted cadence while B goes idle;
+    // the janitor evicts B (staging its handoff) and C's retry lands.
+    let c_thread = std::thread::spawn(move || {
+        let mut c = TcpWorker::connect_with_backoff(addr, 3, spec(1024), 200).unwrap();
+        let mut m = vec![0.0f32; 1024];
+        c.push_pull_into(&grad(1024, 0), &mut m).unwrap();
+        c
+    });
+    b.bye();
+    let metrics = leader.metrics_arc();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while metrics.snapshot().idle_evictions == 0 {
+        assert!(Instant::now() < deadline, "idle eviction never fired");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("[3] B idle 200ms with zero connections -> evicted with parameter handoff");
+    jobs_view("after B's eviction (seat freed)");
+    let c = c_thread.join().unwrap();
+    println!("    C's backoff retry succeeded and trained a round");
+    jobs_view("with A and C live");
+
+    // Step 4: B returns. Readmission restores the handoff (params,
+    // optimizer state, round counter) and is exempt from the job cap.
+    let mut b = TcpWorker::connect(addr, 2, spec(2048)).unwrap();
+    assert_eq!(b.rounds_done(), ROUNDS as u64, "B did not resume at its old round");
+    b.push_pull_into(&grad(2048, ROUNDS), &mut model_b).unwrap();
+    twin_b.push_pull_into(&grad(2048, ROUNDS), &mut twin_model).unwrap();
+    let bit_exact = model_b
+        .iter()
+        .zip(twin_model.iter())
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(bit_exact, "readmitted tenant diverged from the never-evicted twin");
+    println!(
+        "[4] B readmitted at round {ROUNDS} and its round-{ROUNDS} output is \
+         bit-exact vs a never-evicted twin: {bit_exact}"
+    );
+    jobs_view("after B's readmission");
+
+    let snap = metrics.snapshot();
+    println!(
+        "guardrail counters: refused_job_cap={} refused_overload={} refused_quota={} \
+         idle_evictions={} readmissions={} sched_deferrals={}",
+        snap.refused_job_cap,
+        snap.refused_overload,
+        snap.refused_quota,
+        snap.idle_evictions,
+        snap.readmissions,
+        snap.sched_deferrals
+    );
+    a.bye();
+    b.bye();
+    c.bye();
+    twin_b.bye();
+    status.shutdown();
 }

@@ -239,6 +239,176 @@ impl Default for DeadlineConfig {
     }
 }
 
+/// Tenant guardrails for a shared leader (not a paper axis —
+/// operational robustness; see "Tenant guardrails" in
+/// `coordinator::transport`). One struct names every admission,
+/// fairness, shedding, and eviction knob so `TcpLeader`, the in-process
+/// `PHubServer`, and tests all share a single policy value.
+///
+/// `Default` is fixed constants (no environment reads — tests stay
+/// hermetic); [`QuotaConfig::from_env`] starts from the defaults and
+/// applies `PHUB_*` overrides, which is what `ServerConfig::cores`
+/// uses so deployments can be tuned without a rebuild.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuotaConfig {
+    /// Leader-wide cap on concurrently hosted jobs (was the hard-coded
+    /// `MAX_JOBS` const in `coordinator::transport`). Re-`Hello` of an
+    /// already-hosted job is never counted against this cap.
+    /// Env: `PHUB_MAX_JOBS`.
+    pub max_jobs: usize,
+    /// Per-job cap on worker seats a `JobSpec` may declare. The wire
+    /// format enforces its own (larger) structural limit; this is the
+    /// *policy* cap. Env: `PHUB_MAX_WORKERS_PER_JOB`.
+    pub max_workers_per_job: u32,
+    /// Per-job cap on model elements (f32 parameters). Env:
+    /// `PHUB_MAX_MODEL_ELEMS`.
+    pub max_model_elems_per_job: u64,
+    /// Leader-wide cap on the sum of hosted model elements across all
+    /// jobs — the memory guardrail. Env: `PHUB_MAX_TOTAL_MODEL_ELEMS`.
+    pub max_total_model_elems: u64,
+    /// Leader-wide cap on the sum of declared worker seats across all
+    /// jobs — bounds aggregate in-flight push bandwidth, since every
+    /// seat owns one fixed-capacity request ring. Env:
+    /// `PHUB_MAX_TOTAL_WORKERS`.
+    pub max_total_workers: u64,
+    /// Per-job cap on aggregation cores (0 = all cores). Chunk
+    /// placement partitions a job over at most this many cores, so one
+    /// tenant cannot spread onto every core of a big leader. Env:
+    /// `PHUB_MAX_CORES_PER_JOB`.
+    pub max_cores_per_job: usize,
+    /// Deficit-round-robin scheduling weight for jobs not listed in
+    /// [`QuotaConfig::weights`] (min 1). Env: `PHUB_DEFAULT_WEIGHT`.
+    pub default_weight: u32,
+    /// Per-tenant scheduling weights, `(wire_job, weight)`. Env:
+    /// `PHUB_TENANT_WEIGHTS` as `job=weight` pairs, e.g. `"7=4,9=2"`.
+    pub weights: Vec<(u32, u32)>,
+    /// Weighted-fair core scheduling on (true, the default) or the
+    /// legacy greedy per-port sweep (false) — the control arm for the
+    /// tenancy bench. Env: `PHUB_FAIR_SCHED` (`0`/`false` to disable).
+    pub fair_sched: bool,
+    /// Messages one weight unit buys a job per core sweep. The
+    /// effective per-sweep budget of a job is `weight * sched_quantum`,
+    /// with unused budget banked up to one extra sweep. Env:
+    /// `PHUB_SCHED_QUANTUM`.
+    pub sched_quantum: usize,
+    /// Round-deadline trips inside [`QuotaConfig::shed_window`] that
+    /// trip the overload watermark: while tripped, *new* admissions are
+    /// shed with a retriable refusal; existing jobs are untouched. Env:
+    /// `PHUB_SHED_TRIPS`.
+    pub shed_trip_threshold: u32,
+    /// Sliding window over which deadline trips are counted toward the
+    /// overload watermark. Env: `PHUB_SHED_WINDOW_MS`.
+    pub shed_window: std::time::Duration,
+    /// Evict a job with zero live connections idle for this long,
+    /// staging a parameter handoff so the tenant can readmit and resume
+    /// bit-exact (`None` = never evict; the default). Env:
+    /// `PHUB_IDLE_EVICT_MS` (`0` = off).
+    pub idle_evict_after: Option<std::time::Duration>,
+    /// Retry-after hint carried in every refusal frame. Env:
+    /// `PHUB_RETRY_AFTER_MS`.
+    pub retry_after: std::time::Duration,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig {
+            max_jobs: 64,
+            max_workers_per_job: 256,
+            max_model_elems_per_job: 1 << 28,
+            max_total_model_elems: 1 << 30,
+            max_total_workers: 4096,
+            max_cores_per_job: 0,
+            default_weight: 1,
+            weights: Vec::new(),
+            fair_sched: true,
+            sched_quantum: 64,
+            shed_trip_threshold: 3,
+            shed_window: std::time::Duration::from_secs(10),
+            idle_evict_after: None,
+            retry_after: std::time::Duration::from_millis(250),
+        }
+    }
+}
+
+impl QuotaConfig {
+    /// Defaults with `PHUB_*` environment overrides applied (see the
+    /// per-field docs for variable names). Malformed values fall back
+    /// to the default rather than panicking a starting leader.
+    pub fn from_env() -> Self {
+        fn num<T: std::str::FromStr>(name: &str) -> Option<T> {
+            std::env::var(name).ok().and_then(|v| v.trim().parse().ok())
+        }
+        let mut q = QuotaConfig::default();
+        if let Some(v) = num("PHUB_MAX_JOBS") {
+            q.max_jobs = v;
+        }
+        if let Some(v) = num("PHUB_MAX_WORKERS_PER_JOB") {
+            q.max_workers_per_job = v;
+        }
+        if let Some(v) = num("PHUB_MAX_MODEL_ELEMS") {
+            q.max_model_elems_per_job = v;
+        }
+        if let Some(v) = num("PHUB_MAX_TOTAL_MODEL_ELEMS") {
+            q.max_total_model_elems = v;
+        }
+        if let Some(v) = num("PHUB_MAX_TOTAL_WORKERS") {
+            q.max_total_workers = v;
+        }
+        if let Some(v) = num("PHUB_MAX_CORES_PER_JOB") {
+            q.max_cores_per_job = v;
+        }
+        if let Some(v) = num::<u32>("PHUB_DEFAULT_WEIGHT") {
+            q.default_weight = v.max(1);
+        }
+        if let Ok(spec) = std::env::var("PHUB_TENANT_WEIGHTS") {
+            q.weights = Self::parse_weights(&spec);
+        }
+        if let Some(v) = num::<u8>("PHUB_FAIR_SCHED") {
+            q.fair_sched = v != 0;
+        }
+        if let Some(v) = num::<usize>("PHUB_SCHED_QUANTUM") {
+            q.sched_quantum = v.max(1);
+        }
+        if let Some(v) = num("PHUB_SHED_TRIPS") {
+            q.shed_trip_threshold = v;
+        }
+        if let Some(v) = num::<u64>("PHUB_SHED_WINDOW_MS") {
+            q.shed_window = std::time::Duration::from_millis(v);
+        }
+        if let Some(v) = num::<u64>("PHUB_IDLE_EVICT_MS") {
+            q.idle_evict_after =
+                (v > 0).then(|| std::time::Duration::from_millis(v));
+        }
+        if let Some(v) = num::<u64>("PHUB_RETRY_AFTER_MS") {
+            q.retry_after = std::time::Duration::from_millis(v);
+        }
+        q
+    }
+
+    /// Parse a `"job=weight,job=weight"` tenant-weight spec; malformed
+    /// pairs are skipped, weights clamp to at least 1.
+    fn parse_weights(spec: &str) -> Vec<(u32, u32)> {
+        spec.split(',')
+            .filter_map(|pair| {
+                let (job, w) = pair.split_once('=')?;
+                let job: u32 = job.trim().parse().ok()?;
+                let w: u32 = w.trim().parse().ok()?;
+                Some((job, w.max(1)))
+            })
+            .collect()
+    }
+
+    /// Scheduling weight for a wire job id (min 1).
+    pub fn weight_for(&self, wire_job: u32) -> u32 {
+        self.weights
+            .iter()
+            .find(|(j, _)| *j == wire_job)
+            .map(|&(_, w)| w)
+            .unwrap_or(self.default_weight)
+            .max(1)
+    }
+}
+
 /// A full cluster description for one training job.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -343,6 +513,39 @@ mod tests {
         // Worst-case redial wall clock stays bounded: attempts × cap.
         let worst = d.redial_cap * d.redial_attempts;
         assert!(worst <= std::time::Duration::from_secs(120));
+    }
+
+    #[test]
+    fn quota_defaults_are_bounded_and_fair() {
+        let q = QuotaConfig::default();
+        // Every admission cap is finite and nonzero out of the box: a
+        // leader can always host at least one sane job, and no single
+        // tenant can take unbounded memory or seats.
+        assert!(q.max_jobs >= 1);
+        assert!(q.max_workers_per_job >= 1);
+        assert!(q.max_model_elems_per_job >= 1);
+        assert!(q.max_total_model_elems >= q.max_model_elems_per_job);
+        assert!(q.max_total_workers >= u64::from(q.max_workers_per_job));
+        // Fairness on by default, with a usable quantum and weight.
+        assert!(q.fair_sched);
+        assert!(q.sched_quantum >= 1);
+        assert_eq!(q.weight_for(42), 1);
+        // Shedding recovers (finite window), eviction is opt-in, and
+        // the refusal hint tells clients to actually wait.
+        assert!(q.shed_window > std::time::Duration::ZERO);
+        assert!(q.idle_evict_after.is_none());
+        assert!(q.retry_after > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn tenant_weight_spec_parses_and_clamps() {
+        let w = QuotaConfig::parse_weights("7=4, 9=2,bad,3=,=5,11=0");
+        assert_eq!(w, vec![(7, 4), (9, 2), (11, 1)]);
+        let q = QuotaConfig { weights: w, ..QuotaConfig::default() };
+        assert_eq!(q.weight_for(7), 4);
+        assert_eq!(q.weight_for(9), 2);
+        assert_eq!(q.weight_for(11), 1); // clamped up from 0
+        assert_eq!(q.weight_for(999), 1); // default
     }
 
     #[test]

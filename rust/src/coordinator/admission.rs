@@ -1,0 +1,347 @@
+//! Admission control, quotas, and load shedding for the multi-tenant
+//! leader — the policy half of the tenant-guardrail layer (the
+//! enforcement sites live in [`super::transport`] and
+//! [`super::server`]).
+//!
+//! # Guardrail contract
+//!
+//! * **Every refusal is typed and retriable.** A `Hello` the leader
+//!   cannot host is answered with a [`wire::Op::Refused`] frame carrying
+//!   a [`RefuseReason`] code and a retry-after hint, then the connection
+//!   closes. The client surfaces it as a typed [`Refusal`] error (never
+//!   a hang, never a string-matched guess) and backs off with the
+//!   transport's existing capped-backoff machinery.
+//! * **Existing jobs are never refused by capacity.** Quota checks run
+//!   only for `Hello`s that would *create* a job; a re-`Hello` of a
+//!   hosted job (successor workers, reconnects after a fault) bypasses
+//!   the job-count and capacity gates entirely, so a full leader can
+//!   always heal the jobs it already accepted.
+//! * **Shedding protects paying rounds.** When round-deadline trips
+//!   cross [`QuotaConfig::shed_trip_threshold`] within
+//!   [`QuotaConfig::shed_window`], the leader is declared overloaded
+//!   and *new* admissions shed with [`RefuseReason::Overloaded`] —
+//!   existing jobs keep their cores and their recovery paths.
+//! * **Checks are control-plane only.** The controller is consulted at
+//!   rendezvous and when a deadline trips; nothing on the per-chunk
+//!   exchange path reads or writes it, so the exact-zero alloc/mutex
+//!   discipline of the data plane is untouched.
+//!
+//! [`wire::Op::Refused`]: super::wire::Op::Refused
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::config::QuotaConfig;
+
+/// Why an admission was refused. The `u16` discriminants are the wire
+/// reason codes carried in [`super::wire::Op::Refused`] payloads —
+/// stable once shipped, never reassigned (same rule as opcodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum RefuseReason {
+    /// The leader is shedding load: recent round-deadline trips crossed
+    /// the overload watermark, so new jobs wait their turn.
+    Overloaded = 1,
+    /// Admitting this job would exceed [`QuotaConfig::max_jobs`].
+    JobCap = 2,
+    /// The job's declared worker seats exceed
+    /// [`QuotaConfig::max_workers_per_job`], or every declared seat of
+    /// an existing job is already taken.
+    WorkerSlots = 3,
+    /// The job's model exceeds [`QuotaConfig::max_model_elems_per_job`].
+    ModelQuota = 4,
+    /// Hosting this model would push the leader past
+    /// [`QuotaConfig::max_total_model_elems`].
+    TotalModelQuota = 5,
+    /// This job's seats would push the leader past
+    /// [`QuotaConfig::max_total_workers`].
+    TotalWorkerQuota = 6,
+}
+
+impl RefuseReason {
+    /// Decode a wire reason code.
+    pub fn from_u16(v: u16) -> Option<RefuseReason> {
+        Some(match v {
+            1 => RefuseReason::Overloaded,
+            2 => RefuseReason::JobCap,
+            3 => RefuseReason::WorkerSlots,
+            4 => RefuseReason::ModelQuota,
+            5 => RefuseReason::TotalModelQuota,
+            6 => RefuseReason::TotalWorkerQuota,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase label (metrics/log vocabulary).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RefuseReason::Overloaded => "overloaded",
+            RefuseReason::JobCap => "job_cap",
+            RefuseReason::WorkerSlots => "worker_slots",
+            RefuseReason::ModelQuota => "model_quota",
+            RefuseReason::TotalModelQuota => "total_model_quota",
+            RefuseReason::TotalWorkerQuota => "total_worker_quota",
+        }
+    }
+}
+
+/// A typed, retriable admission refusal. Implements
+/// [`std::error::Error`], so it travels inside `anyhow::Error` through
+/// the transport and is recovered by downcast on both ends: the leader
+/// turns it into an [`super::wire::Op::Refused`] frame, the client
+/// turns that frame back into this type for its backoff loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Refusal {
+    pub reason: RefuseReason,
+    /// How long the leader suggests waiting before retrying. A hint,
+    /// not a lease — retrying earlier is safe, just likely futile.
+    pub retry_after: Duration,
+}
+
+impl std::fmt::Display for Refusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "admission refused ({}); retry after {} ms",
+            self.reason.as_str(),
+            self.retry_after.as_millis()
+        )
+    }
+}
+
+impl std::error::Error for Refusal {}
+
+/// Leader-wide usage a new `Hello` is evaluated against. Derived from
+/// the live jobs map under its (control-plane) lock, so the checks are
+/// race-free with respect to concurrent admissions.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LeaderUsage {
+    /// Jobs currently hosted.
+    pub jobs: usize,
+    /// Sum of hosted jobs' model elements.
+    pub model_elems: u64,
+    /// Sum of hosted jobs' declared worker seats.
+    pub workers: u64,
+}
+
+/// Evaluates every job-creating `Hello` against a [`QuotaConfig`] and
+/// tracks the overload watermark for load shedding. Cheap enough to
+/// consult with the jobs lock held; never touched by the data plane.
+pub struct AdmissionController {
+    quota: QuotaConfig,
+    anchor: Instant,
+    /// Start of the current shed window, ms since `anchor`.
+    window_start_ms: AtomicU64,
+    /// Deadline trips recorded inside the current window. The two cells
+    /// are not updated as one atomic unit; the watermark is a pressure
+    /// heuristic, and an off-by-one trip near a window edge is fine.
+    window_trips: AtomicU32,
+    /// Operator/test override: shed all new admissions regardless of
+    /// the trip counter (drain mode).
+    forced: AtomicBool,
+}
+
+impl AdmissionController {
+    pub fn new(quota: QuotaConfig) -> Self {
+        AdmissionController {
+            quota,
+            anchor: Instant::now(),
+            window_start_ms: AtomicU64::new(0),
+            window_trips: AtomicU32::new(0),
+            forced: AtomicBool::new(false),
+        }
+    }
+
+    /// The policy this controller enforces.
+    pub fn quota(&self) -> &QuotaConfig {
+        &self.quota
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.anchor.elapsed().as_millis() as u64
+    }
+
+    /// Record a round-deadline trip toward the overload watermark.
+    /// Called from the leader's deadline-supervision path (already an
+    /// error path — never the steady-state round).
+    pub fn note_deadline_trip(&self) {
+        let now = self.now_ms();
+        let start = self.window_start_ms.load(Ordering::Relaxed);
+        if now.saturating_sub(start) > self.quota.shed_window.as_millis() as u64 {
+            self.window_start_ms.store(now, Ordering::Relaxed);
+            self.window_trips.store(1, Ordering::Relaxed);
+        } else {
+            self.window_trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Is the leader past the overload watermark right now?
+    pub fn overloaded(&self) -> bool {
+        if self.forced.load(Ordering::Relaxed) {
+            return true;
+        }
+        let start = self.window_start_ms.load(Ordering::Relaxed);
+        if self.now_ms().saturating_sub(start) > self.quota.shed_window.as_millis() as u64 {
+            return false; // the window went quiet; pressure cleared
+        }
+        self.window_trips.load(Ordering::Relaxed) >= self.quota.shed_trip_threshold
+    }
+
+    /// Force (or release) shedding regardless of the trip counter —
+    /// drain mode for operators, determinism for tests.
+    pub fn force_shed(&self, on: bool) {
+        self.forced.store(on, Ordering::Relaxed);
+    }
+
+    fn refuse(&self, reason: RefuseReason) -> Refusal {
+        Refusal { reason, retry_after: self.quota.retry_after }
+    }
+
+    /// Evaluate a `Hello` that would **create** a job (`n_workers`
+    /// seats, `model_elems` parameters) against the quota and current
+    /// usage. Re-`Hello`s of hosted jobs must not be routed here — they
+    /// are admitted unconditionally (see the module contract).
+    pub fn check_new_job(
+        &self,
+        n_workers: u32,
+        model_elems: u64,
+        usage: LeaderUsage,
+    ) -> Result<(), Refusal> {
+        if self.overloaded() {
+            return Err(self.refuse(RefuseReason::Overloaded));
+        }
+        if usage.jobs >= self.quota.max_jobs {
+            return Err(self.refuse(RefuseReason::JobCap));
+        }
+        if n_workers > self.quota.max_workers_per_job {
+            return Err(self.refuse(RefuseReason::WorkerSlots));
+        }
+        if model_elems > self.quota.max_model_elems_per_job {
+            return Err(self.refuse(RefuseReason::ModelQuota));
+        }
+        if usage.model_elems.saturating_add(model_elems) > self.quota.max_total_model_elems {
+            return Err(self.refuse(RefuseReason::TotalModelQuota));
+        }
+        if usage.workers.saturating_add(u64::from(n_workers)) > self.quota.max_total_workers {
+            return Err(self.refuse(RefuseReason::TotalWorkerQuota));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quota() -> QuotaConfig {
+        QuotaConfig {
+            max_jobs: 2,
+            max_workers_per_job: 4,
+            max_model_elems_per_job: 1000,
+            max_total_model_elems: 1500,
+            max_total_workers: 6,
+            ..QuotaConfig::default()
+        }
+    }
+
+    #[test]
+    fn reason_codes_are_stable_and_roundtrip() {
+        for r in [
+            RefuseReason::Overloaded,
+            RefuseReason::JobCap,
+            RefuseReason::WorkerSlots,
+            RefuseReason::ModelQuota,
+            RefuseReason::TotalModelQuota,
+            RefuseReason::TotalWorkerQuota,
+        ] {
+            assert_eq!(RefuseReason::from_u16(r as u16), Some(r));
+        }
+        assert_eq!(RefuseReason::from_u16(0), None);
+        assert_eq!(RefuseReason::from_u16(999), None);
+        // Shipped wire values — never reassign.
+        assert_eq!(RefuseReason::Overloaded as u16, 1);
+        assert_eq!(RefuseReason::JobCap as u16, 2);
+        assert_eq!(RefuseReason::WorkerSlots as u16, 3);
+        assert_eq!(RefuseReason::ModelQuota as u16, 4);
+        assert_eq!(RefuseReason::TotalModelQuota as u16, 5);
+        assert_eq!(RefuseReason::TotalWorkerQuota as u16, 6);
+    }
+
+    #[test]
+    fn quota_checks_refuse_with_the_right_reason() {
+        let c = AdmissionController::new(quota());
+        let ok = LeaderUsage::default();
+        assert_eq!(c.check_new_job(2, 500, ok), Ok(()));
+        // Job cap.
+        let full = LeaderUsage { jobs: 2, ..ok };
+        assert_eq!(c.check_new_job(1, 1, full).unwrap_err().reason, RefuseReason::JobCap);
+        // Per-job caps.
+        assert_eq!(c.check_new_job(5, 1, ok).unwrap_err().reason, RefuseReason::WorkerSlots);
+        assert_eq!(c.check_new_job(1, 1001, ok).unwrap_err().reason, RefuseReason::ModelQuota);
+        // Leader-wide totals.
+        let heavy = LeaderUsage { jobs: 1, model_elems: 900, workers: 0 };
+        assert_eq!(
+            c.check_new_job(1, 800, heavy).unwrap_err().reason,
+            RefuseReason::TotalModelQuota
+        );
+        let seated = LeaderUsage { jobs: 1, model_elems: 0, workers: 5 };
+        assert_eq!(
+            c.check_new_job(2, 1, seated).unwrap_err().reason,
+            RefuseReason::TotalWorkerQuota
+        );
+        // Every refusal carries the configured retry hint.
+        let r = c.check_new_job(1, 1, full).unwrap_err();
+        assert_eq!(r.retry_after, c.quota().retry_after);
+    }
+
+    #[test]
+    fn overload_watermark_trips_and_clears() {
+        let q = QuotaConfig {
+            shed_trip_threshold: 3,
+            shed_window: Duration::from_secs(60),
+            ..quota()
+        };
+        let c = AdmissionController::new(q);
+        assert!(!c.overloaded());
+        c.note_deadline_trip();
+        c.note_deadline_trip();
+        assert!(!c.overloaded(), "below threshold");
+        c.note_deadline_trip();
+        assert!(c.overloaded(), "threshold reached inside the window");
+        let r = c.check_new_job(1, 1, LeaderUsage::default()).unwrap_err();
+        assert_eq!(r.reason, RefuseReason::Overloaded);
+
+        // A short window clears on its own once trips stop.
+        let q = QuotaConfig {
+            shed_trip_threshold: 1,
+            shed_window: Duration::from_millis(1),
+            ..quota()
+        };
+        let c = AdmissionController::new(q);
+        c.note_deadline_trip();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(!c.overloaded(), "quiet window clears the watermark");
+    }
+
+    #[test]
+    fn forced_shed_overrides_and_releases() {
+        let c = AdmissionController::new(quota());
+        c.force_shed(true);
+        assert!(c.overloaded());
+        let r = c.check_new_job(1, 1, LeaderUsage::default()).unwrap_err();
+        assert_eq!(r.reason, RefuseReason::Overloaded);
+        c.force_shed(false);
+        assert!(!c.overloaded());
+        assert_eq!(c.check_new_job(1, 1, LeaderUsage::default()), Ok(()));
+    }
+
+    #[test]
+    fn refusal_downcasts_through_anyhow() {
+        let c = AdmissionController::new(quota());
+        let r = c.check_new_job(99, 1, LeaderUsage::default()).unwrap_err();
+        let e: anyhow::Error = r.into();
+        let back = e.downcast_ref::<Refusal>().expect("typed refusal survives anyhow");
+        assert_eq!(back.reason, RefuseReason::WorkerSlots);
+        assert!(e.to_string().contains("worker_slots"));
+    }
+}

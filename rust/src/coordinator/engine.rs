@@ -428,6 +428,42 @@ impl ChunkSlot {
             awaiting: false,
         }
     }
+
+    /// Rebuild a slot from an exported [`ChunkState`] — the readmission
+    /// half of idle-eviction parameter handoff. The aggregator starts
+    /// empty (no round is open for an idle job) and the `(params,
+    /// state, round)` triple is installed verbatim, so the first round
+    /// after readmission computes exactly what round `round` of the
+    /// uninterrupted job would have.
+    fn resume(cs: ChunkState, state_words: usize, n_workers: usize) -> ChunkSlot {
+        let len = cs.params.len();
+        debug_assert_eq!(cs.state.len(), len * state_words, "optimizer state shape mismatch");
+        ChunkSlot {
+            agg: ChunkAggregator::new(len, n_workers),
+            params: cs.params,
+            state: cs.state,
+            round: cs.round,
+            awaiting: false,
+        }
+    }
+}
+
+/// One chunk's exportable round position: everything the optimizer math
+/// of future rounds depends on. The handoff unit of idle eviction — a
+/// job rebuilt from its `ChunkState`s (plus the transport's residual
+/// checkpoints for quantized tenants) trains bit-identically to one
+/// that was never evicted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkState {
+    /// Chunk id within the job.
+    pub chunk: u32,
+    /// Final parameters at eviction.
+    pub params: Vec<f32>,
+    /// Optimizer state (`params.len() * state_words` f32s; empty for
+    /// stateless optimizers).
+    pub state: Vec<f32>,
+    /// Completed rounds of this chunk.
+    pub round: u64,
 }
 
 /// One job's state on one core: that core's shard of the job's chunks.
@@ -613,6 +649,65 @@ impl ShardEngine {
         // power-of-two totals is load-bearing).
         shard.inv_weight = 1.0 / shard.weights.iter().map(|&w| w as u64).sum::<u64>() as f32;
         Ok(())
+    }
+
+    /// Install a job's shard from exported [`ChunkState`]s — the
+    /// readmission half of idle-eviction parameter handoff
+    /// ([`NodeRole::Root`] only: relays hold no durable state worth
+    /// handing off, their parameters come from the parent). Each slot
+    /// resumes at its exported `(params, state, round)` position with a
+    /// fresh epoch 0: eviction requires zero live connections, so no
+    /// stale-epoch traffic from the previous incarnation can exist.
+    pub fn init_job_resumed(
+        &mut self,
+        job: JobId,
+        chunks: Vec<ChunkState>,
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        replies: Vec<ReplyTx>,
+    ) {
+        let state_words = opt.state_words();
+        let mut map = HashMap::new();
+        for cs in chunks {
+            map.insert(cs.chunk, ChunkSlot::resume(cs, state_words, n_workers));
+        }
+        self.jobs.insert(
+            job,
+            JobShard {
+                chunks: map,
+                opt,
+                replies,
+                pull_mask: HashMap::new(),
+                epoch: 0,
+                n_workers,
+                role: NodeRole::Root,
+                weights: vec![1; n_workers],
+                inv_weight: 1.0 / n_workers as f32,
+                uplink: None,
+            },
+        );
+    }
+
+    /// Export this shard's chunks of `job` for parameter handoff:
+    /// parameters, optimizer state, and round position, cloned (the
+    /// shard keeps serving until [`ShardEngine::evict`]). Control-plane
+    /// only — eviction happens with zero live connections, never on a
+    /// round path. Chunks come back in arbitrary order; an unknown job
+    /// exports empty.
+    pub fn export_job(&self, job: JobId) -> Vec<ChunkState> {
+        let Some(shard) = self.jobs.get(&job) else {
+            return Vec::new();
+        };
+        shard
+            .chunks
+            .iter()
+            .map(|(&chunk, slot)| ChunkState {
+                chunk,
+                params: slot.params.clone(),
+                state: slot.state.clone(),
+                round: slot.round,
+            })
+            .collect()
     }
 
     /// Borrow a chunk's current parameters (tests/diagnostics — the data
@@ -1114,6 +1209,48 @@ mod tests {
             eng.push(1, 0, 1, &[3.0], false, t).unwrap(),
             PushOutcome::Completed
         );
+    }
+
+    /// Parameter handoff: a job exported mid-training and rebuilt via
+    /// `init_job_resumed` continues bit-identically to the original —
+    /// parameters, momentum state, and round position all survive.
+    #[test]
+    fn export_then_resume_continues_bit_identical() {
+        use crate::coordinator::optimizer::NesterovSgd;
+        let opt = || Arc::new(NesterovSgd { lr: 0.25, momentum: 0.9 });
+        let mut eng = ShardEngine::new();
+        let (txs, mut rxs) = single_lane_fabrics(1, 1, 64);
+        eng.init_job(1, vec![(0, vec![1.0, 2.0]), (1, vec![-3.0])], opt(), 1, txs);
+        // Two rounds so momentum state is nonzero at export.
+        for r in 0..2u64 {
+            for c in 0..2u32 {
+                let g = [0.5 + r as f32, -0.25];
+                let g = if c == 0 { &g[..] } else { &g[..1] };
+                eng.push(1, c, 0, g, true, RoundTag::new(0, r)).unwrap();
+                assert!(matches!(rxs[0].recv().unwrap(), Reply::Chunk { .. }));
+            }
+        }
+        let mut exported = eng.export_job(1);
+        exported.sort_by_key(|cs| cs.chunk);
+        assert_eq!(exported.len(), 2);
+        assert_eq!(exported[0].round, 2);
+        assert!(exported[0].state.iter().any(|&s| s != 0.0), "momentum must export");
+        assert_eq!(eng.export_job(999), Vec::new(), "unknown job exports empty");
+
+        // Rebuild in a fresh engine; drive round 2 on both side by side.
+        let mut resumed = ShardEngine::new();
+        let (txs2, mut rxs2) = single_lane_fabrics(1, 1, 64);
+        resumed.init_job_resumed(1, exported, opt(), 1, txs2);
+        for c in 0..2u32 {
+            let g = [9.0f32, -1.5];
+            let g = if c == 0 { &g[..] } else { &g[..1] };
+            let t = RoundTag::new(0, 2);
+            eng.push(1, c, 0, g, true, t).unwrap();
+            resumed.push(1, c, 0, g, true, t).unwrap();
+            let a = chunk_reply(rxs[0].recv().unwrap());
+            let b = chunk_reply(rxs2[0].recv().unwrap());
+            assert_eq!(a, b, "chunk {c} diverged after handoff");
+        }
     }
 
     /// The rollback/replay message race: a replayed push can reach a core

@@ -117,6 +117,39 @@
 //!   above is exercised by reproducible chaos schedules
 //!   (`tests/chaos.rs`) without touching production code paths.
 //!
+//! # Tenant guardrails
+//!
+//! The leader is a shared appliance (paper §3.3: one PBox serves a
+//! rack), so multi-tenancy is enforced, not assumed. The guardrail
+//! layer ([`admission`], policy in [`crate::config::QuotaConfig`]):
+//!
+//! * **Admission control.** Every job-creating `Hello` is checked
+//!   against per-job caps (worker seats, model elements, cores) and
+//!   leader-wide totals (job count, summed model elements, summed
+//!   seats). An over-quota or shed request receives a typed, retriable
+//!   `wire::Op::Refused` frame (reason code + retry-after hint) instead
+//!   of a hang or an opaque disconnect; re-`Hello`s of hosted jobs are
+//!   never capacity-checked, so a full leader can always heal the jobs
+//!   it already owns.
+//! * **Weighted-fair core scheduling.** Each core's poll loop runs a
+//!   deficit round-robin over *jobs* (weights from
+//!   `QuotaConfig::weights`), so a tenant flooding its rings delays
+//!   only its own rounds. Schedule state is fixed-size, core-owned,
+//!   plain integers — the exact-zero alloc/mutex discipline above is
+//!   preserved.
+//! * **Load shedding + idle eviction.** Round-deadline trips inside a
+//!   sliding window trip an overload watermark that sheds *new*
+//!   admissions first; jobs idle past a configurable horizon (zero live
+//!   connections) are evicted with a **parameter handoff** — final
+//!   parameters, optimizer state, per-chunk round positions, and any
+//!   quantized residual checkpoints are staged so a returning tenant
+//!   readmits and resumes bit-exact.
+//!
+//! The full admission rules, refusal wire format, fairness semantics,
+//! and eviction/handoff lifecycle are specified in [`transport`]'s
+//! module docs; refusals and guardrail actions are observable via
+//! [`crate::metrics::DataPlaneMetrics`] and the `/jobs` quota view.
+//!
 //! # Kernel dispatch and placement
 //!
 //! The absorb folds and fused optimizer passes execute as explicit SIMD
@@ -167,6 +200,7 @@
 //!   seqlock-guarded slots; they never block a core thread or touch a
 //!   data-plane lock.
 
+pub mod admission;
 pub mod aggregation;
 pub mod chunk;
 pub mod compress;
@@ -185,11 +219,12 @@ pub mod tenancy;
 pub mod transport;
 pub mod wire;
 
+pub use admission::{AdmissionController, LeaderUsage, RefuseReason, Refusal};
 pub use aggregation::GradSrc;
 pub use chunk::{ChunkId, KeyTable};
 pub use engine::{
-    EngineError, NodeRole, PushOutcome, Reply, ReplyRx, ReplyTx, RoundTag, ShardEngine,
-    WorkerRound,
+    ChunkState, EngineError, NodeRole, PushOutcome, Reply, ReplyRx, ReplyTx, RoundTag,
+    ShardEngine, WorkerRound,
 };
 pub use kernels::KernelTier;
 pub use mapping::PlacementMode;

@@ -56,12 +56,15 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::config::QuotaConfig;
 use crate::metrics::{DataPlaneMetrics, JobMetrics};
 
 use super::aggregation::GradSrc;
 use super::chunk::KeyTable;
 use super::compress::QuantView;
-use super::engine::{EngineError, NodeRole, PushOutcome, ReplyRx, ReplyTx, RoundTag, ShardEngine};
+use super::engine::{
+    ChunkState, EngineError, NodeRole, PushOutcome, ReplyRx, ReplyTx, RoundTag, ShardEngine,
+};
 use super::mapping;
 use super::optimizer::Optimizer;
 use super::pool::PooledBytes;
@@ -79,16 +82,30 @@ pub struct ServerConfig {
     /// override and defaults to [`mapping::PlacementMode::Affine`];
     /// either mode trains bit-identically — only locality differs.
     pub placement: mapping::PlacementMode,
+    /// Tenant guardrails: admission caps, fair-scheduling weights,
+    /// shedding and eviction policy (see [`QuotaConfig`]). The server
+    /// enforces the scheduling half (weighted-fair core sweeps, core
+    /// caps); the TCP leader enforces admission/eviction on top.
+    pub quota: QuotaConfig,
 }
 
 impl ServerConfig {
     /// Config with `n` cores and the environment-selected placement
-    /// mode — the standard way tests/benches/examples build one.
+    /// mode and quota — the standard way tests/benches/examples build
+    /// one.
     pub fn cores(n: usize) -> ServerConfig {
         ServerConfig {
             n_cores: n,
             placement: mapping::PlacementMode::from_env(),
+            quota: QuotaConfig::from_env(),
         }
+    }
+
+    /// Replace the guardrail policy (builder-style, for tests and
+    /// benches that need explicit quotas).
+    pub fn with_quota(mut self, quota: QuotaConfig) -> ServerConfig {
+        self.quota = quota;
+        self
     }
 }
 
@@ -129,7 +146,13 @@ enum CoreMsg {
     /// Attach a new request port to this core's poll set. Always sent on
     /// the control ring *after* the owning job's `InitJob`, so FIFO order
     /// guarantees a push popped from the port finds its job installed.
-    Connect { port: ring::Consumer<CoreMsg> },
+    /// `job`/`weight` bind the port to its tenant's deficit-round-robin
+    /// schedule entry (see [`core_loop`]).
+    Connect {
+        port: ring::Consumer<CoreMsg>,
+        job: JobId,
+        weight: u32,
+    },
     /// Worker gradient push for one chunk (optionally pulls the update).
     /// `data` is the worker's whole flat gradient, shared zero-copy (the
     /// in-process analogue of RDMA zero-copy, section 3.2.1); the core
@@ -188,6 +211,27 @@ enum CoreMsg {
     RollbackRound { job: JobId, epoch: u32 },
     /// Drop a job's state.
     Evict { job: JobId },
+    /// Snapshot this core's share of a job for parameter handoff
+    /// (idle eviction): the core appends its owned chunks' final
+    /// params/optimizer-state/round to `out` and bumps `done` so the
+    /// frontend can wait for every core. Control-plane only — the
+    /// mutex and clones are off the steady-state path.
+    ExportJob {
+        job: JobId,
+        out: Arc<Mutex<Vec<ChunkState>>>,
+        done: Arc<AtomicUsize>,
+    },
+    /// Reinstall a previously exported job shard verbatim (tenant
+    /// readmission after idle eviction): like `InitJob` but each chunk
+    /// resumes at its exported params, optimizer state, and round, so
+    /// a returning tenant continues bit-exactly. Root role only.
+    InitJobResumed {
+        job: JobId,
+        chunks: Vec<ChunkState>,
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        replies: Vec<ReplyTx>,
+    },
 }
 
 /// Record recovery-path push outcomes: replayed and stale-epoch pushes
@@ -205,15 +249,16 @@ fn note_push_outcome(out: PushOutcome, job: JobId, metrics: &DataPlaneMetrics) {
     }
 }
 
-/// Apply one message to this core's engine. Returns a new port to adopt
-/// when the message was `Connect`.
+/// Apply one message to this core's engine. Returns the new port plus
+/// its owning job and fair-schedule weight when the message was
+/// `Connect`.
 fn apply_core_msg(
     engine: &mut ShardEngine,
     msg: CoreMsg,
     metrics: &DataPlaneMetrics,
-) -> Option<ring::Consumer<CoreMsg>> {
-    // Job id for drop attribution below (`Connect` carries none; 0 is
-    // never a live job — allocation starts at 1).
+) -> Option<(ring::Consumer<CoreMsg>, JobId, u32)> {
+    // Job id for drop attribution below (0 is never a live job —
+    // allocation starts at 1).
     let msg_job = match &msg {
         CoreMsg::InitJob { job, .. }
         | CoreMsg::Push { job, .. }
@@ -222,7 +267,9 @@ fn apply_core_msg(
         | CoreMsg::SetWeight { job, .. }
         | CoreMsg::InstallParams { job, .. }
         | CoreMsg::RollbackRound { job, .. }
-        | CoreMsg::Evict { job } => *job,
+        | CoreMsg::Evict { job }
+        | CoreMsg::ExportJob { job, .. }
+        | CoreMsg::InitJobResumed { job, .. } => *job,
         CoreMsg::Connect { .. } => 0,
     };
     let res = match msg {
@@ -238,7 +285,7 @@ fn apply_core_msg(
             engine.init_job_with_role(job, chunks, opt, n_workers, replies, role, uplink);
             Ok(())
         }
-        CoreMsg::Connect { port } => return Some(port),
+        CoreMsg::Connect { port, job, weight } => return Some((port, job, weight)),
         CoreMsg::Push {
             job,
             chunk,
@@ -321,6 +368,24 @@ fn apply_core_msg(
             engine.evict(job);
             Ok(())
         }
+        CoreMsg::ExportJob { job, out, done } => {
+            let part = engine.export_job(job);
+            if !part.is_empty() {
+                out.lock().unwrap().extend(part);
+            }
+            done.fetch_add(1, Ordering::Release);
+            Ok(())
+        }
+        CoreMsg::InitJobResumed {
+            job,
+            chunks,
+            opt,
+            n_workers,
+            replies,
+        } => {
+            engine.init_job_resumed(job, chunks, opt, n_workers, replies);
+            Ok(())
+        }
     };
     // A protocol violation must never kill a shared core thread: the
     // transports reject violations at the connection edge, so anything
@@ -345,46 +410,167 @@ fn apply_core_msg(
     None
 }
 
+/// Per-job deficit-round-robin state on one core. Fixed-size plain
+/// integers only: the scheduler adds no allocation, no locking, and no
+/// atomics to the steady-state sweep (entry 0 is the control
+/// pseudo-job, never throttled; retired entries are recycled on the
+/// control plane so the table stays bounded by concurrently hosted
+/// jobs, not jobs ever seen).
+struct JobSched {
+    job: JobId,
+    /// Budget refilled each sweep: `weight * sched_quantum` messages.
+    quantum: usize,
+    /// Banked unused budget, capped at `2 * quantum` so an idle tenant
+    /// cannot hoard an unbounded burst allowance.
+    deficit: usize,
+    /// Live ports bound to this entry; a zeroed entry is reusable.
+    ports: usize,
+    /// Pre-resolved attribution counters (`None` for the control
+    /// pseudo-entry or when the job was never registered).
+    jm: Option<Arc<JobMetrics>>,
+}
+
+/// One pollable port and the index of its job's [`JobSched`] entry.
+struct PortSlot {
+    port: ring::Consumer<CoreMsg>,
+    sched: usize,
+}
+
+/// Bind a `Connect`ed port to its job's schedule entry, creating or
+/// recycling one as needed (control plane — allocation is fine here).
+fn adopt_sched(
+    scheds: &mut Vec<JobSched>,
+    job: JobId,
+    weight: u32,
+    quantum: usize,
+    metrics: &DataPlaneMetrics,
+) -> usize {
+    if let Some(ix) = scheds.iter().position(|s| s.ports > 0 && s.job == job) {
+        scheds[ix].ports += 1;
+        return ix;
+    }
+    let q = (weight.max(1) as usize) * quantum.max(1);
+    let fresh = JobSched {
+        job,
+        quantum: q,
+        // Start with a full refill so the first sweep after Connect
+        // serves the port instead of deferring it.
+        deficit: q,
+        ports: 1,
+        jm: metrics.per_job.get(job),
+    };
+    // Entry 0 (control) is never recycled.
+    if let Some(ix) = scheds.iter().skip(1).position(|s| s.ports == 0) {
+        scheds[ix + 1] = fresh;
+        ix + 1
+    } else {
+        scheds.push(fresh);
+        scheds.len() - 1
+    }
+}
+
 /// One core thread: poll the port list (control ring first — it carries
 /// the `InitJob`s that `Connect`ed ports' traffic depends on), retire
 /// disconnected ports, and park on the shared waiter when every port is
 /// idle. The whole loop is lock-free and allocation-free at steady state;
-/// the only allocation is the port-list growth on `Connect` (control
-/// plane).
+/// the only allocation is port/schedule-table growth on `Connect`
+/// (control plane).
+///
+/// With `fair` set (the default, [`QuotaConfig::fair_sched`]) the
+/// per-port batch budget becomes a deficit-weighted round-robin over
+/// jobs: each sweep refills every job's deficit by `weight * quantum`
+/// messages (banked up to one extra sweep) and a job's ports stop
+/// draining when its deficit is spent, so a flooding tenant defers only
+/// its own rounds — its backlog parks in its own rings while neighbours
+/// keep their full share of the core. Deferrals are counted globally
+/// (`sched_deferrals`) and per job. With `fair` unset the legacy greedy
+/// path runs: a flat `PORT_BATCH` per port per sweep.
 fn core_loop(
     ctrl: ring::Consumer<CoreMsg>,
     waiter: Arc<ring::Waiter>,
     metrics: Arc<DataPlaneMetrics>,
+    fair: bool,
+    quantum: usize,
 ) {
     let mut engine = ShardEngine::new();
-    let mut ports: Vec<ring::Consumer<CoreMsg>> = vec![ctrl];
+    let mut scheds: Vec<JobSched> = vec![JobSched {
+        job: 0,
+        quantum: 0,
+        deficit: 0,
+        ports: 1,
+        jm: None,
+    }];
+    let mut slots: Vec<PortSlot> = vec![PortSlot { port: ctrl, sched: 0 }];
     loop {
+        if fair {
+            // Refill at sweep start; plain integer writes only.
+            for s in scheds.iter_mut().skip(1) {
+                if s.ports > 0 {
+                    s.deficit = (s.deficit + s.quantum).min(2 * s.quantum);
+                }
+            }
+        }
         let mut progressed = false;
         let mut i = 0;
-        while i < ports.len() {
+        while i < slots.len() {
             // Bounded batch per port per sweep: one hot worker cannot
-            // starve its neighbours on the same core.
-            for _ in 0..PORT_BATCH {
-                match ports[i].try_recv() {
+            // starve its neighbours on the same core. Under fair
+            // scheduling the bound also honours the job's remaining
+            // deficit (control ports keep the flat batch).
+            let sched_ix = slots[i].sched;
+            let budget = if fair && sched_ix != 0 {
+                scheds[sched_ix].deficit.min(PORT_BATCH)
+            } else {
+                PORT_BATCH
+            };
+            let mut popped = 0usize;
+            while popped < budget {
+                match slots[i].port.try_recv() {
                     Ok(msg) => {
+                        popped += 1;
                         progressed = true;
-                        if let Some(port) = apply_core_msg(&mut engine, msg, &metrics) {
-                            ports.push(port);
+                        if let Some((port, job, weight)) =
+                            apply_core_msg(&mut engine, msg, &metrics)
+                        {
+                            let sched = adopt_sched(&mut scheds, job, weight, quantum, &metrics);
+                            slots.push(PortSlot { port, sched });
                         }
                     }
                     Err(_) => break,
                 }
             }
+            if fair && sched_ix != 0 {
+                let s = &mut scheds[sched_ix];
+                s.deficit -= popped; // popped <= budget <= deficit
+                if s.deficit == 0 && !slots[i].port.is_empty() {
+                    // Budget spent with traffic still queued: the job
+                    // waits for its next refill while neighbours run.
+                    metrics.sched_deferrals.inc();
+                    if let Some(jm) = &s.jm {
+                        jm.deferrals.inc();
+                    }
+                }
+            }
             i += 1;
         }
         if !progressed {
-            ports.retain(|p| !p.is_disconnected());
-            if ports.is_empty() {
+            let mut i = 0;
+            while i < slots.len() {
+                if slots[i].port.is_disconnected() {
+                    let dead = slots.swap_remove(i);
+                    scheds[dead.sched].ports -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+            if slots.is_empty() {
                 // Control ring and every worker port gone: shutdown.
                 return;
             }
             waiter.wait_until(|| {
-                ports.iter().any(|p| !p.is_empty() || p.is_disconnected())
+                slots
+                    .iter()
+                    .any(|p| !p.port.is_empty() || p.port.is_disconnected())
             });
         }
     }
@@ -396,6 +582,14 @@ fn core_loop(
 struct WorkerPort {
     reqs: Vec<ring::Producer<CoreMsg>>,
     rx: ReplyRx,
+}
+
+/// What a job's chunks start from: a fresh flat init vector, or the
+/// exported [`ChunkState`]s of a previously evicted job (parameter
+/// handoff — see [`PHubServer::export_job`]).
+enum JobSource<'a> {
+    Fresh(&'a [f32]),
+    Resumed(Vec<ChunkState>),
 }
 
 /// Per-job bookkeeping on the server frontend.
@@ -438,6 +632,7 @@ pub struct PHubServer {
     jobs: Mutex<HashMap<JobId, JobMeta>>,
     next_job: AtomicU64,
     placement: mapping::PlacementMode,
+    quota: QuotaConfig,
     metrics: Arc<DataPlaneMetrics>,
 }
 
@@ -462,10 +657,12 @@ impl PHubServer {
                 waiter: waiter.clone(),
             });
             let metrics = metrics.clone();
+            let fair = cfg.quota.fair_sched;
+            let quantum = cfg.quota.sched_quantum;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("phub-core-{i}"))
-                    .spawn(move || core_loop(rx, waiter, metrics))
+                    .spawn(move || core_loop(rx, waiter, metrics, fair, quantum))
                     .expect("spawn core thread"),
             );
         }
@@ -475,8 +672,14 @@ impl PHubServer {
             jobs: Mutex::new(HashMap::new()),
             next_job: AtomicU64::new(1),
             placement: cfg.placement,
+            quota: cfg.quota,
             metrics,
         })
+    }
+
+    /// The guardrail policy this server was started with.
+    pub fn quota(&self) -> &QuotaConfig {
+        &self.quota
     }
 
     pub fn n_cores(&self) -> usize {
@@ -527,9 +730,80 @@ impl PHubServer {
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
     ) -> JobId {
-        let (job, uplink) = self.init_job_inner(table, init_params, opt, n_workers, NodeRole::Root);
+        let weight = self.quota.default_weight;
+        self.init_job_weighted(table, init_params, opt, n_workers, weight)
+    }
+
+    /// [`PHubServer::init_job`] with an explicit fair-schedule weight
+    /// (how the TCP leader passes a tenant's configured share through;
+    /// see [`QuotaConfig::weight_for`]).
+    pub fn init_job_weighted(
+        self: &Arc<Self>,
+        table: KeyTable,
+        init_params: &[f32],
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        sched_weight: u32,
+    ) -> JobId {
+        let (job, uplink) = self.init_job_inner(
+            table,
+            JobSource::Fresh(init_params),
+            opt,
+            n_workers,
+            NodeRole::Root,
+            sched_weight,
+        );
         debug_assert!(uplink.is_none());
         job
+    }
+
+    /// Reinstall a job exported with [`PHubServer::export_job`]: every
+    /// chunk resumes at its exported params, optimizer state, and round
+    /// position, so a tenant readmitted after idle eviction continues
+    /// bit-exactly where it left off. Root role only (a relay holds no
+    /// durable state worth handing off).
+    pub fn init_job_resumed(
+        self: &Arc<Self>,
+        table: KeyTable,
+        chunks: Vec<ChunkState>,
+        opt: Arc<dyn Optimizer>,
+        n_workers: usize,
+        sched_weight: u32,
+    ) -> JobId {
+        let (job, uplink) = self.init_job_inner(
+            table,
+            JobSource::Resumed(chunks),
+            opt,
+            n_workers,
+            NodeRole::Root,
+            sched_weight,
+        );
+        debug_assert!(uplink.is_none());
+        job
+    }
+
+    /// Snapshot a job's full parameter-handoff state — final params,
+    /// optimizer state, and per-chunk round — merged from every core
+    /// and sorted by chunk id. Control plane: broadcasts an export to
+    /// each core and waits for all of them, so the snapshot is coherent
+    /// provided no worker is mid-round (the leader only evicts jobs
+    /// with zero live connections). Unknown jobs yield an empty vec.
+    pub fn export_job(&self, job: JobId) -> Vec<ChunkState> {
+        let done = Arc::new(AtomicUsize::new(0));
+        let out = Arc::new(Mutex::new(Vec::new()));
+        for core in &self.cores {
+            core.send(CoreMsg::ExportJob {
+                job,
+                out: out.clone(),
+                done: done.clone(),
+            });
+        }
+        while done.load(Ordering::Acquire) < self.cores.len() {
+            std::thread::yield_now();
+        }
+        let mut states = std::mem::take(&mut *out.lock().unwrap());
+        states.sort_by_key(|c| c.chunk);
+        states
     }
 
     /// [`PHubServer::init_job`] for a [`NodeRole::RackRelay`] node: the
@@ -545,20 +819,34 @@ impl PHubServer {
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
     ) -> (JobId, RelayUplink) {
-        let (job, uplink) =
-            self.init_job_inner(table, init_params, opt, n_workers, NodeRole::RackRelay);
+        let weight = self.quota.default_weight;
+        let (job, uplink) = self.init_job_inner(
+            table,
+            JobSource::Fresh(init_params),
+            opt,
+            n_workers,
+            NodeRole::RackRelay,
+            weight,
+        );
         (job, uplink.expect("relay init always builds an uplink"))
     }
 
     fn init_job_inner(
         self: &Arc<Self>,
         table: KeyTable,
-        init_params: &[f32],
+        source: JobSource<'_>,
         opt: Arc<dyn Optimizer>,
         n_workers: usize,
         role: NodeRole,
+        sched_weight: u32,
     ) -> (JobId, Option<RelayUplink>) {
-        assert_eq!(init_params.len(), table.total_elems);
+        match &source {
+            JobSource::Fresh(p) => assert_eq!(p.len(), table.total_elems),
+            JobSource::Resumed(states) => {
+                assert_eq!(role, NodeRole::Root, "only Root jobs resume from handoff");
+                assert_eq!(states.len(), table.chunks.len(), "handoff must cover every chunk");
+            }
+        }
         assert!((1..=super::aggregation::MAX_WORKERS).contains(&n_workers));
         let job = self.next_job.fetch_add(1, Ordering::SeqCst) as JobId;
         // Admission-time: create the job's attribution counters before
@@ -571,9 +859,15 @@ impl PHubServer {
         // affinity — the chunk's frames land on the owning core's SPSC
         // port directly, and the core's working set stays contiguous);
         // interleave is the old LPT scatter. Both are balanced on chunk
-        // lengths and train bit-identically.
+        // lengths and train bit-identically. A `max_cores_per_job` quota
+        // confines the job to a prefix of the core set so one tenant
+        // cannot spread across (and thrash) every cache domain.
         let lens: Vec<usize> = table.chunks.iter().map(|c| c.len).collect();
-        let core_of = self.placement.partition(&lens, self.cores.len());
+        let cores_cap = match self.quota.max_cores_per_job {
+            0 => self.cores.len(),
+            cap => self.cores.len().min(cap),
+        };
+        let core_of = self.placement.partition(&lens, cores_cap);
         let chunks_on_core: Vec<usize> = (0..self.cores.len())
             .map(|ci| core_of.iter().filter(|&&c| c == ci).count())
             .collect();
@@ -659,34 +953,75 @@ impl PHubServer {
                 reply_cols[ci].push(tx);
             }
         }
+        // Split the job source into per-core shares: fresh params are
+        // sliced from the flat init vector; resumed chunk states are
+        // routed to the core that owns each chunk (the placement is a
+        // pure function of chunk lengths and core count, so a job
+        // readmitted on the same server shape lands where it lived).
+        let (fresh_params, mut resumed_by_core) = match source {
+            JobSource::Fresh(p) => (Some(p), Vec::new()),
+            JobSource::Resumed(states) => {
+                let mut by_core: Vec<Vec<ChunkState>> =
+                    (0..self.cores.len()).map(|_| Vec::new()).collect();
+                for cs in states {
+                    let c = cs.chunk as usize;
+                    assert!(c < table.chunks.len(), "exported chunk id out of range");
+                    by_core[core_of[c]].push(cs);
+                }
+                (None, by_core)
+            }
+        };
         for (ci, core) in self.cores.iter().enumerate() {
-            let chunks: Vec<(u32, Vec<f32>)> = table
-                .chunks
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| core_of[*i] == ci)
-                .map(|(i, c)| (i as u32, init_params[c.offset..c.offset + c.len].to_vec()))
-                .collect();
             let ctrl = core.ctrl.lock().unwrap();
-            ctrl.send(CoreMsg::InitJob {
-                job,
-                chunks,
-                opt: opt.clone(),
-                n_workers,
-                replies: std::mem::take(&mut reply_cols[ci]),
-                role,
-                uplink: uplink_sum_txs[ci].take(),
-            })
-            .map_err(|_| ())
-            .expect("core thread gone");
-            for rx in req_cols[ci].drain(..) {
-                ctrl.send(CoreMsg::Connect { port: rx })
+            match fresh_params {
+                Some(init_params) => {
+                    let chunks: Vec<(u32, Vec<f32>)> = table
+                        .chunks
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| core_of[*i] == ci)
+                        .map(|(i, c)| {
+                            (i as u32, init_params[c.offset..c.offset + c.len].to_vec())
+                        })
+                        .collect();
+                    ctrl.send(CoreMsg::InitJob {
+                        job,
+                        chunks,
+                        opt: opt.clone(),
+                        n_workers,
+                        replies: std::mem::take(&mut reply_cols[ci]),
+                        role,
+                        uplink: uplink_sum_txs[ci].take(),
+                    })
                     .map_err(|_| ())
                     .expect("core thread gone");
+                }
+                None => {
+                    ctrl.send(CoreMsg::InitJobResumed {
+                        job,
+                        chunks: std::mem::take(&mut resumed_by_core[ci]),
+                        opt: opt.clone(),
+                        n_workers,
+                        replies: std::mem::take(&mut reply_cols[ci]),
+                    })
+                    .map_err(|_| ())
+                    .expect("core thread gone");
+                }
+            }
+            for rx in req_cols[ci].drain(..) {
+                ctrl.send(CoreMsg::Connect {
+                    port: rx,
+                    job,
+                    weight: sched_weight,
+                })
+                .map_err(|_| ())
+                .expect("core thread gone");
             }
             if let Some(ports) = inst_ports.as_mut() {
                 ctrl.send(CoreMsg::Connect {
                     port: ports.remove(0),
+                    job,
+                    weight: sched_weight,
                 })
                 .map_err(|_| ())
                 .expect("core thread gone");
@@ -1625,6 +1960,7 @@ mod tests {
             let server = PHubServer::start(ServerConfig {
                 n_cores: 2,
                 placement: mode,
+                quota: QuotaConfig::default(),
             });
             assert_eq!(
                 server.metrics().kernel_tier.get(),
@@ -1661,6 +1997,7 @@ mod tests {
             let server = PHubServer::start(ServerConfig {
                 n_cores: 4,
                 placement: mode,
+                quota: QuotaConfig::default(),
             });
             let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.05).cos()).collect();
             let opt = NesterovSgd {
@@ -1707,5 +2044,131 @@ mod tests {
         for core in 0..4 {
             assert_eq!(assign.iter().filter(|&&c| c == core).count(), 16);
         }
+    }
+
+    /// Deterministic fair-scheduler check: a port pre-loaded with more
+    /// traffic than one sweep's deficit gets bounded service per sweep
+    /// and the overflow is counted as a deferral — globally and against
+    /// the owning job. The core loop is driven directly with hand-built
+    /// rings so queue depth (and therefore deferral) is guaranteed.
+    #[test]
+    fn fair_sweep_defers_overflow_and_counts_it() {
+        let metrics = Arc::new(DataPlaneMetrics::default());
+        let jm = metrics.per_job.register(1);
+        let waiter = Arc::new(ring::Waiter::new());
+        let (ctrl_tx, ctrl_rx) = ring::spsc_shared(CTRL_RING_CAP, waiter.clone());
+        let reply_waiter = Arc::new(ring::Waiter::new());
+        let (reply_tx, reply_rx) = ring::spsc_shared(64, reply_waiter);
+        let (port_tx, port_rx) = ring::spsc_shared(64, waiter.clone());
+
+        // Queue the job install, a burst of 10 pulls, then the Connect —
+        // all before the core thread starts, so service order and queue
+        // depth at each sweep are deterministic.
+        ctrl_tx
+            .send(CoreMsg::InitJob {
+                job: 1,
+                chunks: vec![(0, vec![0.0; 4])],
+                opt: Arc::new(Sgd { lr: 1.0 }),
+                n_workers: 1,
+                replies: vec![reply_tx],
+                role: NodeRole::Root,
+                uplink: None,
+            })
+            .map_err(|_| ())
+            .unwrap();
+        for _ in 0..10 {
+            port_tx
+                .send(CoreMsg::Pull {
+                    job: 1,
+                    chunk: 0,
+                    worker: 0,
+                })
+                .map_err(|_| ())
+                .unwrap();
+        }
+        ctrl_tx
+            .send(CoreMsg::Connect {
+                port: port_rx,
+                job: 1,
+                weight: 1,
+            })
+            .map_err(|_| ())
+            .unwrap();
+        drop(ctrl_tx);
+        drop(port_tx);
+
+        // quantum 2: the 10-deep burst needs ~5 sweeps, deferring in
+        // each sweep that leaves traffic queued.
+        let m = metrics.clone();
+        let core = std::thread::spawn(move || core_loop(ctrl_rx, waiter, m, true, 2));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let mut got = 0;
+        while got < 10 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "replies missing: {got}/10"
+            );
+            match reply_rx.try_recv() {
+                Ok(Reply::Chunk { .. }) => got += 1,
+                Ok(other) => panic!("unexpected reply {other:?}"),
+                Err(_) => std::thread::yield_now(),
+            }
+        }
+        core.join().unwrap();
+        assert!(
+            metrics.sched_deferrals.get() >= 1,
+            "burst past the deficit must count a deferral"
+        );
+        assert!(
+            jm.deferrals.get() >= 1,
+            "deferral must be attributed to the owning job"
+        );
+    }
+
+    /// Parameter handoff through the public server API: export an idle
+    /// job, evict it, readmit it with `init_job_resumed`, and the
+    /// continued training is bit-identical to a twin that never paused.
+    #[test]
+    fn export_then_resume_is_bit_identical_across_eviction() {
+        let n = 24usize;
+        let opt = || {
+            Arc::new(NesterovSgd {
+                lr: 0.2,
+                momentum: 0.9,
+            })
+        };
+        let grad = |r: usize| -> Vec<f32> {
+            (0..n)
+                .map(|i| (r as f32 * 1.3 + i as f32 * 0.07).sin())
+                .collect()
+        };
+        let server = PHubServer::start(ServerConfig::cores(2));
+        let job = server.init_job(table(n, 8), &vec![0.5; n], opt(), 1);
+        let mut h = server.worker(job, 0);
+        for r in 0..2 {
+            h.push_pull(&grad(r));
+        }
+        drop(h);
+        let states = server.export_job(job);
+        assert_eq!(states.len(), 3);
+        assert!(states.windows(2).all(|w| w[0].chunk < w[1].chunk));
+        assert!(states.iter().all(|c| c.round == 2));
+        assert!(server.export_job(9999).is_empty());
+        server.evict(job);
+
+        let resumed = server.init_job_resumed(table(n, 8), states, opt(), 1, 1);
+        let mut hr = server.worker(resumed, 0);
+        hr.set_tag(0, 2); // the handoff resumes at round 2
+        let twin = server.init_job(table(n, 8), &vec![0.5; n], opt(), 1);
+        let mut ht = server.worker(twin, 0);
+        for r in 0..2 {
+            ht.push_pull(&grad(r));
+        }
+        let a = hr.push_pull(&grad(2));
+        let b = ht.push_pull(&grad(2));
+        assert_eq!(a, b, "resumed job must continue bit-identically");
+        drop(hr);
+        drop(ht);
+        PHubServer::shutdown(server);
     }
 }

@@ -289,6 +289,12 @@ fn render_prometheus(snap: &MetricsSnapshot) -> String {
         let _ = writeln!(out, "phub_job_drops_total{{job=\"{job}\"}} {}", j.drops);
         let _ = writeln!(out, "phub_job_replays_total{{job=\"{job}\"}} {}", j.replays);
         let _ = writeln!(out, "phub_job_rollbacks_total{{job=\"{job}\"}} {}", j.rollbacks);
+        let _ = writeln!(out, "phub_job_deferrals_total{{job=\"{job}\"}} {}", j.deferrals);
+        let _ = writeln!(out, "phub_job_refusals_total{{job=\"{job}\"}} {}", j.refusals);
+        let _ = writeln!(out, "phub_job_sched_weight{{job=\"{job}\"}} {}", j.sched_weight);
+        let _ = writeln!(out, "phub_job_model_elems{{job=\"{job}\"}} {}", j.model_elems);
+        let _ = writeln!(out, "phub_job_workers{{job=\"{job}\"}} {}", j.n_workers);
+        let _ = writeln!(out, "phub_job_live_workers{{job=\"{job}\"}} {}", j.live_workers);
         let h = &j.round_latency;
         for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
             let _ = writeln!(
@@ -328,7 +334,10 @@ fn append_job_json(out: &mut String, j: &JobMetricsSnapshot) {
     let _ = write!(
         out,
         "{{\"job\":{},\"rounds_completed\":{},\"push_bytes\":{},\"pull_bytes\":{},\
-         \"drops\":{},\"replays\":{},\"rollbacks\":{},\"round_latency\":{{\
+         \"drops\":{},\"replays\":{},\"rollbacks\":{},\
+         \"deferrals\":{},\"refusals\":{},\"quota\":{{\
+         \"sched_weight\":{},\"model_elems\":{},\"workers\":{},\"live_workers\":{}}},\
+         \"round_latency\":{{\
          \"count\":{},\"mean_ns\":{:.3},\"p50_ns\":{},\"p90_ns\":{},\"p99_ns\":{}}}}}",
         j.job,
         j.rounds_completed,
@@ -337,6 +346,12 @@ fn append_job_json(out: &mut String, j: &JobMetricsSnapshot) {
         j.drops,
         j.replays,
         j.rollbacks,
+        j.deferrals,
+        j.refusals,
+        j.sched_weight,
+        j.model_elems,
+        j.n_workers,
+        j.live_workers,
         h.count,
         h.mean_ns(),
         h.quantile_ns(0.5),
@@ -358,6 +373,11 @@ mod tests {
         jm.push_bytes.add(1024);
         jm.pull_bytes.add(2048);
         jm.round_latency.record_ns(1_000_000);
+        jm.sched_weight.set(4);
+        jm.model_elems.set(64);
+        jm.n_workers.set(2);
+        jm.live_workers.set(1);
+        jm.deferrals.add(5);
         m.snapshot()
     }
 
@@ -368,6 +388,11 @@ mod tests {
         assert!(text.contains("phub_dropped_messages_total 1"));
         assert!(text.contains("phub_drop_future_round_total 1"));
         assert!(text.contains("phub_job_rounds_completed_total{job=\"3\"} 4"));
+        assert!(text.contains("phub_job_deferrals_total{job=\"3\"} 5"));
+        assert!(text.contains("phub_job_sched_weight{job=\"3\"} 4"));
+        assert!(text.contains("phub_job_live_workers{job=\"3\"} 1"));
+        assert!(text.contains("phub_refused_overload_total 0"));
+        assert!(text.contains("phub_sched_deferrals_total 0"));
         assert!(text.contains("phub_job_round_latency_ns{job=\"3\",quantile=\"0.5\"}"));
         assert!(text.contains("phub_job_round_latency_ns_count{job=\"3\"} 1"));
         // Every non-comment line is `name[{labels}] value`.
@@ -391,6 +416,12 @@ mod tests {
         assert_eq!(jobs.len(), 1);
         assert_eq!(jobs[0].get("job").unwrap().as_usize(), Some(3));
         assert_eq!(jobs[0].get("rounds_completed").unwrap().as_usize(), Some(4));
+        assert_eq!(jobs[0].get("deferrals").unwrap().as_usize(), Some(5));
+        let quota = jobs[0].get("quota").expect("quota view");
+        assert_eq!(quota.get("sched_weight").unwrap().as_usize(), Some(4));
+        assert_eq!(quota.get("model_elems").unwrap().as_usize(), Some(64));
+        assert_eq!(quota.get("workers").unwrap().as_usize(), Some(2));
+        assert_eq!(quota.get("live_workers").unwrap().as_usize(), Some(1));
         let lat = jobs[0].get("round_latency").expect("latency");
         assert_eq!(lat.get("count").unwrap().as_usize(), Some(1));
         assert!(lat.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);

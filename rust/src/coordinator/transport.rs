@@ -120,6 +120,28 @@
 //! parameters bit-identical to an uninterrupted run. Stale in-flight
 //! frames from the dead connection are rejected by their epoch tag.
 //!
+//! # Tenant guardrails
+//!
+//! The leader is multi-tenant, so the control plane carries an
+//! admission layer (see `super::admission`): every `Hello` that would
+//! *create* a job is checked against [`crate::config::QuotaConfig`] —
+//! job count, per-job and leader-wide model/worker quotas — and
+//! against an overload watermark fed by round-deadline trips. A
+//! refused `Hello` is answered with a typed, **retriable** `Refused`
+//! frame (reason code + retry-after hint), never a silently dropped
+//! socket: clients surface it as a [`super::admission::Refusal`] error
+//! and [`TcpWorker::connect_with_backoff`] turns it into capped,
+//! jittered waiting. Re-`Hello`s of hosted jobs bypass every capacity
+//! gate, so a full leader can always heal the jobs it already
+//! admitted. On the cores, per-tenant deficit-round-robin weights
+//! (`QuotaConfig::weights`) bound how far one flooding tenant can
+//! delay another's rounds. Jobs with zero live connections idle past
+//! `QuotaConfig::idle_evict_after` are evicted by a janitor thread
+//! *with a parameter handoff*: final parameters, optimizer state,
+//! per-seat rounds, and residual checkpoints are staged so the
+//! returning tenant readmits and resumes bit-exact. All of this is
+//! control-plane only — the per-chunk exchange path is untouched.
+//!
 //! # Failure model & recovery contract
 //!
 //! The connection plane assumes **crash-stop with rejoin**: a peer can
@@ -168,13 +190,16 @@
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::admission::{AdmissionController, LeaderUsage, RefuseReason, Refusal};
 use super::chunk::KeyTable;
 use super::compress::{ChunkQuantizer, QuantView};
-use super::engine::{Reply, WorkerRound};
+use super::engine::{ChunkState, Reply, WorkerRound};
 use super::faults::XorShift64;
 use super::optimizer::NesterovSgd;
 use super::pool::{BytePool, Pool};
@@ -193,11 +218,10 @@ pub const MAX_WORKERS_PER_JOB: u32 = super::aggregation::MAX_WORKERS as u32;
 /// attacker-controlled length prefix *before* any allocation.
 pub const MAX_MODEL_ELEMS: u64 = 1 << 28;
 
-/// Cap on jobs a leader will host over its lifetime (the TCP path has no
-/// job GC, so this is the bound on server state a client can mint with
-/// cheap `Hello`s — each admitted spec commits real model/optimizer
-/// memory on the cores).
-pub const MAX_JOBS: usize = 64;
+// The former hard-coded `MAX_JOBS` job-count cap now lives in
+// [`crate::config::QuotaConfig::max_jobs`] (env-overridable, default 64)
+// and is enforced — together with the model/worker quotas and the
+// overload watermark — by [`super::admission::AdmissionController`].
 
 /// Job parameters carried in `Hello`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -296,6 +320,68 @@ struct JobEntry {
     /// itself dies before completing a round still leaves the next
     /// successor a restore point.
     residuals: HashMap<u32, Vec<Vec<u8>>>,
+    /// Connections currently serving this job (admission increments,
+    /// the parking block decrements; both under the jobs lock). The
+    /// idle-eviction janitor only considers jobs at zero.
+    live_conns: u32,
+    /// Milliseconds since [`LeaderState::anchor`] of the job's last
+    /// sign of life (admission, round completion, parking). Shared with
+    /// connection threads so round completions stamp it with a relaxed
+    /// store instead of taking the jobs lock.
+    last_active: Arc<AtomicU64>,
+    /// For a job readmitted from a staged handoff: the round each
+    /// worker seat had completed at eviction. A seat's *first* handle
+    /// after readmission is positioned here; parked handles already
+    /// carry their own round.
+    resume_rounds: Option<Vec<u64>>,
+}
+
+/// Parameter handoff staged for an idle-evicted job: everything needed
+/// to readmit the tenant and resume training bit-exact — final
+/// parameters and optimizer state per chunk, each seat's completed
+/// round, and the committed quantizer residual checkpoints.
+struct EvictedJob {
+    spec: JobSpec,
+    chunks: Vec<ChunkState>,
+    /// Completed rounds per worker seat at eviction (parked handles'
+    /// positions; seats that never connected inherit the job round).
+    slot_rounds: Vec<u64>,
+    residuals: HashMap<u32, Vec<Vec<u8>>>,
+}
+
+/// Shared state of one serving leader: the in-process server, the jobs
+/// map, and the tenant-guardrail machinery. One `Arc<LeaderState>` is
+/// held by the [`TcpLeader`], the accept loop, every connection
+/// thread, every relay uplink pump, and the idle-eviction janitor.
+///
+/// Lock order: `jobs` before `evicted`, everywhere.
+struct LeaderState {
+    server: Arc<PHubServer>,
+    jobs: Mutex<HashMap<u32, JobEntry>>,
+    admission: AdmissionController,
+    /// Staged parameter handoffs of idle-evicted jobs, keyed by wire
+    /// job id, consumed by the tenant's next `Hello`.
+    evicted: Mutex<HashMap<u32, EvictedJob>>,
+    relay: Option<Arc<RelayConfig>>,
+    dl: DeadlineConfig,
+    /// Wall-clock zero for [`JobEntry::last_active`] stamps.
+    anchor: Instant,
+}
+
+impl LeaderState {
+    fn now_ms(&self) -> u64 {
+        self.anchor.elapsed().as_millis() as u64
+    }
+
+    /// Leader-wide usage a job-creating `Hello` is checked against;
+    /// the caller holds the jobs lock, so the view is race-free.
+    fn usage(map: &HashMap<u32, JobEntry>) -> LeaderUsage {
+        LeaderUsage {
+            jobs: map.len(),
+            model_elems: map.values().map(|e| e.spec.model_elems).sum(),
+            workers: map.values().map(|e| u64::from(e.spec.n_workers)).sum(),
+        }
+    }
 }
 
 /// Typed failure of the relay uplink's deadline supervision (see the
@@ -337,8 +423,16 @@ pub struct RelayConfig {
 
 /// The TCP leader: accepts workers and serves exchanges.
 pub struct TcpLeader {
-    server: Arc<PHubServer>,
+    state: Arc<LeaderState>,
     local_addr: std::net::SocketAddr,
+    /// Stops the idle-eviction janitor when the leader drops.
+    stop: Arc<AtomicBool>,
+}
+
+impl Drop for TcpLeader {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
 }
 
 impl TcpLeader {
@@ -404,27 +498,57 @@ impl TcpLeader {
         let listener = TcpListener::bind(bind).context("bind leader socket")?;
         let local_addr = listener.local_addr()?;
         let server = PHubServer::start(cfg);
-        let leader = Arc::new(TcpLeader {
-            server: server.clone(),
-            local_addr,
+        let admission = AdmissionController::new(server.quota().clone());
+        let state = Arc::new(LeaderState {
+            server,
+            jobs: Mutex::new(HashMap::new()),
+            admission,
+            evicted: Mutex::new(HashMap::new()),
+            relay,
+            dl,
+            anchor: Instant::now(),
         });
-        let jobs: Arc<Mutex<HashMap<u32, JobEntry>>> = Arc::new(Mutex::new(HashMap::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let leader = Arc::new(TcpLeader {
+            state: state.clone(),
+            local_addr,
+            stop: stop.clone(),
+        });
         {
-            let server = server.clone();
+            let state = state.clone();
             std::thread::Builder::new()
                 .name("phub-accept".into())
                 .spawn(move || {
                     for stream in listener.incoming() {
                         let Ok(stream) = stream else { break };
-                        let server = server.clone();
-                        let jobs = jobs.clone();
-                        let relay = relay.clone();
+                        let state = state.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_worker(stream, server, jobs, relay, dl);
+                            let _ = handle_worker(stream, state);
                         });
                     }
                 })
                 .context("spawn accept thread")?;
+        }
+        // Idle-eviction janitor (Root only — a relay's parameters live
+        // upstream, so there is nothing local to hand off). Polls well
+        // under the horizon so eviction latency tracks the configured
+        // idleness, and exits when the leader drops.
+        if state.relay.is_none() {
+            if let Some(horizon) = state.server.quota().idle_evict_after {
+                let state = state.clone();
+                let poll = (horizon / 2)
+                    .min(Duration::from_millis(50))
+                    .max(Duration::from_millis(1));
+                std::thread::Builder::new()
+                    .name("phub-janitor".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            std::thread::sleep(poll);
+                            janitor_sweep(&state, horizon);
+                        }
+                    })
+                    .context("spawn janitor thread")?;
+            }
         }
         Ok(leader)
     }
@@ -434,46 +558,153 @@ impl TcpLeader {
     }
 
     pub fn server(&self) -> &Arc<PHubServer> {
-        &self.server
+        &self.state.server
     }
 
     /// Shared handle on this leader's data-plane counters — what a
     /// [`super::status::StatusServer`] serves over HTTP.
     pub fn metrics_arc(&self) -> Arc<DataPlaneMetrics> {
-        self.server.metrics_arc()
+        self.state.server.metrics_arc()
+    }
+
+    /// Operator drain control: force (or release) load shedding. While
+    /// forced, every job-creating `Hello` is refused with a retriable
+    /// `Overloaded` reason; hosted jobs keep admitting their own
+    /// workers and training normally.
+    pub fn force_shed(&self, on: bool) {
+        self.state.admission.force_shed(on);
     }
 }
 
-/// Admit one connection: create the job on first contact, allocate or
-/// reuse a worker slot, and hand back the server-side handle (positioned
-/// at the job's current epoch). All checks that can fail run either
-/// before this function (spec validation) or before any bookkeeping
-/// mutates, so the jobs mutex can never be poisoned and a rejected
-/// connection leaves no trace.
+/// One idle-eviction sweep: jobs with zero live connections whose last
+/// sign of life is older than `horizon` are evicted *with a parameter
+/// handoff* — final parameters + optimizer state exported from the
+/// cores, per-seat rounds, and the committed residual checkpoints are
+/// staged under the wire job id so the tenant's next `Hello` readmits
+/// and resumes bit-exact.
+fn janitor_sweep(state: &LeaderState, horizon: Duration) {
+    let now = state.now_ms();
+    let h = horizon.as_millis() as u64;
+    let mut map = state.jobs.lock().unwrap();
+    let idle: Vec<u32> = map
+        .iter()
+        .filter(|(_, e)| {
+            e.live_conns == 0
+                && now.saturating_sub(e.last_active.load(Ordering::Relaxed)) >= h
+        })
+        .map(|(&j, _)| j)
+        .collect();
+    for wire_job in idle {
+        let entry = map.remove(&wire_job).unwrap();
+        // Stage the handoff before the engine forgets the job. Seats
+        // with a parked handle resume its exact round; seats that never
+        // connected inherit the job round (rounds cannot advance while
+        // any seat is vacant, so an idle job's seats agree).
+        let chunks = state.server.export_job(entry.job);
+        let job_round = chunks.iter().map(|c| c.round).max().unwrap_or(0);
+        let slot_rounds = (0..entry.spec.n_workers)
+            .map(|s| entry.parked.get(&s).map_or(job_round, |h| h.round()))
+            .collect();
+        state.evicted.lock().unwrap().insert(
+            wire_job,
+            EvictedJob {
+                spec: entry.spec,
+                chunks,
+                slot_rounds,
+                residuals: entry.residuals,
+            },
+        );
+        state.server.evict(entry.job);
+        state.server.metrics().idle_evictions.inc();
+    }
+}
+
+/// Admit one connection: create the job on first contact (subject to
+/// admission control), readmit a staged handoff, or allocate/reuse a
+/// worker slot of a hosted job, and hand back the server-side handle
+/// (positioned at the job's current epoch). All checks that can fail
+/// run either before this function (spec validation) or before any
+/// bookkeeping mutates, so the jobs mutex can never be poisoned and a
+/// rejected connection leaves no trace.
+///
+/// Capacity refusals are typed [`Refusal`]s and apply **only** to
+/// job-creating `Hello`s: an entry hit in phase 1 is admitted before
+/// any quota or watermark is consulted, so a full (or shedding) leader
+/// can always heal the jobs it already hosts.
 ///
 /// Job *creation* (gigabytes of model allocation + chunk fan-out to the
 /// cores for a max-size spec) deliberately happens with the jobs mutex
 /// released — one tenant's first `Hello` must not stall every other
 /// tenant's admission. Two racing creators are resolved by evicting the
 /// loser's freshly built job.
+#[allow(clippy::type_complexity)]
 fn admit(
-    server: &Arc<PHubServer>,
-    jobs: &Arc<Mutex<HashMap<u32, JobEntry>>>,
+    state: &Arc<LeaderState>,
     wire_job: u32,
     spec: JobSpec,
-    relay: Option<&Arc<RelayConfig>>,
-    dl: DeadlineConfig,
-) -> Result<(JobId, u32, WorkerHandle, Option<Vec<Vec<u8>>>)> {
+) -> Result<(JobId, u32, WorkerHandle, Option<Vec<Vec<u8>>>, Arc<AtomicU64>)> {
+    let server = &state.server;
     loop {
-        // Phase 1: admit into an existing entry under the lock.
+        // Phase 1: admit into an existing entry (or a staged handoff)
+        // under the lock — never capacity-checked.
         {
-            let mut map = jobs.lock().unwrap();
+            let mut map = state.jobs.lock().unwrap();
             if let Some(entry) = map.get_mut(&wire_job) {
                 return admit_into(server, entry, wire_job, spec);
             }
-            if map.len() >= MAX_JOBS {
-                bail!("leader already hosts {MAX_JOBS} jobs");
+            // A staged parameter handoff readmits without the fresh-job
+            // build: the engine resumes every chunk's parameters,
+            // optimizer state, and round, and the seats resume their
+            // recorded positions — bit-exact with a job that was never
+            // evicted. Runs under the jobs lock (lock order jobs →
+            // evicted) so a racing janitor or second readmitter sees
+            // exactly one winner.
+            let staged = {
+                let mut ev = state.evicted.lock().unwrap();
+                if let Some(e) = ev.get(&wire_job) {
+                    if e.spec != spec {
+                        bail!("job {wire_job} spec mismatch with staged handoff");
+                    }
+                    ev.remove(&wire_job)
+                } else {
+                    None
+                }
+            };
+            if let Some(ej) = staged {
+                let opt = Arc::new(NesterovSgd {
+                    lr: spec.lr,
+                    momentum: spec.momentum,
+                });
+                let job = server.init_job_resumed(
+                    spec.key_table(),
+                    ej.chunks,
+                    opt,
+                    spec.n_workers as usize,
+                    server.quota().weight_for(wire_job),
+                );
+                server.metrics().readmissions.inc();
+                let entry = map.entry(wire_job).or_insert(JobEntry {
+                    job,
+                    spec,
+                    epoch: 0, // safe: zero live connections at eviction
+                    next_slot: 0,
+                    free_slots: Vec::new(),
+                    parked: HashMap::new(),
+                    residuals: ej.residuals,
+                    live_conns: 0,
+                    last_active: Arc::new(AtomicU64::new(state.now_ms())),
+                    resume_rounds: Some(ej.slot_rounds),
+                });
+                return admit_into(server, entry, wire_job, spec);
             }
+            // First contact: every job-creating Hello passes admission
+            // (quota caps + overload watermark) before any state is
+            // built. A failed check is a typed, retriable Refusal.
+            state.admission.check_new_job(
+                spec.n_workers,
+                spec.model_elems,
+                LeaderState::usage(&map),
+            )?;
         }
         // Phase 2: first contact — build the job outside the lock, then
         // race to install it.
@@ -485,9 +716,15 @@ fn admit(
         // Role split: a relay leader's job forwards sums to an uplink
         // lane instead of optimizing (the parent owns the optimizer; the
         // hyperparameters still ride the spec upstream).
-        let (job, uplink) = match relay {
+        let (job, uplink) = match &state.relay {
             None => (
-                server.init_job(spec.key_table(), &init, opt, spec.n_workers as usize),
+                server.init_job_weighted(
+                    spec.key_table(),
+                    &init,
+                    opt,
+                    spec.n_workers as usize,
+                    server.quota().weight_for(wire_job),
+                ),
                 None,
             ),
             Some(_) => {
@@ -498,14 +735,21 @@ fn admit(
         };
         drop(init);
         {
-            let mut map = jobs.lock().unwrap();
-            // Re-check the cap: another creator may have filled the last
-            // seat while we were allocating outside the lock.
-            if map.len() >= MAX_JOBS && !map.contains_key(&wire_job) {
-                drop(map);
-                drop(uplink);
-                server.evict(job);
-                bail!("leader already hosts {MAX_JOBS} jobs");
+            let mut map = state.jobs.lock().unwrap();
+            // Re-check admission: another creator may have consumed the
+            // last seat (or tripped the watermark) while we were
+            // allocating outside the lock.
+            if !map.contains_key(&wire_job) {
+                if let Err(r) = state.admission.check_new_job(
+                    spec.n_workers,
+                    spec.model_elems,
+                    LeaderState::usage(&map),
+                ) {
+                    drop(map);
+                    drop(uplink);
+                    server.evict(job);
+                    return Err(r.into());
+                }
             }
             match map.entry(wire_job) {
                 std::collections::hash_map::Entry::Vacant(v) => {
@@ -517,22 +761,28 @@ fn admit(
                         free_slots: Vec::new(),
                         parked: HashMap::new(),
                         residuals: HashMap::new(),
+                        live_conns: 0,
+                        last_active: Arc::new(AtomicU64::new(state.now_ms())),
+                        resume_rounds: None,
                     });
                     let res = admit_into(server, entry, wire_job, spec);
                     drop(map);
                     // Won the install race: this job exists now, so start
                     // its uplink pump (one thread per relay job for its
                     // lifetime, like one QP per rack-interface pair). The
-                    // pump carries the server + jobs map so a give-up can
+                    // pump carries the leader state so a give-up can
                     // fail the job instead of leaking a zombie entry.
                     if let Some(up) = uplink {
-                        let rc = relay.expect("uplink implies relay config").clone();
-                        let server = server.clone();
-                        let jobs = jobs.clone();
+                        let rc = state
+                            .relay
+                            .as_ref()
+                            .expect("uplink implies relay config")
+                            .clone();
+                        let state = state.clone();
                         std::thread::Builder::new()
                             .name(format!("phub-uplink-{wire_job}"))
                             .spawn(move || {
-                                let _ = run_uplink(up, rc, wire_job, spec, server, jobs, dl);
+                                let _ = run_uplink(up, rc, wire_job, spec, state);
                             })
                             .context("spawn uplink thread")?;
                     }
@@ -551,13 +801,15 @@ fn admit(
 
 /// Slot allocation half of admission (entry exists, lock held). Also
 /// hands back a *clone* of the slot's stored residual checkpoint, if
-/// any, for the connection to replay to the successor.
+/// any, for the connection to replay to the successor, plus the job's
+/// shared activity stamp.
+#[allow(clippy::type_complexity)]
 fn admit_into(
     server: &Arc<PHubServer>,
     entry: &mut JobEntry,
     wire_job: u32,
     spec: JobSpec,
-) -> Result<(JobId, u32, WorkerHandle, Option<Vec<Vec<u8>>>)> {
+) -> Result<(JobId, u32, WorkerHandle, Option<Vec<Vec<u8>>>, Arc<AtomicU64>)> {
     if entry.spec != spec {
         bail!("job {wire_job} spec mismatch");
     }
@@ -571,31 +823,52 @@ fn admit_into(
         entry.next_slot += 1;
         s
     } else {
-        bail!(
-            "job {wire_job} already has {} workers",
-            entry.spec.n_workers
-        );
+        // Typed and retriable: every declared seat is taken *right
+        // now*, but seats free when workers disconnect — a backing-off
+        // client gets one as soon as the leader observes a departure.
+        if let Some(jm) = server.metrics().per_job.get(entry.job) {
+            jm.refusals.inc();
+        }
+        return Err(Refusal {
+            reason: RefuseReason::WorkerSlots,
+            retry_after: server.quota().retry_after,
+        }
+        .into());
     };
-    let mut handle = match entry.parked.remove(&slot) {
-        Some(h) => h,
-        None => server.worker(entry.job, slot as usize),
+    let (mut handle, resumed) = match entry.parked.remove(&slot) {
+        Some(h) => (h, None),
+        None => (
+            server.worker(entry.job, slot as usize),
+            entry
+                .resume_rounds
+                .as_ref()
+                .and_then(|r| r.get(slot as usize).copied()),
+        ),
     };
     // Position the handle in the job's current epoch: rollbacks may have
     // happened since the predecessor parked (its `round` stays — rounds
-    // cannot advance while any slot is vacant).
-    handle.set_tag(entry.epoch, handle.round());
+    // cannot advance while any slot is vacant). A seat's first handle
+    // after a readmission instead resumes at the round the handoff
+    // recorded for it.
+    match resumed {
+        Some(r) => handle.set_tag(entry.epoch, r),
+        None => handle.set_tag(entry.epoch, handle.round()),
+    }
+    entry.live_conns += 1;
     let restored = entry.residuals.get(&slot).cloned();
-    Ok((entry.job, slot, handle, restored))
+    Ok((
+        entry.job,
+        slot,
+        handle,
+        restored,
+        entry.last_active.clone(),
+    ))
 }
 
 /// Per-connection worker service loop.
-fn handle_worker(
-    stream: TcpStream,
-    server: Arc<PHubServer>,
-    jobs: Arc<Mutex<HashMap<u32, JobEntry>>>,
-    relay: Option<Arc<RelayConfig>>,
-    dl: DeadlineConfig,
-) -> Result<()> {
+fn handle_worker(stream: TcpStream, state: Arc<LeaderState>) -> Result<()> {
+    let server = &state.server;
+    let dl = state.dl;
     stream.set_nodelay(true).ok();
     // Arm the round deadline: a read that stalls this long is either an
     // idle parked tenant (serve_streamed keeps waiting) or a dead worker
@@ -626,8 +899,48 @@ fn handle_worker(
         wire::PROTO_MAX
     );
 
-    let (job, slot, mut handle, restored) =
-        admit(&server, &jobs, hello.job, spec, relay.as_ref(), dl)?;
+    let admitted = admit(&state, hello.job, spec);
+    let (job, slot, mut handle, restored, last_active) = match admitted {
+        Ok(x) => x,
+        Err(e) => {
+            // A typed refusal is answered on the wire (reason code +
+            // retry-after hint) so the client backs off instead of
+            // guessing from a dropped socket; everything else —
+            // malformed or hostile Hellos — still just drops.
+            if let Some(r) = e.downcast_ref::<Refusal>() {
+                let m = server.metrics();
+                match r.reason {
+                    RefuseReason::Overloaded => m.refused_overload.inc(),
+                    RefuseReason::JobCap => m.refused_job_cap.inc(),
+                    _ => m.refused_quota.inc(),
+                }
+                let _ = wire::write_frame(
+                    &mut writer,
+                    &Frame {
+                        op: Op::Refused,
+                        job: hello.job,
+                        worker: 0,
+                        payload: wire::encode_refusal(
+                            r.reason as u16,
+                            r.retry_after.as_millis() as u32,
+                        ),
+                    },
+                )
+                .and_then(|()| writer.flush());
+            }
+            return Err(e);
+        }
+    };
+    last_active.store(state.now_ms(), Ordering::Relaxed);
+    // Guardrail attribution: the tenant's quota view in /metrics and
+    // /jobs (idempotent sets; the live-worker gauge pairs with the
+    // decrement after the parking block).
+    let jm = handle.job_metrics().clone();
+    jm.sched_weight
+        .set(u64::from(server.quota().weight_for(hello.job)));
+    jm.model_elems.set(spec.model_elems);
+    jm.n_workers.set(u64::from(spec.n_workers));
+    jm.live_workers.add(1);
     // Register the pusher's aggregation weight (a downstream relay's
     // rack size; plain workers default to 1) before Welcome releases its
     // first push: a round must never complete against a stale divisor.
@@ -693,8 +1006,8 @@ fn handle_worker(
             hello.job,
             slot,
             &mut wr,
-            server.metrics(),
-            &jobs,
+            &state,
+            &last_active,
         )
     })();
 
@@ -708,7 +1021,7 @@ fn handle_worker(
     // and this worker's round) so a successor can take the seat — the
     // mid-round wedge this used to cause is gone.
     {
-        let mut map = jobs.lock().unwrap();
+        let mut map = state.jobs.lock().unwrap();
         if let Some(entry) = map.get_mut(&hello.job) {
             if entry.job == job {
                 if wr.mid_round() {
@@ -719,9 +1032,14 @@ fn handle_worker(
                 while handle.try_recv_reply().is_some() {}
                 entry.free_slots.push(slot);
                 entry.parked.insert(slot, handle);
+                entry.live_conns = entry.live_conns.saturating_sub(1);
             }
         }
     }
+    jm.live_workers.dec();
+    // Parking is a sign of life: the idleness horizon starts counting
+    // from the departure, not from the last completed round.
+    last_active.store(state.now_ms(), Ordering::Relaxed);
     res
 }
 
@@ -846,9 +1164,10 @@ fn serve_streamed<R: Read, W: Write>(
     wire_job: u32,
     slot: u32,
     wr: &mut WorkerRound,
-    metrics: &DataPlaneMetrics,
-    jobs: &Mutex<HashMap<u32, JobEntry>>,
+    state: &LeaderState,
+    last_active: &AtomicU64,
 ) -> Result<()> {
+    let metrics = state.server.metrics();
     let n_chunks = handle.n_chunks();
     // Frame buffers recycle through this pool: connection thread →
     // owning core (bytes absorbed in place) → dropped → back here.
@@ -903,6 +1222,10 @@ fn serve_streamed<R: Read, W: Write>(
                         // connection (the stream cannot be resynced).
                         metrics.timeouts.inc();
                         metrics.deadline_trips.inc();
+                        // Feed the overload watermark: enough trips in
+                        // a window and new admissions shed until the
+                        // pressure clears.
+                        state.admission.note_deadline_trip();
                         crate::trace::instant(
                             crate::trace::Stage::DeadlineTrip,
                             handle.job(),
@@ -1038,9 +1361,12 @@ fn serve_streamed<R: Read, W: Write>(
                 wr.complete_round();
                 jm.rounds_completed.inc();
                 jm.round_latency.record(round_start.elapsed());
+                // Sign of life for the idle-eviction janitor: a relaxed
+                // store on the shared stamp, never the jobs lock.
+                last_active.store(state.now_ms(), Ordering::Relaxed);
                 commit_residuals(
                     handle.job(),
-                    jobs,
+                    &state.jobs,
                     wire_job,
                     slot,
                     &mut pending_residuals,
@@ -1180,6 +1506,19 @@ fn rendezvous(
     let welcome = wire::read_frame(&mut reader)
         .map_err(typed_io)
         .context("read Welcome")?;
+    if welcome.op == Op::Refused {
+        // Typed and retriable: surface the leader's reason + retry
+        // hint so callers (and `connect_with_backoff`) can wait and
+        // try again instead of treating a full leader as fatal.
+        let (code, retry_ms) = wire::decode_refusal(&welcome.payload).map_err(typed_io)?;
+        let reason = RefuseReason::from_u16(code)
+            .ok_or_else(|| anyhow::anyhow!("unknown refusal reason code {code}"))?;
+        return Err(Refusal {
+            reason,
+            retry_after: Duration::from_millis(u64::from(retry_ms)),
+        }
+        .into());
+    }
     if welcome.op != Op::Welcome {
         bail!("expected Welcome, got {:?}", welcome.op);
     }
@@ -1275,10 +1614,10 @@ fn run_uplink(
     rc: Arc<RelayConfig>,
     wire_job: u32,
     spec: JobSpec,
-    server: Arc<PHubServer>,
-    jobs: Arc<Mutex<HashMap<u32, JobEntry>>>,
-    dl: DeadlineConfig,
+    state: Arc<LeaderState>,
 ) -> Result<(), UplinkError> {
+    let server = &state.server;
+    let dl = state.dl;
     let n_chunks = up.n_chunks();
     // Chunk → element range, copied out so the replay closure below
     // doesn't hold a borrow of `up` across `recv_sum` calls.
@@ -1331,7 +1670,7 @@ fn run_uplink(
                         // is the crate-wide lock order), guarded against
                         // a racing re-creation under the same wire id.
                         server.metrics().uplink_giveups.inc();
-                        let mut map = jobs.lock().unwrap();
+                        let mut map = state.jobs.lock().unwrap();
                         let ours = map.get(&wire_job).map(|e| e.job) == Some(up.job());
                         if ours {
                             map.remove(&wire_job);
@@ -1557,6 +1896,43 @@ impl TcpWorker {
         proto: u32,
     ) -> Result<TcpWorker> {
         Self::connect_with_opts(addr, job, spec, proto, DeadlineConfig::default().io_timeout)
+    }
+
+    /// [`TcpWorker::connect`] with automatic retry on *typed admission
+    /// refusals* (and only those): a leader that answers `Refused` —
+    /// over quota, shedding load, every seat momentarily taken — is
+    /// retried up to `attempts` times, sleeping the larger of the
+    /// leader's retry-after hint and the transport's jittered
+    /// exponential backoff between tries. Every other failure
+    /// (connection refused, protocol error, timeout) returns
+    /// immediately, and an exhausted budget returns the final refusal
+    /// still typed, so callers can downcast
+    /// [`super::admission::Refusal`] either way.
+    pub fn connect_with_backoff(
+        addr: impl ToSocketAddrs + Clone,
+        job: u32,
+        spec: JobSpec,
+        attempts: u32,
+    ) -> Result<TcpWorker> {
+        let dl = DeadlineConfig::default();
+        let mut jitter = XorShift64::new(0xC0FF_EE00_D15C_0B01 ^ u64::from(job));
+        let mut attempt = 0u32;
+        loop {
+            match Self::connect(addr.clone(), job, spec) {
+                Ok(w) => return Ok(w),
+                Err(e) => {
+                    attempt += 1;
+                    let hint = e.downcast_ref::<Refusal>().map(|r| r.retry_after);
+                    match hint {
+                        Some(h) if attempt < attempts => {
+                            let wait = backoff_delay(&dl, attempt, &mut jitter).max(h);
+                            std::thread::sleep(wait);
+                        }
+                        _ => return Err(e),
+                    }
+                }
+            }
+        }
     }
 
     /// [`TcpWorker::connect_with_proto`] with an explicit socket
@@ -1886,6 +2262,7 @@ impl TcpWorker {
 #[allow(clippy::useless_vec)]
 mod tests {
     use super::*;
+    use crate::config::QuotaConfig;
 
     fn spec(model: u64, workers: u32) -> JobSpec {
         JobSpec {
@@ -2309,36 +2686,146 @@ mod tests {
         ok.bye();
     }
 
-    /// The leader hosts at most [`MAX_JOBS`] jobs: cheap `Hello`s with
-    /// fresh job ids cannot mint unbounded server state.
+    /// The leader hosts at most `QuotaConfig::max_jobs` jobs: cheap
+    /// `Hello`s with fresh job ids cannot mint unbounded server state.
+    /// The refusal is *typed and retriable* — and a re-`Hello` of a
+    /// hosted job is never refused by the cap, so a full leader can
+    /// still heal the jobs it already admitted.
     #[test]
-    fn job_cap_rejects_excess_jobs() {
-        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
+    fn job_cap_refuses_excess_jobs_with_typed_reason() {
+        let quota = QuotaConfig {
+            max_jobs: 3,
+            ..QuotaConfig::default()
+        };
+        let cfg = ServerConfig::cores(1).with_quota(quota);
+        let leader = TcpLeader::serve("127.0.0.1:0", cfg).unwrap();
         let addr = leader.local_addr();
         let mut keep = Vec::new();
-        for j in 0..MAX_JOBS as u32 {
+        for j in 0..3u32 {
             keep.push(TcpWorker::connect(addr, 1000 + j, spec(32, 1)).unwrap());
         }
-        match TcpWorker::connect(addr, 2000, spec(32, 1)) {
-            Err(_) => {}
-            Ok(mut w) => assert!(w.push_pull(&vec![0.0; 32]).is_err()),
-        }
-        // Jobs admitted before the cap still train.
+        let err = TcpWorker::connect(addr, 2000, spec(32, 1)).unwrap_err();
+        let r = err.downcast_ref::<Refusal>().expect("typed refusal");
+        assert_eq!(r.reason, RefuseReason::JobCap);
+        assert!(r.retry_after > Duration::ZERO, "hint must be actionable");
+        assert_eq!(leader.metrics_arc().snapshot().refused_job_cap, 1);
+        // Jobs admitted before the cap still train...
         let m = keep[0].push_pull(&vec![2.0; 32]).unwrap();
         assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        // ...and a successor can rejoin a hosted job at the full
+        // leader: the seat may still look taken until the disconnect is
+        // observed (a typed WorkerSlots refusal), but never JobCap.
+        drop(keep.pop());
+        let mut w = TcpWorker::connect_with_backoff(addr, 1002, spec(32, 1), 200).unwrap();
+        let m = w.push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        w.bye();
     }
 
     #[test]
-    fn oversubscribed_job_rejected() {
+    fn oversubscribed_job_refused_with_typed_reason() {
         let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
         let addr = leader.local_addr();
         let _w0 = TcpWorker::connect(addr, 3, spec(64, 1)).unwrap();
-        // Second worker for a 1-worker job: server drops the connection.
-        match TcpWorker::connect(addr, 3, spec(64, 1)) {
-            Err(_) => {}
-            Ok(mut w) => {
-                assert!(w.push_pull(&vec![0.0; 64]).is_err());
-            }
+        // Second worker for a 1-worker job: typed, retriable refusal
+        // (the seat frees when the first worker departs).
+        let err = TcpWorker::connect(addr, 3, spec(64, 1)).unwrap_err();
+        let r = err.downcast_ref::<Refusal>().expect("typed refusal");
+        assert_eq!(r.reason, RefuseReason::WorkerSlots);
+        assert!(leader.metrics_arc().snapshot().refused_quota >= 1);
+    }
+
+    /// Drain mode refuses job-creating `Hello`s with a retriable
+    /// `Overloaded` reason; a client under `connect_with_backoff` rides
+    /// the refusals out and admits as soon as the shed releases — and a
+    /// job admitted *before* the shed keeps healing while it is on.
+    #[test]
+    fn shed_refusals_are_retriable_and_backoff_succeeds() {
+        let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
+        let addr = leader.local_addr();
+        let mut held = TcpWorker::connect(addr, 6, spec(32, 1)).unwrap();
+        leader.force_shed(true);
+        // New jobs shed with a typed reason.
+        let err = TcpWorker::connect(addr, 5, spec(32, 1)).unwrap_err();
+        let r = err.downcast_ref::<Refusal>().expect("typed refusal");
+        assert_eq!(r.reason, RefuseReason::Overloaded);
+        assert!(leader.metrics_arc().snapshot().refused_overload >= 1);
+        // The pre-shed job is exempt: drop its worker and rejoin while
+        // shedding is on (seat release may lag the disconnect, so back
+        // off on WorkerSlots — but never see Overloaded).
+        held.bye();
+        drop(held);
+        let mut back = TcpWorker::connect_with_backoff(addr, 6, spec(32, 1), 200).unwrap();
+        let m = back.push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        back.bye();
+        // A fresh tenant blocked on the shed admits once it releases.
+        let waiter =
+            std::thread::spawn(move || TcpWorker::connect_with_backoff(addr, 5, spec(32, 1), 200));
+        std::thread::sleep(Duration::from_millis(100));
+        leader.force_shed(false);
+        let mut w = waiter.join().unwrap().unwrap();
+        let m = w.push_pull(&vec![2.0; 32]).unwrap();
+        assert!(m.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        w.bye();
+    }
+
+    /// An idle job is evicted with a parameter handoff and the tenant
+    /// readmits and resumes **bit-exact** — on the quantized path, so
+    /// parameters, Nesterov state, per-seat rounds, and error-feedback
+    /// residual checkpoints must all survive the hop.
+    #[test]
+    fn idle_evicted_job_readmits_and_resumes_bit_exact() {
+        let quota = QuotaConfig {
+            idle_evict_after: Some(Duration::from_millis(40)),
+            ..QuotaConfig::default()
+        };
+        let evicting =
+            TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2).with_quota(quota)).unwrap();
+        let control = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+        let s = JobSpec {
+            momentum: 0.9, // non-trivial optimizer state in the handoff
+            ..spec(256, 1)
+        };
+        let t = 0.05f32;
+        let grads: Vec<Vec<f32>> = (0..6)
+            .map(|r| {
+                (0..256)
+                    .map(|i| ((i * 7 + r * 13) % 11) as f32 * 0.01 - 0.03)
+                    .collect()
+            })
+            .collect();
+        // Control: six uninterrupted quantized rounds.
+        let mut cw = TcpWorker::connect(control.local_addr(), 9, s).unwrap();
+        let mut want = Vec::new();
+        for g in &grads {
+            want = cw.push_pull_quant(g, t).unwrap();
         }
+        cw.bye();
+        // Evicting leader: three rounds, leave, wait for the janitor,
+        // readmit, three more rounds.
+        let mut w = TcpWorker::connect(evicting.local_addr(), 9, s).unwrap();
+        for g in &grads[..3] {
+            w.push_pull_quant(g, t).unwrap();
+        }
+        w.bye();
+        drop(w);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while evicting.metrics_arc().snapshot().idle_evictions == 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "janitor never evicted the idle job"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut w = TcpWorker::connect(evicting.local_addr(), 9, s).unwrap();
+        assert_eq!(w.rounds_done(), 3, "handoff resumes at the evicted round");
+        let mut got = Vec::new();
+        for g in &grads[3..] {
+            got = w.push_pull_quant(g, t).unwrap();
+        }
+        w.bye();
+        assert_eq!(evicting.metrics_arc().snapshot().readmissions, 1);
+        assert_eq!(got, want, "eviction/readmission must be bit-invisible");
     }
 }

@@ -32,6 +32,7 @@
 //! | 10 | `RollbackRound` | L→W | round epoch u32 — rewind + replay the open round |
 //! | 11 | `ResidualSave`  | W→L | chunk header + threshold f32 + residual LE f32s — checkpoint one chunk's error-feedback residual |
 //! | 12 | `ResidualChunk` | L→W | same layout — restore a checkpointed residual to a successor at admission |
+//! | 13 | `Refused`       | L→W | reason code u16 + retry-after hint u32 (ms) — graceful, retriable admission refusal |
 //!
 //! "W→L" reads "downstream peer → upstream peer": the hierarchical
 //! deployment (paper §3.4, Fig. 19) runs the *same* opcodes on the
@@ -196,6 +197,14 @@ pub enum Op {
     /// Server -> worker: restore a checkpointed residual to a successor
     /// at admission (same payload layout as `ResidualSave`).
     ResidualChunk = 12,
+    /// Server -> worker: the `Hello` was refused by admission control
+    /// (payload: reason code u16 LE + retry-after hint u32 LE, in
+    /// milliseconds). Sent *instead of* `Welcome`, then the leader
+    /// closes the connection. Every refusal is retriable: the condition
+    /// (job cap, quota, overload shed) is expected to clear, and the
+    /// hint tells the client how long to back off before retrying. See
+    /// `coordinator::admission` for the reason-code registry.
+    Refused = 13,
 }
 
 impl Op {
@@ -210,6 +219,7 @@ impl Op {
             10 => Op::RollbackRound,
             11 => Op::ResidualSave,
             12 => Op::ResidualChunk,
+            13 => Op::Refused,
             _ => return None,
         })
     }
@@ -595,6 +605,27 @@ pub fn weight_at(payload: &[u8], at: usize) -> u32 {
     }
 }
 
+/// Build an [`Op::Refused`] payload: `[reason u16 LE][retry_after_ms
+/// u32 LE]`. The reason codes are registered in
+/// `coordinator::admission::RefuseReason`; the wire layer only moves
+/// the integers so the registry can grow without a framing change.
+pub fn encode_refusal(reason: u16, retry_after_ms: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(6);
+    out.extend_from_slice(&reason.to_le_bytes());
+    out.extend_from_slice(&retry_after_ms.to_le_bytes());
+    out
+}
+
+/// Split an [`Op::Refused`] payload into `(reason, retry_after_ms)`.
+pub fn decode_refusal(payload: &[u8]) -> std::io::Result<(u16, u32)> {
+    if payload.len() < 6 {
+        return Err(WireError::Protocol("short refusal payload").io(std::io::ErrorKind::InvalidData));
+    }
+    let reason = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+    let retry = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+    Ok((reason, retry))
+}
+
 /// f32 slice -> raw little-endian bytes (allocating; tests/cold paths —
 /// the round path writes frames with [`write_chunk_frame_f32s`]).
 pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
@@ -923,6 +954,24 @@ mod tests {
         }
         assert_eq!(Op::ResidualSave as u8, 11);
         assert_eq!(Op::ResidualChunk as u8, 12);
+    }
+
+    #[test]
+    fn refusal_opcode_and_payload_roundtrip() {
+        assert_eq!(Op::from_u8(13), Some(Op::Refused));
+        assert_eq!(Op::Refused as u8, 13);
+        let f = Frame {
+            op: Op::Refused,
+            job: 7,
+            worker: 0,
+            payload: encode_refusal(2, 250),
+        };
+        let mut cursor = std::io::Cursor::new(encode(&f));
+        let g = read_frame(&mut cursor).unwrap();
+        assert_eq!(g.op, Op::Refused);
+        assert_eq!(decode_refusal(&g.payload).unwrap(), (2, 250));
+        // A truncated refusal is a typed protocol error, not a panic.
+        assert!(decode_refusal(&[0u8; 5]).is_err());
     }
 
     #[test]

@@ -52,6 +52,39 @@ impl Counter {
     }
 }
 
+/// A last-write-wins numeric gauge (current usage / configured quota
+/// cells on a job's metric set). Relaxed stores and loads, same pricing
+/// as [`Counter`].
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (a racing double-release must never wrap).
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// A set-once configuration gauge: a small u8-encoded enum recorded at
 /// startup (e.g. which SIMD tier or placement mode a server selected) so
 /// operators and tests can assert which path actually ran. The encoding
@@ -136,6 +169,28 @@ pub struct DataPlaneMetrics {
     /// checkpoint at admission (`ResidualChunk` restore, one per
     /// restored connection).
     pub residual_restores: Counter,
+    /// Admissions refused because the leader was shedding load (the
+    /// overload watermark tripped, or an operator forced shedding).
+    /// Every refusal is typed and retriable on the wire (`Op::Refused`).
+    pub refused_overload: Counter,
+    /// Admissions refused because the new job would exceed a per-tenant
+    /// or leader-wide capacity quota (worker slots, model elements,
+    /// aggregate totals).
+    pub refused_quota: Counter,
+    /// Admissions refused because the leader already hosts its maximum
+    /// number of concurrent jobs. Never counted for a re-`Hello` of a
+    /// job that is already resident.
+    pub refused_job_cap: Counter,
+    /// Jobs evicted for idling past the configured horizon, with their
+    /// parameter state staged for handoff (see `coordinator::transport`).
+    pub idle_evictions: Counter,
+    /// Evicted jobs readmitted from staged handoff state (the tenant
+    /// came back and resumed bit-exactly).
+    pub readmissions: Counter,
+    /// Fair-scheduler deferrals: sweeps in which a job's ports still had
+    /// traffic queued after its deficit budget was spent, so the
+    /// backlog waited for the next refill while neighbours ran.
+    pub sched_deferrals: Counter,
     /// The SIMD kernel tier this server's cores dispatch to —
     /// `coordinator::kernels::KernelTier as u8`
     /// (0 scalar, 1 SSE2, 2 AVX2). Set once by `PHubServer::start`.
@@ -171,6 +226,12 @@ impl DataPlaneMetrics {
             replayed_frames: self.replayed_frames.get(),
             residual_saves: self.residual_saves.get(),
             residual_restores: self.residual_restores.get(),
+            refused_overload: self.refused_overload.get(),
+            refused_quota: self.refused_quota.get(),
+            refused_job_cap: self.refused_job_cap.get(),
+            idle_evictions: self.idle_evictions.get(),
+            readmissions: self.readmissions.get(),
+            sched_deferrals: self.sched_deferrals.get(),
             kernel_tier: self.kernel_tier.get(),
             placement_mode: self.placement_mode.get(),
             jobs: self.per_job.snapshot(),
@@ -202,6 +263,22 @@ pub struct JobMetrics {
     /// Rollback events attributed to this job (per core that applied
     /// one).
     pub rollbacks: Counter,
+    /// Fair-scheduler deferrals charged to this job (its own backlog
+    /// waiting on its own budget — the guardrail working as intended).
+    pub deferrals: Counter,
+    /// Typed admission refusals issued against this tenant's namespace
+    /// (over-quota worker slots on a live job, and — when the tenant's
+    /// metric set survives — repeated refused `Hello`s).
+    pub refusals: Counter,
+    /// Configured fair-schedule weight (set at admission; quota view).
+    pub sched_weight: Gauge,
+    /// Model elements this job occupies (set at admission; quota view).
+    pub model_elems: Gauge,
+    /// Worker slots the job's spec declares (set at admission).
+    pub n_workers: Gauge,
+    /// Currently connected workers (admission increments, disconnect
+    /// decrements; an idle job shows 0 and is eligible for eviction).
+    pub live_workers: Gauge,
 }
 
 impl JobMetrics {
@@ -214,6 +291,12 @@ impl JobMetrics {
             drops: self.drops.get(),
             replays: self.replays.get(),
             rollbacks: self.rollbacks.get(),
+            deferrals: self.deferrals.get(),
+            refusals: self.refusals.get(),
+            sched_weight: self.sched_weight.get(),
+            model_elems: self.model_elems.get(),
+            n_workers: self.n_workers.get(),
+            live_workers: self.live_workers.get(),
             round_latency: self.round_latency.snapshot(),
         }
     }
@@ -229,6 +312,12 @@ pub struct JobMetricsSnapshot {
     pub drops: u64,
     pub replays: u64,
     pub rollbacks: u64,
+    pub deferrals: u64,
+    pub refusals: u64,
+    pub sched_weight: u64,
+    pub model_elems: u64,
+    pub n_workers: u64,
+    pub live_workers: u64,
     pub round_latency: HistogramSnapshot,
 }
 
@@ -292,6 +381,12 @@ pub struct MetricsSnapshot {
     pub replayed_frames: u64,
     pub residual_saves: u64,
     pub residual_restores: u64,
+    pub refused_overload: u64,
+    pub refused_quota: u64,
+    pub refused_job_cap: u64,
+    pub idle_evictions: u64,
+    pub readmissions: u64,
+    pub sched_deferrals: u64,
     pub kernel_tier: u8,
     pub placement_mode: u8,
     pub jobs: Vec<JobMetricsSnapshot>,
@@ -300,7 +395,7 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     /// The global counters as (name, value) pairs — the iteration order
     /// the Prometheus exposition uses.
-    pub fn counters(&self) -> [(&'static str, u64); 15] {
+    pub fn counters(&self) -> [(&'static str, u64); 21] {
         [
             ("dropped_messages", self.dropped_messages),
             ("drop_unknown_job", self.drop_unknown_job),
@@ -317,6 +412,12 @@ impl MetricsSnapshot {
             ("replayed_frames", self.replayed_frames),
             ("residual_saves", self.residual_saves),
             ("residual_restores", self.residual_restores),
+            ("refused_overload", self.refused_overload),
+            ("refused_quota", self.refused_quota),
+            ("refused_job_cap", self.refused_job_cap),
+            ("idle_evictions", self.idle_evictions),
+            ("readmissions", self.readmissions),
+            ("sched_deferrals", self.sched_deferrals),
         ]
     }
 }
@@ -460,6 +561,18 @@ mod tests {
         assert_eq!(s.get(), 1);
         // Default matches new (DataPlaneMetrics derives Default).
         assert_eq!(Setting::default().get(), 0);
+    }
+
+    #[test]
+    fn gauge_set_add_dec_saturates() {
+        let g = Gauge::new();
+        g.set(2);
+        g.add(3);
+        assert_eq!(g.get(), 5);
+        for _ in 0..7 {
+            g.dec();
+        }
+        assert_eq!(g.get(), 0, "dec saturates at zero");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
 
+use phub::config::QuotaConfig;
 use phub::coordinator::faults::{FaultPlan, FaultProxy, FaultRates};
 use phub::coordinator::server::ServerConfig;
 use phub::coordinator::transport::{JobSpec, RelayConfig, TcpLeader, TcpWorker};
@@ -65,7 +66,7 @@ fn seeds() -> Vec<u64> {
     }
 }
 
-/// Drive one worker seat to [`ROUNDS`] completed rounds against
+/// Drive one worker seat to `target` completed rounds against
 /// `leader`, with every connection tunnelled through a fresh
 /// single-connection [`FaultProxy`]. Each (re)connection attempt draws a
 /// sub-seeded schedule, so the whole run is a function of `seed` plus
@@ -80,6 +81,7 @@ fn chaos_seat(
     quant: Option<f32>,
     grad_base: usize,
     seed: u64,
+    target: usize,
 ) {
     let n = s.model_elems as usize;
     let mut scratch = vec![0.0f32; n];
@@ -89,7 +91,7 @@ fn chaos_seat(
     loop {
         assert!(
             Instant::now() < deadline,
-            "chaos seat wedged: job {job} seed {seed} never reached {ROUNDS} rounds"
+            "chaos seat wedged: job {job} seed {seed} never reached {target} rounds"
         );
         attempt += 1;
         let plan = FaultPlan::new(seed ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15), rates);
@@ -108,7 +110,7 @@ fn chaos_seat(
         let mut r = w.rounds_done() as usize;
         let slot = w.slot as usize;
         let mut died = false;
-        while r < ROUNDS {
+        while r < target {
             let g = grad(n, grad_base + slot, r);
             let res = match quant {
                 Some(t) => w.push_pull_quant_into(&g, t, &mut scratch),
@@ -124,7 +126,7 @@ fn chaos_seat(
         }
         if !died {
             // Covers both a clean finish and a reconnect that found the
-            // predecessor already done (`rounds_done() == ROUNDS`).
+            // predecessor already done (`rounds_done() == target`).
             w.bye();
             return;
         }
@@ -199,7 +201,7 @@ fn flat_run(seed: u64, quant: Option<f32>) -> (Vec<f32>, Vec<f32>) {
     let drivers: Vec<_> = (0..2u64)
         .map(|i| {
             let sub = seed ^ (i + 1).wrapping_mul(0xA24B_AED4_963E_E407);
-            std::thread::spawn(move || chaos_seat(addr, 900, s, quant, 0, sub))
+            std::thread::spawn(move || chaos_seat(addr, 900, s, quant, 0, sub, ROUNDS))
         })
         .collect();
     for d in drivers {
@@ -223,6 +225,73 @@ fn flat_run(seed: u64, quant: Option<f32>) -> (Vec<f32>, Vec<f32>) {
     let clean_addr = clean.local_addr();
     let twins: Vec<_> = (0..2)
         .map(|_| std::thread::spawn(move || clean_worker(clean_addr, 901, s, quant, 0)))
+        .collect();
+    let twin_models: Vec<Vec<f32>> = twins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(bits(&twin_models[0]), bits(&twin_models[1]), "clean twin seats disagree");
+
+    (models.into_iter().next().unwrap(), twin_models.into_iter().next().unwrap())
+}
+
+/// Faulted quantized run *composed with an idle eviction and
+/// readmission* (the tenant-guardrail path — see "Tenant guardrails" in
+/// `coordinator::transport`): the leader evicts a job with zero live
+/// connections after a short idle horizon, staging a parameter handoff
+/// (params + optimizer state + residual checkpoints + per-seat rounds).
+/// The schedule here forces that to happen mid-training — phase one
+/// drives the seats to `ROUNDS / 2` under fault injection, every
+/// connection leaves, the janitor evicts, and phase two readmits from
+/// the handoff and finishes the run, still under fault injection. The
+/// final bits must equal an unfaulted, never-evicted twin: eviction plus
+/// readmission is exactly bit-neutral even when composed with kills,
+/// cuts, duplicates, and rollback recovery on either side of it.
+fn evicting_quant_run(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let s = spec(192, 48, 2);
+    let quota = QuotaConfig {
+        idle_evict_after: Some(Duration::from_millis(25)),
+        ..QuotaConfig::default()
+    };
+    let faulted =
+        TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2).with_quota(quota)).unwrap();
+    let addr = faulted.local_addr();
+    let half = ROUNDS / 2;
+    for (phase, target) in [(1u64, half), (2, ROUNDS)] {
+        let drivers: Vec<_> = (0..2u64)
+            .map(|i| {
+                let sub = seed ^ (phase * 10 + i + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+                std::thread::spawn(move || {
+                    chaos_seat(addr, 920, s, Some(THRESHOLD), 0, sub, target)
+                })
+            })
+            .collect();
+        for d in drivers {
+            d.join().unwrap();
+        }
+        if phase == 1 {
+            // All connections are gone; the janitor must evict the idle
+            // job (and stage its handoff) before phase two readmits.
+            let m = faulted.server().metrics();
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while m.idle_evictions.get() == 0 {
+                assert!(Instant::now() < deadline, "idle eviction never fired (seed {seed})");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    let verifiers: Vec<_> = (0..2)
+        .map(|_| std::thread::spawn(move || verify_seat(addr, 920, s, Some(THRESHOLD), 0)))
+        .collect();
+    let models: Vec<Vec<f32>> = verifiers.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(bits(&models[0]), bits(&models[1]), "evicting verification seats disagree");
+
+    let m = faulted.server().metrics();
+    assert!(m.readmissions.get() >= 1, "phase two never readmitted from the handoff");
+    assert!(m.residual_saves.get() > 0, "evicting quantized soak committed no checkpoints");
+    assert!(m.residual_restores.get() >= 2, "verification seats were not restored");
+
+    let clean = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2)).unwrap();
+    let clean_addr = clean.local_addr();
+    let twins: Vec<_> = (0..2)
+        .map(|_| std::thread::spawn(move || clean_worker(clean_addr, 921, s, Some(THRESHOLD), 0)))
         .collect();
     let twin_models: Vec<Vec<f32>> = twins.into_iter().map(|j| j.join().unwrap()).collect();
     assert_eq!(bits(&twin_models[0]), bits(&twin_models[1]), "clean twin seats disagree");
@@ -258,7 +327,7 @@ fn two_level_run(seed: u64) -> (Vec<f32>, Vec<f32>) {
             let rack = (j / 2) as usize;
             let addr = racks[rack].local_addr();
             let sub = seed ^ (j + 1).wrapping_mul(0xA24B_AED4_963E_E407);
-            std::thread::spawn(move || chaos_seat(addr, 910, s, None, rack * 2, sub))
+            std::thread::spawn(move || chaos_seat(addr, 910, s, None, rack * 2, sub, ROUNDS))
         })
         .collect();
     for d in drivers {
@@ -307,5 +376,12 @@ fn prop_chaos_schedule_bit_identical() {
 
         let (faulted, clean) = two_level_run(seed.wrapping_add(202));
         assert_eq!(bits(&faulted), bits(&clean), "two-level diverged under fault seed {seed}");
+
+        let (faulted, clean) = evicting_quant_run(seed.wrapping_add(303));
+        assert_eq!(
+            bits(&faulted),
+            bits(&clean),
+            "eviction/readmission diverged under fault seed {seed}"
+        );
     }
 }

@@ -1,0 +1,175 @@
+//! Tenant-guardrail integration tests over the live TCP leader (see
+//! "Tenant guardrails" in `coordinator::transport`): weighted-fair core
+//! scheduling keeps a small tenant's round latency bounded while a
+//! noisy neighbor floods the same cores, and refusals are attributed to
+//! the tenant that earned them — both observed exactly the way an
+//! operator would see them, through `DataPlaneMetrics` / the per-job
+//! registry that backs the `/jobs` status route.
+//!
+//! These are *robustness* assertions, not performance ones: the latency
+//! bound is a generous absolute ceiling (CI runners are not a stable
+//! perf environment — relative fairness ratios are `benches/tenancy.rs`'
+//! concern), and every check reads counters the status plane already
+//! exports, so a regression here is visible in production too.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phub::config::QuotaConfig;
+use phub::coordinator::server::ServerConfig;
+use phub::coordinator::transport::{JobSpec, TcpLeader, TcpWorker};
+use phub::coordinator::{Refusal, RefuseReason};
+use phub::metrics::JobMetricsSnapshot;
+
+/// Victim (fair tenant) model size — distinct from [`FLOOD_ELEMS`] so
+/// metric snapshots can identify tenants without knowing internal ids.
+const VICTIM_ELEMS: u64 = 4 * 1024;
+/// Flooder model size: 16x the victim, so each flooder round occupies
+/// the cores 16x longer than a victim round does.
+const FLOOD_ELEMS: u64 = 64 * 1024;
+const CHUNK_ELEMS: u64 = 1024;
+const VICTIM_ROUNDS: usize = 40;
+
+fn spec(model: u64, workers: u32) -> JobSpec {
+    JobSpec {
+        model_elems: model,
+        chunk_elems: CHUNK_ELEMS,
+        n_workers: workers,
+        lr: 0.01,
+        momentum: 0.9,
+    }
+}
+
+/// Pull the per-job snapshot entries whose `model_elems` gauge matches
+/// `elems` (wire-job ids are not in the snapshot; the gauge is).
+fn jobs_with_model(snap: &[JobMetricsSnapshot], elems: u64) -> Vec<JobMetricsSnapshot> {
+    snap.iter().filter(|j| j.model_elems == elems).cloned().collect()
+}
+
+/// A 1-worker tenant with scheduling weight 8 shares a 2-core leader
+/// with two single-worker flooder tenants (weight 1 each) hammering
+/// 16x-larger models as fast as they can. Under deficit-round-robin the
+/// victim's rounds keep landing: every one of its rounds completes and
+/// its leader-observed p99 round latency stays under a generous
+/// absolute ceiling, while the flooders demonstrably made progress (so
+/// the test really measured contention, not an idle leader).
+#[test]
+fn noisy_neighbor_fair_tenant_round_latency_stays_bounded() {
+    let quota = QuotaConfig {
+        fair_sched: true,
+        weights: vec![(1, 8), (2, 1), (3, 1)],
+        ..QuotaConfig::default()
+    };
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(2).with_quota(quota)).unwrap();
+    let addr = leader.local_addr();
+    let metrics = leader.metrics_arc();
+
+    // Flooders are single-worker jobs so each can stop at any round
+    // boundary without deadlocking a push-pull peer.
+    let stop = Arc::new(AtomicBool::new(false));
+    let flooders: Vec<_> = [2u32, 3]
+        .into_iter()
+        .map(|wire_job| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let n = FLOOD_ELEMS as usize;
+                let mut w = TcpWorker::connect(addr, wire_job, spec(FLOOD_ELEMS, 1)).unwrap();
+                let grad = vec![0.25f32; n];
+                let mut model = vec![0.0f32; n];
+                let mut rounds = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    w.push_pull_into(&grad, &mut model).unwrap();
+                    rounds += 1;
+                }
+                w.bye();
+                rounds
+            })
+        })
+        .collect();
+
+    // Only start the victim once both flooders are demonstrably mid-flood.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let floods = jobs_with_model(&metrics.snapshot().jobs, FLOOD_ELEMS);
+        if floods.len() == 2 && floods.iter().all(|j| j.rounds_completed >= 1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "flooders never completed a round");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let n = VICTIM_ELEMS as usize;
+    let mut victim = TcpWorker::connect(addr, 1, spec(VICTIM_ELEMS, 1)).unwrap();
+    let grad = vec![0.5f32; n];
+    let mut model = vec![0.0f32; n];
+    for r in 0..VICTIM_ROUNDS {
+        victim.push_pull_into(&grad, &mut model).unwrap_or_else(|e| {
+            panic!("victim round {r} failed under flood: {e:#}");
+        });
+    }
+    victim.bye();
+
+    stop.store(true, Ordering::Relaxed);
+    let flood_rounds: u64 = flooders.into_iter().map(|t| t.join().unwrap()).sum();
+    assert!(flood_rounds > 0, "flooders made no progress");
+
+    let snap = metrics.snapshot();
+    let victims = jobs_with_model(&snap.jobs, VICTIM_ELEMS);
+    assert_eq!(victims.len(), 1, "exactly one victim tenant expected");
+    let v = &victims[0];
+    assert_eq!(v.rounds_completed, VICTIM_ROUNDS as u64, "victim lost rounds");
+    assert_eq!(v.refusals, 0, "victim was refused despite being admitted");
+    assert_eq!(v.sched_weight, 8, "victim's configured weight not surfaced");
+    for f in jobs_with_model(&snap.jobs, FLOOD_ELEMS) {
+        assert_eq!(f.sched_weight, 1, "flooder weight not surfaced");
+    }
+    // Generous absolute ceiling (the histogram rounds quantiles up to
+    // the next power-of-two bucket bound): a victim round is sub-ms of
+    // work, so anything near seconds means the flooders starved it.
+    let p99_ns = v.round_latency.quantile_ns(0.99);
+    assert!(
+        p99_ns < 2_000_000_000,
+        "victim p99 round latency {:.1} ms under flood",
+        p99_ns as f64 / 1e6
+    );
+}
+
+/// Refusals are charged to the tenant that earned them: a well-behaved
+/// tenant and an oversubscribing tenant share a leader, the
+/// oversubscriber's extra worker is refused with the typed
+/// `WorkerSlots` reason, and only *its* per-job `refusals` counter
+/// moves — the neighbor's stays zero and its training is untouched.
+#[test]
+fn refusals_are_attributed_to_the_offending_tenant() {
+    let leader = TcpLeader::serve("127.0.0.1:0", ServerConfig::cores(1)).unwrap();
+    let addr = leader.local_addr();
+
+    let n = VICTIM_ELEMS as usize;
+    let mut good = TcpWorker::connect(addr, 1, spec(VICTIM_ELEMS, 1)).unwrap();
+    let over = spec(FLOOD_ELEMS, 1);
+    let seated = TcpWorker::connect(addr, 2, over).unwrap();
+
+    // Second worker for a 1-seat job: typed, retriable, non-fatal.
+    let err = TcpWorker::connect(addr, 2, over).unwrap_err();
+    let refusal = err
+        .downcast_ref::<Refusal>()
+        .unwrap_or_else(|| panic!("expected a typed Refusal, got: {err:#}"));
+    assert_eq!(refusal.reason, RefuseReason::WorkerSlots);
+    assert!(refusal.retry_after > Duration::ZERO);
+
+    // The neighbor trains straight through the refusal.
+    let grad = vec![1.0f32; n];
+    let mut model = vec![0.0f32; n];
+    good.push_pull_into(&grad, &mut model).unwrap();
+    good.bye();
+    drop(seated);
+
+    let snap = leader.metrics_arc().snapshot();
+    assert!(snap.refused_quota >= 1, "global refusal counter did not move");
+    let offender = &jobs_with_model(&snap.jobs, FLOOD_ELEMS)[0];
+    let neighbor = &jobs_with_model(&snap.jobs, VICTIM_ELEMS)[0];
+    assert_eq!(offender.refusals, 1, "refusal not charged to the offender");
+    assert_eq!(neighbor.refusals, 0, "refusal leaked onto the neighbor");
+    assert_eq!(neighbor.rounds_completed, 1);
+}
